@@ -1,0 +1,15 @@
+//! Reproduces Figure 10: the latency-quality trade-off scatter
+//! (DistriFusion OOM at the plotting point, as in the paper).
+use dice::cli::Args;
+use dice::exp::{tradeoff::fig10, write_results, Ctx};
+
+fn main() -> anyhow::Result<()> {
+    let a = Args::parse();
+    let ctx = Ctx::open()?;
+    let samples = a.usize_or("samples", 128);
+    let steps = a.usize_or("steps", 50);
+    let (t, j) = fig10(&ctx, samples, steps, a.usize_or("warmup", 4), a.u64_or("seed", 1234))?;
+    t.print();
+    write_results("fig10_tradeoff", &t.render(), &j)?;
+    Ok(())
+}

@@ -1,0 +1,22 @@
+//! Reproduces Figures 14-15: the same scaling experiments on the
+//! 8x RTX 3080 profile (the paper's secondary testbed).
+use dice::cli::Args;
+use dice::config::{obj, Json};
+use dice::exp::{scaling::scaling, write_results};
+
+fn main() -> anyhow::Result<()> {
+    let a = Args::parse();
+    let steps = a.usize_or("steps", 50);
+    let mut md = String::new();
+    let mut payload = Vec::new();
+    for model in ["xl", "g"] {
+        let (tables, j) = scaling(model, "rtx3080_pcie", steps)?;
+        for t in tables {
+            t.print();
+            md.push_str(&t.render());
+        }
+        payload.push(obj(vec![("model", Json::Str(model.into())), ("data", j)]));
+    }
+    write_results("fig14_15_3080", &md, &Json::Arr(payload))?;
+    Ok(())
+}

@@ -1,0 +1,13 @@
+//! Reproduces Figure 2: execution-flow comparison (staleness, step
+//! latency, buffers) of sync / displaced / interweaved EP.
+use dice::cli::Args;
+use dice::exp::{schedules::fig2, write_results, Ctx};
+
+fn main() -> anyhow::Result<()> {
+    let a = Args::parse();
+    let ctx = Ctx::open()?;
+    let (t, j) = fig2(&ctx, a.usize_or("steps", 8))?;
+    t.print();
+    write_results("fig2_schedules", &t.render(), &j)?;
+    Ok(())
+}

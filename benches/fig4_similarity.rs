@@ -1,0 +1,13 @@
+//! Reproduces Figure 4: step-wise routing-similarity heatmaps (the
+//! redundancy that asynchronous EP relies on).
+use dice::cli::Args;
+use dice::exp::{similarity::fig4, write_results, Ctx};
+
+fn main() -> anyhow::Result<()> {
+    let a = Args::parse();
+    let ctx = Ctx::open()?;
+    let (t, j) = fig4(&ctx, a.usize_or("steps", 20), a.u64_or("seed", 7))?;
+    t.print();
+    write_results("fig4_similarity", &t.render(), &j)?;
+    Ok(())
+}

@@ -1,0 +1,22 @@
+//! Reproduces Figure 9: batch-size and image-size scaling of latency +
+//! memory on 8x RTX 4090 for DiT-MoE-XL and -G.
+use dice::cli::Args;
+use dice::config::{obj, Json};
+use dice::exp::{scaling::scaling, write_results};
+
+fn main() -> anyhow::Result<()> {
+    let a = Args::parse();
+    let steps = a.usize_or("steps", 50);
+    let mut md = String::new();
+    let mut payload = Vec::new();
+    for model in ["xl", "g"] {
+        let (tables, j) = scaling(model, "rtx4090_pcie", steps)?;
+        for t in tables {
+            t.print();
+            md.push_str(&t.render());
+        }
+        payload.push(obj(vec![("model", Json::Str(model.into())), ("data", j)]));
+    }
+    write_results("fig9_scaling", &md, &Json::Arr(payload))?;
+    Ok(())
+}

@@ -1,0 +1,10 @@
+//! Reproduces the Sec. 3 motivation numbers: absolute all-to-all time
+//! and share for 50-step synchronous EP on XL / 8 GPUs.
+use dice::exp::{scaling::motivation, write_results};
+
+fn main() -> anyhow::Result<()> {
+    let (t, j) = motivation()?;
+    t.print();
+    write_results("motivation_a2a", &t.render(), &j)?;
+    Ok(())
+}

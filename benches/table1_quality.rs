@@ -1,0 +1,20 @@
+//! Reproduces Table 1: 50-step quality (FID/sFID/IS/Precision/Recall)
+//! for the five methods. `--samples N` / `--steps N` / `--warmup N`.
+use dice::cli::Args;
+use dice::exp::{quality::quality_table, write_results, Ctx};
+
+fn main() -> anyhow::Result<()> {
+    let a = Args::parse();
+    let ctx = Ctx::open()?;
+    let samples = a.usize_or("samples", 256);
+    let steps = a.usize_or("steps", 50);
+    let warmup = a.usize_or("warmup", 4);
+    let (t, j) = quality_table(
+        &ctx,
+        &format!("Table 1 — quality at {steps} steps ({samples} samples)"),
+        samples, steps, warmup, false, a.u64_or("seed", 1234),
+    )?;
+    t.print();
+    write_results("table1_quality", &t.render(), &j)?;
+    Ok(())
+}

@@ -1,0 +1,18 @@
+//! Reproduces Table 2: 10-step quality + simulated XL-scale speedup
+//! (2 synchronized warmup steps, as in the paper).
+use dice::cli::Args;
+use dice::exp::{quality::quality_table, write_results, Ctx};
+
+fn main() -> anyhow::Result<()> {
+    let a = Args::parse();
+    let ctx = Ctx::open()?;
+    let samples = a.usize_or("samples", 256);
+    let (t, j) = quality_table(
+        &ctx,
+        &format!("Table 2 — quality + speedup at 10 steps ({samples} samples, 2 warmup)"),
+        samples, 10, 2, true, a.u64_or("seed", 1234),
+    )?;
+    t.print();
+    write_results("table2_steps10", &t.render(), &j)?;
+    Ok(())
+}

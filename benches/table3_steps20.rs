@@ -1,0 +1,18 @@
+//! Reproduces Table 3: 20-step quality + simulated XL-scale speedup
+//! (4 synchronized warmup steps, as in the paper).
+use dice::cli::Args;
+use dice::exp::{quality::quality_table, write_results, Ctx};
+
+fn main() -> anyhow::Result<()> {
+    let a = Args::parse();
+    let ctx = Ctx::open()?;
+    let samples = a.usize_or("samples", 256);
+    let (t, j) = quality_table(
+        &ctx,
+        &format!("Table 3 — quality + speedup at 20 steps ({samples} samples, 4 warmup)"),
+        samples, 20, 4, true, a.u64_or("seed", 1234),
+    )?;
+    t.print();
+    write_results("table3_steps20", &t.render(), &j)?;
+    Ok(())
+}

@@ -1,0 +1,17 @@
+//! Reproduces Table 4: selective-synchronization (Deep/Shallow/
+//! Staggered) and conditional-communication (Low/High/Random) ablations
+//! on top of interweaved parallelism.
+use dice::cli::Args;
+use dice::exp::{quality::ablation_table, write_results, Ctx};
+
+fn main() -> anyhow::Result<()> {
+    let a = Args::parse();
+    let ctx = Ctx::open()?;
+    let samples = a.usize_or("samples", 256);
+    let steps = a.usize_or("steps", 50);
+    let warmup = a.usize_or("warmup", 4);
+    let (t, j) = ablation_table(&ctx, samples, steps, warmup, a.u64_or("seed", 1234))?;
+    t.print();
+    write_results("table4_ablation", &t.render(), &j)?;
+    Ok(())
+}

@@ -1,0 +1,10 @@
+//! Reproduces Table 5: all-to-all communication share of synchronous
+//! expert parallelism across models x GPU counts x batch sizes.
+use dice::exp::{scaling::table5, write_results};
+
+fn main() -> anyhow::Result<()> {
+    let (t, j) = table5()?;
+    t.print();
+    write_results("table5_a2a_pct", &t.render(), &j)?;
+    Ok(())
+}

@@ -1,0 +1,21 @@
+//! Perf probe for the §Perf log: one DICE quality run, timed.
+use std::time::Instant;
+fn main() -> anyhow::Result<()> {
+    let rt = dice::runtime::Runtime::open(std::path::Path::new("artifacts"))?;
+    let w = rt.load_weights()?;
+    let bank = dice::runtime::WeightBank::stage(&rt, &w)?;
+    let eng = dice::coordinator::Engine::new(&rt, &bank, dice::coordinator::EngineConfig {
+        strategy: dice::config::Strategy::Interweaved,
+        opts: dice::config::DiceOptions::dice().with_warmup(4),
+        devices: 4,
+    })?;
+    let labels: Vec<usize> = (0..32).map(|i| i % 4).collect();
+    // warm compile cache
+    let _ = eng.generate(&labels, 2, 1, None)?;
+    let t0 = Instant::now();
+    let (x, stats) = eng.generate(&labels, 50, 1, None)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!("32 samples, 50 steps: {:.2}s  ({} execs, {:.0} execs/s)  checksum {:.4}",
+        dt, stats.exec_calls, stats.exec_calls as f64 / dt, x.data().iter().map(|v| v.abs() as f64).sum::<f64>() / x.len() as f64);
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Quickstart: load the AOT artifacts, generate one batch of images
+//! with DICE (interweaved parallelism + selective sync + conditional
+//! communication) on 4 logical devices, and report quality + the
+//! modelled latency at the paper's scale.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use dice::config::{hardware_profile, model_preset, DiceOptions, Strategy};
+use dice::coordinator::{simulate, Engine, EngineConfig};
+use dice::exp::Ctx;
+use dice::netsim::{CostModel, Workload};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::open()?;
+    println!(
+        "model: tiny DiT-MoE ({} layers, {} experts top-{}, d={})",
+        ctx.rt.model.n_layers, ctx.rt.model.n_experts, ctx.rt.model.top_k, ctx.rt.model.d_model
+    );
+
+    let eng = Engine::new(
+        &ctx.rt,
+        &ctx.bank,
+        EngineConfig {
+            strategy: Strategy::Interweaved,
+            opts: DiceOptions::dice().with_warmup(4),
+            devices: 4,
+        },
+    )?;
+    let labels: Vec<usize> = (0..32).map(|i| i % 4).collect();
+    let t0 = std::time::Instant::now();
+    let (samples, stats) = eng.generate(&labels, 50, 0xD1CE, None)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let q = dice::quality::evaluate(&ctx.rt, &ctx.bank, &samples, &ctx.refs)?;
+    println!(
+        "generated {} samples in {wall:.2}s host wall-clock ({} PJRT execs)",
+        samples.shape()[0],
+        stats.exec_calls
+    );
+    println!(
+        "quality: FID-proxy {:.2}  sFID-proxy {:.2}  IS {:.2}  precision {:.2}  recall {:.2}",
+        q.fid, q.sfid, q.is_score, q.precision, q.recall
+    );
+    println!(
+        "staleness: mean {:.2} steps (max {})",
+        stats.staleness.mean_age(4),
+        stats.staleness.max_age(4)
+    );
+    println!(
+        "comm: {} fresh bytes, {} saved by conditional communication",
+        stats.fresh_bytes, stats.saved_bytes
+    );
+
+    // modelled latency of the same schedule at the paper's scale
+    let cm = CostModel::new(model_preset("xl")?, hardware_profile("rtx4090_pcie")?);
+    let wl = Workload {
+        local_batch: 16,
+        devices: 8,
+        tokens: cm.model.tokens(),
+    };
+    let dice_t = simulate(&cm, &wl, Strategy::Interweaved, &DiceOptions::dice(), 50);
+    let sync_t = simulate(&cm, &wl, Strategy::SyncEp, &DiceOptions::none(), 50);
+    println!(
+        "modelled XL/8x4090 latency: DICE {:.2}s vs sync EP {:.2}s  ({:.2}x speedup)",
+        dice_t.total_time,
+        sync_t.total_time,
+        sync_t.total_time / dice_t.total_time
+    );
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Paper-scale what-if explorer: simulate any (model, hardware, batch,
+//! devices, strategy) point and print latency / a2a share / memory.
+//!
+//!     cargo run --release --example scale_sim -- --model g --hw nvlink --batch 8
+
+use dice::cli::Args;
+use dice::config::{hardware_profile, model_preset, DiceOptions, Strategy};
+use dice::coordinator::simulate;
+use dice::benchkit::{fmt_bytes, fmt_secs, Table};
+use dice::netsim::{CostModel, Workload};
+
+fn main() -> anyhow::Result<()> {
+    let a = Args::parse();
+    let model = model_preset(&a.str_or("model", "xl"))?;
+    let hw = hardware_profile(&a.str_or("hw", "rtx4090_pcie"))?;
+    let batch = a.usize_or("batch", 16);
+    let devices = a.usize_or("devices", 8);
+    let steps = a.usize_or("steps", 50);
+    let cm = CostModel::new(model.clone(), hw.clone());
+    let wl = Workload {
+        local_batch: batch,
+        devices,
+        tokens: model.tokens(),
+    };
+    let mut t = Table::new(
+        &format!(
+            "{} on {}x {} — local batch {batch}, {steps} steps",
+            model.name, devices, hw.name
+        ),
+        &["Strategy", "Total", "Step", "a2a share", "Memory", "OOM"],
+    );
+    let configs = [
+        ("sync EP", Strategy::SyncEp, DiceOptions::none()),
+        ("displaced EP", Strategy::DisplacedEp, DiceOptions::none()),
+        ("interweaved", Strategy::Interweaved, DiceOptions::none()),
+        ("DICE", Strategy::Interweaved, DiceOptions::dice()),
+        ("DistriFusion", Strategy::DistriFusion, DiceOptions::none()),
+        ("staggered batch", Strategy::StaggeredBatch, DiceOptions::none()),
+    ];
+    for (name, s, o) in configs {
+        let r = simulate(&cm, &wl, s, &o, steps);
+        t.row(vec![
+            name.into(),
+            fmt_secs(r.total_time),
+            fmt_secs(r.step_time),
+            format!("{:.1}%", r.a2a_share * 100.0),
+            fmt_bytes(r.mem.total as usize),
+            if r.mem.oom { "OOM".into() } else { "-".into() },
+        ]);
+    }
+    t.print();
+    Ok(())
+}

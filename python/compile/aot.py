@@ -1,0 +1,374 @@
+"""AOT exporter: trains (or loads cached) weights, exports every stage
+module as **HLO text**, and writes the weights / metric-reference /
+golden-vector .stf files plus a manifest.
+
+HLO text — NOT ``lowered.compiler_ir('hlo')`` protos and NOT
+``.serialize()`` — is the interchange format: jax >= 0.5 emits protos
+with 64-bit instruction ids which xla_extension 0.5.1 (the version the
+rust ``xla`` crate binds) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (tiny config, D=64, T=16, E=8):
+  {embed,cond,block_pre,block_post,final,moe_dense}_b{1,2,4,8,32}.hlo.txt
+  dfu_block_b32.hlo.txt          DistriFusion sequence-parallel block
+  expert_tile.hlo.txt            the EP-dispatched expert FFN (64-token tile)
+  featnet_b64 / classifier_b64   metric networks
+  weights.stf                    DiT-MoE + classifier weights
+  ref_stats.stf                  FID/sFID reference moments + real features
+  golden.stf                     python-oracle vectors for rust parity tests
+  manifest.json                  inventory + config + training record
+
+Run: ``cd python && python -m compile.aot --out-dir ../artifacts``.
+Training is cached in weights.stf; pass --retrain to redo it.
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data, model, stf, train
+from .configs import (
+    EP_BATCH_BUCKETS,
+    EXPERT_TILE,
+    METRIC_BATCH,
+    QUALITY_DEVICES,
+    TINY,
+)
+
+CFG = TINY
+D, T, E = CFG.d_model, CFG.tokens, CFG.n_experts
+NCLS = CFG.n_classes
+S = CFG.image_size
+TS = T // QUALITY_DEVICES  # DistriFusion shard length
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export(fn, args, path):
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return os.path.basename(path)
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Stage wrappers: positional weight args -> param-dict stage functions.
+# Layer index 0 is used internally; the coordinator feeds any layer's
+# weight slices in the same order (orders are mirrored in
+# rust/src/runtime/artifacts.rs).
+# ---------------------------------------------------------------------------
+
+
+def fn_embed(img, pw, pb, pos):
+    p = {"embed.patch.w": pw, "embed.patch.b": pb, "embed.pos": pos}
+    return (model.embed(p, img, CFG),)
+
+
+def fn_cond(t, y1h, t1w, t1b, t2w, t2b, ytab):
+    p = {
+        "cond.t1.w": t1w,
+        "cond.t1.b": t1b,
+        "cond.t2.w": t2w,
+        "cond.t2.b": t2b,
+        "cond.ytable": ytab,
+    }
+    return (model.cond(p, t, y1h),)
+
+
+BLOCK_W = ["adaln.w", "adaln.b", "qkv.w", "qkv.b", "proj.w", "proj.b", "router.w"]
+SHARED_W = ["shared.0.fc1.w", "shared.0.fc1.b", "shared.0.fc2.w", "shared.0.fc2.b"]
+
+
+def _blockp(args, names):
+    return {f"blocks.0.{n}": a for n, a in zip(names, args)}
+
+
+def fn_block_pre(h, c, *w):
+    p = _blockp(w, BLOCK_W)
+    return model.block_pre(p, 0, h, c, CFG)
+
+
+def fn_block_post(h_attn, xin, moe_out, gate2, *w):
+    p = _blockp(w, SHARED_W)
+    return (model.block_post(p, 0, h_attn, xin, moe_out, gate2),)
+
+
+def fn_final(h, c, aw, ab, ow, ob):
+    p = {"final.adaln.w": aw, "final.adaln.b": ab, "final.out.w": ow, "final.out.b": ob}
+    return (model.final(p, h, c, CFG),)
+
+
+def _stacked_params(w1, b1, w2, b2):
+    p = {}
+    for e in range(E):
+        p[f"blocks.0.experts.{e}.fc1.w"] = w1[e]
+        p[f"blocks.0.experts.{e}.fc1.b"] = b1[e]
+        p[f"blocks.0.experts.{e}.fc2.w"] = w2[e]
+        p[f"blocks.0.experts.{e}.fc2.b"] = b2[e]
+    return p
+
+
+def fn_moe_dense(xin, probs, w1, b1, w2, b2):
+    p = _stacked_params(w1, b1, w2, b2)
+    return (model.moe_dense(p, 0, xin, probs, CFG),)
+
+
+def fn_dfu_block(h_own, h_full, c, *w):
+    p = _blockp(w[:7], BLOCK_W)
+    p.update(_stacked_params(w[7], w[8], w[9], w[10]))
+    p.update(_blockp(w[11:], SHARED_W))
+    return (model.dfu_block(p, 0, h_own, h_full, c, CFG),)
+
+
+def fn_expert_tile(x, w1, b1, w2, b2):
+    return (model._expert_ffn(x, w1, b1, w2, b2),)
+
+
+def fn_featnet(img, f1w, f1b, f2w, f2b):
+    p = {"cls.fc1.w": f1w, "cls.fc1.b": f1b, "cls.fc2.w": f2w, "cls.fc2.b": f2b}
+    return model.features(p, img)
+
+
+def fn_classifier(img, f1w, f1b, f2w, f2b, ow, ob):
+    p = {
+        "cls.fc1.w": f1w,
+        "cls.fc1.b": f1b,
+        "cls.fc2.w": f2w,
+        "cls.fc2.b": f2b,
+        "cls.out.w": ow,
+        "cls.out.b": ob,
+    }
+    return (model.classifier_logits(p, img),)
+
+
+# ---------------------------------------------------------------------------
+
+
+def export_all(out_dir: str) -> list[str]:
+    F = CFG.d_ffn
+    pd = CFG.patch_dim
+    names = []
+    block_w_specs = [f32(D, 6 * D), f32(6 * D), f32(D, 3 * D), f32(3 * D), f32(D, D), f32(D), f32(D, E)]
+    shared_w_specs = [f32(D, F), f32(F), f32(F, D), f32(D)]
+    stack_specs = [f32(E, D, F), f32(E, F), f32(E, F, D), f32(E, D)]
+
+    for b in EP_BATCH_BUCKETS:
+        names.append(
+            export(fn_embed, [f32(b, 1, S, S), f32(pd, D), f32(D), f32(T, D)], f"{out_dir}/embed_b{b}.hlo.txt")
+        )
+        names.append(
+            export(
+                fn_cond,
+                [f32(b), f32(b, NCLS), f32(D, D), f32(D), f32(D, D), f32(D), f32(NCLS, D)],
+                f"{out_dir}/cond_b{b}.hlo.txt",
+            )
+        )
+        names.append(
+            export(
+                fn_block_pre,
+                [f32(b, T, D), f32(b, D)] + block_w_specs,
+                f"{out_dir}/block_pre_b{b}.hlo.txt",
+            )
+        )
+        names.append(
+            export(
+                fn_block_post,
+                [f32(b, T, D), f32(b, T, D), f32(b, T, D), f32(b, D)] + shared_w_specs,
+                f"{out_dir}/block_post_b{b}.hlo.txt",
+            )
+        )
+        names.append(
+            export(fn_final, [f32(b, T, D), f32(b, D), f32(D, 2 * D), f32(2 * D), f32(D, pd), f32(pd)], f"{out_dir}/final_b{b}.hlo.txt")
+        )
+        names.append(
+            export(
+                fn_moe_dense,
+                [f32(b, T, D), f32(b, T, E)] + stack_specs,
+                f"{out_dir}/moe_dense_b{b}.hlo.txt",
+            )
+        )
+
+    # DistriFusion block at the quality-run global batch.
+    b = 32
+    names.append(
+        export(
+            fn_dfu_block,
+            [f32(b, TS, D), f32(b, T, D), f32(b, D)] + block_w_specs + stack_specs + shared_w_specs,
+            f"{out_dir}/dfu_block_b{b}.hlo.txt",
+        )
+    )
+
+    names.append(
+        export(
+            fn_expert_tile,
+            [f32(EXPERT_TILE, D), f32(D, F), f32(F), f32(F, D), f32(D)],
+            f"{out_dir}/expert_tile.hlo.txt",
+        )
+    )
+    # large tile for the coordinator's two-level expert tiling (perf):
+    # most experts receive ~global_tokens*top_k/E = 128 assignments, so a
+    # 256-token tile serves an expert in ONE PJRT call.
+    names.append(
+        export(
+            fn_expert_tile,
+            [f32(4 * EXPERT_TILE, D), f32(D, F), f32(F), f32(F, D), f32(D)],
+            f"{out_dir}/expert_tile_l.hlo.txt",
+        )
+    )
+
+    mb = METRIC_BATCH
+    names.append(
+        export(
+            fn_featnet,
+            [f32(mb, 1, S, S), f32(S * S, 128), f32(128), f32(128, 64), f32(64)],
+            f"{out_dir}/featnet_b{mb}.hlo.txt",
+        )
+    )
+    names.append(
+        export(
+            fn_classifier,
+            [f32(mb, 1, S, S), f32(S * S, 128), f32(128), f32(128, 64), f32(64), f32(64, NCLS), f32(NCLS)],
+            f"{out_dir}/classifier_b{mb}.hlo.txt",
+        )
+    )
+    return names
+
+
+def build_ref_stats(cls_params) -> dict:
+    """FID/sFID reference moments + real features for precision/recall."""
+    imgs, labels = data.reference_set(seed=1234, n=2048)
+    pooled, spatial = model.features(
+        {k: jnp.asarray(v) for k, v in cls_params.items()}, jnp.asarray(imgs)
+    )
+    pooled = np.asarray(pooled)
+    spatial = np.asarray(spatial)
+    out = {
+        "pooled.mu": pooled.mean(0),
+        "pooled.cov": np.cov(pooled, rowvar=False).astype(np.float32),
+        "spatial.mu": spatial.mean(0),
+        "spatial.cov": np.cov(spatial, rowvar=False).astype(np.float32),
+        "real.pooled": pooled[:1024].astype(np.float32),
+        "real.labels": labels[:1024].astype(np.int32),
+    }
+    return out
+
+
+def build_golden(params) -> dict:
+    """Python-oracle vectors for the rust engine parity tests (B=4)."""
+    cfg = CFG
+    rng = np.random.default_rng(42)
+    b = 4
+    x = rng.normal(size=(b, 1, S, S)).astype(np.float32)
+    t = np.full((b,), 0.7, np.float32)
+    labels = np.array([0, 1, 2, 3], np.int32)
+    y1h = np.eye(NCLS, dtype=np.float32)[labels]
+    jp = {k: jnp.asarray(v) for k, v in params.items()}
+    h = model.embed(jp, jnp.asarray(x), cfg)
+    c = model.cond(jp, jnp.asarray(t), jnp.asarray(y1h))
+    golden = {
+        "in.x": x,
+        "in.t": t,
+        "in.y1h": y1h,
+        "mid.embed": np.asarray(h),
+        "mid.cond": np.asarray(c),
+    }
+    for i in range(cfg.n_layers):
+        h_attn, xin, probs, g2 = model.block_pre(jp, i, h, c, cfg)
+        moe = model.moe_dense(jp, i, xin, probs, cfg)
+        h = model.block_post(jp, i, h_attn, xin, moe, g2)
+        golden[f"mid.h{i}"] = np.asarray(h)
+        golden[f"mid.probs{i}"] = np.asarray(probs)
+    golden["out.v"] = np.asarray(model.final(jp, h, c, cfg))
+    # velocity at t=1.0 (what a steps=1 sampler evaluates) for the rust
+    # engine's end-to-end parity test.
+    t1 = np.ones((b,), np.float32)
+    golden["out.v_t1"] = np.asarray(
+        model.velocity(jp, jnp.asarray(x), jnp.asarray(t1), jnp.asarray(y1h), cfg)
+    )
+    return golden
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--retrain", action="store_true")
+    ap.add_argument("--train-steps", type=int, default=900)
+    ap.add_argument("--train-batch", type=int, default=64)
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+    t0 = time.time()
+
+    wpath = f"{out}/weights.stf"
+    curve = []
+    cls_acc = None
+    if os.path.exists(wpath) and not args.retrain:
+        print(f"[aot] reusing cached weights {wpath}")
+        weights = stf.read_stf(wpath)
+        dit_params = {k: v for k, v in weights.items() if not k.startswith("cls.")}
+        cls_params = {k: v for k, v in weights.items() if k.startswith("cls.")}
+    else:
+        model.USE_PALLAS = False  # oracles are differentiable; kernels are not
+        dit_params, curve = train.train_dit(
+            seed=0, steps=args.train_steps, batch=args.train_batch
+        )
+        cls_params, cls_acc = train.train_classifier(seed=7)
+        model.USE_PALLAS = True
+        weights = dict(dit_params) | dict(cls_params)
+        stf.write_stf(wpath, weights)
+        print(f"[aot] wrote {wpath} ({len(weights)} tensors)")
+
+    model.USE_PALLAS = True  # export the Pallas kernels into the artifacts
+    names = export_all(out)
+    print(f"[aot] exported {len(names)} HLO modules")
+
+    stf.write_stf(f"{out}/ref_stats.stf", build_ref_stats(cls_params))
+    stf.write_stf(f"{out}/golden.stf", build_golden(dit_params))
+
+    manifest = {
+        "config": {
+            "name": CFG.name,
+            "image_size": S,
+            "patch": CFG.patch,
+            "d_model": D,
+            "n_heads": CFG.n_heads,
+            "n_layers": CFG.n_layers,
+            "d_ffn": CFG.d_ffn,
+            "n_experts": E,
+            "top_k": CFG.top_k,
+            "n_shared": CFG.n_shared,
+            "n_classes": NCLS,
+            "tokens": T,
+        },
+        "ep_batch_buckets": list(EP_BATCH_BUCKETS),
+        "expert_tile": EXPERT_TILE,
+        "metric_batch": METRIC_BATCH,
+        "quality_devices": QUALITY_DEVICES,
+        "modules": sorted(names),
+        "train": {"loss_curve": curve, "classifier_acc": cls_acc},
+        "built_unix": int(time.time()),
+    }
+    with open(f"{out}/manifest.json", "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] done in {time.time()-t0:.0f}s -> {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Model configurations.
+
+Two tracks (see DESIGN.md §2):
+  * ``TINY`` — the numerics/quality track: a small DiT-MoE trained at
+    build time on the synthetic dataset; all AOT artifacts are exported
+    at these shapes and executed for real by the rust coordinator.
+  * ``XL`` / ``G`` — the paper's DiT-MoE-XL / DiT-MoE-G architectures,
+    used only by the rust-side cost model (simulation mode).  They are
+    mirrored in rust/src/config/presets.rs; this copy exists so python
+    tooling (e.g. VMEM estimates) agrees with the coordinator.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    image_size: int  # square, single channel for TINY
+    channels: int
+    patch: int
+    d_model: int
+    n_heads: int
+    n_layers: int
+    d_ffn: int  # per-expert hidden width
+    n_experts: int
+    top_k: int
+    n_shared: int  # shared experts (always-on)
+    n_classes: int
+
+    @property
+    def tokens(self) -> int:
+        side = self.image_size // self.patch
+        return side * side
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch * self.patch * self.channels
+
+
+# Numerics/quality track. 6 layers, d=64, 8 experts top-2 + 1 shared —
+# small enough to train on one CPU core in minutes, big enough that
+# routing is non-trivial and staleness visibly perturbs samples.
+TINY = ModelConfig(
+    name="tiny",
+    image_size=8,
+    channels=1,
+    patch=2,
+    d_model=64,
+    n_heads=4,
+    n_layers=6,
+    d_ffn=128,
+    n_experts=8,
+    top_k=2,
+    n_shared=1,
+    n_classes=4,
+)
+
+# Paper configs (cost model only). Dimensions follow DiT-XL (d=1152,
+# 28 layers) and the DiT-MoE-G description (40 layers, 16 experts);
+# hidden sizes recorded in DESIGN.md as assumptions.
+XL = ModelConfig(
+    name="xl",
+    image_size=256,
+    channels=4,  # latent space
+    patch=2,
+    d_model=1152,
+    n_heads=16,
+    n_layers=28,
+    d_ffn=4608,
+    n_experts=8,
+    top_k=2,
+    n_shared=2,
+    n_classes=1000,
+)
+
+G = ModelConfig(
+    name="g",
+    image_size=256,
+    channels=4,
+    patch=2,
+    d_model=1536,
+    n_heads=16,
+    n_layers=40,
+    d_ffn=6144,
+    n_experts=16,
+    top_k=2,
+    n_shared=2,
+    n_classes=1000,
+)
+
+# Local-batch buckets exported for EP mode (global batch = devices x B)
+# plus the DistriFusion global-batch bucket (32).
+EP_BATCH_BUCKETS = (1, 2, 4, 8, 32)
+# Fixed token-tile size of the expert FFN artifact; the coordinator
+# pads the last tile per (expert, layer, step).
+EXPERT_TILE = 64
+# Metric batches (featnet / classifier artifacts).
+METRIC_BATCH = 64
+# Logical devices in the quality-track EP runs (8 experts / 4 devices
+# = 2 experts per device; DistriFusion shards 16 tokens into 4x4).
+QUALITY_DEVICES = 4

@@ -1,0 +1,8 @@
+"""L1 Pallas kernels (interpret-mode) + pure-jnp oracles."""
+
+from .attention import attention
+from .expert_ffn import expert_ffn
+from .router import router
+from . import ref
+
+__all__ = ["attention", "expert_ffn", "router", "ref"]

@@ -1,0 +1,50 @@
+"""Pallas attention kernel used by the DiT block.
+
+Grid over (batch, heads); each program holds the full [T, Dh] Q/K/V
+tiles for one head in VMEM and computes the complete softmax(QK^T)V.
+At the tiny config (T=16, Dh=16) the whole score matrix is a single
+MXU tile, so no flash-style streaming is needed — the VMEM-residency
+argument for the paper's scales is in DESIGN.md §Hardware-Adaptation.
+
+A `kv` variant takes K/V with a longer sequence than Q, which is what
+the DistriFusion (sequence-parallel) baseline needs: fresh local Q
+against a stale, host-assembled full-sequence K/V.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale):
+    q = q_ref[0, 0]
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+    scores = jnp.dot(q, k.T) * scale
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0, 0] = jnp.dot(p, v)
+
+
+@jax.jit
+def attention(q, k, v):
+    """Scaled dot-product attention; q: [B,H,Tq,Dh], k/v: [B,H,Tk,Dh]."""
+    b, h, tq, dh = q.shape
+    tk = k.shape[2]
+    scale = 1.0 / (dh**0.5)
+    kern = functools.partial(_attn_kernel, scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, tq, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, tk, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, tk, dh), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, tq, dh), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, tq, dh), q.dtype),
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,78 @@
+"""Pallas kernel for the MoE expert FFN — the paper's compute hot-spot.
+
+The expert FFN ``GELU(x @ W1 + b1) @ W2 + b2`` is the operator that
+expert parallelism shards across devices; every dispatched token tile
+lands here.  The kernel is tiled for TPU:
+
+  * grid over (token tiles, FFN-hidden tiles);
+  * each program computes a [TILE_T, TILE_F] slab of the hidden
+    activation in VMEM, applies GELU, multiplies into the [TILE_F, D]
+    slice of W2 and accumulates into the output block — i.e. the
+    classic "K-partitioned matmul with accumulation in the output
+    window", which is the HBM<->VMEM schedule a CUDA implementation
+    would express with threadblocks + shared memory
+    (DESIGN.md §Hardware-Adaptation).
+  * the last grid axis is the accumulation axis, so the output
+    BlockSpec ignores it and the block is revisited (standard Pallas
+    accumulation pattern, MXU-friendly).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO so the same artifact
+runs under the rust runtime.  Real-TPU VMEM/MXU estimates for the XL
+shapes are recorded in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import gelu
+
+
+def _ffn_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    """One (token-tile, f-tile) program: accumulate x@W1->gelu->@W2."""
+    f_idx = pl.program_id(1)
+    h = jnp.dot(x_ref[...], w1_ref[...]) + b1_ref[...]
+    part = jnp.dot(gelu(h), w2_ref[...])
+
+    @pl.when(f_idx == 0)
+    def _init():
+        o_ref[...] = part + b2_ref[...]
+
+    @pl.when(f_idx != 0)
+    def _acc():
+        o_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("tile_t", "tile_f"))
+def expert_ffn(x, w1, b1, w2, b2, *, tile_t: int = 64, tile_f: int = 128):
+    """Expert FFN over a token tile.
+
+    x: [T, D], w1: [D, F], b1: [F], w2: [F, D], b2: [D] -> [T, D].
+    T must be a multiple of tile_t and F of tile_f (the AOT exporter
+    guarantees this; the coordinator pads the last tile).
+    """
+    t, d = x.shape
+    f = w1.shape[1]
+    if t % tile_t != 0:
+        tile_t = t  # small/odd tiles collapse to one block (tiny-config path)
+    if f % tile_f != 0:
+        tile_f = f
+    assert t % tile_t == 0 and f % tile_f == 0, (t, f, tile_t, tile_f)
+    grid = (t // tile_t, f // tile_f)
+    return pl.pallas_call(
+        _ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_t, d), lambda i, j: (i, 0)),  # x tile
+            pl.BlockSpec((d, tile_f), lambda i, j: (0, j)),  # W1 slab
+            pl.BlockSpec((tile_f,), lambda i, j: (j,)),  # b1 slab
+            pl.BlockSpec((tile_f, d), lambda i, j: (j, 0)),  # W2 slab
+            pl.BlockSpec((d,), lambda i, j: (0,)),  # b2
+        ],
+        out_specs=pl.BlockSpec((tile_t, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        interpret=True,
+    )(x, w1, b1, w2, b2)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels (the L1 correctness signal).
+
+These are the ground truth that ``python/tests/test_kernels.py`` compares
+the Pallas implementations against (assert_allclose across shapes/dtypes
+via hypothesis), and they are also used directly by the training forward
+pass whenever a shape falls outside the kernels' tile constraints.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def gelu(x):
+    """tanh-approximation GELU (matches the kernel exactly)."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def expert_ffn_ref(x, w1, b1, w2, b2):
+    """GELU((x @ w1 + b1)) @ w2 + b2 — the MoE expert FFN.
+
+    x: [T, D], w1: [D, F], b1: [F], w2: [F, D], b2: [D] -> [T, D]
+    """
+    h = gelu(jnp.dot(x, w1) + b1)
+    return jnp.dot(h, w2) + b2
+
+
+def attention_ref(q, k, v):
+    """Scaled dot-product attention.
+
+    q, k, v: [B, H, T, Dh] -> [B, H, T, Dh]
+    """
+    dh = q.shape[-1]
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k) / jnp.sqrt(
+        jnp.asarray(dh, dtype=q.dtype)
+    )
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", probs, v)
+
+
+def router_ref(x, wg):
+    """Router scores: softmax over experts of x @ wg.
+
+    x: [T, D], wg: [D, E] -> probs [T, E]
+    """
+    return jax.nn.softmax(jnp.dot(x, wg), axis=-1)

@@ -1,0 +1,37 @@
+"""Pallas router-scoring kernel.
+
+Computes softmax(x @ Wg) over the expert axis for a tile of tokens.
+The coordinator consumes the probabilities directly: top-k selection,
+dispatch planning and the conditional-communication priority signal
+(Sec. 4.3, Eq. 1) all live on the rust side, where the routing table
+must be host-visible anyway.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _router_kernel(x_ref, wg_ref, o_ref):
+    logits = jnp.dot(x_ref[...], wg_ref[...])
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    o_ref[...] = p / jnp.sum(p, axis=-1, keepdims=True)
+
+
+@jax.jit
+def router(x, wg):
+    """x: [T, D], wg: [D, E] -> probs [T, E] (rows sum to 1)."""
+    t, d = x.shape
+    e = wg.shape[1]
+    return pl.pallas_call(
+        _router_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((t, d), lambda i: (0, 0)),
+            pl.BlockSpec((d, e), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((t, e), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, e), x.dtype),
+        interpret=True,
+    )(x, wg)

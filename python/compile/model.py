@@ -1,0 +1,353 @@
+"""L2: DiT-MoE in JAX, written as split functions so the AOT exporter can
+emit one HLO module per stage with **weights as runtime arguments**
+(one artifact serves all layers; the rust coordinator feeds per-layer
+weight slices from weights.stf).
+
+Block structure (DiT adaLN-zero style, MoE FFN):
+
+    (shift1, scale1, gate1, shift2, scale2, gate2) = adaLN(c)
+    h  = h + gate1 * attn(modulate(ln(h), shift1, scale1))        # block_pre
+    xin = modulate(ln(h), shift2, scale2); probs = router(xin)    # block_pre
+    moe = sum_{e in top-k} probs_e * Expert_e(xin)                # EP path
+    h  = h + gate2 * (moe + SharedExpert(xin))                    # block_post
+
+``velocity`` composes everything monolithically — it is the training
+forward pass and the golden-vector oracle for the rust engine's
+synchronous-EP parity test.  ``moe_dense`` computes the routed-expert
+sum densely (all experts, masked) which is numerically identical to the
+dispatch/combine path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import TINY, ModelConfig
+from . import kernels as _k
+from .kernels.ref import attention_ref, expert_ffn_ref, gelu, router_ref
+
+# Kernel backend switch: the Pallas interpret-mode kernels do not define a
+# VJP, so training differentiates through the pure-jnp oracles while the
+# AOT inference artifacts are exported with the Pallas kernels (both are
+# verified allclose by python/tests/test_kernels.py).
+USE_PALLAS = True
+
+
+def _attention(q, k, v):
+    return _k.attention(q, k, v) if USE_PALLAS else attention_ref(q, k, v)
+
+
+def _expert_ffn(x, w1, b1, w2, b2):
+    if USE_PALLAS:
+        return _k.expert_ffn(x, w1, b1, w2, b2)
+    return expert_ffn_ref(x, w1, b1, w2, b2)
+
+
+def _router(x, wg):
+    return _k.router(x, wg) if USE_PALLAS else router_ref(x, wg)
+
+# ---------------------------------------------------------------------------
+# Parameter initialisation
+# ---------------------------------------------------------------------------
+
+
+def init_params(seed: int, cfg: ModelConfig = TINY) -> dict:
+    """Initialise all weights as a flat dict name -> np.ndarray (f32).
+
+    Flat naming keeps the .stf format and the rust loader trivial:
+      embed.*, cond.*, blocks.{i}.*, final.*
+    """
+    rng = np.random.default_rng(seed)
+    p: dict[str, np.ndarray] = {}
+
+    def dense(name, din, dout, scale=None, zero=False):
+        if zero:
+            p[f"{name}.w"] = np.zeros((din, dout), np.float32)
+        else:
+            s = scale if scale is not None else (1.0 / np.sqrt(din))
+            p[f"{name}.w"] = rng.normal(0.0, s, size=(din, dout)).astype(np.float32)
+        p[f"{name}.b"] = np.zeros((dout,), np.float32)
+
+    d, f, e = cfg.d_model, cfg.d_ffn, cfg.n_experts
+    dense("embed.patch", cfg.patch_dim, d)
+    p["embed.pos"] = (0.02 * rng.normal(size=(cfg.tokens, d))).astype(np.float32)
+    dense("cond.t1", d, d)
+    dense("cond.t2", d, d)
+    p["cond.ytable"] = (0.02 * rng.normal(size=(cfg.n_classes, d))).astype(np.float32)
+
+    for i in range(cfg.n_layers):
+        b = f"blocks.{i}"
+        # adaLN-zero: modulation produced from c; gates init to zero so the
+        # network starts as identity (standard DiT trick, stabilises training).
+        dense(f"{b}.adaln", d, 6 * d, zero=True)
+        dense(f"{b}.qkv", d, 3 * d)
+        dense(f"{b}.proj", d, d)
+        p[f"{b}.router.w"] = rng.normal(0.0, 0.02, size=(d, e)).astype(np.float32)
+        for j in range(e):
+            dense(f"{b}.experts.{j}.fc1", d, f)
+            dense(f"{b}.experts.{j}.fc2", f, d)
+        for j in range(cfg.n_shared):
+            dense(f"{b}.shared.{j}.fc1", d, f)
+            dense(f"{b}.shared.{j}.fc2", f, d)
+
+    dense("final.adaln", d, 2 * d, zero=True)
+    dense("final.out", d, cfg.patch_dim, zero=True)
+    return p
+
+
+def to_jax(params: dict) -> dict:
+    return {k: jnp.asarray(v) for k, v in params.items()}
+
+
+# ---------------------------------------------------------------------------
+# Primitive pieces
+# ---------------------------------------------------------------------------
+
+
+def layer_norm(x, eps: float = 1e-6):
+    """Non-affine LayerNorm over the last axis (DiT uses affine-free LN)."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps)
+
+
+def modulate(x, shift, scale):
+    return x * (1.0 + scale[:, None, :]) + shift[:, None, :]
+
+
+def patchify(img, cfg: ModelConfig = TINY):
+    """[B, C, S, S] -> [B, T, patch_dim] in row-major patch order."""
+    b, c, s, _ = img.shape
+    pp = cfg.patch
+    g = s // pp
+    x = img.reshape(b, c, g, pp, g, pp)
+    x = jnp.transpose(x, (0, 2, 4, 1, 3, 5))  # B, gy, gx, C, py, px
+    return x.reshape(b, g * g, c * pp * pp)
+
+
+def unpatchify(tokens, cfg: ModelConfig = TINY):
+    """[B, T, patch_dim] -> [B, C, S, S] (inverse of patchify)."""
+    b, t, _ = tokens.shape
+    g = cfg.image_size // cfg.patch
+    pp, c = cfg.patch, cfg.channels
+    x = tokens.reshape(b, g, g, c, pp, pp)
+    x = jnp.transpose(x, (0, 3, 1, 4, 2, 5))
+    return x.reshape(b, c, g * pp, g * pp)
+
+
+def timestep_embedding(t, dim):
+    """Sinusoidal embedding of t in [0,1]; [B] -> [B, dim]."""
+    half = dim // 2
+    freqs = jnp.exp(-jnp.log(1000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    args = t[:, None] * 1000.0 * freqs[None, :]
+    return jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Stage functions (each becomes one AOT artifact)
+# ---------------------------------------------------------------------------
+
+
+def embed(p, img, cfg: ModelConfig = TINY):
+    """img [B,C,S,S] -> tokens [B,T,D]."""
+    tok = patchify(img, cfg)
+    return jnp.dot(tok, p["embed.patch.w"]) + p["embed.patch.b"] + p["embed.pos"]
+
+
+def cond(p, t, y1h):
+    """t [B] in [0,1], y1h [B, n_classes] one-hot -> c [B, D]."""
+    h = timestep_embedding(t, p["cond.t1.w"].shape[0])
+    h = jax.nn.silu(jnp.dot(h, p["cond.t1.w"]) + p["cond.t1.b"])
+    h = jnp.dot(h, p["cond.t2.w"]) + p["cond.t2.b"]
+    return h + jnp.dot(y1h, p["cond.ytable"])
+
+
+def _adaln(p, b, c):
+    mod = jnp.dot(jax.nn.silu(c), p[f"{b}.adaln.w"]) + p[f"{b}.adaln.b"]
+    return jnp.split(mod, 6, axis=-1)
+
+
+def block_pre(p, layer: int, h, c, cfg: ModelConfig = TINY):
+    """Attention half + router of block `layer`.
+
+    Returns (h_attn [B,T,D], xin [B,T,D], probs [B,T,E], gate2 [B,D]).
+    The rust coordinator routes `xin` through the EP path, then calls
+    block_post with the combined expert output.
+    """
+    b = f"blocks.{layer}"
+    s1, sc1, g1, s2, sc2, g2 = _adaln(p, b, c)
+    x = modulate(layer_norm(h), s1, sc1)
+    qkv = jnp.dot(x, p[f"{b}.qkv.w"]) + p[f"{b}.qkv.b"]
+    bb, t, _ = qkv.shape
+    hd = cfg.n_heads
+    dh = cfg.d_model // hd
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(z):
+        return jnp.transpose(z.reshape(bb, t, hd, dh), (0, 2, 1, 3))
+
+    att = _attention(heads(q), heads(k), heads(v))
+    att = jnp.transpose(att, (0, 2, 1, 3)).reshape(bb, t, cfg.d_model)
+    att = jnp.dot(att, p[f"{b}.proj.w"]) + p[f"{b}.proj.b"]
+    h_attn = h + g1[:, None, :] * att
+
+    xin = modulate(layer_norm(h_attn), s2, sc2)
+    probs = jax.vmap(lambda xt: _router(xt, p[f"{b}.router.w"]))(xin)
+    return h_attn, xin, probs, g2
+
+
+def expert_apply(p, layer: int, expert: int, x):
+    """One routed expert over a token tile [T, D] (Pallas kernel)."""
+    b = f"blocks.{layer}.experts.{expert}"
+    return _expert_ffn(x, p[f"{b}.fc1.w"], p[f"{b}.fc1.b"], p[f"{b}.fc2.w"], p[f"{b}.fc2.b"])
+
+
+def shared_apply(p, layer: int, x2d):
+    """Shared expert(s) over [N, D] (always fresh — computed locally)."""
+    out = jnp.zeros_like(x2d)
+    i = 0
+    while f"blocks.{layer}.shared.{i}.fc1.w" in p:
+        b = f"blocks.{layer}.shared.{i}"
+        out = out + _expert_ffn(
+            x2d, p[f"{b}.fc1.w"], p[f"{b}.fc1.b"], p[f"{b}.fc2.w"], p[f"{b}.fc2.b"]
+        )
+        i += 1
+    return out
+
+
+def block_post(p, layer: int, h_attn, xin, moe_out, gate2):
+    """Residual half: shared expert + gated residual."""
+    bb, t, d = xin.shape
+    shared = shared_apply(p, layer, xin.reshape(bb * t, d)).reshape(bb, t, d)
+    return h_attn + gate2[:, None, :] * (moe_out + shared)
+
+
+def topk_mask(probs, k: int):
+    """Top-k selection mask (no renormalisation — DiT-MoE convention).
+
+    Implemented with `sort` rather than `lax.top_k`: jax's TopK lowers to
+    an HLO `topk(..., largest=true)` attribute that the rust side's
+    xla_extension 0.5.1 text parser rejects; `sort` round-trips fine and
+    is numerically identical for distinct router probabilities.
+    """
+    sorted_desc = -jnp.sort(-probs, axis=-1)
+    kth = sorted_desc[..., k - 1 : k]
+    return (probs >= kth).astype(probs.dtype)
+
+
+def moe_dense(p, layer: int, xin, probs, cfg: ModelConfig = TINY):
+    """Dense (all-experts, masked) routed-MoE — numerically identical to
+    the dispatch/combine EP path; used for training and as reference."""
+    bb, t, d = xin.shape
+    mask = topk_mask(probs, cfg.top_k)  # [B,T,E]
+    x2 = xin.reshape(bb * t, d)
+    out = jnp.zeros_like(x2)
+    w = (probs * mask).reshape(bb * t, cfg.n_experts)
+    for e in range(cfg.n_experts):
+        out = out + w[:, e : e + 1] * expert_apply(p, layer, e, x2)
+    return out.reshape(bb, t, d)
+
+
+def block(p, layer: int, h, c, cfg: ModelConfig = TINY):
+    h_attn, xin, probs, g2 = block_pre(p, layer, h, c, cfg)
+    moe = moe_dense(p, layer, xin, probs, cfg)
+    return block_post(p, layer, h_attn, xin, moe, g2)
+
+
+def final(p, h, c, cfg: ModelConfig = TINY):
+    """Final adaLN + linear + unpatchify -> velocity field [B,C,S,S]."""
+    mod = jnp.dot(jax.nn.silu(c), p["final.adaln.w"]) + p["final.adaln.b"]
+    shift, scale = jnp.split(mod, 2, axis=-1)
+    x = modulate(layer_norm(h), shift, scale)
+    x = jnp.dot(x, p["final.out.w"]) + p["final.out.b"]
+    return unpatchify(x, cfg)
+
+
+def velocity(p, x, t, y1h, cfg: ModelConfig = TINY):
+    """Full forward pass: predicted velocity v(x_t, t, y)."""
+    h = embed(p, x, cfg)
+    c = cond(p, t, y1h)
+    for i in range(cfg.n_layers):
+        h = block(p, i, h, c, cfg)
+    return final(p, h, c, cfg)
+
+
+# ---------------------------------------------------------------------------
+# DistriFusion (sequence-parallel) block: fresh local Q-shard against a
+# host-assembled full-sequence h (own shard fresh, remote shards stale).
+# ---------------------------------------------------------------------------
+
+
+def dfu_block(p, layer: int, h_own, h_full, c, cfg: ModelConfig = TINY):
+    """Sequence-parallel DiT block for one token shard.
+
+    h_own:  [B, Ts, D] fresh local shard;
+    h_full: [B, T, D]  full sequence (remote parts 1-step stale).
+    All experts are local (no EP) — dense MoE over the shard.
+    """
+    b = f"blocks.{layer}"
+    s1, sc1, g1, s2, sc2, g2 = _adaln(p, b, c)
+    xq = modulate(layer_norm(h_own), s1, sc1)
+    xkv = modulate(layer_norm(h_full), s1, sc1)
+    bb, ts, _ = xq.shape
+    t = xkv.shape[1]
+    hd, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+
+    q = jnp.dot(xq, p[f"{b}.qkv.w"][:, : cfg.d_model]) + p[f"{b}.qkv.b"][: cfg.d_model]
+    kv = jnp.dot(xkv, p[f"{b}.qkv.w"][:, cfg.d_model :]) + p[f"{b}.qkv.b"][cfg.d_model :]
+    k, v = jnp.split(kv, 2, axis=-1)
+
+    def heads(z, tt):
+        return jnp.transpose(z.reshape(bb, tt, hd, dh), (0, 2, 1, 3))
+
+    att = _attention(heads(q, ts), heads(k, t), heads(v, t))
+    att = jnp.transpose(att, (0, 2, 1, 3)).reshape(bb, ts, cfg.d_model)
+    att = jnp.dot(att, p[f"{b}.proj.w"]) + p[f"{b}.proj.b"]
+    h1 = h_own + g1[:, None, :] * att
+
+    xin = modulate(layer_norm(h1), s2, sc2)
+    probs = jax.vmap(lambda xt: _router(xt, p[f"{b}.router.w"]))(xin)
+    moe = moe_dense(p, layer, xin, probs, cfg)
+    return block_post(p, layer, h1, xin, moe, g2)
+
+
+# ---------------------------------------------------------------------------
+# Metric networks (trained in train.py): classifier + feature extractor.
+# ---------------------------------------------------------------------------
+
+
+def init_classifier(seed: int, cfg: ModelConfig = TINY) -> dict:
+    rng = np.random.default_rng(seed)
+    din = cfg.channels * cfg.image_size**2
+    p = {}
+
+    def dense(name, a, bdim):
+        p[f"{name}.w"] = rng.normal(0.0, 1.0 / np.sqrt(a), size=(a, bdim)).astype(
+            np.float32
+        )
+        p[f"{name}.b"] = np.zeros((bdim,), np.float32)
+
+    dense("cls.fc1", din, 128)
+    dense("cls.fc2", 128, 64)
+    dense("cls.out", 64, cfg.n_classes)
+    return p
+
+
+def classifier_logits(p, img):
+    """img [B,C,S,S] -> logits [B, n_classes]."""
+    b = img.shape[0]
+    x = img.reshape(b, -1)
+    h1 = gelu(jnp.dot(x, p["cls.fc1.w"]) + p["cls.fc1.b"])
+    h2 = gelu(jnp.dot(h1, p["cls.fc2.w"]) + p["cls.fc2.b"])
+    return jnp.dot(h2, p["cls.out.w"]) + p["cls.out.b"]
+
+
+def features(p, img):
+    """img -> (pooled [B,64], spatial [B,128]) — the FID / sFID proxy
+    feature spaces (penultimate + first hidden layer of the trained
+    classifier; DESIGN.md §2)."""
+    b = img.shape[0]
+    x = img.reshape(b, -1)
+    h1 = gelu(jnp.dot(x, p["cls.fc1.w"]) + p["cls.fc1.b"])
+    h2 = gelu(jnp.dot(h1, p["cls.fc2.w"]) + p["cls.fc2.b"])
+    return h2, h1

@@ -1,0 +1,60 @@
+"""STF — Simple Tensor File format (weights/stats interchange).
+
+No serde/npz is available on the rust side (offline crate set), so we
+define a trivial little-endian container; the reader lives in
+``rust/src/tensor/stf.rs`` and must match this byte-for-byte.
+
+Layout:
+    magic   4  bytes  b"STF1"
+    count   u32       number of tensors
+  per tensor:
+    nlen    u16       name length
+    name    nlen bytes (utf-8)
+    dtype   u8        0 = f32, 1 = i32
+    ndim    u8
+    dims    u32 * ndim
+    data    product(dims) * 4 bytes, little-endian
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"STF1"
+_DTYPES = {0: np.float32, 1: np.int32}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+
+
+def write_stf(path: str, tensors: dict):
+    """Write ``{name: np.ndarray}`` (f32/i32 only) to `path`."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            code = _CODES[arr.dtype]
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", code, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.astype("<" + arr.dtype.str[1:]).tobytes())
+
+
+def read_stf(path: str) -> dict:
+    """Read an STF file back (python-side round-trip testing)."""
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad magic"
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode("utf-8")
+            code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            n = int(np.prod(dims)) if ndim else 1
+            dt = _DTYPES[code]
+            data = np.frombuffer(f.read(4 * n), dtype="<" + np.dtype(dt).str[1:])
+            out[name] = data.reshape(dims).astype(dt)
+    return out

@@ -1,0 +1,133 @@
+"""Build-time training (CPU, minutes): tiny DiT-MoE with rectified flow
+on the synthetic dataset, plus the metric classifier whose hidden layers
+are the FID/sFID feature spaces.
+
+Rectified flow:  x_t = (1 - t) * x0 + t * eps,  target v = eps - x0,
+loss = E ||v_theta(x_t, t, y) - v||^2.  Sampling integrates from t=1
+(noise) to t=0 with Euler steps x <- x - dt * v_theta.
+
+A hand-rolled Adam (no optax in the image) keeps dependencies zero.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .configs import TINY
+from .model import (
+    classifier_logits,
+    init_classifier,
+    init_params,
+    to_jax,
+    velocity,
+)
+
+
+# ---------------------------------------------------------------------------
+# Minimal Adam
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    z = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": z, "v": {k: jnp.zeros_like(v) for k, v in params.items()}, "t": 0}
+
+
+def adam_step(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * state["v"][k] + (1 - b2) * grads[k] ** 2 for k in params}
+    bc1 = 1 - b1**t
+    bc2 = 1 - b2**t
+    new = {
+        k: params[k] - lr * (m[k] / bc1) / (jnp.sqrt(v[k] / bc2) + eps) for k in params
+    }
+    return new, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Diffusion model training
+# ---------------------------------------------------------------------------
+
+
+def rf_loss(params, x0, y1h, t, eps):
+    xt = (1.0 - t)[:, None, None, None] * x0 + t[:, None, None, None] * eps
+    v = velocity(params, xt, t, y1h)
+    return jnp.mean((v - (eps - x0)) ** 2)
+
+
+def train_dit(seed: int = 0, steps: int = 1200, batch: int = 64, log_every: int = 100):
+    """Train the tiny DiT-MoE; returns (params_np, loss_curve)."""
+    cfg = TINY
+    params = to_jax(init_params(seed, cfg))
+    opt = adam_init(params)
+    rng = np.random.default_rng(seed + 1)
+
+    loss_grad = jax.jit(jax.value_and_grad(rf_loss))
+    curve = []
+    t0 = time.time()
+    for step in range(steps):
+        imgs, labels = data.sample_batch(rng, batch)
+        y1h = np.eye(cfg.n_classes, dtype=np.float32)[labels]
+        t = rng.uniform(0.0, 1.0, size=batch).astype(np.float32)
+        eps = rng.normal(size=imgs.shape).astype(np.float32)
+        loss, grads = loss_grad(params, jnp.asarray(imgs), jnp.asarray(y1h), jnp.asarray(t), jnp.asarray(eps))
+        params, opt = adam_step(params, grads, opt)
+        if step % log_every == 0 or step == steps - 1:
+            curve.append((step, float(loss)))
+            print(f"[train_dit] step {step:5d}  loss {float(loss):.4f}  ({time.time()-t0:.0f}s)")
+    return {k: np.asarray(v) for k, v in params.items()}, curve
+
+
+# ---------------------------------------------------------------------------
+# Metric classifier training
+# ---------------------------------------------------------------------------
+
+
+def cls_loss(params, imgs, labels1h):
+    logits = classifier_logits(params, imgs)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.sum(labels1h * logp, axis=-1))
+
+
+def train_classifier(seed: int = 7, steps: int = 400, batch: int = 128):
+    cfg = TINY
+    params = {k: jnp.asarray(v) for k, v in init_classifier(seed, cfg).items()}
+    opt = adam_init(params)
+    rng = np.random.default_rng(seed + 1)
+    loss_grad = jax.jit(jax.value_and_grad(cls_loss))
+    acc = None
+    for step in range(steps):
+        imgs, labels = data.sample_batch(rng, batch)
+        y1h = np.eye(cfg.n_classes, dtype=np.float32)[labels]
+        loss, grads = loss_grad(params, jnp.asarray(imgs), jnp.asarray(y1h))
+        params, opt = adam_step(params, grads, opt, lr=2e-3)
+    # held-out accuracy
+    imgs, labels = data.sample_batch(np.random.default_rng(seed + 999), 512)
+    pred = np.argmax(np.asarray(classifier_logits(params, jnp.asarray(imgs))), axis=-1)
+    acc = float(np.mean(pred == labels))
+    print(f"[train_classifier] held-out accuracy {acc:.3f}")
+    return {k: np.asarray(v) for k, v in params.items()}, acc
+
+
+# ---------------------------------------------------------------------------
+# Reference sampling (python oracle for the rust sampler)
+# ---------------------------------------------------------------------------
+
+
+def sample(params, labels, steps: int, seed: int):
+    """Euler rectified-flow sampling with the monolithic forward pass."""
+    cfg = TINY
+    n = labels.shape[0]
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, cfg.channels, cfg.image_size, cfg.image_size)).astype(np.float32))
+    y1h = jnp.asarray(np.eye(cfg.n_classes, dtype=np.float32)[labels])
+    vfn = jax.jit(lambda xx, tt: velocity(params, xx, tt, y1h))
+    dt = 1.0 / steps
+    for i in range(steps, 0, -1):
+        t = jnp.full((n,), i * dt, dtype=jnp.float32)
+        x = x - dt * vfn(x, t)
+    return np.asarray(x)

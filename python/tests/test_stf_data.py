@@ -1,0 +1,65 @@
+"""STF round-trip + synthetic dataset sanity."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import data, stf
+
+
+def test_stf_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    tensors = {
+        "a.w": rng.normal(size=(3, 4)).astype(np.float32),
+        "b": np.arange(7, dtype=np.int32),
+        "scalarish": rng.normal(size=(1,)).astype(np.float32),
+        "deep.nested.name.x": rng.normal(size=(2, 3, 4, 5)).astype(np.float32),
+    }
+    p = str(tmp_path / "t.stf")
+    stf.write_stf(p, tensors)
+    back = stf.read_stf(p)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        assert back[k].dtype == tensors[k].dtype
+        np.testing.assert_array_equal(back[k], tensors[k])
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 6),
+    seed=st.integers(0, 2**16),
+)
+def test_stf_roundtrip_property(tmp_path_factory, n, seed):
+    rng = np.random.default_rng(seed)
+    tensors = {}
+    for i in range(n):
+        nd = int(rng.integers(1, 4))
+        shape = tuple(int(s) for s in rng.integers(1, 6, nd))
+        if rng.uniform() < 0.5:
+            tensors[f"t{i}"] = rng.normal(size=shape).astype(np.float32)
+        else:
+            tensors[f"t{i}"] = rng.integers(-100, 100, shape).astype(np.int32)
+    p = str(tmp_path_factory.mktemp("stf") / "r.stf")
+    stf.write_stf(p, tensors)
+    back = stf.read_stf(p)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+
+
+def test_dataset_reproducible():
+    a, la = data.reference_set(seed=5, n=64)
+    b, lb = data.reference_set(seed=5, n=64)
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(la, lb)
+
+
+def test_dataset_range_and_classes():
+    imgs, labels = data.reference_set(seed=1, n=256)
+    assert imgs.shape == (256, 1, 8, 8)
+    assert np.abs(imgs).max() <= 1.0
+    assert set(np.unique(labels)) == {0, 1, 2, 3}
+    # classes are visually distinct in mean image: pairwise L2 > 0
+    means = [imgs[labels == k].mean(0) for k in range(4)]
+    for i in range(4):
+        for j in range(i + 1, 4):
+            assert np.linalg.norm(means[i] - means[j]) > 0.5

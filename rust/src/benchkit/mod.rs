@@ -1,0 +1,184 @@
+//! Bench harness substrate (`criterion` is unavailable offline).
+//!
+//! Provides: warmup + timed iterations with mean/p50/p99/stddev, and a
+//! markdown table writer used by every `benches/*.rs` driver to print the
+//! paper-table reproductions. Results can also be appended as JSON lines
+//! for post-processing.
+
+use std::time::Instant;
+
+/// Timing summary of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub std_s: f64,
+}
+
+/// Run `f` with warmup, returning the timing summary.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    summarize(name, &samples)
+}
+
+/// Summarise raw samples (used when the workload self-times, e.g.
+/// virtual-time simulations).
+pub fn summarize(name: &str, samples: &[f64]) -> Summary {
+    assert!(!samples.is_empty());
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = sorted.iter().sum::<f64>() / sorted.len() as f64;
+    let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+        / sorted.len() as f64;
+    let pct = |p: f64| sorted[(((p / 100.0) * (sorted.len() - 1) as f64).round()) as usize];
+    Summary {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_s: mean,
+        p50_s: pct(50.0),
+        p99_s: pct(99.0),
+        std_s: var.sqrt(),
+    }
+}
+
+/// Markdown table builder for paper-table reproductions.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut s = format!("\n### {}\n\n", self.title);
+        let line = |cells: &[String], widths: &[usize]| {
+            let mut l = String::from("|");
+            for i in 0..ncol {
+                l.push_str(&format!(" {:<w$} |", cells[i], w = widths[i]));
+            }
+            l.push('\n');
+            l
+        };
+        s.push_str(&line(&self.headers, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        s.push_str(&sep);
+        for r in &self.rows {
+            s.push_str(&line(r, &widths));
+        }
+        s
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format seconds adaptively.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+/// Format bytes adaptively.
+pub fn fmt_bytes(b: usize) -> String {
+    const G: f64 = 1024.0 * 1024.0 * 1024.0;
+    const M: f64 = 1024.0 * 1024.0;
+    let f = b as f64;
+    if f >= G {
+        format!("{:.2}GB", f / G)
+    } else if f >= M {
+        format!("{:.1}MB", f / M)
+    } else {
+        format!("{:.1}KB", f / 1024.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let s = bench("noop", 2, 16, || {
+            std::hint::black_box(42);
+        });
+        assert_eq!(s.iters, 16);
+        assert!(s.mean_s >= 0.0 && s.mean_s < 0.1);
+        assert!(s.p50_s <= s.p99_s + 1e-12);
+    }
+
+    #[test]
+    fn summarize_percentiles() {
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = summarize("x", &samples);
+        assert!((s.mean_s - 50.5).abs() < 1e-9);
+        assert!((s.p50_s - 51.0).abs() <= 1.0);
+        assert!(s.p99_s >= 99.0);
+    }
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut t = Table::new("Table 1", &["method", "FID"]);
+        t.row(vec!["sync_ep".into(), "5.31".into()]);
+        t.row(vec!["dice".into(), "6.11".into()]);
+        let md = t.render();
+        assert!(md.contains("### Table 1"));
+        assert!(md.contains("| sync_ep"));
+        assert!(md.lines().filter(|l| l.starts_with('|')).count() == 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_row_width_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(fmt_secs(2.5), "2.50s");
+        assert_eq!(fmt_secs(0.0025), "2.50ms");
+        assert_eq!(fmt_bytes(2 * 1024 * 1024 * 1024), "2.00GB");
+        assert_eq!(fmt_bytes(1536), "1.5KB");
+    }
+}

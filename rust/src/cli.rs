@@ -1,0 +1,160 @@
+//! Tiny argument-parsing substrate (no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args;
+//! typed getters with defaults; and a generated usage string. Enough for
+//! the `dice` binary, the examples and the bench drivers.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+    spec: Vec<(String, String, Option<String>)>, // name, help, default
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) — `--k v`, `--k=v`, `--flag`.
+    pub fn parse_from<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut a = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    a.kv.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    a.kv.insert(stripped.to_string(), v);
+                } else {
+                    a.flags.push(stripped.to_string());
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        a
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn parse() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    /// Declare an option for the usage string (purely documentary).
+    pub fn declare(&mut self, name: &str, help: &str, default: Option<&str>) -> &mut Self {
+        self.spec
+            .push((name.to_string(), help.to_string(), default.map(String::from)));
+        self
+    }
+
+    pub fn usage(&self, program: &str) -> String {
+        let mut s = format!("usage: {program} [options]\n");
+        for (n, h, d) in &self.spec {
+            let dd = d
+                .as_ref()
+                .map(|d| format!(" (default: {d})"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{n:<18} {h}{dd}\n"));
+        }
+        s
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.kv.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list of usize, e.g. `--batches 4,8,16`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("--{name}: bad entry {s:?}")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn kv_and_flags() {
+        // note: a bare `--flag` followed by a positional would bind as
+        // `--flag value` (documented greedy behaviour) — put positionals
+        // first or use `--k=v`.
+        let a = parse("run --steps 50 --mode=dice --verbose");
+        assert_eq!(a.usize_or("steps", 0), 50);
+        assert_eq!(a.str_or("mode", "x"), "dice");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.positional, vec!["run".to_string()]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.usize_or("n", 3), 3);
+        assert_eq!(a.f64_or("x", 2.5), 2.5);
+        assert_eq!(a.str_or("s", "d"), "d");
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("--batches 4,8,16");
+        assert_eq!(a.usize_list_or("batches", &[1]), vec![4, 8, 16]);
+        assert_eq!(a.usize_list_or("other", &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn flag_followed_by_positional_is_value() {
+        // documented behaviour: `--k v` binds; use `--k=v` to disambiguate
+        let a = parse("--mode dice");
+        assert_eq!(a.get("mode"), Some("dice"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_int_panics() {
+        let a = parse("--steps abc");
+        a.usize_or("steps", 0);
+    }
+}

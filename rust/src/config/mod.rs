@@ -1,0 +1,353 @@
+//! Configuration: model architectures (tiny numerics config + the paper's
+//! DiT-MoE-XL/G cost-model configs), hardware profiles, parallelism
+//! strategy selection, and the JSON substrate used to read the artifact
+//! manifest and write experiment outputs.
+
+pub mod json;
+pub mod presets;
+
+pub use json::{obj, Json};
+pub use presets::{hardware_profile, model_preset, HardwareProfile, ModelPreset};
+
+use anyhow::{bail, Context, Result};
+
+/// Model architecture (mirrors `python/compile/configs.py`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub image_size: usize,
+    pub channels: usize,
+    pub patch: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ffn: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub n_shared: usize,
+    pub n_classes: usize,
+}
+
+impl ModelConfig {
+    pub fn tokens(&self) -> usize {
+        let side = self.image_size / self.patch;
+        side * side
+    }
+    pub fn patch_dim(&self) -> usize {
+        self.patch * self.patch * self.channels
+    }
+    /// Total parameter count (used by the memory model).
+    pub fn param_count(&self) -> usize {
+        let d = self.d_model;
+        let f = self.d_ffn;
+        let per_expert = d * f + f + f * d + d;
+        let per_block = d * 6 * d + 6 * d       // adaLN
+            + d * 3 * d + 3 * d                 // qkv
+            + d * d + d                         // proj
+            + d * self.n_experts                // router
+            + (self.n_experts + self.n_shared) * per_expert;
+        let embed = self.patch_dim() * d + d + self.tokens() * d;
+        let cond = 2 * (d * d + d) + self.n_classes * d;
+        let fin = d * 2 * d + 2 * d + d * self.patch_dim() + self.patch_dim();
+        embed + cond + self.n_layers * per_block + fin
+    }
+    /// Bytes of parameters at f16 (serving precision for the cost model —
+    /// the paper serves DiT-MoE-G ≈ 16.5B params in ≈ 33 GB, i.e. 2 B/param).
+    pub fn param_bytes(&self) -> usize {
+        self.param_count() * 2
+    }
+    /// Parameter bytes resident per device under expert parallelism:
+    /// experts are sharded, everything else is replicated.
+    pub fn param_bytes_per_device_ep(&self, devices: usize) -> usize {
+        let d = self.d_model;
+        let f = self.d_ffn;
+        let per_expert = (d * f + f + f * d + d) * 2;
+        let expert_total = self.n_layers * self.n_experts * per_expert;
+        let rest = self.param_bytes() - expert_total;
+        rest + expert_total.div_ceil(devices)
+    }
+
+    /// Parse the `config` object of artifacts/manifest.json.
+    pub fn from_manifest(j: &Json) -> Result<ModelConfig> {
+        let g = |k: &str| -> Result<usize> {
+            j.get(&format!("config.{k}"))
+                .and_then(Json::as_usize)
+                .with_context(|| format!("manifest missing config.{k}"))
+        };
+        Ok(ModelConfig {
+            name: j
+                .get("config.name")
+                .and_then(Json::as_str)
+                .unwrap_or("tiny")
+                .to_string(),
+            image_size: g("image_size")?,
+            channels: 1,
+            patch: g("patch")?,
+            d_model: g("d_model")?,
+            n_heads: g("n_heads")?,
+            n_layers: g("n_layers")?,
+            d_ffn: g("d_ffn")?,
+            n_experts: g("n_experts")?,
+            top_k: g("top_k")?,
+            n_shared: g("n_shared")?,
+            n_classes: g("n_classes")?,
+        })
+    }
+}
+
+/// The parallel-inference strategies the paper evaluates (Sec. 5.1
+/// baselines + DICE). `Strategy` selects the step/layer dataflow;
+/// the DICE refinements (selective sync, conditional communication) are
+/// orthogonal knobs in [`DiceOptions`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// Algorithm 1 — synchronous expert parallelism (no staleness).
+    SyncEp,
+    /// Algorithm 2 — displaced expert parallelism (2-step staleness).
+    DisplacedEp,
+    /// Algorithm 3 — DICE's interweaved parallelism (1-step staleness).
+    Interweaved,
+    /// DistriFusion: displaced *sequence* parallelism (patch parallelism,
+    /// full model replicated per device, 1-step-stale remote KV).
+    DistriFusion,
+    /// Supplement §8 ablation: staggered sub-batch pipelining.
+    StaggeredBatch,
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> Result<Strategy> {
+        Ok(match s {
+            "sync" | "sync_ep" | "ep" => Strategy::SyncEp,
+            "displaced" | "displaced_ep" => Strategy::DisplacedEp,
+            "interweaved" => Strategy::Interweaved,
+            "distrifusion" | "dfu" => Strategy::DistriFusion,
+            "staggered_batch" => Strategy::StaggeredBatch,
+            _ => bail!("unknown strategy {s:?} (sync|displaced|interweaved|distrifusion|staggered_batch)"),
+        })
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::SyncEp => "sync_ep",
+            Strategy::DisplacedEp => "displaced_ep",
+            Strategy::Interweaved => "interweaved",
+            Strategy::DistriFusion => "distrifusion",
+            Strategy::StaggeredBatch => "staggered_batch",
+        }
+    }
+    /// Step-level staleness of the schedule (the paper's headline metric).
+    pub fn step_staleness(&self) -> usize {
+        match self {
+            Strategy::SyncEp => 0,
+            Strategy::DisplacedEp => 2,
+            Strategy::Interweaved => 1,
+            Strategy::DistriFusion => 1,
+            Strategy::StaggeredBatch => 1,
+        }
+    }
+}
+
+/// Layer-level synchronization policy (Sec. 4.2 + Table 4 ablations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SelectiveSync {
+    /// All layers follow the base strategy.
+    None,
+    /// Synchronize the deeper half (DICE's choice).
+    Deep,
+    /// Ablation: synchronize the shallow half.
+    Shallow,
+    /// Ablation: synchronize every other layer.
+    Staggered,
+}
+
+impl SelectiveSync {
+    pub fn parse(s: &str) -> Result<SelectiveSync> {
+        Ok(match s {
+            "none" => SelectiveSync::None,
+            "deep" => SelectiveSync::Deep,
+            "shallow" => SelectiveSync::Shallow,
+            "staggered" => SelectiveSync::Staggered,
+            _ => bail!("unknown selective-sync policy {s:?}"),
+        })
+    }
+    /// Should `layer` (of `n_layers`) run synchronously?
+    pub fn is_sync_layer(&self, layer: usize, n_layers: usize) -> bool {
+        match self {
+            SelectiveSync::None => false,
+            SelectiveSync::Deep => layer >= n_layers / 2,
+            SelectiveSync::Shallow => layer < n_layers / 2,
+            SelectiveSync::Staggered => layer % 2 == 1,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            SelectiveSync::None => "none",
+            SelectiveSync::Deep => "deep",
+            SelectiveSync::Shallow => "shallow",
+            SelectiveSync::Staggered => "staggered",
+        }
+    }
+}
+
+/// Token-level conditional-communication policy (Sec. 4.3 + Table 4).
+/// Selector decides WHICH (token, expert) pairs stay fresh every step;
+/// the rest refresh every `stride` steps and reuse cached expert outputs
+/// in between.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CondCommSelector {
+    /// Disabled: every pair is transmitted every step.
+    Off,
+    /// DICE: keep the top-1 (highest router score) pair fresh, throttle
+    /// lower-ranked pairs — "deprioritise low score".
+    LowScore,
+    /// Ablation: throttle the HIGH-score pairs instead (expected worse).
+    HighScore,
+    /// Ablation: throttle a random subset of the same size.
+    Random,
+}
+
+impl CondCommSelector {
+    pub fn parse(s: &str) -> Result<CondCommSelector> {
+        Ok(match s {
+            "off" | "none" => CondCommSelector::Off,
+            "low" | "low_score" => CondCommSelector::LowScore,
+            "high" | "high_score" => CondCommSelector::HighScore,
+            "random" => CondCommSelector::Random,
+            _ => bail!("unknown cond-comm selector {s:?}"),
+        })
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            CondCommSelector::Off => "off",
+            CondCommSelector::LowScore => "low_score",
+            CondCommSelector::HighScore => "high_score",
+            CondCommSelector::Random => "random",
+        }
+    }
+}
+
+/// The DICE knobs layered on top of a base [`Strategy`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DiceOptions {
+    pub selective_sync: SelectiveSync,
+    pub cond_comm: CondCommSelector,
+    /// Refresh period for throttled (token, expert) pairs (paper fig. 7
+    /// uses stride 2).
+    pub cond_comm_stride: usize,
+    /// Synchronous warmup steps after cold start (paper: 2 at 10 steps,
+    /// 4 at 20 steps, scaled for 50).
+    pub warmup_sync_steps: usize,
+    /// Probe mode (staleness sensitivity, Sec. 4.2): run every layer
+    /// synchronously EXCEPT this one. Overrides `selective_sync`.
+    pub only_async_layer: Option<usize>,
+}
+
+impl DiceOptions {
+    pub fn none() -> Self {
+        DiceOptions {
+            selective_sync: SelectiveSync::None,
+            cond_comm: CondCommSelector::Off,
+            cond_comm_stride: 2,
+            warmup_sync_steps: 0,
+            only_async_layer: None,
+        }
+    }
+    /// The full DICE configuration used in the paper's main results.
+    pub fn dice() -> Self {
+        DiceOptions {
+            selective_sync: SelectiveSync::Deep,
+            cond_comm: CondCommSelector::LowScore,
+            cond_comm_stride: 2,
+            warmup_sync_steps: 0,
+            only_async_layer: None,
+        }
+    }
+    pub fn with_warmup(mut self, steps: usize) -> Self {
+        self.warmup_sync_steps = steps;
+        self
+    }
+    pub fn with_only_async_layer(mut self, layer: usize) -> Self {
+        self.only_async_layer = Some(layer);
+        self
+    }
+    /// Combined layer-level synchronization decision.
+    pub fn layer_is_sync(&self, layer: usize, n_layers: usize) -> bool {
+        if let Some(a) = self.only_async_layer {
+            return layer != a;
+        }
+        self.selective_sync.is_sync_layer(layer, n_layers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_staleness_matches_paper() {
+        assert_eq!(Strategy::SyncEp.step_staleness(), 0);
+        assert_eq!(Strategy::Interweaved.step_staleness(), 1);
+        assert_eq!(Strategy::DisplacedEp.step_staleness(), 2);
+    }
+
+    #[test]
+    fn strategy_parse_roundtrip() {
+        for s in [
+            Strategy::SyncEp,
+            Strategy::DisplacedEp,
+            Strategy::Interweaved,
+            Strategy::DistriFusion,
+            Strategy::StaggeredBatch,
+        ] {
+            assert_eq!(Strategy::parse(s.name()).unwrap(), s);
+        }
+        assert!(Strategy::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn selective_sync_partitions() {
+        let n = 6;
+        let deep: Vec<bool> = (0..n)
+            .map(|l| SelectiveSync::Deep.is_sync_layer(l, n))
+            .collect();
+        assert_eq!(deep, vec![false, false, false, true, true, true]);
+        let shallow: Vec<bool> = (0..n)
+            .map(|l| SelectiveSync::Shallow.is_sync_layer(l, n))
+            .collect();
+        assert_eq!(shallow, vec![true, true, true, false, false, false]);
+        // deep + shallow together cover each layer exactly once
+        for l in 0..n {
+            assert_ne!(deep[l], shallow[l]);
+        }
+        let staggered: usize = (0..n)
+            .filter(|&l| SelectiveSync::Staggered.is_sync_layer(l, n))
+            .count();
+        assert_eq!(staggered, 3);
+    }
+
+    #[test]
+    fn tiny_config_dims() {
+        let m = presets::model_preset("tiny").unwrap();
+        assert_eq!(m.tokens(), 16);
+        assert_eq!(m.patch_dim(), 4);
+        // ~1.2M params at tiny size (sanity bound, not exact)
+        let p = m.param_count();
+        assert!(p > 800_000 && p < 2_000_000, "{p}");
+    }
+
+    #[test]
+    fn g_param_bytes_near_paper() {
+        // paper: DiT-MoE-G ≈ 16.5B params ≈ 33 GB at f16.
+        let g = presets::model_preset("g").unwrap();
+        let bytes = g.param_bytes() as f64 / 1e9;
+        assert!(bytes > 20.0 && bytes < 45.0, "{bytes} GB");
+    }
+
+    #[test]
+    fn ep_shards_expert_params() {
+        let xl = presets::model_preset("xl").unwrap();
+        let full = xl.param_bytes();
+        let per8 = xl.param_bytes_per_device_ep(8);
+        assert!(per8 < full / 2, "EP must shard the expert majority: {per8} vs {full}");
+        assert!(per8 > full / 16);
+    }
+}

@@ -1,0 +1,208 @@
+//! Conditional Communication (paper Sec. 4.3, Algorithm 4, Figure 7).
+//!
+//! Token-level freshness control: the top-1 (token, expert) pair is
+//! transmitted every step — Eq. (1) shows staleness perturbations reach
+//! the output proportionally to the router score, so high-score pairs
+//! are the vulnerable ones. Lower-ranked pairs are refreshed only every
+//! `stride` steps and reuse the cached expert output in between.
+//! Training-free; the Low/High/Random selectors implement the Table 4
+//! ablation rows.
+
+use crate::config::CondCommSelector;
+use crate::moe::DispatchEntry;
+use crate::rng::Rng;
+
+/// Cached expert outputs keyed by (token, expert); token indices are
+/// stable across diffusion steps (the same latent patches iterate), so
+/// the cache is well-defined for a whole sampling run.
+#[derive(Debug)]
+pub struct CondCommCache {
+    d_model: usize,
+    n_experts: usize,
+    /// dense [n_tokens * n_experts] slots of D floats; empty = missing.
+    slots: Vec<Vec<f32>>,
+    /// bytes of live cached activations (memory accounting).
+    pub live_bytes: usize,
+}
+
+impl CondCommCache {
+    pub fn new(n_tokens: usize, n_experts: usize, d_model: usize) -> CondCommCache {
+        CondCommCache {
+            d_model,
+            n_experts,
+            slots: vec![Vec::new(); n_tokens * n_experts],
+            live_bytes: 0,
+        }
+    }
+
+    fn idx(&self, token: usize, expert: usize) -> usize {
+        token * self.n_experts + expert
+    }
+
+    pub fn get(&self, token: usize, expert: usize) -> Option<&[f32]> {
+        let s = &self.slots[self.idx(token, expert)];
+        if s.is_empty() {
+            None
+        } else {
+            Some(s)
+        }
+    }
+
+    pub fn put(&mut self, token: usize, expert: usize, out: &[f32]) {
+        debug_assert_eq!(out.len(), self.d_model);
+        let i = self.idx(token, expert);
+        if self.slots[i].is_empty() {
+            self.live_bytes += self.d_model * 4;
+        }
+        self.slots[i].clear();
+        self.slots[i].extend_from_slice(out);
+    }
+}
+
+/// The per-step freshness decision of Algorithm 4.
+///
+/// Returns true if the (token, expert) pair must be TRANSMITTED this
+/// step (fresh), false if the cached output may be reused.
+pub fn is_fresh(
+    selector: CondCommSelector,
+    entry: &DispatchEntry,
+    step: usize,
+    stride: usize,
+    rng: &mut Rng,
+) -> bool {
+    if stride <= 1 {
+        return true;
+    }
+    let periodic = step % stride == 0;
+    match selector {
+        CondCommSelector::Off => true,
+        // DICE: top-1 always fresh, lower ranks refresh every n steps.
+        CondCommSelector::LowScore => entry.rank == 0 || periodic,
+        // Ablation: throttle the top-1 instead (keep lower ranks fresh).
+        CondCommSelector::HighScore => entry.rank != 0 || periodic,
+        // Ablation: throttle a random half-ish of pairs of matching size:
+        // a (1 - 1/k)-fraction is throttled under LowScore with k=2 => 1/2.
+        CondCommSelector::Random => rng.uniform() < 0.5 || periodic,
+    }
+}
+
+/// Outcome summary of one layer's conditional-communication filter.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct CommStats {
+    pub fresh_entries: usize,
+    pub reused_entries: usize,
+    /// entries forced fresh because the cache had no value yet.
+    pub forced_fresh: usize,
+}
+
+impl CommStats {
+    pub fn fresh_fraction(&self) -> f64 {
+        let total = self.fresh_entries + self.reused_entries;
+        if total == 0 {
+            1.0
+        } else {
+            self.fresh_entries as f64 / total as f64
+        }
+    }
+    pub fn merge(&mut self, o: &CommStats) {
+        self.fresh_entries += o.fresh_entries;
+        self.reused_entries += o.reused_entries;
+        self.forced_fresh += o.forced_fresh;
+    }
+}
+
+/// Analytic fresh fraction of the LowScore policy (used by the cost
+/// model): top-1 of k is always fresh; the other k-1 refresh every
+/// `stride` steps.
+pub fn low_score_fresh_fraction(top_k: usize, stride: usize) -> f64 {
+    if stride <= 1 {
+        return 1.0;
+    }
+    (1.0 + (top_k as f64 - 1.0) / stride as f64) / top_k as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(rank: usize) -> DispatchEntry {
+        DispatchEntry {
+            token: 0,
+            expert: 1,
+            rank,
+            score: 0.5,
+            src_device: 0,
+        }
+    }
+
+    #[test]
+    fn low_score_keeps_top1_fresh_every_step() {
+        let mut rng = Rng::new(0);
+        for step in 0..10 {
+            assert!(is_fresh(
+                CondCommSelector::LowScore,
+                &entry(0),
+                step,
+                2,
+                &mut rng
+            ));
+        }
+    }
+
+    #[test]
+    fn low_score_throttles_rank1_by_stride() {
+        let mut rng = Rng::new(0);
+        let fresh: Vec<bool> = (0..6)
+            .map(|s| is_fresh(CondCommSelector::LowScore, &entry(1), s, 3, &mut rng))
+            .collect();
+        assert_eq!(fresh, vec![true, false, false, true, false, false]);
+    }
+
+    #[test]
+    fn high_score_is_the_inverse_policy() {
+        let mut rng = Rng::new(0);
+        // rank 0 throttled except periodic; rank 1 always fresh
+        assert!(!is_fresh(CondCommSelector::HighScore, &entry(0), 1, 2, &mut rng));
+        assert!(is_fresh(CondCommSelector::HighScore, &entry(0), 2, 2, &mut rng));
+        assert!(is_fresh(CondCommSelector::HighScore, &entry(1), 1, 2, &mut rng));
+    }
+
+    #[test]
+    fn off_and_stride1_always_fresh() {
+        let mut rng = Rng::new(0);
+        assert!(is_fresh(CondCommSelector::Off, &entry(1), 1, 2, &mut rng));
+        assert!(is_fresh(CondCommSelector::LowScore, &entry(1), 1, 1, &mut rng));
+    }
+
+    #[test]
+    fn random_throttles_about_half() {
+        let mut rng = Rng::new(7);
+        let n = 10_000;
+        let fresh = (0..n)
+            .filter(|_| is_fresh(CondCommSelector::Random, &entry(1), 1, 2, &mut rng))
+            .count();
+        let frac = fresh as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.03, "{frac}");
+    }
+
+    #[test]
+    fn cache_roundtrip_and_bytes() {
+        let mut c = CondCommCache::new(4, 2, 3);
+        assert!(c.get(1, 0).is_none());
+        c.put(1, 0, &[1.0, 2.0, 3.0]);
+        assert_eq!(c.get(1, 0).unwrap(), &[1.0, 2.0, 3.0]);
+        assert_eq!(c.live_bytes, 12);
+        c.put(1, 0, &[4.0, 5.0, 6.0]); // overwrite: no byte growth
+        assert_eq!(c.live_bytes, 12);
+        c.put(3, 1, &[0.0; 3]);
+        assert_eq!(c.live_bytes, 24);
+    }
+
+    #[test]
+    fn analytic_fraction_matches_policy() {
+        // k=2, stride=2: 1 fresh + 1 fresh-every-2 => 75% of entries fresh
+        assert!((low_score_fresh_fraction(2, 2) - 0.75).abs() < 1e-12);
+        assert!((low_score_fresh_fraction(2, 4) - 0.625).abs() < 1e-12);
+        assert_eq!(low_score_fresh_fraction(2, 1), 1.0);
+    }
+}

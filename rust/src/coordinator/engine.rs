@@ -1,0 +1,690 @@
+//! The expert-parallel inference engine — the paper's algorithms 1–4
+//! executed with REAL numerics over the AOT artifacts.
+//!
+//! Logical devices run in-process under a deterministic scheduler
+//! (DESIGN.md §2: staleness is *data* — which step's activations a layer
+//! consumes — and is implemented exactly; time is *accounting* and is
+//! handled by `coordinator::simulate` using the measured byte counts).
+//!
+//! Strategy dataflow (per layer ℓ, step t — ages as in Figure 2):
+//! * **SyncEp**       — dispatch→experts→combine inside (t, ℓ); age 0.
+//! * **DisplacedEp**  — experts consume the dispatch captured at t−1;
+//!   the combine consumed at t was produced at t−1 from t−2 activations;
+//!   buffers: dispatch + combine per layer (2×). Age 2.
+//! * **Interweaved**  — dispatch issued and consumed within step t
+//!   (staggered one layer later); only the combine crosses the step
+//!   boundary; buffers: combine only (1×). Age 1.
+//! * **DistriFusion** — sequence parallelism: fresh local Q-shard
+//!   attends over a full-sequence K/V whose remote shards are 1 step
+//!   stale; all experts local; full model replicated. Age 1.
+//!
+//! Selective synchronization forces chosen layers back to SyncEp
+//! semantics; conditional communication throttles non-top-1
+//! (token, expert) pairs via `condcomm`.
+
+use anyhow::{bail, Context, Result};
+
+use super::buffers::{BufferManager, PendingCombine, PendingDispatch};
+use super::condcomm::{self, CommStats, CondCommCache};
+use super::staleness::StalenessLedger;
+use crate::config::{CondCommSelector, DiceOptions, Strategy};
+use crate::moe::{DispatchPlan, Placement, RoutingTable};
+use crate::rng::Rng;
+use crate::runtime::{Runtime, WeightBank};
+use crate::tensor::{ops, Tensor};
+
+/// Engine configuration for one run.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    pub strategy: Strategy,
+    pub opts: DiceOptions,
+    pub devices: usize,
+}
+
+/// Everything a run reports besides the samples.
+#[derive(Debug, Default)]
+pub struct RunStats {
+    pub staleness: StalenessLedger,
+    pub comm: CommStats,
+    /// cross-device activation bytes actually transferred (dispatch +
+    /// combine, or DFU shard exchange).
+    pub fresh_bytes: usize,
+    /// bytes avoided by conditional communication.
+    pub saved_bytes: usize,
+    /// peak staleness-buffer bytes (displaced 2x vs interweaved 1x claim).
+    pub peak_buffer_bytes: usize,
+    /// conditional-communication cache bytes.
+    pub cache_bytes: usize,
+    /// DistriFusion full-sequence buffer bytes.
+    pub dfu_buffer_bytes: usize,
+    /// PJRT executions issued.
+    pub exec_calls: u64,
+    /// routing snapshots (one per step) of the probed layer, for Fig 4.
+    pub routing_snapshots: Vec<RoutingTable>,
+    /// per-expert token loads accumulated over the run (imbalance).
+    pub expert_loads: Vec<usize>,
+}
+
+/// The coordinator engine. Holds borrowed runtime + staged weights so
+/// many runs (sweeps, ablations) reuse one compile cache.
+pub struct Engine<'a> {
+    pub rt: &'a Runtime,
+    pub bank: &'a WeightBank,
+    pub cfg: EngineConfig,
+    tile: usize,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(rt: &'a Runtime, bank: &'a WeightBank, cfg: EngineConfig) -> Result<Engine<'a>> {
+        let tile = rt
+            .manifest
+            .get("expert_tile")
+            .and_then(crate::config::Json::as_usize)
+            .unwrap_or(64);
+        if rt.model.n_experts % cfg.devices != 0 {
+            bail!(
+                "devices {} must divide experts {}",
+                cfg.devices,
+                rt.model.n_experts
+            );
+        }
+        Ok(Engine { rt, bank, cfg, tile })
+    }
+
+    /// Generate samples for `labels` with `steps` rectified-flow steps.
+    /// `record_routing`: optionally snapshot the routing of this layer
+    /// every step (Fig 4). Returns ([N, C, S, S] samples, stats).
+    pub fn generate(
+        &self,
+        labels: &[usize],
+        steps: usize,
+        seed: u64,
+        record_routing: Option<usize>,
+    ) -> Result<(Tensor, RunStats)> {
+        let m = &self.rt.model;
+        let mut x = Tensor::zeros(&[labels.len(), m.channels, m.image_size, m.image_size]);
+        Rng::new(seed).fill_normal(x.data_mut());
+        self.generate_from(x, labels, steps, record_routing)
+    }
+
+    /// As [`generate`] but from a caller-provided initial latent
+    /// (parity tests drive this with the python oracle's inputs).
+    pub fn generate_from(
+        &self,
+        x0: Tensor,
+        labels: &[usize],
+        steps: usize,
+        record_routing: Option<usize>,
+    ) -> Result<(Tensor, RunStats)> {
+        match self.cfg.strategy {
+            Strategy::DistriFusion => self.generate_dfu(x0, labels, steps, record_routing),
+            // StaggeredBatch shares the synchronous freshness semantics
+            // (supplement §8: it avoids staleness at the cost of buffers
+            // and utilisation — both modelled in `simulate`).
+            _ => self.generate_ep(x0, labels, steps, record_routing),
+        }
+    }
+
+    /// Test hook: the dispatch/combine path on explicit inputs
+    /// (fresh, no conditional communication) — compared against the
+    /// `moe_dense` artifact by the integration tests.
+    pub fn ep_moe_for_test(
+        &self,
+        xin_g: &Tensor,
+        routing: &RoutingTable,
+        layer: usize,
+    ) -> Result<Tensor> {
+        let m = &self.rt.model;
+        let placement = Placement::new(m.n_experts, self.cfg.devices);
+        let mut cache = CondCommCache::new(xin_g.rows().0, m.n_experts, m.d_model);
+        let mut rng = Rng::new(0);
+        let mut stats = RunStats {
+            expert_loads: vec![0; m.n_experts],
+            ..Default::default()
+        };
+        self.ep_moe(
+            xin_g,
+            routing,
+            layer,
+            0,
+            CondCommSelector::Off,
+            &placement,
+            &mut cache,
+            &mut rng,
+            &mut stats,
+        )
+    }
+
+    // ------------------------------------------------------------------
+    // Expert-parallel path (sync / displaced / interweaved / staggered)
+    // ------------------------------------------------------------------
+
+    fn generate_ep(
+        &self,
+        x0: Tensor,
+        labels: &[usize],
+        steps: usize,
+        record_routing: Option<usize>,
+    ) -> Result<(Tensor, RunStats)> {
+        let m = &self.rt.model;
+        let dvs = self.cfg.devices;
+        let bg = labels.len();
+        if bg % dvs != 0 {
+            bail!("global batch {bg} % devices {dvs} != 0");
+        }
+        let bl = bg / dvs;
+        let bucket = self.rt.bucket_for(bl)?;
+        if bucket != bl {
+            bail!("local batch {bl} is not an exported bucket (use one of {:?})", self.rt.batch_buckets());
+        }
+        // Perf fast path (EXPERIMENTS.md §Perf iteration 1): the
+        // non-expert stages are replicated batch-parallel computations,
+        // so when the GLOBAL batch is itself an exported bucket we run
+        // them in one PJRT call instead of `devices` calls — identical
+        // numerics (attention/adaLN are per-sample), 4x fewer calls.
+        // The dispatch path still routes per (token, device) exactly.
+        let fused = self.rt.batch_buckets().contains(&bg);
+        let (parts, pb) = if fused { (1usize, bg) } else { (dvs, bl) };
+        let t_tokens = m.tokens();
+        let n_global_tokens = bg * t_tokens;
+        let placement = Placement::new(m.n_experts, dvs);
+
+        let mut stats = RunStats {
+            expert_loads: vec![0; m.n_experts],
+            ..Default::default()
+        };
+        let mut bufs = BufferManager::new(m.n_layers);
+        let mut caches: Vec<CondCommCache> = (0..m.n_layers)
+            .map(|_| CondCommCache::new(n_global_tokens, m.n_experts, m.d_model))
+            .collect();
+        let mut cc_rng = Rng::new(0xC0DE ^ labels.len() as u64);
+
+        let mut x = x0;
+        assert_eq!(x.shape()[0], bg, "x0 batch mismatch");
+        let y1h = one_hot(labels, m.n_classes);
+
+        let dt = 1.0f32 / steps as f32;
+        for step_i in 0..steps {
+            let t_val = (steps - step_i) as f32 / steps as f32;
+
+            // per-part embed + cond (parts = 1 on the fused fast path)
+            let x_shards = ops::split_batch(&x, parts);
+            let y_shards = ops::split_batch(&y1h, parts);
+            let tvp = Tensor::full(&[pb], t_val);
+            let mut h_shards = Vec::with_capacity(parts);
+            let mut c_shards = Vec::with_capacity(parts);
+            for d in 0..parts {
+                let h = self.call1(
+                    &format!("embed_b{pb}"),
+                    &[&x_shards[d]],
+                    &self.bank.embed,
+                    &mut stats,
+                )?;
+                let c = self.call1(
+                    &format!("cond_b{pb}"),
+                    &[&tvp, &y_shards[d]],
+                    &self.bank.cond,
+                    &mut stats,
+                )?;
+                h_shards.push(h);
+                c_shards.push(c);
+            }
+
+            for l in 0..m.n_layers {
+                // block_pre on every part
+                let mut h_attn = Vec::with_capacity(parts);
+                let mut xin = Vec::with_capacity(parts);
+                let mut probs = Vec::with_capacity(parts);
+                let mut gate2 = Vec::with_capacity(parts);
+                for d in 0..parts {
+                    let out = self.rt.execute(
+                        &format!("block_pre_b{pb}"),
+                        &[&h_shards[d], &c_shards[d]],
+                        &WeightBank::refs(&self.bank.block_pre[l]),
+                    )?;
+                    stats.exec_calls += 1;
+                    let mut it = out.into_iter();
+                    h_attn.push(it.next().context("h_attn")?);
+                    xin.push(it.next().context("xin")?);
+                    probs.push(it.next().context("probs")?);
+                    gate2.push(it.next().context("gate2")?);
+                }
+                // global views
+                let xin_g = ops::concat_batch(&xin).reshape(&[n_global_tokens, m.d_model]);
+                let probs_g = ops::concat_batch(&probs).reshape(&[n_global_tokens, m.n_experts]);
+                let routing = RoutingTable::from_probs(&probs_g, m.top_k);
+                if record_routing == Some(l) {
+                    stats.routing_snapshots.push(routing.clone());
+                }
+
+                let sync_layer = self.cfg.strategy == Strategy::SyncEp
+                    || self.cfg.strategy == Strategy::StaggeredBatch
+                    || step_i < self.cfg.opts.warmup_sync_steps
+                    || self.cfg.opts.layer_is_sync(l, m.n_layers);
+
+                // conditional communication only throttles async layers
+                let cc = if sync_layer {
+                    CondCommSelector::Off
+                } else {
+                    self.cfg.opts.cond_comm
+                };
+
+                let (moe_g, age) = if sync_layer {
+                    let fresh = self.ep_moe(
+                        &xin_g,
+                        &routing,
+                        l,
+                        step_i,
+                        cc,
+                        &placement,
+                        &mut caches[l],
+                        &mut cc_rng,
+                        &mut stats,
+                    )?;
+                    // prefill staleness buffers so the async steps that
+                    // follow warmup have in-flight data (paper: N sync
+                    // steps post cold start).
+                    match self.cfg.strategy {
+                        Strategy::DisplacedEp => {
+                            bufs.swap_dispatch(
+                                l,
+                                Some(PendingDispatch {
+                                    xin: xin_g.clone(),
+                                    routing: routing.clone(),
+                                    captured_step: step_i,
+                                }),
+                            );
+                            bufs.swap_combine(
+                                l,
+                                Some(PendingCombine {
+                                    moe_out: fresh.clone(),
+                                    captured_step: step_i,
+                                }),
+                            );
+                        }
+                        Strategy::Interweaved => {
+                            bufs.swap_combine(
+                                l,
+                                Some(PendingCombine {
+                                    moe_out: fresh.clone(),
+                                    captured_step: step_i,
+                                }),
+                            );
+                        }
+                        _ => {}
+                    }
+                    (fresh, 0usize)
+                } else {
+                    match self.cfg.strategy {
+                        Strategy::DisplacedEp => {
+                            // Algorithm 2: experts run on the dispatch from
+                            // t-1; the combine used now was captured at t-2.
+                            let prev_disp = bufs.swap_dispatch(
+                                l,
+                                Some(PendingDispatch {
+                                    xin: xin_g.clone(),
+                                    routing: routing.clone(),
+                                    captured_step: step_i,
+                                }),
+                            );
+                            let new_combine = match prev_disp {
+                                Some(pd) => {
+                                    let out = self.ep_moe(
+                                        &pd.xin,
+                                        &pd.routing,
+                                        l,
+                                        step_i,
+                                        cc,
+                                        &placement,
+                                        &mut caches[l],
+                                        &mut cc_rng,
+                                        &mut stats,
+                                    )?;
+                                    Some(PendingCombine {
+                                        moe_out: out,
+                                        captured_step: pd.captured_step,
+                                    })
+                                }
+                                None => None,
+                            };
+                            match bufs.swap_combine(l, new_combine) {
+                                Some(used) => {
+                                    let age = step_i - used.captured_step;
+                                    (used.moe_out, age)
+                                }
+                                None => {
+                                    // true cold start (no warmup): blocking
+                                    // fresh computation, like the paper's
+                                    // mandatory synchronized first steps.
+                                    let fresh = self.ep_moe(
+                                        &xin_g, &routing, l, step_i, cc, &placement,
+                                        &mut caches[l], &mut cc_rng, &mut stats,
+                                    )?;
+                                    (fresh, 0)
+                                }
+                            }
+                        }
+                        Strategy::Interweaved => {
+                            // Algorithm 3: dispatch + experts of THIS step's
+                            // activations complete within the step; only the
+                            // combine crosses into t+1.
+                            let out = self.ep_moe(
+                                &xin_g,
+                                &routing,
+                                l,
+                                step_i,
+                                cc,
+                                &placement,
+                                &mut caches[l],
+                                &mut cc_rng,
+                                &mut stats,
+                            )?;
+                            match bufs.swap_combine(
+                                l,
+                                Some(PendingCombine {
+                                    moe_out: out,
+                                    captured_step: step_i,
+                                }),
+                            ) {
+                                Some(used) => {
+                                    let age = step_i - used.captured_step;
+                                    (used.moe_out, age)
+                                }
+                                None => {
+                                    let fresh = self.ep_moe(
+                                        &xin_g, &routing, l, step_i, cc, &placement,
+                                        &mut caches[l], &mut cc_rng, &mut stats,
+                                    )?;
+                                    (fresh, 0)
+                                }
+                            }
+                        }
+                        Strategy::SyncEp | Strategy::StaggeredBatch | Strategy::DistriFusion => {
+                            unreachable!("handled above")
+                        }
+                    }
+                };
+                stats.staleness.record(step_i, l, age);
+                stats.peak_buffer_bytes = stats.peak_buffer_bytes.max(bufs.peak_bytes());
+
+                // block_post per part
+                let moe_g3 = moe_g.reshape(&[bg, t_tokens, m.d_model]);
+                let moe_shards = ops::split_batch(&moe_g3, parts);
+                for d in 0..parts {
+                    let h = self.rt.execute(
+                        &format!("block_post_b{pb}"),
+                        &[&h_attn[d], &xin[d], &moe_shards[d], &gate2[d]],
+                        &WeightBank::refs(&self.bank.block_post[l]),
+                    )?;
+                    stats.exec_calls += 1;
+                    h_shards[d] = h.into_iter().next().context("block_post out")?;
+                }
+            }
+
+            // final + Euler update per part
+            let mut v_shards = Vec::with_capacity(parts);
+            for d in 0..parts {
+                let v = self.call1(
+                    &format!("final_b{pb}"),
+                    &[&h_shards[d], &c_shards[d]],
+                    &self.bank.final_,
+                    &mut stats,
+                )?;
+                v_shards.push(v);
+            }
+            let v = ops::concat_batch(&v_shards);
+            for (xi, vi) in x.data_mut().iter_mut().zip(v.data()) {
+                *xi -= dt * vi;
+            }
+        }
+
+        stats.cache_bytes = caches.iter().map(|c| c.live_bytes).sum();
+        Ok((x, stats))
+    }
+
+    /// The emulated all-to-all + expert computation: gather the plan's
+    /// fresh tokens per expert, run the Pallas expert tile, scatter back
+    /// scaled by the (possibly stale) router scores, serve throttled
+    /// pairs from the conditional-communication cache.
+    #[allow(clippy::too_many_arguments)]
+    fn ep_moe(
+        &self,
+        xin_g: &Tensor,
+        routing: &RoutingTable,
+        layer: usize,
+        step: usize,
+        cc: CondCommSelector,
+        placement: &Placement,
+        cache: &mut CondCommCache,
+        cc_rng: &mut Rng,
+        stats: &mut RunStats,
+    ) -> Result<Tensor> {
+        let (n_tokens, d) = xin_g.rows();
+        let plan = DispatchPlan::build(routing, n_tokens / self.cfg.devices);
+        let mut out = Tensor::zeros(&[n_tokens, d]);
+        let stride = self.cfg.opts.cond_comm_stride;
+        let elem = 4usize; // f32 activations in numerics mode
+
+        for (e, entries) in plan.per_expert.iter().enumerate() {
+            stats.expert_loads[e] += entries.len();
+            let owner = placement.owner(e);
+            // split fresh vs reused
+            let mut fresh: Vec<&crate::moe::DispatchEntry> = Vec::with_capacity(entries.len());
+            for en in entries {
+                let want_fresh = condcomm::is_fresh(cc, en, step, stride, cc_rng);
+                if want_fresh {
+                    fresh.push(en);
+                    stats.comm.fresh_entries += 1;
+                    if en.src_device != owner {
+                        stats.fresh_bytes += 2 * d * elem; // dispatch + combine
+                    }
+                } else if let Some(cached) = cache.get(en.token, en.expert) {
+                    stats.comm.reused_entries += 1;
+                    if en.src_device != owner {
+                        stats.saved_bytes += 2 * d * elem;
+                    }
+                    let row = out.row_mut(en.token);
+                    for (o, c) in row.iter_mut().zip(cached) {
+                        *o += en.score * c;
+                    }
+                } else {
+                    // no cached value yet: must transmit
+                    fresh.push(en);
+                    stats.comm.fresh_entries += 1;
+                    stats.comm.forced_fresh += 1;
+                    if en.src_device != owner {
+                        stats.fresh_bytes += 2 * d * elem;
+                    }
+                }
+            }
+            if fresh.is_empty() {
+                continue;
+            }
+            // tile the fresh tokens through the expert artifact.
+            // §Perf note: a 4x "expert_tile_l" artifact was tried (halves
+            // the PJRT call count) but regressed wall time 5-12% — the
+            // padding waste exceeds the saved dispatch overhead at tiny
+            // shapes. Reverted; the large tile remains exported for real
+            // hardware where call overhead dominates harder.
+            let idx: Vec<usize> = fresh.iter().map(|en| en.token).collect();
+            let gathered = ops::gather_rows(xin_g, &idx);
+            let n = idx.len();
+            let mut outputs = Tensor::zeros(&[n, d]);
+            let mut row0 = 0usize;
+            while row0 < n {
+                let take = (n - row0).min(self.tile);
+                let mut tile_in = Tensor::zeros(&[self.tile, d]);
+                tile_in.data_mut()[..take * d]
+                    .copy_from_slice(&gathered.data()[row0 * d..(row0 + take) * d]);
+                let y = self.rt.execute(
+                    "expert_tile",
+                    &[&tile_in],
+                    &WeightBank::refs(&self.bank.experts[layer][e]),
+                )?;
+                stats.exec_calls += 1;
+                let y = y.into_iter().next().context("expert_tile out")?;
+                outputs.data_mut()[row0 * d..(row0 + take) * d]
+                    .copy_from_slice(&y.data()[..take * d]);
+                row0 += take;
+            }
+            // scatter with router-score scaling + refresh the cache
+            for (r, en) in fresh.iter().enumerate() {
+                let src = &outputs.data()[r * d..(r + 1) * d];
+                cache.put(en.token, en.expert, src);
+                let dst = out.row_mut(en.token);
+                for (o, s) in dst.iter_mut().zip(src) {
+                    *o += en.score * s;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    // ------------------------------------------------------------------
+    // DistriFusion (displaced sequence parallelism) path
+    // ------------------------------------------------------------------
+
+    fn generate_dfu(
+        &self,
+        x0: Tensor,
+        labels: &[usize],
+        steps: usize,
+        record_routing: Option<usize>,
+    ) -> Result<(Tensor, RunStats)> {
+        let m = &self.rt.model;
+        let dvs = self.cfg.devices;
+        let bg = labels.len();
+        let t_tokens = m.tokens();
+        if t_tokens % dvs != 0 {
+            bail!("tokens {t_tokens} % devices {dvs} != 0");
+        }
+        // the dfu_block artifact is exported at global batch 32 only
+        if bg != 32 {
+            bail!("DistriFusion numerics path requires global batch 32 (artifact shape)");
+        }
+        let _ = record_routing; // routing is identical to EP; not re-recorded
+        let mut stats = RunStats {
+            expert_loads: vec![0; m.n_experts],
+            ..Default::default()
+        };
+        let mut x = x0;
+        assert_eq!(x.shape()[0], bg, "x0 batch mismatch");
+        let y1h = one_hot(labels, m.n_classes);
+
+        // per-layer full-sequence buffer (the stale KV source)
+        let mut prev_h: Vec<Option<Tensor>> = vec![None; m.n_layers];
+        let shard_bytes = bg * (t_tokens / dvs) * m.d_model * 4;
+
+        let dt = 1.0f32 / steps as f32;
+        for step_i in 0..steps {
+            let t_val = (steps - step_i) as f32 / steps as f32;
+            let tv = Tensor::full(&[bg], t_val);
+            let h_full = self.call1(&format!("embed_b{bg}"), &[&x], &self.bank.embed, &mut stats)?;
+            let c = self.call1(&format!("cond_b{bg}"), &[&tv, &y1h], &self.bank.cond, &mut stats)?;
+
+            let mut shards = ops::split_tokens(&h_full, dvs);
+            for l in 0..m.n_layers {
+                let sync_layer = step_i < self.cfg.opts.warmup_sync_steps
+                    || self.cfg.opts.layer_is_sync(l, m.n_layers);
+                let fresh_full = ops::concat_tokens(&shards);
+                let (kv_source, age) = if sync_layer || prev_h[l].is_none() {
+                    (fresh_full.clone(), 0usize)
+                } else {
+                    (prev_h[l].clone().unwrap(), 1usize)
+                };
+                stats.staleness.record(step_i, l, age);
+                // async shard broadcast bytes (each device sends its shard
+                // to every other device); sync layers pay the same bytes
+                // but blocking (time accounted in `simulate`).
+                stats.fresh_bytes += dvs * (dvs - 1) * shard_bytes;
+
+                let mut new_shards = Vec::with_capacity(dvs);
+                for dev in 0..dvs {
+                    // own shard is always fresh in the KV assembly
+                    let mut kv = kv_source.clone();
+                    replace_token_shard(&mut kv, &shards[dev], dev, dvs);
+                    let out = self.rt.execute(
+                        &format!("dfu_block_b{bg}"),
+                        &[&shards[dev], &kv, &c],
+                        &self.bank.dfu_refs(l),
+                    )?;
+                    stats.exec_calls += 1;
+                    new_shards.push(out.into_iter().next().context("dfu out")?);
+                }
+                prev_h[l] = Some(fresh_full);
+                shards = new_shards;
+            }
+            stats.dfu_buffer_bytes = stats
+                .dfu_buffer_bytes
+                .max(prev_h.iter().flatten().map(Tensor::byte_size).sum());
+
+            let h_final = ops::concat_tokens(&shards);
+            let v = self.call1(&format!("final_b{bg}"), &[&h_final, &c], &self.bank.final_, &mut stats)?;
+            for (xi, vi) in x.data_mut().iter_mut().zip(v.data()) {
+                *xi -= dt * vi;
+            }
+        }
+        Ok((x, stats))
+    }
+
+    /// Execute a single-output module.
+    fn call1(
+        &self,
+        name: &str,
+        args: &[&Tensor],
+        weights: &[xla::PjRtBuffer],
+        stats: &mut RunStats,
+    ) -> Result<Tensor> {
+        let out = self.rt.execute(name, args, &WeightBank::refs(weights))?;
+        stats.exec_calls += 1;
+        out.into_iter().next().context("missing output")
+    }
+}
+
+/// One-hot encode labels.
+pub fn one_hot(labels: &[usize], n_classes: usize) -> Tensor {
+    let mut t = Tensor::zeros(&[labels.len(), n_classes]);
+    for (i, &l) in labels.iter().enumerate() {
+        assert!(l < n_classes);
+        t.row_mut(i)[l] = 1.0;
+    }
+    t
+}
+
+/// Overwrite token-shard `dev` (of `dvs`) inside a [B, T, D] tensor.
+fn replace_token_shard(full: &mut Tensor, shard: &Tensor, dev: usize, dvs: usize) {
+    let (b, t, d) = (full.shape()[0], full.shape()[1], full.shape()[2]);
+    let ts = t / dvs;
+    debug_assert_eq!(shard.shape(), &[b, ts, d]);
+    for bi in 0..b {
+        for ti in 0..ts {
+            let dst = (bi * t + dev * ts + ti) * d;
+            let src = (bi * ts + ti) * d;
+            full.data_mut()[dst..dst + d].copy_from_slice(&shard.data()[src..src + d]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_hot_rows() {
+        let t = one_hot(&[1, 0, 3], 4);
+        assert_eq!(t.row(0), &[0.0, 1.0, 0.0, 0.0]);
+        assert_eq!(t.row(1), &[1.0, 0.0, 0.0, 0.0]);
+        assert_eq!(t.row(2), &[0.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn replace_shard_roundtrip() {
+        let full0 = Tensor::from_vec(&[1, 4, 2], (0..8).map(|x| x as f32).collect());
+        let mut full = Tensor::zeros(&[1, 4, 2]);
+        let shards = crate::tensor::ops::split_tokens(&full0, 4);
+        for (d, s) in shards.iter().enumerate() {
+            replace_token_shard(&mut full, s, d, 4);
+        }
+        assert_eq!(full, full0);
+    }
+}

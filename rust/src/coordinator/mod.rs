@@ -1,0 +1,19 @@
+//! The coordinator — the paper's system contribution.
+//!
+//! * [`engine`] — real-numerics expert-parallel engine implementing
+//!   Algorithms 1–4 and the DistriFusion baseline over the AOT artifacts.
+//! * [`simulate`] — virtual-time schedules of the same strategies at the
+//!   paper's scales (latency / a2a share / memory / OOM).
+//! * [`buffers`] — stale-activation buffers + byte accounting (the
+//!   "interweaved halves the buffer size" claim).
+//! * [`condcomm`] — token-level conditional communication (Sec. 4.3).
+//! * [`staleness`] — the staleness ledger.
+
+pub mod buffers;
+pub mod condcomm;
+pub mod engine;
+pub mod simulate;
+pub mod staleness;
+
+pub use engine::{one_hot, Engine, EngineConfig, RunStats};
+pub use simulate::{memory_report, simulate, MemReport, SimReport};

@@ -1,0 +1,90 @@
+//! Staleness ledger: records, for every (step, layer), the age in
+//! diffusion steps of the MoE activations actually consumed — the
+//! paper's central quantity ("we quantify staleness as the difference in
+//! steps between when the input was generated and the step in which its
+//! corresponding output is used").
+
+/// Per-run staleness bookkeeping.
+#[derive(Debug, Default, Clone)]
+pub struct StalenessLedger {
+    /// (step, layer, age) triples in execution order.
+    pub records: Vec<(usize, usize, usize)>,
+}
+
+impl StalenessLedger {
+    pub fn record(&mut self, step: usize, layer: usize, age: usize) {
+        self.records.push((step, layer, age));
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Max age observed from `from_step` onward (skip cold-start).
+    pub fn max_age(&self, from_step: usize) -> usize {
+        self.records
+            .iter()
+            .filter(|(s, _, _)| *s >= from_step)
+            .map(|(_, _, a)| *a)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Mean age from `from_step` onward.
+    pub fn mean_age(&self, from_step: usize) -> f64 {
+        let v: Vec<usize> = self
+            .records
+            .iter()
+            .filter(|(s, _, _)| *s >= from_step)
+            .map(|(_, _, a)| *a)
+            .collect();
+        if v.is_empty() {
+            0.0
+        } else {
+            v.iter().sum::<usize>() as f64 / v.len() as f64
+        }
+    }
+
+    /// Mean age per layer (the layer-sensitivity probe of Sec. 4.2).
+    pub fn per_layer_mean(&self, n_layers: usize, from_step: usize) -> Vec<f64> {
+        let mut sum = vec![0.0; n_layers];
+        let mut cnt = vec![0usize; n_layers];
+        for &(s, l, a) in &self.records {
+            if s >= from_step {
+                sum[l] += a as f64;
+                cnt[l] += 1;
+            }
+        }
+        sum.iter()
+            .zip(&cnt)
+            .map(|(s, &c)| if c == 0 { 0.0 } else { s / c as f64 })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ages_aggregate() {
+        let mut l = StalenessLedger::default();
+        l.record(0, 0, 0); // warmup
+        l.record(1, 0, 2);
+        l.record(1, 1, 1);
+        l.record(2, 0, 2);
+        assert_eq!(l.max_age(1), 2);
+        assert!((l.mean_age(1) - 5.0 / 3.0).abs() < 1e-9);
+        assert_eq!(l.max_age(0), 2);
+        let per = l.per_layer_mean(2, 1);
+        assert!((per[0] - 2.0).abs() < 1e-9);
+        assert!((per[1] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_ledger() {
+        let l = StalenessLedger::default();
+        assert_eq!(l.max_age(0), 0);
+        assert_eq!(l.mean_age(0), 0.0);
+    }
+}

@@ -1,0 +1,65 @@
+//! Experiment drivers — one per table/figure of the paper (DESIGN.md §5
+//! per-experiment index). Each driver returns a `benchkit::Table` (and
+//! writes machine-readable JSON next to it via [`write_results`]); the
+//! `benches/*.rs` binaries are thin wrappers.
+
+pub mod quality;
+pub mod scaling;
+pub mod schedules;
+pub mod similarity;
+pub mod tradeoff;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::config::Json;
+use crate::runtime::{Runtime, WeightBank};
+use crate::tensor::stf::StfFile;
+
+/// Shared experiment context: runtime + staged weights + metric refs.
+pub struct Ctx {
+    pub rt: Runtime,
+    pub bank: WeightBank,
+    pub refs: StfFile,
+}
+
+impl Ctx {
+    /// Open `artifacts/` (or `$DICE_ARTIFACTS`).
+    pub fn open() -> Result<Ctx> {
+        let dir = std::env::var("DICE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        let dir = Path::new(&dir);
+        let rt = Runtime::open(dir).context("open artifacts (run `make artifacts` first)")?;
+        let w = rt.load_weights()?;
+        let bank = WeightBank::stage(&rt, &w)?;
+        let refs = rt.load_ref_stats()?;
+        Ok(Ctx { rt, bank, refs })
+    }
+}
+
+/// Results directory (created on demand).
+pub fn results_dir() -> PathBuf {
+    let p = PathBuf::from("results");
+    let _ = std::fs::create_dir_all(&p);
+    p
+}
+
+/// Write a rendered table + JSON payload under `results/`.
+pub fn write_results(name: &str, rendered: &str, json: &Json) -> Result<()> {
+    let dir = results_dir();
+    std::fs::write(dir.join(format!("{name}.md")), rendered)?;
+    std::fs::write(dir.join(format!("{name}.json")), json.to_string())?;
+    Ok(())
+}
+
+/// The five Table-1 methods in paper order.
+pub fn table1_methods() -> Vec<(&'static str, crate::config::Strategy, crate::config::DiceOptions)> {
+    use crate::config::{DiceOptions, Strategy};
+    vec![
+        ("Expert Parallelism", Strategy::SyncEp, DiceOptions::none()),
+        ("DistriFusion", Strategy::DistriFusion, DiceOptions::none()),
+        ("Displaced Expert Parallelism", Strategy::DisplacedEp, DiceOptions::none()),
+        ("Interweaved Parallelism", Strategy::Interweaved, DiceOptions::none()),
+        ("DICE", Strategy::Interweaved, DiceOptions::dice()),
+    ]
+}

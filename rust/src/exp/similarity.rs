@@ -1,0 +1,87 @@
+//! Figure 4 driver: step-wise routing similarity — the redundancy that
+//! makes displaced/interweaved parallelism viable at all. Records the
+//! routing table of a probe layer every diffusion step and reports the
+//! full step×step similarity matrix (heatmap data) plus summary bands.
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::benchkit::Table;
+use crate::config::{obj, DiceOptions, Json, Strategy};
+use crate::coordinator::{Engine, EngineConfig};
+
+pub struct SimilarityResult {
+    pub layer: usize,
+    /// [steps x steps] similarity matrix, row-major.
+    pub matrix: Vec<Vec<f32>>,
+}
+
+/// Record routing snapshots of `layer` over `steps` and build the
+/// similarity heatmap.
+pub fn routing_similarity(ctx: &Ctx, layer: usize, steps: usize, seed: u64) -> Result<SimilarityResult> {
+    let eng = Engine::new(
+        &ctx.rt,
+        &ctx.bank,
+        EngineConfig {
+            strategy: Strategy::SyncEp, // fresh routing every step
+            opts: DiceOptions::none(),
+            devices: 4,
+        },
+    )?;
+    let labels: Vec<usize> = (0..8).map(|i| i % 4).collect();
+    let (_, stats) = eng.generate(&labels, steps, seed, Some(layer))?;
+    let snaps = &stats.routing_snapshots;
+    let n = snaps.len();
+    let mut matrix = vec![vec![0.0f32; n]; n];
+    for i in 0..n {
+        for j in 0..n {
+            matrix[i][j] = snaps[i].similarity(&snaps[j]);
+        }
+    }
+    Ok(SimilarityResult { layer, matrix })
+}
+
+/// Figure 4 table: adjacent-step similarity statistics for shallow, mid
+/// and deep probe layers + heatmap CSV in the JSON payload.
+pub fn fig4(ctx: &Ctx, steps: usize, seed: u64) -> Result<(Table, Json)> {
+    let n_layers = ctx.rt.model.n_layers;
+    let probes = [0usize, n_layers / 2, n_layers - 1];
+    let mut table = Table::new(
+        "Figure 4 — step-wise routing similarity",
+        &["Probe layer", "adjacent-step", "5 steps apart", "max apart"],
+    );
+    let mut payload = Vec::new();
+    for &layer in &probes {
+        let res = routing_similarity(ctx, layer, steps, seed)?;
+        let n = res.matrix.len();
+        let adj: f32 = (0..n - 1).map(|i| res.matrix[i][i + 1]).sum::<f32>() / (n - 1) as f32;
+        let far5: f32 = if n > 5 {
+            (0..n - 5).map(|i| res.matrix[i][i + 5]).sum::<f32>() / (n - 5) as f32
+        } else {
+            f32::NAN
+        };
+        let max_apart = res.matrix[0][n - 1];
+        table.row(vec![
+            layer.to_string(),
+            format!("{:.3}", adj),
+            format!("{:.3}", far5),
+            format!("{:.3}", max_apart),
+        ]);
+        payload.push(obj(vec![
+            ("layer", Json::Num(layer as f64)),
+            ("adjacent", Json::Num(adj as f64)),
+            (
+                "matrix",
+                Json::Arr(
+                    res.matrix
+                        .iter()
+                        .map(|row| {
+                            Json::Arr(row.iter().map(|&v| Json::Num(v as f64)).collect())
+                        })
+                        .collect(),
+                ),
+            ),
+        ]));
+    }
+    Ok((table, obj(vec![("probes", Json::Arr(payload))])))
+}

@@ -1,0 +1,77 @@
+//! Figure 10 driver: the latency–quality trade-off scatter. Quality
+//! (FID proxy) from real tiny-model numerics; latency from the XL-scale
+//! simulation at batch 16 (the paper's plotting point). DistriFusion is
+//! OOM at that point and therefore not plotted — exactly as in the
+//! paper.
+
+use anyhow::Result;
+
+use super::{quality::run_method, Ctx};
+use crate::benchkit::{fmt_secs, Table};
+use crate::config::{
+    hardware_profile, model_preset, obj, CondCommSelector, DiceOptions, Json, SelectiveSync,
+    Strategy,
+};
+use crate::coordinator::{memory_report, simulate};
+use crate::netsim::{CostModel, Workload};
+
+/// The points plotted in Figure 10.
+fn points() -> Vec<(&'static str, Strategy, DiceOptions)> {
+    let dice = DiceOptions::dice();
+    let mut intw_cc = DiceOptions::none();
+    intw_cc.cond_comm = CondCommSelector::LowScore;
+    let mut intw_deep = DiceOptions::none();
+    intw_deep.selective_sync = SelectiveSync::Deep;
+    vec![
+        ("Expert Parallelism", Strategy::SyncEp, DiceOptions::none()),
+        ("Displaced EP", Strategy::DisplacedEp, DiceOptions::none()),
+        ("DistriFusion", Strategy::DistriFusion, DiceOptions::none()),
+        ("Interweaved", Strategy::Interweaved, DiceOptions::none()),
+        ("Interweaved + deep sync", Strategy::Interweaved, intw_deep),
+        ("Interweaved + cond comm", Strategy::Interweaved, intw_cc),
+        ("DICE (full)", Strategy::Interweaved, dice),
+    ]
+}
+
+pub fn fig10(ctx: &Ctx, n_samples: usize, steps: usize, warmup: usize, seed: u64) -> Result<(Table, Json)> {
+    let cm = CostModel::new(
+        model_preset("xl")?,
+        hardware_profile("rtx4090_pcie")?,
+    );
+    let wl = Workload {
+        local_batch: 16,
+        devices: 8,
+        tokens: cm.model.tokens(),
+    };
+    let mut table = Table::new(
+        "Figure 10 — latency-quality trade-off (latency @ XL batch 16, FID @ tiny numerics)",
+        &["Config", "Latency (50 steps)", "FID↓"],
+    );
+    let mut rows = Vec::new();
+    for (name, strategy, mut opts) in points() {
+        opts.warmup_sync_steps = warmup;
+        let mem = memory_report(&cm, &wl, strategy, &opts);
+        if mem.oom {
+            table.row(vec![name.to_string(), "OOM (not plotted)".into(), "-".into()]);
+            rows.push(obj(vec![
+                ("config", Json::Str(name.into())),
+                ("oom", Json::Bool(true)),
+            ]));
+            continue;
+        }
+        let rep = simulate(&cm, &wl, strategy, &opts, 50);
+        let (q, _) = run_method(ctx, strategy, opts, n_samples, steps, seed)?;
+        table.row(vec![
+            name.to_string(),
+            fmt_secs(rep.total_time),
+            format!("{:.2}", q.fid),
+        ]);
+        rows.push(obj(vec![
+            ("config", Json::Str(name.into())),
+            ("latency", Json::Num(rep.total_time)),
+            ("fid", Json::Num(q.fid as f64)),
+            ("oom", Json::Bool(false)),
+        ]));
+    }
+    Ok((table, obj(vec![("rows", Json::Arr(rows))])))
+}

@@ -1,0 +1,40 @@
+//! # DICE — staleness-centric optimizations for parallel diffusion MoE inference
+//!
+//! A full-system reproduction of the DICE paper as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L1/L2 (build time)** — `python/compile/` authors the DiT-MoE model and
+//!   its Pallas kernels and AOT-lowers every stage to HLO text
+//!   (`artifacts/*.hlo.txt`); Python never runs on the request path.
+//! * **L3 (this crate)** — the coordinator: expert-parallel engine, the
+//!   paper's parallelism strategies (synchronous EP, displaced EP,
+//!   interweaved parallelism, DistriFusion), selective synchronization,
+//!   conditional communication, the serving stack, and the evaluation
+//!   harness that regenerates every table and figure of the paper.
+//!
+//! The offline crate universe is tiny (the `xla` closure plus `anyhow` /
+//! `thiserror` / `once_cell`), so the usual ecosystem pieces — CLI parsing,
+//! config, tensors, dense linalg, RNG, metrics, property-test and bench
+//! harnesses — are implemented in-tree as substrates (see DESIGN.md §4).
+
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod desim;
+pub mod exp;
+pub mod linalg;
+pub mod metrics;
+pub mod moe;
+pub mod netsim;
+pub mod quality;
+pub mod rng;
+pub mod runtime;
+pub mod sampler;
+pub mod server;
+pub mod tensor;
+pub mod testkit;
+pub mod workload;
+
+/// Repository-relative default artifact directory.
+pub const DEFAULT_ARTIFACTS: &str = "artifacts";

@@ -1,0 +1,240 @@
+//! Dense linear algebra substrate for the quality metrics.
+//!
+//! The Fréchet distance FID(m1,C1; m2,C2) = |m1-m2|² + tr(C1 + C2 −
+//! 2·(C1·C2)^{1/2}) needs a PSD matrix square root; we compute it via a
+//! cyclic Jacobi eigendecomposition of the *symmetrised product* trick:
+//! sqrtm(C1·C2) has the same trace as sqrtm(S) where
+//! S = C1^{1/2}·C2·C1^{1/2} is symmetric PSD — so only symmetric
+//! eigenproblems are needed (two sqrtm calls, both Jacobi).
+
+use crate::tensor::Tensor;
+
+/// C = A · B for [m,k] x [k,n] row-major tensors.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul {:?} x {:?}", a.shape(), b.shape());
+    let mut c = Tensor::zeros(&[m, n]);
+    let (ad, bd) = (a.data(), b.data());
+    let cd = c.data_mut();
+    for i in 0..m {
+        for l in 0..k {
+            let av = ad[i * k + l];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &bd[l * n..(l + 1) * n];
+            let crow = &mut cd[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// Transpose of a [m,n] tensor.
+pub fn transpose(a: &Tensor) -> Tensor {
+    let (m, n) = (a.shape()[0], a.shape()[1]);
+    let mut t = Tensor::zeros(&[n, m]);
+    for i in 0..m {
+        for j in 0..n {
+            let v = a.at(&[i, j]);
+            t.set(&[j, i], v);
+        }
+    }
+    t
+}
+
+/// Symmetric eigendecomposition by cyclic Jacobi rotations.
+/// Returns (eigenvalues, eigenvectors as columns of V).
+/// `a` must be symmetric [n,n]; tolerance on off-diagonal Frobenius norm.
+pub fn jacobi_eigh(a: &Tensor, max_sweeps: usize) -> (Vec<f32>, Tensor) {
+    let n = a.shape()[0];
+    assert_eq!(a.shape(), &[n, n]);
+    let mut m: Vec<f64> = a.data().iter().map(|&v| v as f64).collect();
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    let idx = |r: usize, c: usize| r * n + c;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                off += m[idx(p, q)] * m[idx(p, q)];
+            }
+        }
+        if off.sqrt() < 1e-10 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[idx(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[idx(p, p)];
+                let aqq = m[idx(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p,q of m
+                for k in 0..n {
+                    let mkp = m[idx(k, p)];
+                    let mkq = m[idx(k, q)];
+                    m[idx(k, p)] = c * mkp - s * mkq;
+                    m[idx(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[idx(p, k)];
+                    let mqk = m[idx(q, k)];
+                    m[idx(p, k)] = c * mpk - s * mqk;
+                    m[idx(q, k)] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v[idx(k, p)];
+                    let vkq = v[idx(k, q)];
+                    v[idx(k, p)] = c * vkp - s * vkq;
+                    v[idx(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let eig: Vec<f32> = (0..n).map(|i| m[idx(i, i)] as f32).collect();
+    let vt = Tensor::from_vec(&[n, n], v.iter().map(|&x| x as f32).collect());
+    (eig, vt)
+}
+
+/// PSD matrix square root via Jacobi: A = V diag(λ) Vᵀ ⇒
+/// sqrtm(A) = V diag(√max(λ,0)) Vᵀ. Negative eigenvalues (numerical
+/// noise on near-singular covariances) are clamped to zero.
+pub fn sqrtm_psd(a: &Tensor) -> Tensor {
+    let n = a.shape()[0];
+    let (eig, v) = jacobi_eigh(a, 30);
+    let mut sd = Tensor::zeros(&[n, n]);
+    for i in 0..n {
+        sd.set(&[i, i], eig[i].max(0.0).sqrt());
+    }
+    matmul(&matmul(&v, &sd), &transpose(&v))
+}
+
+/// Trace of sqrtm(C1·C2) computed stably as Σ √λ_i(C1·C2) where the λ
+/// are obtained from the symmetric form S = √C1 · C2 · √C1.
+pub fn trace_sqrt_product(c1: &Tensor, c2: &Tensor) -> f32 {
+    let r1 = sqrtm_psd(c1);
+    let s = matmul(&matmul(&r1, c2), &r1);
+    // symmetrise against accumulation error
+    let st = transpose(&s);
+    let mut sym = s.clone();
+    for (a, b) in sym.data_mut().iter_mut().zip(st.data()) {
+        *a = 0.5 * (*a + b);
+    }
+    let (eig, _) = jacobi_eigh(&sym, 30);
+    eig.iter().map(|&l| l.max(0.0).sqrt()).sum()
+}
+
+/// Fréchet distance between Gaussians (m1, C1) and (m2, C2):
+/// |m1-m2|² + tr(C1) + tr(C2) − 2·tr((C1 C2)^{1/2}).
+pub fn frechet_distance(m1: &[f32], c1: &Tensor, m2: &[f32], c2: &Tensor) -> f32 {
+    assert_eq!(m1.len(), m2.len());
+    let dm: f32 = m1
+        .iter()
+        .zip(m2)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum();
+    let tr1: f32 = (0..c1.shape()[0]).map(|i| c1.at(&[i, i])).sum();
+    let tr2: f32 = (0..c2.shape()[0]).map(|i| c2.at(&[i, i])).sum();
+    let tsp = trace_sqrt_product(c1, c2);
+    (dm + tr1 + tr2 - 2.0 * tsp).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_psd(n: usize, seed: u64) -> Tensor {
+        let mut r = Rng::new(seed);
+        let mut a = Tensor::zeros(&[n, n]);
+        for v in a.data_mut() {
+            *v = r.normal_f32();
+        }
+        let at = transpose(&a);
+        let mut p = matmul(&a, &at);
+        for i in 0..n {
+            let v = p.at(&[i, i]) + 0.1;
+            p.set(&[i, i], v);
+        }
+        p
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(&[2, 2], vec![5.0, 6.0, 7.0, 8.0]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn jacobi_reconstructs() {
+        let p = random_psd(8, 3);
+        let (eig, v) = jacobi_eigh(&p, 30);
+        // V diag(eig) Vt == P
+        let mut d = Tensor::zeros(&[8, 8]);
+        for i in 0..8 {
+            d.set(&[i, i], eig[i]);
+        }
+        let rec = matmul(&matmul(&v, &d), &transpose(&v));
+        assert!(rec.max_abs_diff(&p).unwrap() < 1e-3);
+        // eigenvalues of a PSD matrix are nonnegative
+        assert!(eig.iter().all(|&l| l > -1e-4));
+    }
+
+    #[test]
+    fn sqrtm_squares_back() {
+        let p = random_psd(6, 7);
+        let r = sqrtm_psd(&p);
+        let rr = matmul(&r, &r);
+        assert!(rr.max_abs_diff(&p).unwrap() < 1e-3, "{}", rr.max_abs_diff(&p).unwrap());
+    }
+
+    #[test]
+    fn frechet_identity_is_zero() {
+        let p = random_psd(5, 11);
+        let m = vec![0.5; 5];
+        let f = frechet_distance(&m, &p, &m, &p);
+        assert!(f.abs() < 1e-2, "{f}");
+    }
+
+    #[test]
+    fn frechet_mean_shift() {
+        // identical covariances, mean shift d -> FID = |d|^2
+        let n = 4;
+        let mut c = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            c.set(&[i, i], 1.0);
+        }
+        let m1 = vec![0.0; n];
+        let m2 = vec![2.0, 0.0, 0.0, 0.0];
+        let f = frechet_distance(&m1, &c, &m2, &c);
+        assert!((f - 4.0).abs() < 1e-3, "{f}");
+    }
+
+    #[test]
+    fn frechet_scale_mismatch_positive() {
+        let n = 3;
+        let mut c1 = Tensor::zeros(&[n, n]);
+        let mut c2 = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            c1.set(&[i, i], 1.0);
+            c2.set(&[i, i], 4.0);
+        }
+        let m = vec![0.0; n];
+        // tr(C1)+tr(C2)-2 tr(sqrt(C1 C2)) = 3 + 12 - 2*6 = 3
+        let f = frechet_distance(&m, &c1, &m, &c2);
+        assert!((f - 3.0).abs() < 1e-3, "{f}");
+    }
+}

@@ -1,0 +1,254 @@
+//! `dice` — leader entrypoint / CLI for the DICE reproduction.
+//!
+//! Subcommands:
+//!   info                       artifact + model summary
+//!   generate [...]             generate a batch with a chosen strategy
+//!   serve [...]                run the serving loop on a Poisson trace
+//!   sim [...]                  paper-scale virtual-time what-ifs
+//!   exp <name> [...]           run an experiment driver (table1, table2,
+//!                              table3, table4, table5, fig2, fig4, fig9,
+//!                              fig10, fig14, motivation)
+
+use anyhow::{bail, Result};
+
+use dice::cli::Args;
+use dice::config::CondCommSelector;
+use dice::config::{hardware_profile, model_preset, DiceOptions, SelectiveSync, Strategy};
+use dice::coordinator::{simulate, Engine, EngineConfig};
+use dice::exp::{self, Ctx};
+use dice::netsim::{CostModel, Workload};
+use dice::server::{serve, BatchPolicy};
+use dice::workload::poisson_trace;
+
+fn usage() -> String {
+    "usage: dice <info|generate|serve|sim|exp> [--help]\n\
+     \n\
+     dice generate --strategy interweaved --samples 32 --steps 50 \\\n\
+                   --selective deep --condcomm low --warmup 4\n\
+     dice serve    --requests 64 --rate 2.0 --strategy interweaved\n\
+     dice sim      --model xl --hw rtx4090_pcie --batch 16 --devices 8\n\
+     dice exp      table1 --samples 256\n"
+        .to_string()
+}
+
+fn opts_from(a: &Args) -> Result<DiceOptions> {
+    Ok(DiceOptions {
+        selective_sync: SelectiveSync::parse(&a.str_or("selective", "none"))?,
+        cond_comm: CondCommSelector::parse(&a.str_or("condcomm", "off"))?,
+        cond_comm_stride: a.usize_or("stride", 2),
+        warmup_sync_steps: a.usize_or("warmup", 4),
+        only_async_layer: None,
+    })
+}
+
+fn main() -> Result<()> {
+    let a = Args::parse();
+    let cmd = a.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "info" => {
+            let ctx = Ctx::open()?;
+            let m = &ctx.rt.model;
+            println!("artifacts: {}", ctx.rt.artifact_dir().display());
+            println!(
+                "model: {} — {} layers, d={}, {} experts (top-{}) + {} shared, {} tokens",
+                m.name,
+                m.n_layers,
+                m.d_model,
+                m.n_experts,
+                m.top_k,
+                m.n_shared,
+                m.tokens()
+            );
+            println!("batch buckets: {:?}", ctx.rt.batch_buckets());
+            println!("staged weights: {} bytes on device", ctx.bank.param_bytes);
+        }
+        "generate" => {
+            let ctx = Ctx::open()?;
+            let strategy = Strategy::parse(&a.str_or("strategy", "interweaved"))?;
+            let n = a.usize_or("samples", 32);
+            let steps = a.usize_or("steps", 50);
+            let eng = Engine::new(
+                &ctx.rt,
+                &ctx.bank,
+                EngineConfig {
+                    strategy,
+                    opts: opts_from(&a)?,
+                    devices: a.usize_or("devices", 4),
+                },
+            )?;
+            let job = dice::sampler::sample_many(&eng, n, 32, steps, a.u64_or("seed", 0))?;
+            let q = dice::quality::evaluate(&ctx.rt, &ctx.bank, &job.samples, &ctx.refs)?;
+            println!(
+                "{}: {} samples, FID {:.2}, sFID {:.2}, IS {:.2}, staleness {:.2}, \
+                 fresh/saved bytes {}/{}",
+                strategy.name(),
+                n,
+                q.fid,
+                q.sfid,
+                q.is_score,
+                job.mean_staleness,
+                job.fresh_bytes,
+                job.saved_bytes
+            );
+        }
+        "serve" => {
+            let ctx = Ctx::open()?;
+            let strategy = Strategy::parse(&a.str_or("strategy", "interweaved"))?;
+            let eng = Engine::new(
+                &ctx.rt,
+                &ctx.bank,
+                EngineConfig {
+                    strategy,
+                    opts: opts_from(&a)?,
+                    devices: a.usize_or("devices", 4),
+                },
+            )?;
+            let cm = CostModel::new(
+                model_preset("xl")?,
+                hardware_profile(&a.str_or("hw", "rtx4090_pcie"))?,
+            );
+            let trace = poisson_trace(
+                a.usize_or("requests", 64),
+                a.f64_or("rate", 2.0),
+                ctx.rt.model.n_classes,
+                a.u64_or("seed", 42),
+            );
+            let rep = serve(
+                &eng,
+                &cm,
+                &trace,
+                BatchPolicy {
+                    max_global: a.usize_or("max-batch", 32),
+                    max_wait: a.f64_or("max-wait", 3.0),
+                },
+                a.usize_or("steps", 50),
+                7,
+            )?;
+            println!("{}", rep.metrics.render());
+            println!(
+                "throughput {:.2} req/s over {:.1}s virtual",
+                rep.throughput, rep.span
+            );
+        }
+        "sim" => {
+            let model = model_preset(&a.str_or("model", "xl"))?;
+            let hw = hardware_profile(&a.str_or("hw", "rtx4090_pcie"))?;
+            let cm = CostModel::new(model.clone(), hw);
+            let wl = Workload {
+                local_batch: a.usize_or("batch", 16),
+                devices: a.usize_or("devices", 8),
+                tokens: model.tokens(),
+            };
+            let strategy = Strategy::parse(&a.str_or("strategy", "interweaved"))?;
+            let r = simulate(&cm, &wl, strategy, &opts_from(&a)?, a.usize_or("steps", 50));
+            println!(
+                "{}: total {:.3}s, step {:.4}s, a2a share {:.1}%, mem {:.2} GB{}",
+                strategy.name(),
+                r.total_time,
+                r.step_time,
+                r.a2a_share * 100.0,
+                r.mem.total / 1e9,
+                if r.mem.oom { " (OOM)" } else { "" }
+            );
+        }
+        "exp" => {
+            let name = a.positional.get(1).map(String::as_str).unwrap_or("");
+            let samples = a.usize_or("samples", 256);
+            let seed = a.u64_or("seed", 1234);
+            match name {
+                "table1" => {
+                    let ctx = Ctx::open()?;
+                    let (t, j) = exp::quality::quality_table(
+                        &ctx,
+                        "Table 1",
+                        samples,
+                        a.usize_or("steps", 50),
+                        a.usize_or("warmup", 4),
+                        false,
+                        seed,
+                    )?;
+                    t.print();
+                    exp::write_results("table1_quality", &t.render(), &j)?;
+                }
+                "table2" => {
+                    let ctx = Ctx::open()?;
+                    let (t, j) =
+                        exp::quality::quality_table(&ctx, "Table 2", samples, 10, 2, true, seed)?;
+                    t.print();
+                    exp::write_results("table2_steps10", &t.render(), &j)?;
+                }
+                "table3" => {
+                    let ctx = Ctx::open()?;
+                    let (t, j) =
+                        exp::quality::quality_table(&ctx, "Table 3", samples, 20, 4, true, seed)?;
+                    t.print();
+                    exp::write_results("table3_steps20", &t.render(), &j)?;
+                }
+                "table4" => {
+                    let ctx = Ctx::open()?;
+                    let (t, j) = exp::quality::ablation_table(
+                        &ctx,
+                        samples,
+                        a.usize_or("steps", 50),
+                        a.usize_or("warmup", 4),
+                        seed,
+                    )?;
+                    t.print();
+                    exp::write_results("table4_ablation", &t.render(), &j)?;
+                }
+                "table5" => {
+                    let (t, j) = exp::scaling::table5()?;
+                    t.print();
+                    exp::write_results("table5_a2a_pct", &t.render(), &j)?;
+                }
+                "motivation" => {
+                    let (t, j) = exp::scaling::motivation()?;
+                    t.print();
+                    exp::write_results("motivation_a2a", &t.render(), &j)?;
+                }
+                "fig2" => {
+                    let ctx = Ctx::open()?;
+                    let (t, j) = exp::schedules::fig2(&ctx, a.usize_or("steps", 8))?;
+                    t.print();
+                    exp::write_results("fig2_schedules", &t.render(), &j)?;
+                }
+                "fig4" => {
+                    let ctx = Ctx::open()?;
+                    let (t, j) = exp::similarity::fig4(&ctx, a.usize_or("steps", 20), seed)?;
+                    t.print();
+                    exp::write_results("fig4_similarity", &t.render(), &j)?;
+                }
+                "fig9" | "fig14" => {
+                    let hw = if name == "fig9" {
+                        "rtx4090_pcie"
+                    } else {
+                        "rtx3080_pcie"
+                    };
+                    for model in ["xl", "g"] {
+                        let (tables, _) = exp::scaling::scaling(model, hw, a.usize_or("steps", 50))?;
+                        for t in tables {
+                            t.print();
+                        }
+                    }
+                }
+                "fig10" => {
+                    let ctx = Ctx::open()?;
+                    let (t, j) = exp::tradeoff::fig10(
+                        &ctx,
+                        samples.min(128),
+                        a.usize_or("steps", 50),
+                        a.usize_or("warmup", 4),
+                        seed,
+                    )?;
+                    t.print();
+                    exp::write_results("fig10_tradeoff", &t.render(), &j)?;
+                }
+                _ => bail!("unknown experiment {name:?}\n{}", usage()),
+            }
+        }
+        _ => {
+            print!("{}", usage());
+        }
+    }
+    Ok(())
+}

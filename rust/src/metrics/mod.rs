@@ -1,0 +1,207 @@
+//! Runtime metrics substrate: counters, streaming histograms with
+//! percentile queries (an hdrhistogram-lite), and a registry that the
+//! server and engine report into. Everything is plain and allocation-free
+//! on the hot path.
+
+use std::collections::BTreeMap;
+
+/// Log-bucketed streaming histogram for latencies (seconds) or sizes.
+/// Buckets are exponential with ~5% resolution; memory is fixed.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    min: f64,
+    ratio: f64,
+    count: u64,
+    sum: f64,
+    max_seen: f64,
+    min_seen: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new(1e-9, 1e5)
+    }
+}
+
+impl Histogram {
+    /// Histogram covering [lo, hi] with ~5% relative bucket width.
+    pub fn new(lo: f64, hi: f64) -> Histogram {
+        assert!(lo > 0.0 && hi > lo);
+        let ratio = 1.05f64;
+        let n = ((hi / lo).ln() / ratio.ln()).ceil() as usize + 2;
+        Histogram {
+            buckets: vec![0; n],
+            min: lo,
+            ratio,
+            count: 0,
+            sum: 0.0,
+            max_seen: f64::MIN,
+            min_seen: f64::MAX,
+        }
+    }
+
+    fn bucket_of(&self, v: f64) -> usize {
+        if v <= self.min {
+            return 0;
+        }
+        let b = ((v / self.min).ln() / self.ratio.ln()) as usize + 1;
+        b.min(self.buckets.len() - 1)
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let b = self.bucket_of(v);
+        self.buckets[b] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.max_seen = self.max_seen.max(v);
+        self.min_seen = self.min_seen.min(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max_seen
+        }
+    }
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min_seen
+        }
+    }
+
+    /// Percentile (0..=100) by bucket interpolation (upper bucket edge —
+    /// conservative for latency reporting).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                if i == 0 {
+                    return self.min;
+                }
+                return self.min * self.ratio.powi(i as i32);
+            }
+        }
+        self.max_seen
+    }
+}
+
+/// Named counters + histograms.
+#[derive(Default, Debug)]
+pub struct Registry {
+    pub counters: BTreeMap<String, u64>,
+    pub hists: BTreeMap<String, Histogram>,
+}
+
+impl Registry {
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_default() += by;
+    }
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.hists
+            .entry(name.to_string())
+            .or_default()
+            .record(v);
+    }
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+    pub fn hist(&self, name: &str) -> Option<&Histogram> {
+        self.hists.get(name)
+    }
+
+    /// Human-readable dump (examples/serve_trace report).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for (k, v) in &self.counters {
+            s.push_str(&format!("{k:<40} {v}\n"));
+        }
+        for (k, h) in &self.hists {
+            s.push_str(&format!(
+                "{k:<40} n={} mean={:.6} p50={:.6} p99={:.6} max={:.6}\n",
+                h.count(),
+                h.mean(),
+                h.percentile(50.0),
+                h.percentile(99.0),
+                h.max()
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles_rank() {
+        let mut h = Histogram::new(1e-6, 10.0);
+        for i in 1..=1000 {
+            h.record(i as f64 / 1000.0); // 1ms..1s uniform
+        }
+        let p50 = h.percentile(50.0);
+        let p99 = h.percentile(99.0);
+        assert!(p50 > 0.4 && p50 < 0.6, "{p50}");
+        assert!(p99 > 0.9 && p99 < 1.1, "{p99}");
+        assert!(h.percentile(100.0) >= p99);
+        assert!((h.mean() - 0.5005).abs() < 0.01);
+    }
+
+    #[test]
+    fn histogram_bucket_resolution() {
+        let mut h = Histogram::new(1e-6, 10.0);
+        h.record(0.1);
+        // one sample: all percentiles within ~6% of the value
+        for p in [1.0, 50.0, 99.9] {
+            let v = h.percentile(p);
+            assert!((v - 0.1).abs() / 0.1 < 0.06, "p{p} -> {v}");
+        }
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::default();
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn registry_counts() {
+        let mut r = Registry::default();
+        r.inc("a2a.bytes", 100);
+        r.inc("a2a.bytes", 50);
+        r.observe("step.latency", 0.02);
+        assert_eq!(r.counter("a2a.bytes"), 150);
+        assert_eq!(r.counter("missing"), 0);
+        assert_eq!(r.hist("step.latency").unwrap().count(), 1);
+        assert!(r.render().contains("a2a.bytes"));
+    }
+
+    #[test]
+    fn below_range_clamps() {
+        let mut h = Histogram::new(1e-3, 1.0);
+        h.record(1e-9);
+        h.record(100.0);
+        assert_eq!(h.count(), 2);
+        assert!(h.percentile(1.0) <= 1e-3 + 1e-9);
+    }
+}

@@ -1,0 +1,245 @@
+//! MoE routing bookkeeping: top-k routing tables extracted from the
+//! router probabilities, expert→device placement, and the dispatch plans
+//! (who sends which token to which expert) that the engine's all-to-all
+//! emulation and the conditional-communication filter operate on.
+
+use crate::tensor::{ops, Tensor};
+
+/// Expert placement: contiguous blocks of experts per device
+/// (device d owns experts [d·E/D, (d+1)·E/D)).
+#[derive(Debug, Clone, Copy)]
+pub struct Placement {
+    pub n_experts: usize,
+    pub devices: usize,
+}
+
+impl Placement {
+    pub fn new(n_experts: usize, devices: usize) -> Placement {
+        assert!(n_experts % devices == 0, "experts {n_experts} % devices {devices} != 0");
+        Placement { n_experts, devices }
+    }
+    pub fn owner(&self, expert: usize) -> usize {
+        expert / (self.n_experts / self.devices)
+    }
+    pub fn experts_of(&self, device: usize) -> std::ops::Range<usize> {
+        let per = self.n_experts / self.devices;
+        device * per..(device + 1) * per
+    }
+}
+
+/// Top-k routing decisions for a flat token range.
+///
+/// Token indices are *global* (flattened over the whole global batch ×
+/// tokens) so that the conditional-communication cache, which must be
+/// stable across diffusion steps, can key on them directly.
+#[derive(Debug, Clone)]
+pub struct RoutingTable {
+    pub n_tokens: usize,
+    pub top_k: usize,
+    pub n_experts: usize,
+    /// [n_tokens * top_k] expert ids, rank-major per token (rank 0 first).
+    pub experts: Vec<usize>,
+    /// [n_tokens * top_k] router scores aligned with `experts`.
+    pub scores: Vec<f32>,
+}
+
+impl RoutingTable {
+    /// Build from router probabilities [.., E] (any leading shape,
+    /// flattened) taking the top-k per token.
+    pub fn from_probs(probs: &Tensor, top_k: usize) -> RoutingTable {
+        let (n_tokens, e) = probs.rows();
+        let mut experts = Vec::with_capacity(n_tokens * top_k);
+        let mut scores = Vec::with_capacity(n_tokens * top_k);
+        for i in 0..n_tokens {
+            let row = probs.row(i);
+            for &idx in ops::topk_idx(row, top_k).iter() {
+                experts.push(idx);
+                scores.push(row[idx]);
+            }
+        }
+        RoutingTable {
+            n_tokens,
+            top_k,
+            n_experts: e,
+            experts,
+            scores,
+        }
+    }
+
+    /// (rank, expert, score) triples of token `i`, rank order.
+    pub fn of_token(&self, i: usize) -> impl Iterator<Item = (usize, usize, f32)> + '_ {
+        let k = self.top_k;
+        (0..k).map(move |r| (r, self.experts[i * k + r], self.scores[i * k + r]))
+    }
+
+    /// Fraction of (token, rank) assignments equal between two tables —
+    /// the step-wise routing similarity of Figure 4.
+    pub fn similarity(&self, other: &RoutingTable) -> f32 {
+        assert_eq!(self.n_tokens, other.n_tokens);
+        assert_eq!(self.top_k, other.top_k);
+        let same = self
+            .experts
+            .iter()
+            .zip(&other.experts)
+            .filter(|(a, b)| a == b)
+            .count();
+        same as f32 / self.experts.len() as f32
+    }
+}
+
+/// One entry of a dispatch plan: token row `token` (global flat index)
+/// goes to `expert` with router weight `score`; `rank` is its position
+/// in the token's top-k (rank 0 = top-1, always kept fresh by
+/// conditional communication).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DispatchEntry {
+    pub token: usize,
+    pub expert: usize,
+    pub rank: usize,
+    pub score: f32,
+    /// device that owns the token (source of the dispatch transfer).
+    pub src_device: usize,
+}
+
+/// A dispatch plan groups entries per expert (the all-to-all payload).
+#[derive(Debug, Clone, Default)]
+pub struct DispatchPlan {
+    pub per_expert: Vec<Vec<DispatchEntry>>,
+}
+
+impl DispatchPlan {
+    /// Build the full (un-throttled) plan from a routing table.
+    /// `tokens_per_device` maps global token index -> owning device.
+    pub fn build(rt: &RoutingTable, tokens_per_device: usize) -> DispatchPlan {
+        let mut per_expert = vec![Vec::new(); rt.n_experts];
+        for i in 0..rt.n_tokens {
+            for (rank, expert, score) in rt.of_token(i) {
+                per_expert[expert].push(DispatchEntry {
+                    token: i,
+                    expert,
+                    rank,
+                    score,
+                    src_device: i / tokens_per_device,
+                });
+            }
+        }
+        DispatchPlan { per_expert }
+    }
+
+    pub fn total_entries(&self) -> usize {
+        self.per_expert.iter().map(Vec::len).sum()
+    }
+
+    /// Bytes this plan moves across devices in ONE direction (dispatch
+    /// or combine), counting only entries whose source device differs
+    /// from the expert's owner. `elem_bytes` is the activation element
+    /// size, `d_model` the token width.
+    pub fn cross_bytes(&self, placement: &Placement, d_model: usize, elem_bytes: usize) -> usize {
+        let mut n = 0usize;
+        for (e, entries) in self.per_expert.iter().enumerate() {
+            let owner = placement.owner(e);
+            n += entries.iter().filter(|en| en.src_device != owner).count();
+        }
+        n * d_model * elem_bytes
+    }
+
+    /// Per-expert token loads (imbalance diagnostics).
+    pub fn loads(&self) -> Vec<usize> {
+        self.per_expert.iter().map(Vec::len).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, Gen};
+
+    fn probs_of(rows: Vec<Vec<f32>>) -> Tensor {
+        let n = rows.len();
+        let e = rows[0].len();
+        Tensor::from_vec(&[n, e], rows.into_iter().flatten().collect())
+    }
+
+    #[test]
+    fn placement_blocks() {
+        let p = Placement::new(8, 4);
+        assert_eq!(p.owner(0), 0);
+        assert_eq!(p.owner(1), 0);
+        assert_eq!(p.owner(7), 3);
+        assert_eq!(p.experts_of(2), 4..6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn placement_requires_divisibility() {
+        Placement::new(8, 3);
+    }
+
+    #[test]
+    fn routing_topk_rank_order() {
+        let probs = probs_of(vec![vec![0.1, 0.6, 0.3], vec![0.5, 0.2, 0.3]]);
+        let rt = RoutingTable::from_probs(&probs, 2);
+        let t0: Vec<_> = rt.of_token(0).collect();
+        assert_eq!(t0[0], (0, 1, 0.6));
+        assert_eq!(t0[1], (1, 2, 0.3));
+        let t1: Vec<_> = rt.of_token(1).collect();
+        assert_eq!(t1[0].1, 0);
+        assert_eq!(t1[1].1, 2);
+    }
+
+    #[test]
+    fn similarity_bounds() {
+        let p1 = probs_of(vec![vec![0.9, 0.1], vec![0.2, 0.8]]);
+        let rt1 = RoutingTable::from_probs(&p1, 1);
+        assert_eq!(rt1.similarity(&rt1), 1.0);
+        let p2 = probs_of(vec![vec![0.1, 0.9], vec![0.8, 0.2]]);
+        let rt2 = RoutingTable::from_probs(&p2, 1);
+        assert_eq!(rt1.similarity(&rt2), 0.0);
+    }
+
+    #[test]
+    fn plan_conserves_assignments() {
+        // property: every (token, rank) appears exactly once in the plan.
+        forall(48, 0xD1CE, |g: &mut Gen| {
+            let n_tokens = (g.usize_in(4..40) & !3).max(4); // multiple of 4
+            let e = 8;
+            let k = g.usize_in(1..4);
+            let mut data = Vec::new();
+            for _ in 0..n_tokens {
+                data.extend(g.prob_row(e));
+            }
+            let probs = Tensor::from_vec(&[n_tokens, e], data);
+            let rt = RoutingTable::from_probs(&probs, k);
+            let plan = DispatchPlan::build(&rt, n_tokens / 4);
+            assert_eq!(plan.total_entries(), n_tokens * k);
+            let mut seen = std::collections::BTreeSet::new();
+            for entries in &plan.per_expert {
+                for en in entries {
+                    assert!(seen.insert((en.token, en.rank)), "dup {:?}", en);
+                    assert!(en.score >= 0.0);
+                }
+            }
+            assert_eq!(seen.len(), n_tokens * k);
+        });
+    }
+
+    #[test]
+    fn cross_bytes_zero_on_one_device() {
+        let probs = probs_of(vec![vec![0.5, 0.5]; 6]);
+        let rt = RoutingTable::from_probs(&probs, 2);
+        let plan = DispatchPlan::build(&rt, 6); // all tokens on device 0
+        let p = Placement::new(2, 1);
+        assert_eq!(plan.cross_bytes(&p, 64, 4), 0);
+    }
+
+    #[test]
+    fn cross_bytes_counts_remote_only() {
+        // 2 tokens on devices 0/1; 2 experts owned by devices 0/1.
+        let probs = probs_of(vec![vec![1.0, 0.0], vec![1.0, 0.0]]);
+        let rt = RoutingTable::from_probs(&probs, 1);
+        let plan = DispatchPlan::build(&rt, 1);
+        let p = Placement::new(2, 2);
+        // token0 (dev0) -> e0 (dev0): local. token1 (dev1) -> e0 (dev0): remote.
+        assert_eq!(plan.cross_bytes(&p, 10, 2), 10 * 2);
+    }
+}

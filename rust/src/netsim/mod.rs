@@ -1,0 +1,288 @@
+//! Interconnect + device cost model (the paper's 8×4090 / 8×3080 PCIe
+//! testbeds, DESIGN.md §2 substitution table).
+//!
+//! Everything here is an *analytic* model: per-op FLOP counts for the
+//! DiT-MoE block, α+β transfer costs for the collectives, and a byte-
+//! accurate memory model (parameters, activations, staleness buffers) —
+//! enough to reproduce the paper's Table 5 (a2a share), Figure 9/14/15
+//! (latency & memory scaling) and the OOM behaviour of DistriFusion.
+//! Absolute seconds are calibrated, ratios are the claim.
+
+use crate::config::{HardwareProfile, ModelConfig};
+
+/// Serving precision assumed by the cost model (bytes per element).
+pub const ELEM_BYTES: f64 = 2.0;
+
+/// Workload point: a model served on `devices` GPUs at `local_batch`
+/// images per device with `tokens` tokens per image.
+#[derive(Debug, Clone, Copy)]
+pub struct Workload {
+    pub local_batch: usize,
+    pub devices: usize,
+    pub tokens: usize,
+}
+
+impl Workload {
+    pub fn global_batch(&self) -> usize {
+        self.local_batch * self.devices
+    }
+    /// Tokens processed per device per step (non-expert layers).
+    pub fn local_tokens(&self) -> usize {
+        self.local_batch * self.tokens
+    }
+}
+
+/// Per-layer cost components (seconds / bytes), derived from the model
+/// dims and a hardware profile.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerCosts {
+    /// attention + adaLN + router compute.
+    pub t_pre: f64,
+    /// routed expert FFN compute for the device's share of dispatched
+    /// tokens (balanced routing assumed; the engine measures the real
+    /// imbalance in numerics mode).
+    pub t_expert: f64,
+    /// shared expert + residual compute.
+    pub t_post: f64,
+    /// one all-to-all (dispatch or combine) latency for full freshness.
+    pub t_a2a: f64,
+    /// bytes a single device sends in one all-to-all.
+    pub a2a_bytes: f64,
+}
+
+/// Analytic cost model.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub model: ModelConfig,
+    pub hw: HardwareProfile,
+}
+
+impl CostModel {
+    pub fn new(model: ModelConfig, hw: HardwareProfile) -> CostModel {
+        CostModel { model, hw }
+    }
+
+    /// FLOPs of the attention half of a block for `n` tokens
+    /// (qkv + proj GEMMs + 2·T·T·D attention matmuls + adaLN).
+    pub fn flops_pre(&self, wl: &Workload) -> f64 {
+        let d = self.model.d_model as f64;
+        let n = wl.local_tokens() as f64;
+        let t = self.model.tokens() as f64;
+        let b = wl.local_batch as f64;
+        let qkv = 2.0 * n * d * 3.0 * d;
+        let proj = 2.0 * n * d * d;
+        let attn = 2.0 * 2.0 * b * t * t * d;
+        let adaln = 2.0 * b * d * 6.0 * d;
+        let router = 2.0 * n * d * self.model.n_experts as f64;
+        qkv + proj + attn + adaln + router
+    }
+
+    /// FLOPs of the routed experts executed on ONE device per layer:
+    /// each device receives `local_tokens * top_k` token-assignments on
+    /// average (balanced routing).
+    pub fn flops_expert(&self, wl: &Workload) -> f64 {
+        let d = self.model.d_model as f64;
+        let f = self.model.d_ffn as f64;
+        let assignments = wl.local_tokens() as f64 * self.model.top_k as f64;
+        2.0 * assignments * (d * f + f * d)
+    }
+
+    /// FLOPs of shared experts + residual on the local shard.
+    pub fn flops_post(&self, wl: &Workload) -> f64 {
+        let d = self.model.d_model as f64;
+        let f = self.model.d_ffn as f64;
+        let n = wl.local_tokens() as f64;
+        2.0 * n * self.model.n_shared as f64 * (d * f + f * d) + 4.0 * n * d
+    }
+
+    /// Bytes one device contributes to a single all-to-all (dispatch or
+    /// combine): its `local_tokens · top_k` routed activations of width
+    /// D, of which `(devices-1)/devices` actually cross the wire.
+    pub fn a2a_bytes(&self, wl: &Workload) -> f64 {
+        let d = self.model.d_model as f64;
+        let cross = (wl.devices - 1) as f64 / wl.devices as f64;
+        wl.local_tokens() as f64 * self.model.top_k as f64 * d * ELEM_BYTES * cross
+    }
+
+    /// All-to-all latency for `bytes` per device: all traffic funnels
+    /// through the PCIe host bridge, so effective per-device bandwidth is
+    /// `a2a_bw / devices` (this is what makes 8-GPU shares exceed 4-GPU
+    /// shares in Table 5).
+    pub fn t_a2a(&self, bytes: f64, devices: usize) -> f64 {
+        self.hw.coll_overhead
+            + self.hw.msg_latency * (devices - 1) as f64
+            + bytes * devices as f64 / self.hw.a2a_bw
+    }
+
+    /// Point-to-point transfer latency.
+    pub fn t_p2p(&self, bytes: f64) -> f64 {
+        self.hw.msg_latency + bytes / self.hw.link_bw
+    }
+
+    /// Effective compute time: small batches under-utilise the GPU, so
+    /// throughput ramps with the resident token count and saturates at
+    /// the profile's peak (this is why the paper's a2a share RISES with
+    /// batch — comm scales linearly while compute scales sublinearly).
+    pub fn t_compute_at(&self, flops: f64, local_tokens: usize) -> f64 {
+        let n = local_tokens as f64;
+        let util = n / (n + self.hw.sat_tokens);
+        flops / (self.hw.flops * util)
+    }
+
+    /// Compute time at full utilisation (saturated batch).
+    pub fn t_compute(&self, flops: f64) -> f64 {
+        flops / self.hw.flops
+    }
+
+    /// All per-layer costs for a workload.
+    pub fn layer_costs(&self, wl: &Workload) -> LayerCosts {
+        let bytes = self.a2a_bytes(wl);
+        let n = wl.local_tokens();
+        LayerCosts {
+            t_pre: self.t_compute_at(self.flops_pre(wl), n),
+            t_expert: self.t_compute_at(self.flops_expert(wl), n),
+            t_post: self.t_compute_at(self.flops_post(wl), n),
+            t_a2a: self.t_a2a(bytes, wl.devices),
+            a2a_bytes: bytes,
+        }
+    }
+
+    /// Embed + cond + final compute (once per step, replicated).
+    pub fn t_affix(&self, wl: &Workload) -> f64 {
+        let d = self.model.d_model as f64;
+        let n = wl.local_tokens() as f64;
+        let pd = self.model.patch_dim() as f64;
+        self.t_compute_at(
+            2.0 * n * pd * d + 2.0 * n * d * pd + 4.0 * wl.local_batch as f64 * d * d,
+            wl.local_tokens(),
+        )
+    }
+
+    // ----------------------------------------------------------------
+    // Memory model (bytes per device)
+    // ----------------------------------------------------------------
+
+    /// Peak activation working set per device (a few [B,T,D]-sized live
+    /// tensors during a block).
+    pub fn activation_bytes(&self, wl: &Workload) -> f64 {
+        let live_tensors = 6.0;
+        wl.local_tokens() as f64 * self.model.d_model as f64 * ELEM_BYTES * live_tensors
+    }
+
+    /// Staleness-buffer bytes per device for a strategy that persists
+    /// `buffers_per_layer` activation-sized buffers across steps
+    /// (displaced EP: 2 = dispatch + combine; interweaved: 1 = combine
+    /// only — the paper's "half the buffer size").
+    pub fn staleness_buffer_bytes(&self, wl: &Workload, buffers_per_layer: f64) -> f64 {
+        let per_layer =
+            wl.local_tokens() as f64 * self.model.top_k as f64 * self.model.d_model as f64 * ELEM_BYTES;
+        buffers_per_layer * self.model.n_layers as f64 * per_layer
+    }
+
+    /// DistriFusion staleness buffers: every device keeps full-sequence
+    /// copies of each asynchronously-exchanged tensor per layer —
+    /// DistriFusion buffers the boundary activations of every comm op
+    /// (block input, K, V and their in-flight send/recv doubles),
+    /// ~12 full-sequence tensors per layer at fp16. This is what drives
+    /// the paper's DistriFusion OOM at XL batch >= 16.
+    pub fn dfu_buffer_bytes(&self, wl: &Workload) -> f64 {
+        const BUFS_PER_LAYER: f64 = 12.0; // (input + K + V) x (live + send + recv)
+        BUFS_PER_LAYER
+            * self.model.n_layers as f64
+            * wl.global_batch() as f64
+            * self.model.tokens() as f64
+            * self.model.d_model as f64
+            * ELEM_BYTES
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{hardware_profile, model_preset};
+
+    fn xl8(batch: usize) -> (CostModel, Workload) {
+        let cm = CostModel::new(
+            model_preset("xl").unwrap(),
+            hardware_profile("rtx4090_pcie").unwrap(),
+        );
+        let tokens = cm.model.tokens();
+        (
+            cm,
+            Workload {
+                local_batch: batch,
+                devices: 8,
+                tokens,
+            },
+        )
+    }
+
+    #[test]
+    fn a2a_dominates_at_xl_scale() {
+        // Paper Table 5: a2a share 75-79% on 8 GPUs for XL. At the level
+        // of a single layer that means 2·t_a2a >> compute.
+        let (cm, wl) = xl8(8);
+        let c = cm.layer_costs(&wl);
+        let comm = 2.0 * c.t_a2a;
+        let comp = c.t_pre + c.t_expert + c.t_post;
+        let share = comm / (comm + comp);
+        assert!(share > 0.6 && share < 0.9, "a2a share {share}");
+    }
+
+    #[test]
+    fn a2a_share_grows_with_batch() {
+        let shares: Vec<f64> = [4, 8, 16, 32]
+            .iter()
+            .map(|&b| {
+                let (cm, wl) = xl8(b);
+                let c = cm.layer_costs(&wl);
+                2.0 * c.t_a2a / (2.0 * c.t_a2a + c.t_pre + c.t_expert + c.t_post)
+            })
+            .collect();
+        for w in shares.windows(2) {
+            assert!(w[1] >= w[0] - 1e-9, "{shares:?}");
+        }
+    }
+
+    #[test]
+    fn bytes_scale_linearly_with_batch() {
+        let (cm, wl4) = xl8(4);
+        let (_, wl8) = xl8(8);
+        let r = cm.a2a_bytes(&wl8) / cm.a2a_bytes(&wl4);
+        assert!((r - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn interweaved_buffer_is_half_displaced() {
+        let (cm, wl) = xl8(8);
+        let disp = cm.staleness_buffer_bytes(&wl, 2.0);
+        let intw = cm.staleness_buffer_bytes(&wl, 1.0);
+        assert!((disp / intw - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dfu_ooms_on_g_but_ep_fits() {
+        let g = model_preset("g").unwrap();
+        let hw = hardware_profile("rtx4090_pcie").unwrap();
+        // DistriFusion replicates the full model: > 24 GB => OOM.
+        assert!(g.param_bytes() > hw.mem_bytes);
+        // EP on 8 devices shards the experts: fits.
+        assert!(g.param_bytes_per_device_ep(8) < hw.mem_bytes);
+    }
+
+    #[test]
+    fn nvlink_kills_the_bottleneck() {
+        let cm = CostModel::new(
+            model_preset("xl").unwrap(),
+            hardware_profile("nvlink").unwrap(),
+        );
+        let wl = Workload {
+            local_batch: 8,
+            devices: 8,
+            tokens: cm.model.tokens(),
+        };
+        let c = cm.layer_costs(&wl);
+        let share = 2.0 * c.t_a2a / (2.0 * c.t_a2a + c.t_pre + c.t_expert + c.t_post);
+        assert!(share < 0.45, "nvlink a2a share {share}");
+    }
+}

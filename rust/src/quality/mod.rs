@@ -1,0 +1,282 @@
+//! Quality metric suite — the paper's Table 1 metrics with the trained
+//! substitute feature extractor (DESIGN.md §2):
+//!
+//! * **FID proxy**   — Fréchet distance on the trained feature net's
+//!   pooled (penultimate) features vs the reference-set moments.
+//! * **sFID proxy**  — same machinery on the spatial (first hidden
+//!   layer) features, mirroring sFID's use of spatial statistics.
+//! * **IS proxy**    — Inception Score with the trained classifier:
+//!   exp(E_x KL(p(y|x) || p(y))).
+//! * **Precision / Recall** — Kynkäänniemi k-NN manifold estimates in
+//!   pooled feature space against the stored real features.
+//!
+//! Feature extraction and classification run through the AOT artifacts
+//! (featnet_b64 / classifier_b64) — i.e. in the rust runtime, not python.
+
+use anyhow::{Context, Result};
+
+use crate::linalg;
+use crate::runtime::{Runtime, WeightBank};
+use crate::tensor::{ops, stf::StfFile, Tensor};
+
+/// The five reported metrics.
+#[derive(Debug, Clone, Copy)]
+pub struct QualityReport {
+    pub fid: f32,
+    pub sfid: f32,
+    pub is_score: f32,
+    pub precision: f32,
+    pub recall: f32,
+}
+
+impl QualityReport {
+    pub fn row(&self) -> Vec<String> {
+        vec![
+            format!("{:.2}", self.fid),
+            format!("{:.2}", self.sfid),
+            format!("{:.2}", self.is_score),
+            format!("{:.2}", self.precision),
+            format!("{:.2}", self.recall),
+        ]
+    }
+}
+
+fn batched_exec(
+    rt: &Runtime,
+    module: &str,
+    weights: &[xla::PjRtBuffer],
+    samples: &Tensor,
+    out_idx: usize,
+) -> Result<Tensor> {
+    let n = samples.shape()[0];
+    let img_elems: usize = samples.shape()[1..].iter().product();
+    let mb = 64usize;
+    let mut rows: Vec<f32> = Vec::new();
+    let mut width = 0usize;
+    let mut i = 0;
+    while i < n {
+        let take = (n - i).min(mb);
+        let mut chunk = Tensor::zeros(&[mb, 1, 8, 8]);
+        chunk.data_mut()[..take * img_elems]
+            .copy_from_slice(&samples.data()[i * img_elems..(i + take) * img_elems]);
+        let out = rt.execute(module, &[&chunk], &WeightBank::refs(weights))?;
+        let t = &out[out_idx];
+        width = t.rows().1;
+        rows.extend_from_slice(&t.data()[..take * width]);
+        i += take;
+    }
+    Ok(Tensor::from_vec(&[n, width], rows))
+}
+
+/// Feature extraction through the featnet artifact (batch bucket 64,
+/// last batch padded). Returns (pooled [N,64], spatial [N,128]).
+pub fn features(rt: &Runtime, bank: &WeightBank, samples: &Tensor) -> Result<(Tensor, Tensor)> {
+    let pooled = batched_exec(rt, "featnet_b64", &bank.featnet, samples, 0)?;
+    let spatial = batched_exec(rt, "featnet_b64", &bank.featnet, samples, 1)?;
+    Ok((pooled, spatial))
+}
+
+/// Classifier probabilities for IS (batch bucket 64).
+pub fn class_probs(rt: &Runtime, bank: &WeightBank, samples: &Tensor) -> Result<Tensor> {
+    let logits = batched_exec(rt, "classifier_b64", &bank.classifier, samples, 0)?;
+    let (n, c) = logits.rows();
+    let mut rows = Vec::with_capacity(n * c);
+    for i in 0..n {
+        let row = logits.row(i);
+        let m = row.iter().cloned().fold(f32::MIN, f32::max);
+        let exps: Vec<f32> = row.iter().map(|&v| (v - m).exp()).collect();
+        let s: f32 = exps.iter().sum();
+        rows.extend(exps.iter().map(|e| e / s));
+    }
+    Ok(Tensor::from_vec(&[n, c], rows))
+}
+
+/// Fréchet distance between sample features and stored reference
+/// moments (`{prefix}.mu` / `{prefix}.cov` in ref_stats.stf).
+pub fn frechet_vs_ref(feats: &Tensor, refs: &StfFile, prefix: &str) -> Result<f32> {
+    let mu_ref = refs.f32(&format!("{prefix}.mu"))?;
+    let cov_ref = refs.f32(&format!("{prefix}.cov"))?;
+    let mu = ops::mean_rows(feats);
+    let cov = ops::cov_rows(feats);
+    Ok(linalg::frechet_distance(&mu, &cov, mu_ref.data(), cov_ref))
+}
+
+/// Inception-Score proxy from class probabilities.
+pub fn inception_score(probs: &Tensor) -> f32 {
+    let (n, c) = probs.rows();
+    let mut marginal = vec![0.0f64; c];
+    for i in 0..n {
+        for (m, &p) in marginal.iter_mut().zip(probs.row(i)) {
+            *m += p as f64 / n as f64;
+        }
+    }
+    let mut kl_sum = 0.0f64;
+    for i in 0..n {
+        for (j, &p) in probs.row(i).iter().enumerate() {
+            if p > 1e-12 {
+                kl_sum += p as f64 * ((p as f64 / marginal[j].max(1e-12)).ln());
+            }
+        }
+    }
+    (kl_sum / n as f64).exp() as f32
+}
+
+/// Kynkäänniemi precision/recall with k-NN manifolds (k = 3).
+/// precision: fraction of generated samples inside the real manifold;
+/// recall: fraction of real samples inside the generated manifold.
+pub fn precision_recall(real: &Tensor, gen: &Tensor, k: usize) -> (f32, f32) {
+    fn l2(a: &[f32], b: &[f32]) -> f32 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y) * (x - y))
+            .sum::<f32>()
+            .sqrt()
+    }
+    fn knn_radii(set: &Tensor, k: usize) -> Vec<f32> {
+        let (n, _) = set.rows();
+        (0..n)
+            .map(|i| {
+                let mut d: Vec<f32> = (0..n)
+                    .filter(|&j| j != i)
+                    .map(|j| l2(set.row(i), set.row(j)))
+                    .collect();
+                d.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                d[k.min(d.len()) - 1]
+            })
+            .collect()
+    }
+    fn covered(points: &Tensor, manifold: &Tensor, radii: &[f32]) -> f32 {
+        let (np, _) = points.rows();
+        let (nm, _) = manifold.rows();
+        let hits = (0..np)
+            .filter(|&i| (0..nm).any(|j| l2(points.row(i), manifold.row(j)) <= radii[j]))
+            .count();
+        hits as f32 / np as f32
+    }
+    let r_real = knn_radii(real, k);
+    let r_gen = knn_radii(gen, k);
+    let precision = covered(gen, real, &r_real);
+    let recall = covered(real, gen, &r_gen);
+    (precision, recall)
+}
+
+/// Full Table-1 metric evaluation of a sample tensor.
+pub fn evaluate(
+    rt: &Runtime,
+    bank: &WeightBank,
+    samples: &Tensor,
+    refs: &StfFile,
+) -> Result<QualityReport> {
+    let (pooled, spatial) = features(rt, bank, samples)?;
+    let fid = frechet_vs_ref(&pooled, refs, "pooled")?;
+    let sfid = frechet_vs_ref(&spatial, refs, "spatial")?;
+    let probs = class_probs(rt, bank, samples)?;
+    let is_score = inception_score(&probs);
+    let real = refs.f32("real.pooled").context("real.pooled")?;
+    // cap the real set for the O(n^2) k-NN step
+    let cap = 512.min(real.shape()[0]);
+    let real_cap = Tensor::from_vec(
+        &[cap, real.rows().1],
+        real.data()[..cap * real.rows().1].to_vec(),
+    );
+    let (precision, recall) = precision_recall(&real_cap, &pooled, 3);
+    Ok(QualityReport {
+        fid,
+        sfid,
+        is_score,
+        precision,
+        recall,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn inception_score_bounds() {
+        // uniform predictions => IS = 1
+        let probs = Tensor::full(&[8, 4], 0.25);
+        assert!((inception_score(&probs) - 1.0).abs() < 1e-5);
+        // confident + diverse => IS = n_classes
+        let mut conf = Tensor::zeros(&[8, 4]);
+        for i in 0..8 {
+            conf.row_mut(i)[i % 4] = 1.0;
+        }
+        assert!((inception_score(&conf) - 4.0).abs() < 1e-3);
+        // confident but mode-collapsed => IS = 1
+        let mut coll = Tensor::zeros(&[8, 4]);
+        for i in 0..8 {
+            coll.row_mut(i)[0] = 1.0;
+        }
+        assert!((inception_score(&coll) - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn precision_recall_identical_sets() {
+        let mut rng = Rng::new(3);
+        let mut t = Tensor::zeros(&[32, 4]);
+        rng.fill_normal(t.data_mut());
+        let (p, r) = precision_recall(&t, &t, 3);
+        assert_eq!(p, 1.0);
+        assert_eq!(r, 1.0);
+    }
+
+    #[test]
+    fn precision_detects_off_manifold() {
+        let mut rng = Rng::new(5);
+        let mut real = Tensor::zeros(&[64, 4]);
+        rng.fill_normal(real.data_mut());
+        // generated far away => precision ~ 0; recall ~ 0
+        let far = Tensor::full(&[64, 4], 50.0);
+        let (p, r) = precision_recall(&real, &far, 3);
+        assert_eq!(p, 0.0);
+        assert_eq!(r, 0.0);
+    }
+
+    #[test]
+    fn frechet_of_matching_gaussian_is_small() {
+        // generate features ~ N(0, I); compare to stored N(0, I) moments
+        let mut rng = Rng::new(11);
+        let n = 4000;
+        let d = 6;
+        let mut f = Tensor::zeros(&[n, d]);
+        rng.fill_normal(f.data_mut());
+        let mut refs = StfFile::default();
+        refs.f32s.insert("pooled.mu".into(), Tensor::zeros(&[d]));
+        let mut eye = Tensor::zeros(&[d, d]);
+        for i in 0..d {
+            eye.set(&[i, i], 1.0);
+        }
+        refs.f32s.insert("pooled.cov".into(), eye);
+        let fid = frechet_vs_ref(&f, &refs, "pooled").unwrap();
+        assert!(fid < 0.05, "{fid}");
+    }
+
+    #[test]
+    fn frechet_orders_by_perturbation() {
+        // the property DICE's evaluation relies on: larger perturbation
+        // of the same samples => larger Fréchet distance.
+        let mut rng = Rng::new(13);
+        let n = 2000;
+        let d = 5;
+        let mut base = Tensor::zeros(&[n, d]);
+        rng.fill_normal(base.data_mut());
+        let mut refs = StfFile::default();
+        refs.f32s
+            .insert("pooled.mu".into(), Tensor::from_vec(&[d], ops::mean_rows(&base)));
+        refs.f32s.insert("pooled.cov".into(), ops::cov_rows(&base));
+        let mut prev = -1.0f32;
+        for noise in [0.0f32, 0.3, 0.8] {
+            let mut pert = base.clone();
+            let mut r2 = Rng::new(99);
+            for v in pert.data_mut() {
+                *v += noise * r2.normal_f32();
+            }
+            let fid = frechet_vs_ref(&pert, &refs, "pooled").unwrap();
+            assert!(fid > prev, "noise {noise}: {fid} <= {prev}");
+            prev = fid;
+        }
+    }
+}

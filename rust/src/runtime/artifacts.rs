@@ -1,0 +1,172 @@
+//! Weight staging: mirrors the argument orders fixed by
+//! `python/compile/aot.py` and pre-uploads every layer's weight slice as
+//! PJRT device buffers so the hot loop never re-uploads parameters.
+//!
+//! Argument orders (after the activation args):
+//!   embed      : patch.w, patch.b, pos
+//!   cond       : t1.w, t1.b, t2.w, t2.b, ytable
+//!   block_pre  : adaln.w, adaln.b, qkv.w, qkv.b, proj.w, proj.b, router.w
+//!   block_post : shared.0.fc1.w, shared.0.fc1.b, shared.0.fc2.w, shared.0.fc2.b
+//!   final      : final.adaln.w, final.adaln.b, final.out.w, final.out.b
+//!   moe_dense  : stacked w1[E,D,F], b1[E,F], w2[E,F,D], b2[E,D]
+//!   dfu_block  : block_pre order + stacked + block_post order
+//!   expert_tile: experts.{e}.fc1.w, fc1.b, fc2.w, fc2.b
+//!   featnet    : cls.fc1.w, fc1.b, fc2.w, fc2.b
+//!   classifier : featnet order + cls.out.w, out.b
+
+use anyhow::Result;
+
+use super::Runtime;
+use crate::tensor::{stf::StfFile, Tensor};
+
+/// Device-resident weights, grouped per call site.
+pub struct WeightBank {
+    pub embed: Vec<xla::PjRtBuffer>,
+    pub cond: Vec<xla::PjRtBuffer>,
+    /// per layer: block_pre weight args
+    pub block_pre: Vec<Vec<xla::PjRtBuffer>>,
+    /// per layer: block_post weight args
+    pub block_post: Vec<Vec<xla::PjRtBuffer>>,
+    pub final_: Vec<xla::PjRtBuffer>,
+    /// per layer: stacked expert weights (moe_dense / dfu)
+    pub stacked: Vec<Vec<xla::PjRtBuffer>>,
+    /// per layer, per expert: expert_tile weight args
+    pub experts: Vec<Vec<Vec<xla::PjRtBuffer>>>,
+    pub featnet: Vec<xla::PjRtBuffer>,
+    pub classifier: Vec<xla::PjRtBuffer>,
+    /// Host copies of router probs scalers etc. kept for byte accounting.
+    pub param_bytes: usize,
+}
+
+fn up(rt: &Runtime, w: &StfFile, name: &str, bytes: &mut usize) -> Result<xla::PjRtBuffer> {
+    let t = w.f32(name)?;
+    *bytes += t.byte_size();
+    rt.upload(t)
+}
+
+/// Stack per-expert tensors [E copies of shape] -> [E, ...shape].
+fn stack(rt: &Runtime, w: &StfFile, layer: usize, field: &str, n_experts: usize, bytes: &mut usize) -> Result<xla::PjRtBuffer> {
+    let first = w.f32(&format!("blocks.{layer}.experts.0.{field}"))?;
+    let mut shape = vec![n_experts];
+    shape.extend_from_slice(first.shape());
+    let mut data = Vec::with_capacity(first.len() * n_experts);
+    for e in 0..n_experts {
+        data.extend_from_slice(w.f32(&format!("blocks.{layer}.experts.{e}.{field}"))?.data());
+    }
+    let t = Tensor::from_vec(&shape, data);
+    *bytes += t.byte_size();
+    rt.upload(&t)
+}
+
+impl WeightBank {
+    pub fn stage(rt: &Runtime, w: &StfFile) -> Result<WeightBank> {
+        let m = &rt.model;
+        let mut bytes = 0usize;
+        let u = |n: &str, b: &mut usize| up(rt, w, n, b);
+
+        let embed = ["embed.patch.w", "embed.patch.b", "embed.pos"]
+            .iter()
+            .map(|n| u(n, &mut bytes))
+            .collect::<Result<Vec<_>>>()?;
+        let cond = ["cond.t1.w", "cond.t1.b", "cond.t2.w", "cond.t2.b", "cond.ytable"]
+            .iter()
+            .map(|n| u(n, &mut bytes))
+            .collect::<Result<Vec<_>>>()?;
+        let final_ = ["final.adaln.w", "final.adaln.b", "final.out.w", "final.out.b"]
+            .iter()
+            .map(|n| u(n, &mut bytes))
+            .collect::<Result<Vec<_>>>()?;
+        let featnet = ["cls.fc1.w", "cls.fc1.b", "cls.fc2.w", "cls.fc2.b"]
+            .iter()
+            .map(|n| u(n, &mut bytes))
+            .collect::<Result<Vec<_>>>()?;
+        let mut classifier = ["cls.fc1.w", "cls.fc1.b", "cls.fc2.w", "cls.fc2.b", "cls.out.w", "cls.out.b"]
+            .iter()
+            .map(|n| u(n, &mut bytes))
+            .collect::<Result<Vec<_>>>()?;
+        // classifier re-uploads the featnet weights; that's fine (tiny).
+        let _ = &mut classifier;
+
+        let mut block_pre = Vec::with_capacity(m.n_layers);
+        let mut block_post = Vec::with_capacity(m.n_layers);
+        let mut stacked = Vec::with_capacity(m.n_layers);
+        let mut experts = Vec::with_capacity(m.n_layers);
+        for l in 0..m.n_layers {
+            let pre = ["adaln.w", "adaln.b", "qkv.w", "qkv.b", "proj.w", "proj.b", "router.w"]
+                .iter()
+                .map(|f| up(rt, w, &format!("blocks.{l}.{f}"), &mut bytes))
+                .collect::<Result<Vec<_>>>()?;
+            block_pre.push(pre);
+            let post = ["shared.0.fc1.w", "shared.0.fc1.b", "shared.0.fc2.w", "shared.0.fc2.b"]
+                .iter()
+                .map(|f| up(rt, w, &format!("blocks.{l}.{f}"), &mut bytes))
+                .collect::<Result<Vec<_>>>()?;
+            block_post.push(post);
+            let st = ["fc1.w", "fc1.b", "fc2.w", "fc2.b"]
+                .iter()
+                .map(|f| stack(rt, w, l, f, m.n_experts, &mut bytes))
+                .collect::<Result<Vec<_>>>()?;
+            stacked.push(st);
+            let mut per_e = Vec::with_capacity(m.n_experts);
+            for e in 0..m.n_experts {
+                let ws = ["fc1.w", "fc1.b", "fc2.w", "fc2.b"]
+                    .iter()
+                    .map(|f| up(rt, w, &format!("blocks.{l}.experts.{e}.{f}"), &mut bytes))
+                    .collect::<Result<Vec<_>>>()?;
+                per_e.push(ws);
+            }
+            experts.push(per_e);
+        }
+
+        Ok(WeightBank {
+            embed,
+            cond,
+            block_pre,
+            block_post,
+            final_,
+            stacked,
+            experts,
+            featnet,
+            classifier,
+            param_bytes: bytes,
+        })
+    }
+
+    /// Borrow a weight group as the `staged` argument slice.
+    pub fn refs(group: &[xla::PjRtBuffer]) -> Vec<&xla::PjRtBuffer> {
+        group.iter().collect()
+    }
+
+    /// dfu_block staged args: pre + stacked + post for a layer.
+    pub fn dfu_refs(&self, layer: usize) -> Vec<&xla::PjRtBuffer> {
+        let mut v: Vec<&xla::PjRtBuffer> = self.block_pre[layer].iter().collect();
+        v.extend(self.stacked[layer].iter());
+        v.extend(self.block_post[layer].iter());
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    #[test]
+    fn stage_all_weights() {
+        let dir = Path::new("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let rt = Runtime::open(dir).unwrap();
+        let w = rt.load_weights().unwrap();
+        let bank = WeightBank::stage(&rt, &w).unwrap();
+        assert_eq!(bank.block_pre.len(), rt.model.n_layers);
+        assert_eq!(bank.experts[0].len(), rt.model.n_experts);
+        assert_eq!(bank.block_pre[0].len(), 7);
+        assert_eq!(bank.block_post[0].len(), 4);
+        assert_eq!(bank.stacked[0].len(), 4);
+        assert_eq!(bank.dfu_refs(0).len(), 15);
+        // ~1.2M params * 4B, plus the stacked duplicates
+        assert!(bank.param_bytes > 4_000_000, "{}", bank.param_bytes);
+    }
+}

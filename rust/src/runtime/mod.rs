@@ -1,0 +1,251 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! once at build time by `python/compile/aot.py`) and executes them from
+//! the coordinator's hot path. Python never runs here.
+//!
+//! * [`Runtime`] — PJRT CPU client + manifest + compile cache. HLO *text*
+//!   is the interchange format (xla_extension 0.5.1 rejects jax's 64-bit
+//!   proto ids; the text parser reassigns them).
+//! * [`WeightBank`] — per-layer weight argument lists pre-staged as
+//!   device buffers (uploaded once, reused every step).
+//!
+//! All stage modules were lowered with `return_tuple=True`, so every
+//! execution returns one tuple literal which we decompose.
+
+pub mod artifacts;
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Json, ModelConfig};
+use crate::tensor::{stf::StfFile, Tensor};
+
+pub use artifacts::WeightBank;
+
+/// Loaded artifact store + execution cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Json,
+    pub model: ModelConfig,
+    /// module name -> compiled executable (compiled lazily, cached).
+    exes: RefCell<BTreeMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    /// cumulative count of PJRT executions (perf accounting).
+    pub exec_count: RefCell<u64>,
+}
+
+impl Runtime {
+    /// Open an artifact directory (reads `manifest.json`).
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt: {e}"))?;
+        let mtext = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("read {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let manifest = Json::parse(&mtext).context("parse manifest.json")?;
+        let model = ModelConfig::from_manifest(&manifest)?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            model,
+            exes: RefCell::new(BTreeMap::new()),
+            exec_count: RefCell::new(0),
+        })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Batch buckets the EP-mode modules were exported at.
+    pub fn batch_buckets(&self) -> Vec<usize> {
+        self.manifest
+            .get("ep_batch_buckets")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(Json::as_usize).collect())
+            .unwrap_or_else(|| vec![1, 2, 4, 8, 32])
+    }
+
+    /// Smallest exported bucket that fits `n` (serving shape buckets).
+    pub fn bucket_for(&self, n: usize) -> Result<usize> {
+        self.batch_buckets()
+            .into_iter()
+            .filter(|&b| b >= n)
+            .min()
+            .with_context(|| format!("no batch bucket fits {n}"))
+    }
+
+    /// Compile (or fetch the cached) executable for a module.
+    pub fn executable(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            bail!("artifact {} not found", path.display());
+        }
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e}"))?;
+        let rc = std::rc::Rc::new(exe);
+        self.exes.borrow_mut().insert(name.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Pre-compile a list of modules (serving cold-start avoidance).
+    pub fn warm(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Upload a host tensor to the device.
+    pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(t.data(), t.shape(), None)
+            .map_err(|e| anyhow::anyhow!("upload: {e}"))
+    }
+
+    /// Execute a module on mixed host-tensor + pre-staged buffer args.
+    /// `args` are uploaded fresh; `staged` (e.g. weights) follow them.
+    pub fn execute(
+        &self,
+        name: &str,
+        args: &[&Tensor],
+        staged: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<Tensor>> {
+        let exe = self.executable(name)?;
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        for t in args {
+            bufs.push(self.upload(t)?);
+        }
+        let mut all: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len() + staged.len());
+        all.extend(bufs.iter());
+        all.extend(staged.iter().copied());
+        let out = exe
+            .execute_b(&all)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e}"))?;
+        *self.exec_count.borrow_mut() += 1;
+        // return_tuple=True => single tuple output
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch {name}: {e}"))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {name}: {e}"))?;
+        parts.into_iter().map(|l| literal_to_tensor(&l)).collect()
+    }
+
+    /// Load the trained weights file.
+    pub fn load_weights(&self) -> Result<StfFile> {
+        StfFile::load(&self.dir.join("weights.stf"))
+    }
+
+    /// Load the metric reference statistics.
+    pub fn load_ref_stats(&self) -> Result<StfFile> {
+        StfFile::load(&self.dir.join("ref_stats.stf"))
+    }
+
+    /// Load the python-oracle golden vectors.
+    pub fn load_golden(&self) -> Result<StfFile> {
+        StfFile::load(&self.dir.join("golden.stf"))
+    }
+}
+
+/// Convert an f32 literal (any rank) to a host [`Tensor`].
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow::anyhow!("literal shape: {e}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data: Vec<f32> = lit
+        .to_vec()
+        .map_err(|e| anyhow::anyhow!("literal data: {e}"))?;
+    Ok(Tensor::from_vec(&dims, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<Runtime> {
+        let dir = Path::new("artifacts");
+        if dir.join("manifest.json").exists() {
+            Some(Runtime::open(dir).unwrap())
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn open_and_manifest() {
+        let Some(rt) = artifacts() else { return };
+        assert_eq!(rt.model.d_model, 64);
+        assert_eq!(rt.model.n_experts, 8);
+        assert_eq!(rt.bucket_for(3).unwrap(), 4);
+        assert_eq!(rt.bucket_for(8).unwrap(), 8);
+        assert!(rt.bucket_for(64).is_err());
+    }
+
+    #[test]
+    fn expert_tile_executes_zero_weights() {
+        let Some(rt) = artifacts() else { return };
+        // zero weights => GELU(0)@W2 + 0 = 0 output
+        let x = Tensor::full(&[64, 64], 0.5);
+        let w1 = Tensor::zeros(&[64, 128]);
+        let b1 = Tensor::zeros(&[128]);
+        let w2 = Tensor::zeros(&[128, 64]);
+        let b2 = Tensor::zeros(&[64]);
+        let out = rt
+            .execute("expert_tile", &[&x, &w1, &b1, &w2, &b2], &[])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape(), &[64, 64]);
+        assert!(out[0].data().iter().all(|&v| v.abs() < 1e-6));
+    }
+
+    #[test]
+    fn expert_tile_bias_path() {
+        let Some(rt) = artifacts() else { return };
+        // W1=0, W2=0, b2=c => out=c regardless of x
+        let x = Tensor::zeros(&[64, 64]);
+        let w1 = Tensor::zeros(&[64, 128]);
+        let b1 = Tensor::full(&[128], 1.0);
+        let w2 = Tensor::zeros(&[128, 64]);
+        let b2 = Tensor::full(&[64], 2.5);
+        let out = rt
+            .execute("expert_tile", &[&x, &w1, &b1, &w2, &b2], &[])
+            .unwrap();
+        assert!(out[0].data().iter().all(|&v| (v - 2.5).abs() < 1e-5));
+    }
+
+    #[test]
+    fn exec_count_increments() {
+        let Some(rt) = artifacts() else { return };
+        let before = *rt.exec_count.borrow();
+        let x = Tensor::zeros(&[64, 64]);
+        let w1 = Tensor::zeros(&[64, 128]);
+        let b1 = Tensor::zeros(&[128]);
+        let w2 = Tensor::zeros(&[128, 64]);
+        let b2 = Tensor::zeros(&[64]);
+        rt.execute("expert_tile", &[&x, &w1, &b1, &w2, &b2], &[])
+            .unwrap();
+        assert_eq!(*rt.exec_count.borrow(), before + 1);
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let Some(rt) = artifacts() else { return };
+        assert!(rt.executable("no_such_module").is_err());
+    }
+}

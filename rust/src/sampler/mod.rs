@@ -1,0 +1,114 @@
+//! Sampling jobs: drive the engine over many generation runs (the
+//! rectified-flow Euler loop itself lives in `coordinator::engine`) and
+//! merge the per-run statistics — the quality experiments generate
+//! hundreds of samples in engine-sized chunks.
+
+use anyhow::Result;
+
+use crate::coordinator::{Engine, RunStats};
+use crate::rng::Rng;
+use crate::tensor::{ops, Tensor};
+
+/// Aggregated outcome of a multi-run sampling job.
+#[derive(Debug)]
+pub struct JobResult {
+    /// [N, C, S, S] samples across all runs.
+    pub samples: Tensor,
+    /// labels aligned with samples.
+    pub labels: Vec<usize>,
+    pub fresh_bytes: usize,
+    pub saved_bytes: usize,
+    pub peak_buffer_bytes: usize,
+    pub dfu_buffer_bytes: usize,
+    pub mean_staleness: f64,
+    pub max_staleness: usize,
+    pub exec_calls: u64,
+    pub fresh_fraction: f64,
+    /// per-layer mean staleness (probe for Sec. 4.2).
+    pub per_layer_staleness: Vec<f64>,
+    /// per-expert assignment loads summed over all runs.
+    pub expert_loads: Vec<usize>,
+}
+
+/// Generate `n_samples` with balanced class labels in chunks of
+/// `global_batch`, seeds derived from `seed`.
+pub fn sample_many(
+    engine: &Engine,
+    n_samples: usize,
+    global_batch: usize,
+    steps: usize,
+    seed: u64,
+) -> Result<JobResult> {
+    assert!(n_samples % global_batch == 0, "n_samples must be a multiple of the batch");
+    let n_classes = engine.rt.model.n_classes;
+    let n_layers = engine.rt.model.n_layers;
+    let mut rng = Rng::new(seed);
+    let mut chunks = Vec::new();
+    let mut labels = Vec::with_capacity(n_samples);
+    let mut fresh_bytes = 0usize;
+    let mut saved_bytes = 0usize;
+    let mut peak_buf = 0usize;
+    let mut dfu_buf = 0usize;
+    let mut exec_calls = 0u64;
+    let mut stale_sum = 0.0f64;
+    let mut stale_n = 0usize;
+    let mut max_stale = 0usize;
+    let mut fresh_entries = 0usize;
+    let mut total_entries = 0usize;
+    let mut per_layer = vec![0.0f64; n_layers];
+    let mut per_layer_n = 0usize;
+    let mut expert_loads = vec![0usize; engine.rt.model.n_experts];
+
+    let runs = n_samples / global_batch;
+    for run in 0..runs {
+        // balanced labels, shuffled per run
+        let mut batch_labels: Vec<usize> =
+            (0..global_batch).map(|i| i % n_classes).collect();
+        rng.shuffle(&mut batch_labels);
+        let run_seed = seed ^ ((run as u64 + 1) * 0x9E37_79B9);
+        let (x, stats): (Tensor, RunStats) =
+            engine.generate(&batch_labels, steps, run_seed, None)?;
+        labels.extend_from_slice(&batch_labels);
+        chunks.push(x);
+        fresh_bytes += stats.fresh_bytes;
+        saved_bytes += stats.saved_bytes;
+        peak_buf = peak_buf.max(stats.peak_buffer_bytes);
+        dfu_buf = dfu_buf.max(stats.dfu_buffer_bytes);
+        exec_calls += stats.exec_calls;
+        let warm = engine.cfg.opts.warmup_sync_steps;
+        stale_sum += stats.staleness.mean_age(warm)
+            * stats.staleness.records.len() as f64;
+        stale_n += stats.staleness.records.len();
+        max_stale = max_stale.max(stats.staleness.max_age(warm));
+        fresh_entries += stats.comm.fresh_entries;
+        total_entries += stats.comm.fresh_entries + stats.comm.reused_entries;
+        for (acc, v) in per_layer.iter_mut().zip(stats.staleness.per_layer_mean(n_layers, warm)) {
+            *acc += v;
+        }
+        per_layer_n += 1;
+        for (acc, v) in expert_loads.iter_mut().zip(&stats.expert_loads) {
+            *acc += v;
+        }
+    }
+    for v in per_layer.iter_mut() {
+        *v /= per_layer_n.max(1) as f64;
+    }
+    Ok(JobResult {
+        samples: ops::concat_batch(&chunks),
+        labels,
+        fresh_bytes,
+        saved_bytes,
+        peak_buffer_bytes: peak_buf,
+        dfu_buffer_bytes: dfu_buf,
+        mean_staleness: if stale_n == 0 { 0.0 } else { stale_sum / stale_n as f64 },
+        max_staleness: max_stale,
+        exec_calls,
+        fresh_fraction: if total_entries == 0 {
+            1.0
+        } else {
+            fresh_entries as f64 / total_entries as f64
+        },
+        per_layer_staleness: per_layer,
+        expert_loads,
+    })
+}

@@ -1,0 +1,213 @@
+//! Host tensor substrate: a minimal row-major f32/i32 tensor, the `.stf`
+//! weight-file reader (format defined in `python/compile/stf.py`), and the
+//! gather/scatter/slice ops the coordinator's dispatch path needs.
+
+pub mod ops;
+pub mod stf;
+
+use anyhow::{bail, Result};
+
+/// Row-major f32 host tensor. All activations crossing the coordinator
+/// (dispatch plans, stale buffers, metric features) use this type; device
+/// tensors live as `xla::Literal`/`PjRtBuffer` inside `runtime`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} vs len {}",
+            shape,
+            data.len()
+        );
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![v; n],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+    /// Bytes occupied by the payload (buffer/memory accounting).
+    pub fn byte_size(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// Reshape (same element count).
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "reshape {:?} -> {:?}",
+            self.shape,
+            shape
+        );
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Flat index of a multi-index.
+    pub fn index(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut flat = 0;
+        for (i, &d) in idx.iter().enumerate() {
+            debug_assert!(d < self.shape[i], "idx {:?} shape {:?}", idx, self.shape);
+            flat = flat * self.shape[i] + d;
+        }
+        flat
+    }
+
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.index(idx)]
+    }
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let i = self.index(idx);
+        self.data[i] = v;
+    }
+
+    /// View the last axis as rows: returns (n_rows, row_len).
+    pub fn rows(&self) -> (usize, usize) {
+        let row = *self.shape.last().expect("rank >= 1");
+        (self.data.len() / row, row)
+    }
+
+    /// Row i of the flattened [N, row] view.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let (_, r) = self.rows();
+        &self.data[i * r..(i + 1) * r]
+    }
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let (_, r) = self.rows();
+        &mut self.data[i * r..(i + 1) * r]
+    }
+
+    /// Elementwise in-place add.
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    /// Max |a - b| over all elements.
+    pub fn max_abs_diff(&self, other: &Tensor) -> Result<f32> {
+        if self.shape != other.shape {
+            bail!("shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        Ok(self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max))
+    }
+
+    /// Relative L2 error ||a-b|| / (||b|| + eps).
+    pub fn rel_l2(&self, other: &Tensor) -> Result<f32> {
+        if self.shape != other.shape {
+            bail!("shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (a, b) in self.data.iter().zip(&other.data) {
+            num += ((a - b) * (a - b)) as f64;
+            den += (b * b) as f64;
+        }
+        Ok((num.sqrt() / (den.sqrt() + 1e-12)) as f32)
+    }
+}
+
+/// Integer tensor (labels, routing indices).
+#[derive(Clone, Debug, PartialEq)]
+pub struct IntTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_row_major() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).map(|x| x as f32).collect());
+        assert_eq!(t.at(&[0, 0]), 0.0);
+        assert_eq!(t.at(&[0, 2]), 2.0);
+        assert_eq!(t.at(&[1, 0]), 3.0);
+        assert_eq!(t.at(&[1, 2]), 5.0);
+    }
+
+    #[test]
+    fn rows_view() {
+        let t = Tensor::from_vec(&[2, 2, 3], (0..12).map(|x| x as f32).collect());
+        let (n, r) = t.rows();
+        assert_eq!((n, r), (4, 3));
+        assert_eq!(t.row(2), &[6.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn reshape_and_bytes() {
+        let t = Tensor::zeros(&[4, 4]).reshape(&[2, 8]);
+        assert_eq!(t.shape(), &[2, 8]);
+        assert_eq!(t.byte_size(), 64);
+    }
+
+    #[test]
+    #[should_panic]
+    fn reshape_bad_count_panics() {
+        let _ = Tensor::zeros(&[4]).reshape(&[5]);
+    }
+
+    #[test]
+    fn diff_metrics() {
+        let a = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        let mut b = a.clone();
+        b.data_mut()[1] = 2.5;
+        assert!((a.max_abs_diff(&b).unwrap() - 0.5).abs() < 1e-6);
+        assert!(a.rel_l2(&a).unwrap() < 1e-9);
+        assert!(a.max_abs_diff(&Tensor::zeros(&[2])).is_err());
+    }
+}

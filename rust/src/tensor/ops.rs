@@ -1,0 +1,205 @@
+//! Host-side tensor ops used on the coordinator's dispatch path:
+//! token gather/scatter (the all-to-all payload assembly), shard
+//! split/concat (sequence parallelism), softmax/top-k helpers, and the
+//! small statistics used by the quality metrics.
+
+use super::Tensor;
+
+/// Gather rows `idx` from a [N, D] tensor into a new [idx.len(), D].
+pub fn gather_rows(t: &Tensor, idx: &[usize]) -> Tensor {
+    let (_, d) = t.rows();
+    let mut out = Tensor::zeros(&[idx.len(), d]);
+    for (o, &i) in idx.iter().enumerate() {
+        out.row_mut(o).copy_from_slice(t.row(i));
+    }
+    out
+}
+
+/// Scatter-add rows of `src` into `dst` at `idx`, scaling row r by `w[r]`.
+/// This is the combine-side "scale by router score and accumulate"
+/// (y_i = Σ_e s_i^e · h_i^e).
+pub fn scatter_add_rows(dst: &mut Tensor, src: &Tensor, idx: &[usize], w: &[f32]) {
+    let (_, d) = dst.rows();
+    debug_assert_eq!(src.rows().1, d);
+    debug_assert_eq!(src.rows().0, idx.len());
+    debug_assert_eq!(idx.len(), w.len());
+    for (r, &i) in idx.iter().enumerate() {
+        let s = w[r];
+        let dst_row = dst.row_mut(i);
+        for (a, b) in dst_row.iter_mut().zip(src.row(r)) {
+            *a += s * b;
+        }
+    }
+}
+
+/// Split a [B, T, D] tensor into `n` contiguous token shards
+/// [B, T/n, D] (sequence parallelism).
+pub fn split_tokens(t: &Tensor, n: usize) -> Vec<Tensor> {
+    let (b, tt, d) = (t.shape()[0], t.shape()[1], t.shape()[2]);
+    assert_eq!(tt % n, 0, "tokens {tt} not divisible by {n}");
+    let ts = tt / n;
+    let mut out = vec![Tensor::zeros(&[b, ts, d]); n];
+    for bi in 0..b {
+        for s in 0..n {
+            for ti in 0..ts {
+                let src = &t.data()[(bi * tt + s * ts + ti) * d..][..d];
+                out[s].data_mut()[(bi * ts + ti) * d..][..d].copy_from_slice(src);
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of [`split_tokens`].
+pub fn concat_tokens(shards: &[Tensor]) -> Tensor {
+    let n = shards.len();
+    let (b, ts, d) = (
+        shards[0].shape()[0],
+        shards[0].shape()[1],
+        shards[0].shape()[2],
+    );
+    let mut out = Tensor::zeros(&[b, ts * n, d]);
+    for (s, sh) in shards.iter().enumerate() {
+        assert_eq!(sh.shape(), &[b, ts, d]);
+        for bi in 0..b {
+            for ti in 0..ts {
+                let dst = &mut out.data_mut()[(bi * ts * n + s * ts + ti) * d..][..d];
+                dst.copy_from_slice(&sh.data()[(bi * ts + ti) * d..][..d]);
+            }
+        }
+    }
+    out
+}
+
+/// Split a [B, ...] tensor along axis 0 into `n` equal batch shards.
+pub fn split_batch(t: &Tensor, n: usize) -> Vec<Tensor> {
+    let b = t.shape()[0];
+    assert_eq!(b % n, 0, "batch {b} not divisible by {n}");
+    let per = b / n;
+    let chunk = t.len() / n;
+    let mut shape = t.shape().to_vec();
+    shape[0] = per;
+    (0..n)
+        .map(|i| Tensor::from_vec(&shape, t.data()[i * chunk..(i + 1) * chunk].to_vec()))
+        .collect()
+}
+
+/// Inverse of [`split_batch`] (shards may have different batch sizes;
+/// trailing dims must match).
+pub fn concat_batch(shards: &[Tensor]) -> Tensor {
+    let mut shape = shards[0].shape().to_vec();
+    shape[0] = shards.iter().map(|s| s.shape()[0]).sum();
+    let mut data = Vec::with_capacity(shards.iter().map(Tensor::len).sum());
+    for s in shards {
+        assert_eq!(&s.shape()[1..], &shards[0].shape()[1..]);
+        data.extend_from_slice(s.data());
+    }
+    Tensor::from_vec(&shape, data)
+}
+
+/// Indices of the k largest values (descending), stable on ties.
+pub fn topk_idx(row: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..row.len()).collect();
+    idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap().then(a.cmp(&b)));
+    idx.truncate(k);
+    idx
+}
+
+/// Mean over axis 0 of a [N, D] view.
+pub fn mean_rows(t: &Tensor) -> Vec<f32> {
+    let (n, d) = t.rows();
+    let mut mu = vec![0.0f32; d];
+    for i in 0..n {
+        for (m, v) in mu.iter_mut().zip(t.row(i)) {
+            *m += v;
+        }
+    }
+    for m in mu.iter_mut() {
+        *m /= n as f32;
+    }
+    mu
+}
+
+/// Covariance (unbiased) of a [N, D] view.
+pub fn cov_rows(t: &Tensor) -> Tensor {
+    let (n, d) = t.rows();
+    let mu = mean_rows(t);
+    let mut c = Tensor::zeros(&[d, d]);
+    for i in 0..n {
+        let r = t.row(i);
+        for a in 0..d {
+            let da = r[a] - mu[a];
+            let row = &mut c.data_mut()[a * d..(a + 1) * d];
+            for b in 0..d {
+                row[b] += da * (r[b] - mu[b]);
+            }
+        }
+    }
+    c.scale(1.0 / (n as f32 - 1.0));
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(shape, (0..n).map(|x| x as f32).collect())
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let t = seq(&[4, 3]);
+        let g = gather_rows(&t, &[2, 0]);
+        assert_eq!(g.row(0), t.row(2));
+        assert_eq!(g.row(1), t.row(0));
+        let mut dst = Tensor::zeros(&[4, 3]);
+        scatter_add_rows(&mut dst, &g, &[2, 0], &[1.0, 1.0]);
+        assert_eq!(dst.row(2), t.row(2));
+        assert_eq!(dst.row(0), t.row(0));
+        assert_eq!(dst.row(1), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn scatter_scales_by_router_score() {
+        let src = seq(&[1, 2]);
+        let mut dst = Tensor::zeros(&[2, 2]);
+        scatter_add_rows(&mut dst, &src, &[1], &[0.5]);
+        assert_eq!(dst.row(1), &[0.0, 0.5]);
+    }
+
+    #[test]
+    fn token_split_concat_roundtrip() {
+        let t = seq(&[2, 8, 3]);
+        let shards = split_tokens(&t, 4);
+        assert_eq!(shards.len(), 4);
+        assert_eq!(shards[0].shape(), &[2, 2, 3]);
+        let back = concat_tokens(&shards);
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn batch_split_concat_roundtrip() {
+        let t = seq(&[4, 2, 3]);
+        let shards = split_batch(&t, 2);
+        assert_eq!(shards[0].shape(), &[2, 2, 3]);
+        assert_eq!(concat_batch(&shards), t);
+    }
+
+    #[test]
+    fn topk_orders_desc_with_stable_ties() {
+        assert_eq!(topk_idx(&[0.1, 0.9, 0.5, 0.9], 3), vec![1, 3, 2]);
+        assert_eq!(topk_idx(&[1.0], 1), vec![0]);
+    }
+
+    #[test]
+    fn moments() {
+        let t = Tensor::from_vec(&[3, 2], vec![1.0, 10.0, 2.0, 20.0, 3.0, 30.0]);
+        assert_eq!(mean_rows(&t), vec![2.0, 20.0]);
+        let c = cov_rows(&t);
+        assert!((c.at(&[0, 0]) - 1.0).abs() < 1e-6);
+        assert!((c.at(&[1, 1]) - 100.0).abs() < 1e-6);
+        assert!((c.at(&[0, 1]) - 10.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,190 @@
+//! Reader for the STF tensor-file format written by `python/compile/stf.py`.
+//!
+//! Layout (little-endian):
+//!   magic "STF1" | u32 count | per tensor:
+//!   u16 nlen | name | u8 dtype (0=f32, 1=i32) | u8 ndim | u32 dims[] | data
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{IntTensor, Tensor};
+
+/// All tensors from one STF file.
+#[derive(Debug, Default)]
+pub struct StfFile {
+    pub f32s: BTreeMap<String, Tensor>,
+    pub i32s: BTreeMap<String, IntTensor>,
+}
+
+impl StfFile {
+    pub fn load(path: &Path) -> Result<StfFile> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        Self::parse(&buf).with_context(|| format!("parse {}", path.display()))
+    }
+
+    pub fn parse(b: &[u8]) -> Result<StfFile> {
+        let mut r = Cursor { b, i: 0 };
+        if r.take(4)? != b"STF1" {
+            bail!("bad magic");
+        }
+        let count = r.u32()? as usize;
+        let mut out = StfFile::default();
+        for _ in 0..count {
+            let nlen = r.u16()? as usize;
+            let name = String::from_utf8(r.take(nlen)?.to_vec()).context("name utf8")?;
+            let dtype = r.u8()?;
+            let ndim = r.u8()? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(r.u32()? as usize);
+            }
+            let n: usize = dims.iter().product();
+            let raw = r.take(4 * n)?;
+            match dtype {
+                0 => {
+                    let mut data = Vec::with_capacity(n);
+                    for c in raw.chunks_exact(4) {
+                        data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+                    }
+                    out.f32s.insert(name, Tensor::from_vec(&dims, data));
+                }
+                1 => {
+                    let mut data = Vec::with_capacity(n);
+                    for c in raw.chunks_exact(4) {
+                        data.push(i32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+                    }
+                    out.i32s.insert(name, IntTensor { shape: dims, data });
+                }
+                d => bail!("unknown dtype code {d}"),
+            }
+        }
+        if r.i != b.len() {
+            bail!("trailing bytes: {} of {}", r.i, b.len());
+        }
+        Ok(out)
+    }
+
+    /// Required f32 tensor by name.
+    pub fn f32(&self, name: &str) -> Result<&Tensor> {
+        self.f32s
+            .get(name)
+            .with_context(|| format!("missing tensor {name:?}"))
+    }
+
+    /// All f32 tensors whose name starts with `prefix`.
+    pub fn with_prefix(&self, prefix: &str) -> Vec<(&str, &Tensor)> {
+        self.f32s
+            .range(prefix.to_string()..)
+            .take_while(|(k, _)| k.starts_with(prefix))
+            .map(|(k, v)| (k.as_str(), v))
+            .collect()
+    }
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("truncated file at {} (+{n})", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        let s = self.take(2)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-built STF bytes matching the python writer.
+    fn sample() -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend(b"STF1");
+        b.extend(2u32.to_le_bytes());
+        // "a.w" f32 [2,2] = [1,2,3,4]
+        b.extend(3u16.to_le_bytes());
+        b.extend(b"a.w");
+        b.push(0);
+        b.push(2);
+        b.extend(2u32.to_le_bytes());
+        b.extend(2u32.to_le_bytes());
+        for v in [1.0f32, 2.0, 3.0, 4.0] {
+            b.extend(v.to_le_bytes());
+        }
+        // "lbl" i32 [3] = [-1, 0, 7]
+        b.extend(3u16.to_le_bytes());
+        b.extend(b"lbl");
+        b.push(1);
+        b.push(1);
+        b.extend(3u32.to_le_bytes());
+        for v in [-1i32, 0, 7] {
+            b.extend(v.to_le_bytes());
+        }
+        b
+    }
+
+    #[test]
+    fn parses_sample() {
+        let f = StfFile::parse(&sample()).unwrap();
+        let t = f.f32("a.w").unwrap();
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.data(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(f.i32s["lbl"].data, vec![-1, 0, 7]);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        let mut b = sample();
+        b[0] = b'X';
+        assert!(StfFile::parse(&b).is_err());
+        let b = sample();
+        assert!(StfFile::parse(&b[..b.len() - 2]).is_err());
+        let mut b = sample();
+        b.push(0); // trailing byte
+        assert!(StfFile::parse(&b).is_err());
+    }
+
+    #[test]
+    fn prefix_query() {
+        let f = StfFile::parse(&sample()).unwrap();
+        assert_eq!(f.with_prefix("a.").len(), 1);
+        assert_eq!(f.with_prefix("zz").len(), 0);
+        assert!(f.f32("nope").is_err());
+    }
+
+    #[test]
+    fn reads_real_weights_if_built() {
+        // Integration with the python writer (skips when artifacts absent).
+        let p = std::path::Path::new("artifacts/weights.stf");
+        if !p.exists() {
+            return;
+        }
+        let f = StfFile::load(p).unwrap();
+        assert!(f.f32("embed.patch.w").is_ok());
+        assert!(f.f32("blocks.0.router.w").is_ok());
+        let r = f.f32("blocks.0.router.w").unwrap();
+        assert_eq!(r.shape(), &[64, 8]);
+    }
+}

@@ -1,0 +1,175 @@
+//! Property-testing substrate (`proptest` is unavailable offline).
+//!
+//! A deterministic generator-driven harness with shrinking-lite: each
+//! property runs against N random cases from a seeded [`Rng`]; on failure
+//! the case index and seed are reported so the exact case replays, and
+//! integer-vector inputs are shrunk by halving/truncation before the
+//! panic propagates.
+//!
+//! Usage (`no_run`: rustdoc test binaries don't inherit the xla rpath):
+//! ```no_run
+//! use dice::testkit::{forall, Gen};
+//! forall(64, 0xD1CE, |g| {
+//!     let xs = g.vec_usize(0..50, 1..20);
+//!     let mut s = xs.clone();
+//!     s.sort();
+//!     assert!(s.windows(2).all(|w| w[0] <= w[1]));
+//! });
+//! ```
+
+use crate::rng::Rng;
+use std::ops::Range;
+
+/// Random-case generator handed to properties.
+pub struct Gen {
+    pub rng: Rng,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, r: Range<usize>) -> usize {
+        r.start + self.rng.below(r.end - r.start)
+    }
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.uniform_f32()
+    }
+    pub fn f32_normal(&mut self) -> f32 {
+        self.rng.normal_f32()
+    }
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+    pub fn vec_usize(&mut self, each: Range<usize>, len: Range<usize>) -> Vec<usize> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.usize_in(each.clone())).collect()
+    }
+    pub fn vec_f32(&mut self, len: Range<usize>) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f32_normal()).collect()
+    }
+    /// A random probability row (nonnegative, sums to 1).
+    pub fn prob_row(&mut self, n: usize) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..n).map(|_| -self.rng.uniform_f32().max(1e-9).ln()).collect();
+        let s: f32 = v.iter().sum();
+        for x in v.iter_mut() {
+            *x /= s;
+        }
+        v
+    }
+}
+
+/// Run `prop` against `cases` generated cases. Panics (with the case
+/// seed) on the first failure. Captured state is treated as unwind-safe
+/// (properties must not rely on it after a failure anyway).
+pub fn forall<F: Fn(&mut Gen)>(cases: usize, seed: u64, prop: F) {
+    let mut master = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = master.next_u64();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen {
+                rng: Rng::new(case_seed),
+            };
+            prop(&mut g);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed at case {case}/{cases} (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Shrinking helper for vector-shaped counterexamples: tries removing
+/// halves/elements while `fails` still holds; returns the smallest
+/// failing input found.
+pub fn shrink_vec<T: Clone, F: Fn(&[T]) -> bool>(input: Vec<T>, fails: F) -> Vec<T> {
+    debug_assert!(fails(&input));
+    let mut cur = input;
+    loop {
+        let mut progressed = false;
+        // try dropping each half
+        if cur.len() >= 2 {
+            for (lo, hi) in [(0, cur.len() / 2), (cur.len() / 2, cur.len())] {
+                let mut cand = cur.clone();
+                cand.drain(lo..hi);
+                if !cand.is_empty() && fails(&cand) {
+                    cur = cand;
+                    progressed = true;
+                    break;
+                }
+            }
+        }
+        if !progressed && cur.len() > 1 {
+            // try dropping single elements
+            for i in 0..cur.len() {
+                let mut cand = cur.clone();
+                cand.remove(i);
+                if !cand.is_empty() && fails(&cand) {
+                    cur = cand;
+                    progressed = true;
+                    break;
+                }
+            }
+        }
+        if !progressed {
+            return cur;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(32, 1, |g| {
+            let xs = g.vec_usize(0..100, 0..20);
+            let mut s = xs.clone();
+            s.sort();
+            assert_eq!(s.len(), xs.len());
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(64, 2, |g| {
+            let n = g.usize_in(0..100);
+            assert!(n < 95, "found {n}");
+        });
+    }
+
+    #[test]
+    fn prob_row_sums_to_one() {
+        forall(32, 3, |g| {
+            let n = g.usize_in(2..16);
+            let p = g.prob_row(n);
+            let s: f32 = p.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(p.iter().all(|&x| x >= 0.0));
+        });
+    }
+
+    #[test]
+    fn shrink_finds_minimal_failure() {
+        // property: no element is >= 100. counterexample contains 150.
+        let input = vec![1, 5, 150, 7, 3, 9];
+        let min = shrink_vec(input, |xs| xs.iter().any(|&x| x >= 100));
+        assert_eq!(min, vec![150]);
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        forall(64, 4, |g| {
+            let x = g.usize_in(5..10);
+            assert!((5..10).contains(&x));
+            let f = g.f32_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        });
+    }
+}

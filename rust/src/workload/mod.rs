@@ -1,0 +1,83 @@
+//! Workload generation for the serving experiments: Poisson and
+//! uniform open-loop arrival processes, class mixes, and trace replay.
+
+use crate::rng::Rng;
+
+/// A generation request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Request {
+    pub id: usize,
+    pub label: usize,
+    /// arrival time in (virtual) seconds from trace start.
+    pub arrival: f64,
+}
+
+/// Poisson open-loop trace: exponential inter-arrivals at `rate` req/s.
+pub fn poisson_trace(n: usize, rate: f64, n_classes: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    (0..n)
+        .map(|id| {
+            t += rng.exponential(rate);
+            Request {
+                id,
+                label: rng.below(n_classes),
+                arrival: t,
+            }
+        })
+        .collect()
+}
+
+/// Uniform open-loop trace: fixed inter-arrival 1/rate.
+pub fn uniform_trace(n: usize, rate: f64, n_classes: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|id| Request {
+            id,
+            label: rng.below(n_classes),
+            arrival: (id + 1) as f64 / rate,
+        })
+        .collect()
+}
+
+/// A burst at t=0 (closed-loop saturation test).
+pub fn burst_trace(n: usize, n_classes: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|id| Request {
+            id,
+            label: rng.below(n_classes),
+            arrival: 0.0,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_and_monotone() {
+        let tr = poisson_trace(5000, 10.0, 4, 1);
+        assert_eq!(tr.len(), 5000);
+        for w in tr.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        let span = tr.last().unwrap().arrival;
+        let rate = 5000.0 / span;
+        assert!((rate - 10.0).abs() < 0.6, "rate {rate}");
+        assert!(tr.iter().all(|r| r.label < 4));
+    }
+
+    #[test]
+    fn uniform_spacing() {
+        let tr = uniform_trace(10, 2.0, 4, 0);
+        assert!((tr[1].arrival - tr[0].arrival - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn traces_are_deterministic() {
+        assert_eq!(poisson_trace(50, 5.0, 4, 7), poisson_trace(50, 5.0, 4, 7));
+        assert_ne!(poisson_trace(50, 5.0, 4, 7), poisson_trace(50, 5.0, 4, 8));
+    }
+}

@@ -1,0 +1,281 @@
+//! Integration: the rust EP engine against the python oracle and the
+//! cross-strategy staleness/equivalence contracts.
+//!
+//! These are the tests that prove all three layers compose: AOT HLO
+//! artifacts (L1 Pallas kernels inside), the PJRT runtime, and the
+//! coordinator's dispatch/combine path reproduce `model.velocity` /
+//! `moe_dense` exactly.
+
+use std::path::Path;
+
+use dice::config::{DiceOptions, SelectiveSync, Strategy};
+use dice::coordinator::{one_hot, Engine, EngineConfig};
+use dice::runtime::{Runtime, WeightBank};
+use dice::tensor::{ops, Tensor};
+
+fn setup() -> Option<(Runtime, WeightBank)> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built; skipping");
+        return None;
+    }
+    let rt = Runtime::open(dir).unwrap();
+    let w = rt.load_weights().unwrap();
+    let bank = WeightBank::stage(&rt, &w).unwrap();
+    Some((rt, bank))
+}
+
+fn engine_cfg(strategy: Strategy, opts: DiceOptions) -> EngineConfig {
+    EngineConfig {
+        strategy,
+        opts,
+        devices: 4,
+    }
+}
+
+/// Run one sampling step from the golden x0 and recover the velocity
+/// the engine computed: x1 = x0 - dt*v  =>  v = (x0 - x1)/dt.
+fn engine_velocity_once(rt: &Runtime, bank: &WeightBank, strategy: Strategy) -> Tensor {
+    let golden = rt.load_golden().unwrap();
+    let x0 = golden.f32("in.x").unwrap().clone();
+    let eng = Engine::new(rt, bank, engine_cfg(strategy, DiceOptions::none())).unwrap();
+    // labels 0..3 match build_golden's one-hot
+    let (x1, _) = eng.generate_from(x0.clone(), &[0, 1, 2, 3], 1, None).unwrap();
+    let mut v = x0;
+    for (vi, x1i) in v.data_mut().iter_mut().zip(x1.data()) {
+        *vi -= x1i; // dt = 1 for steps=1
+    }
+    v
+}
+
+#[test]
+fn sync_ep_matches_python_velocity() {
+    let Some((rt, bank)) = setup() else { return };
+    let golden = rt.load_golden().unwrap();
+    let want = golden.f32("out.v_t1").unwrap();
+    let v = engine_velocity_once(&rt, &bank, Strategy::SyncEp);
+    let err = v.rel_l2(want).unwrap();
+    assert!(err < 2e-4, "sync EP vs python velocity rel_l2 = {err}");
+}
+
+#[test]
+fn stage_artifacts_match_python_intermediates() {
+    // embed + cond against mid.embed / mid.cond at B=4.
+    let Some((rt, bank)) = setup() else { return };
+    let golden = rt.load_golden().unwrap();
+    let x = golden.f32("in.x").unwrap();
+    let t = golden.f32("in.t").unwrap();
+    let y1h = golden.f32("in.y1h").unwrap();
+    let h = rt
+        .execute("embed_b4", &[x], &WeightBank::refs(&bank.embed))
+        .unwrap();
+    let err = h[0].rel_l2(golden.f32("mid.embed").unwrap()).unwrap();
+    assert!(err < 1e-5, "embed err {err}");
+    let c = rt
+        .execute("cond_b4", &[t, y1h], &WeightBank::refs(&bank.cond))
+        .unwrap();
+    let err = c[0].rel_l2(golden.f32("mid.cond").unwrap()).unwrap();
+    assert!(err < 1e-5, "cond err {err}");
+}
+
+#[test]
+fn dispatch_combine_equals_moe_dense_artifact() {
+    // the engine's gather/tile/scatter path == the dense masked MoE
+    // artifact on the same inputs (layer 0, batch 2).
+    let Some((rt, bank)) = setup() else { return };
+    let golden = rt.load_golden().unwrap();
+    let x = golden.f32("in.x").unwrap();
+    let x2 = Tensor::from_vec(&[2, 1, 8, 8], x.data()[..128].to_vec());
+    let t2 = Tensor::full(&[2], 0.7);
+    let y2 = one_hot(&[0, 1], 4);
+    let h = rt
+        .execute("embed_b2", &[&x2], &WeightBank::refs(&bank.embed))
+        .unwrap();
+    let c = rt
+        .execute("cond_b2", &[&t2, &y2], &WeightBank::refs(&bank.cond))
+        .unwrap();
+    let pre = rt
+        .execute(
+            "block_pre_b2",
+            &[&h[0], &c[0]],
+            &WeightBank::refs(&bank.block_pre[0]),
+        )
+        .unwrap();
+    let xin = &pre[1];
+    let probs = &pre[2];
+    // dense reference artifact
+    let dense = rt
+        .execute(
+            "moe_dense_b2",
+            &[xin, probs],
+            &WeightBank::refs(&bank.stacked[0]),
+        )
+        .unwrap();
+    // engine path via a 1-step sync generate on a 2-device engine is
+    // indirect; instead call the public test hook
+    let eng = Engine::new(&rt, &bank, engine_cfg(Strategy::SyncEp, DiceOptions::none())).unwrap();
+    let moe = eng
+        .ep_moe_for_test(
+            &xin.clone().reshape(&[32, 64]),
+            &dice::moe::RoutingTable::from_probs(&probs.clone().reshape(&[32, 8]), 2),
+            0,
+        )
+        .unwrap();
+    let err = moe
+        .reshape(&[2, 16, 64])
+        .rel_l2(&dense[0])
+        .unwrap();
+    assert!(err < 1e-4, "dispatch/combine vs moe_dense rel_l2 = {err}");
+}
+
+#[test]
+fn displaced_equals_sync_when_inputs_constant() {
+    // With zero diffusion steps of change (steps=1 there is no history),
+    // verify instead: displaced with warmup covering ALL steps == sync.
+    let Some((rt, bank)) = setup() else { return };
+    let steps = 4;
+    let labels = vec![0usize, 1, 2, 3];
+    let sync = Engine::new(&rt, &bank, engine_cfg(Strategy::SyncEp, DiceOptions::none())).unwrap();
+    let (xs, _) = sync.generate(&labels, steps, 42, None).unwrap();
+    let disp_all_warm = Engine::new(
+        &rt,
+        &bank,
+        engine_cfg(Strategy::DisplacedEp, DiceOptions::none().with_warmup(steps)),
+    )
+    .unwrap();
+    let (xd, stats) = disp_all_warm.generate(&labels, steps, 42, None).unwrap();
+    assert_eq!(stats.staleness.max_age(0), 0, "all-warmup must be fresh");
+    let err = xd.rel_l2(&xs).unwrap();
+    assert!(err < 1e-5, "displaced(all-warmup) vs sync rel_l2 = {err}");
+}
+
+#[test]
+fn staleness_ages_match_paper_schedules() {
+    let Some((rt, bank)) = setup() else { return };
+    let steps = 6;
+    let warm = 2;
+    let labels = vec![0usize, 1, 2, 3];
+    for (strategy, want_age) in [
+        (Strategy::SyncEp, 0usize),
+        (Strategy::Interweaved, 1),
+        (Strategy::DisplacedEp, 2),
+        (Strategy::DistriFusion, 1),
+    ] {
+        // DFU artifact requires global batch 32
+        let labels32: Vec<usize> = (0..32).map(|i| i % 4).collect();
+        let l = if strategy == Strategy::DistriFusion {
+            &labels32[..]
+        } else {
+            &labels[..]
+        };
+        let eng = Engine::new(
+            &rt,
+            &bank,
+            engine_cfg(strategy, DiceOptions::none().with_warmup(warm)),
+        )
+        .unwrap();
+        let (_, stats) = eng.generate(l, steps, 7, None).unwrap();
+        // steady state (skip warmup + 2 transition steps)
+        let age = stats.staleness.max_age(warm + 2);
+        assert_eq!(
+            age,
+            want_age,
+            "{}: steady-state staleness",
+            strategy.name()
+        );
+    }
+}
+
+#[test]
+fn selective_sync_keeps_deep_layers_fresh() {
+    let Some((rt, bank)) = setup() else { return };
+    let labels = vec![0usize, 1, 2, 3];
+    let mut opts = DiceOptions::none().with_warmup(1);
+    opts.selective_sync = SelectiveSync::Deep;
+    let eng = Engine::new(&rt, &bank, engine_cfg(Strategy::Interweaved, opts)).unwrap();
+    let (_, stats) = eng.generate(&labels, 5, 3, None).unwrap();
+    let per_layer = stats.staleness.per_layer_mean(rt.model.n_layers, 2);
+    for l in 0..rt.model.n_layers {
+        if l >= rt.model.n_layers / 2 {
+            assert_eq!(per_layer[l], 0.0, "deep layer {l} must be synchronous");
+        } else {
+            assert!(per_layer[l] > 0.5, "shallow layer {l} must be async: {per_layer:?}");
+        }
+    }
+}
+
+#[test]
+fn interweaved_buffers_half_of_displaced() {
+    let Some((rt, bank)) = setup() else { return };
+    let labels = vec![0usize, 1, 2, 3];
+    let steps = 5;
+    let run = |strategy| {
+        let eng = Engine::new(
+            &rt,
+            &bank,
+            engine_cfg(strategy, DiceOptions::none().with_warmup(1)),
+        )
+        .unwrap();
+        let (_, stats) = eng.generate(&labels, steps, 11, None).unwrap();
+        stats.peak_buffer_bytes
+    };
+    let disp = run(Strategy::DisplacedEp);
+    let intw = run(Strategy::Interweaved);
+    let ratio = disp as f64 / intw as f64;
+    assert!(
+        ratio > 1.8 && ratio < 2.6,
+        "displaced/interweaved buffer ratio {ratio} (disp {disp}, intw {intw})"
+    );
+}
+
+#[test]
+fn cond_comm_reduces_bytes_and_tracks_fractions() {
+    let Some((rt, bank)) = setup() else { return };
+    let labels = vec![0usize, 1, 2, 3];
+    let steps = 8;
+    let mut opts = DiceOptions::none().with_warmup(2);
+    let eng_off = Engine::new(&rt, &bank, engine_cfg(Strategy::Interweaved, opts)).unwrap();
+    let (_, off) = eng_off.generate(&labels, steps, 5, None).unwrap();
+    opts.cond_comm = dice::config::CondCommSelector::LowScore;
+    opts.cond_comm_stride = 2;
+    let eng_on = Engine::new(&rt, &bank, engine_cfg(Strategy::Interweaved, opts)).unwrap();
+    let (_, on) = eng_on.generate(&labels, steps, 5, None).unwrap();
+    assert_eq!(off.saved_bytes, 0);
+    assert!(on.saved_bytes > 0, "cond comm must save bytes");
+    assert!(
+        on.fresh_bytes < off.fresh_bytes,
+        "fresh bytes must shrink: {} vs {}",
+        on.fresh_bytes,
+        off.fresh_bytes
+    );
+    // fresh fraction should approach the analytic 75% (k=2, stride 2)
+    let frac = on.comm.fresh_entries as f64
+        / (on.comm.fresh_entries + on.comm.reused_entries) as f64;
+    assert!(frac > 0.70 && frac < 0.95, "fresh fraction {frac}");
+}
+
+#[test]
+fn quality_ordering_sync_beats_stale() {
+    // The paper's core claim at tiny scale: FID(sync) < FID(interweaved)
+    // < FID(displaced). A small sample count is enough for the ordering
+    // because the Fréchet gap between 0/1/2-step staleness is large.
+    let Some((rt, bank)) = setup() else { return };
+    let refs = rt.load_ref_stats().unwrap();
+    let steps = 10;
+    let n = 64;
+    let mut fids = Vec::new();
+    for strategy in [Strategy::SyncEp, Strategy::Interweaved, Strategy::DisplacedEp] {
+        let eng = Engine::new(
+            &rt,
+            &bank,
+            engine_cfg(strategy, DiceOptions::none().with_warmup(2)),
+        )
+        .unwrap();
+        let job = dice::sampler::sample_many(&eng, n, 32, steps, 99).unwrap();
+        let q = dice::quality::evaluate(&rt, &bank, &job.samples, &refs).unwrap();
+        fids.push((strategy.name(), q.fid));
+    }
+    eprintln!("fids: {fids:?}");
+    assert!(fids[0].1 < fids[2].1, "sync must beat displaced: {fids:?}");
+    assert!(fids[1].1 < fids[2].1, "interweaved must beat displaced: {fids:?}");
+}

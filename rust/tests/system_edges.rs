@@ -1,0 +1,279 @@
+//! Integration: serving stack end-to-end, failure injection, and
+//! cross-module property tests that need the real artifacts.
+
+use std::path::Path;
+
+use dice::config::{hardware_profile, model_preset, DiceOptions, Strategy};
+use dice::coordinator::{simulate, Engine, EngineConfig};
+use dice::netsim::{CostModel, Workload};
+use dice::runtime::{Runtime, WeightBank};
+use dice::server::{serve, BatchPolicy};
+use dice::testkit::{forall, Gen};
+use dice::workload::{burst_trace, poisson_trace};
+
+fn setup() -> Option<(Runtime, WeightBank)> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        return None;
+    }
+    let rt = Runtime::open(dir).unwrap();
+    let w = rt.load_weights().unwrap();
+    let bank = WeightBank::stage(&rt, &w).unwrap();
+    Some((rt, bank))
+}
+
+#[test]
+fn serve_loop_no_request_lost_or_duplicated() {
+    let Some((rt, bank)) = setup() else { return };
+    let eng = Engine::new(
+        &rt,
+        &bank,
+        EngineConfig {
+            strategy: Strategy::Interweaved,
+            opts: DiceOptions::dice().with_warmup(1),
+            devices: 4,
+        },
+    )
+    .unwrap();
+    let cm = CostModel::new(
+        model_preset("xl").unwrap(),
+        hardware_profile("rtx4090_pcie").unwrap(),
+    );
+    let trace = poisson_trace(41, 5.0, 4, 3); // deliberately not a bucket multiple
+    let rep = serve(
+        &eng,
+        &cm,
+        &trace,
+        BatchPolicy {
+            max_global: 32,
+            max_wait: 1.0,
+        },
+        4,
+        9,
+    )
+    .unwrap();
+    let mut served: Vec<usize> = rep
+        .batches
+        .iter()
+        .flat_map(|b| b.request_ids.iter().copied())
+        .collect();
+    served.sort();
+    assert_eq!(served, (0..41).collect::<Vec<_>>(), "every request exactly once");
+    assert_eq!(rep.samples.shape()[0], 41);
+    // batches never overlap in virtual time and are ordered
+    for w in rep.batches.windows(2) {
+        assert!(w[1].start >= w[0].end - 1e-9);
+    }
+    // latency accounting: every request completes after it arrives
+    let h = rep.metrics.hist("request.latency").unwrap();
+    assert!(h.min() >= 0.0);
+    assert_eq!(rep.metrics.counter("requests"), 41);
+}
+
+#[test]
+fn serve_burst_fills_batches() {
+    let Some((rt, bank)) = setup() else { return };
+    let eng = Engine::new(
+        &rt,
+        &bank,
+        EngineConfig {
+            strategy: Strategy::SyncEp,
+            opts: DiceOptions::none(),
+            devices: 4,
+        },
+    )
+    .unwrap();
+    let cm = CostModel::new(
+        model_preset("xl").unwrap(),
+        hardware_profile("rtx4090_pcie").unwrap(),
+    );
+    let trace = burst_trace(64, 4, 1);
+    let rep = serve(
+        &eng,
+        &cm,
+        &trace,
+        BatchPolicy {
+            max_global: 32,
+            max_wait: 0.5,
+        },
+        2,
+        1,
+    )
+    .unwrap();
+    // a saturating burst must produce full batches (no padding)
+    assert_eq!(rep.batches.len(), 2);
+    assert_eq!(rep.metrics.counter("padded_slots"), 0);
+}
+
+#[test]
+fn engine_rejects_bad_configs() {
+    let Some((rt, bank)) = setup() else { return };
+    // devices must divide experts
+    assert!(Engine::new(
+        &rt,
+        &bank,
+        EngineConfig {
+            strategy: Strategy::SyncEp,
+            opts: DiceOptions::none(),
+            devices: 3,
+        },
+    )
+    .is_err());
+    // non-bucket local batch
+    let eng = Engine::new(
+        &rt,
+        &bank,
+        EngineConfig {
+            strategy: Strategy::SyncEp,
+            opts: DiceOptions::none(),
+            devices: 4,
+        },
+    )
+    .unwrap();
+    let labels24 = vec![0usize; 24]; // local 6 is not a bucket
+    assert!(eng.generate(&labels24, 2, 0, None).is_err());
+    // DFU requires global batch 32
+    let dfu = Engine::new(
+        &rt,
+        &bank,
+        EngineConfig {
+            strategy: Strategy::DistriFusion,
+            opts: DiceOptions::none(),
+            devices: 4,
+        },
+    )
+    .unwrap();
+    assert!(dfu.generate(&vec![0usize; 16], 2, 0, None).is_err());
+}
+
+#[test]
+fn missing_artifact_dir_is_clean_error() {
+    assert!(Runtime::open(Path::new("/nonexistent/dir")).is_err());
+}
+
+#[test]
+fn engine_deterministic_across_runs() {
+    let Some((rt, bank)) = setup() else { return };
+    let eng = Engine::new(
+        &rt,
+        &bank,
+        EngineConfig {
+            strategy: Strategy::Interweaved,
+            opts: DiceOptions::dice().with_warmup(2),
+            devices: 4,
+        },
+    )
+    .unwrap();
+    let labels = vec![0usize, 1, 2, 3];
+    let (a, _) = eng.generate(&labels, 6, 77, None).unwrap();
+    let (b, _) = eng.generate(&labels, 6, 77, None).unwrap();
+    assert_eq!(a, b, "same seed must reproduce bit-identical samples");
+    let (c, _) = eng.generate(&labels, 6, 78, None).unwrap();
+    assert!(a.rel_l2(&c).unwrap() > 0.01, "different seed differs");
+}
+
+#[test]
+fn staggered_batch_matches_sync_quality_but_doubles_buffers() {
+    // supplement §8: staggered batching keeps sync freshness but pays
+    // buffers + utilisation — quality path must equal sync EP exactly.
+    let Some((rt, bank)) = setup() else { return };
+    let labels = vec![0usize, 1, 2, 3];
+    let sync = Engine::new(
+        &rt,
+        &bank,
+        EngineConfig {
+            strategy: Strategy::SyncEp,
+            opts: DiceOptions::none(),
+            devices: 4,
+        },
+    )
+    .unwrap();
+    let stag = Engine::new(
+        &rt,
+        &bank,
+        EngineConfig {
+            strategy: Strategy::StaggeredBatch,
+            opts: DiceOptions::none(),
+            devices: 4,
+        },
+    )
+    .unwrap();
+    let (xs, _) = sync.generate(&labels, 3, 5, None).unwrap();
+    let (xg, _) = stag.generate(&labels, 3, 5, None).unwrap();
+    assert_eq!(xs, xg);
+    // sim: staggered is slower than interweaved and buffers are 2x
+    let cm = CostModel::new(
+        model_preset("xl").unwrap(),
+        hardware_profile("rtx4090_pcie").unwrap(),
+    );
+    let wl = Workload {
+        local_batch: 8,
+        devices: 8,
+        tokens: cm.model.tokens(),
+    };
+    let st = simulate(&cm, &wl, Strategy::StaggeredBatch, &DiceOptions::none(), 4);
+    let iw = simulate(&cm, &wl, Strategy::Interweaved, &DiceOptions::none(), 4);
+    assert!(st.step_time > iw.step_time, "staggered loses utilisation");
+    assert!(st.mem.buffers > 1.9 * iw.mem.buffers);
+}
+
+#[test]
+fn nvlink_erases_most_of_dices_advantage() {
+    // paper §10: on NVLink the bottleneck shrinks; DICE's speedup should
+    // be much smaller there (sanity of the hardware model).
+    let speedup = |hw: &str| {
+        let cm = CostModel::new(model_preset("xl").unwrap(), hardware_profile(hw).unwrap());
+        let wl = Workload {
+            local_batch: 16,
+            devices: 8,
+            tokens: cm.model.tokens(),
+        };
+        let sync = simulate(&cm, &wl, Strategy::SyncEp, &DiceOptions::none(), 4);
+        let dice = simulate(&cm, &wl, Strategy::Interweaved, &DiceOptions::dice(), 4);
+        sync.total_time / dice.total_time
+    };
+    let pcie = speedup("rtx4090_pcie");
+    let nv = speedup("nvlink");
+    assert!(pcie > 1.15);
+    assert!(nv < pcie, "nvlink {nv} vs pcie {pcie}");
+}
+
+#[test]
+fn property_batched_requests_conserved_across_policies() {
+    let Some((rt, bank)) = setup() else { return };
+    let eng = Engine::new(
+        &rt,
+        &bank,
+        EngineConfig {
+            strategy: Strategy::SyncEp,
+            opts: DiceOptions::none(),
+            devices: 4,
+        },
+    )
+    .unwrap();
+    let cm = CostModel::new(
+        model_preset("xl").unwrap(),
+        hardware_profile("rtx4090_pcie").unwrap(),
+    );
+    forall(6, 0xBA7C4, |g: &mut Gen| {
+        let n = g.usize_in(1..30);
+        let rate = g.f32_in(0.5, 10.0) as f64;
+        let max_wait = g.f32_in(0.1, 4.0) as f64;
+        let trace = poisson_trace(n, rate, 4, g.rng.next_u64());
+        let rep = serve(
+            &eng,
+            &cm,
+            &trace,
+            BatchPolicy {
+                max_global: 32,
+                max_wait,
+            },
+            1,
+            0,
+        )
+        .unwrap();
+        let served: usize = rep.batches.iter().map(|b| b.request_ids.len()).sum();
+        assert_eq!(served, n);
+        assert_eq!(rep.samples.shape()[0], n);
+    });
+}
