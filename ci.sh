@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 verify (build + test) plus formatting and lint
+# gates. fmt/clippy run only where the rustup components are installed
+# (minimal containers may carry a bare toolchain); when present they
+# are enforced, not advisory.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "==> cargo fmt --check"
+    cargo fmt --all -- --check
+else
+    echo "==> cargo fmt not installed; skipping format gate"
+fi
+
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "==> cargo clippy -D warnings"
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "==> cargo clippy not installed; skipping lint gate"
+fi
+
+echo "CI OK"

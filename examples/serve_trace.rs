@@ -1,78 +1,124 @@
-//! END-TO-END DRIVER (EXPERIMENTS.md §E2E): serve a Poisson request
-//! trace through the full stack — workload generator → dynamic batcher
-//! (shape buckets) → DICE expert-parallel engine on 4 logical devices
-//! with REAL numerics over the AOT artifacts → per-request latency /
-//! throughput (virtual time at the modelled 8×4090 scale) → quality of
-//! the actually-served samples.
+//! END-TO-END SERVING DRIVER: replay workload scenarios through the
+//! full serving stack — scenario generator → admission control →
+//! dynamic batcher (shape buckets) → serve loop → p50/p95/p99 latency,
+//! throughput and SLO goodput per strategy.
 //!
-//!     cargo run --release --example serve_trace -- --requests 96 --rate 2.0
+//! By default every (scenario × strategy) cell runs in simulation mode
+//! (cost-model virtual time at the paper's XL / 8×4090 scale), so this
+//! example works on a clean checkout with no artifacts. When the AOT
+//! artifacts exist (`make artifacts` / `python -m compile.aot`), the
+//! driver additionally serves one trace with REAL numerics through the
+//! expert-parallel engine and reports the quality of the actually
+//! served samples.
+//!
+//!     cargo run --release --example serve_trace -- --requests 256 --rate 2.0 --slo 60
 
 use dice::cli::Args;
 use dice::config::{hardware_profile, model_preset, DiceOptions, Strategy};
 use dice::coordinator::{Engine, EngineConfig};
 use dice::exp::Ctx;
 use dice::netsim::CostModel;
-use dice::server::{serve, BatchPolicy};
-use dice::workload::poisson_trace;
+use dice::server::{comparison_table, serve_sim, AdmissionPolicy, BatchPolicy, ServeConfig};
+use dice::workload::Scenario;
 
 fn main() -> anyhow::Result<()> {
     let a = Args::parse();
-    let n_requests = a.usize_or("requests", 96);
+    let n_requests = a.usize_or("requests", 256);
     let rate = a.f64_or("rate", 2.0);
     let steps = a.usize_or("steps", 50);
+    let devices = a.usize_or("devices", 8);
+    let slo = a.f64_or("slo", 60.0);
+    let seed = a.u64_or("seed", 42);
 
-    let ctx = Ctx::open()?;
-    let strategy = Strategy::parse(&a.str_or("strategy", "interweaved"))?;
-    let eng = Engine::new(
-        &ctx.rt,
-        &ctx.bank,
-        EngineConfig {
-            strategy,
-            opts: DiceOptions::dice().with_warmup(4),
-            devices: 4,
-        },
-    )?;
-    let cm = CostModel::new(model_preset("xl")?, hardware_profile("rtx4090_pcie")?);
-
-    let trace = poisson_trace(n_requests, rate, ctx.rt.model.n_classes, 42);
+    let cm = CostModel::new(
+        model_preset(&a.str_or("model", "xl"))?,
+        hardware_profile(&a.str_or("hw", "rtx4090_pcie"))?,
+    );
     let policy = BatchPolicy {
-        max_global: 32,
-        max_wait: 3.0,
+        max_global: a.usize_or("max-batch", 32),
+        max_wait: a.f64_or("max-wait", 3.0),
     };
-    println!(
-        "serving {n_requests} requests (poisson {rate}/s) with {} on 4 logical devices, {steps} steps...",
-        strategy.name()
-    );
-    let t0 = std::time::Instant::now();
-    let rep = serve(&eng, &cm, &trace, policy, steps, 7)?;
-    let wall = t0.elapsed().as_secs_f64();
+    let cfg = ServeConfig::new(policy, steps, 7)
+        .with_slo(slo)
+        .with_admission(AdmissionPolicy::bounded(a.usize_or("queue-cap", 256)));
 
-    println!("\n== serve report (virtual time @ XL scale, real numerics @ tiny) ==");
-    println!("host wall-clock          {wall:.1}s");
-    println!("virtual makespan         {:.1}s", rep.span);
-    println!("throughput               {:.2} req/s", rep.throughput);
-    let h = rep.metrics.hist("request.latency").unwrap();
-    println!(
-        "request latency          mean {:.1}s  p50 {:.1}s  p99 {:.1}s",
-        h.mean(),
-        h.percentile(50.0),
-        h.percentile(99.0)
-    );
-    println!("batches served           {}", rep.batches.len());
-    println!(
-        "padded slots             {}",
-        rep.metrics.counter("padded_slots")
-    );
-    println!(
-        "a2a bytes fresh/saved    {} / {}",
-        rep.metrics.counter("a2a.fresh_bytes"),
-        rep.metrics.counter("a2a.saved_bytes")
-    );
+    let scenarios = [
+        Scenario::parse("steady", rate)?,
+        Scenario::parse("diurnal", rate)?,
+        Scenario::burst_recovery(64, rate), // larger burst than the preset
+    ];
+    let strategies = [
+        ("sync_ep", Strategy::SyncEp, DiceOptions::none()),
+        ("displaced_ep", Strategy::DisplacedEp, DiceOptions::none()),
+        ("dice", Strategy::Interweaved, DiceOptions::dice()),
+    ];
 
-    let q = dice::quality::evaluate(&ctx.rt, &ctx.bank, &rep.samples, &ctx.refs)?;
     println!(
-        "served-sample quality    FID-proxy {:.2}  IS {:.2}  precision {:.2}",
-        q.fid, q.is_score, q.precision
+        "serving {n_requests} requests/scenario on {devices} devices @ {} / {} \
+         ({steps} steps, SLO {slo}s, virtual time)...",
+        cm.model.name, cm.hw.name
     );
+    let mut rows = Vec::new();
+    for scenario in &scenarios {
+        // identical trace per scenario so strategies compete fairly
+        let trace = scenario.trace(n_requests, cm.model.n_classes, seed);
+        for (name, strategy, opts) in &strategies {
+            let rep = serve_sim(&cm, *strategy, *opts, devices, &trace, cfg)?;
+            rows.push((scenario.name().to_string(), name.to_string(), rep));
+        }
+    }
+    comparison_table(
+        &format!(
+            "Serving comparison — {} on {}x {} (virtual time)",
+            cm.model.name, devices, cm.hw.name
+        ),
+        &rows,
+    )
+    .print();
+
+    // Optional real-numerics pass when the AOT artifacts are present.
+    match Ctx::open() {
+        Err(e) => println!(
+            "\n(real-numerics serve skipped: {e:#}; build the artifacts \
+             with `cd python && python -m compile.aot --out-dir ../artifacts`)"
+        ),
+        Ok(ctx) => {
+            let strategy = Strategy::parse(&a.str_or("strategy", "interweaved"))?;
+            let eng = Engine::new(
+                &ctx.rt,
+                &ctx.bank,
+                EngineConfig {
+                    strategy,
+                    opts: DiceOptions::dice().with_warmup(4),
+                    devices: 4,
+                },
+            )?;
+            let trace = Scenario::steady(rate).trace(
+                a.usize_or("real-requests", 96),
+                ctx.rt.model.n_classes,
+                seed,
+            );
+            let t0 = std::time::Instant::now();
+            let rep = dice::server::serve(&eng, &cm, &trace, policy, steps, 7)?;
+            let wall = t0.elapsed().as_secs_f64();
+            println!("\n== real-numerics serve ({}) ==", strategy.name());
+            println!("host wall-clock          {wall:.1}s");
+            println!("{}", rep.summary_line());
+            println!(
+                "padded slots             {}",
+                rep.metrics.counter("padded_slots")
+            );
+            println!(
+                "a2a bytes fresh/saved    {} / {}",
+                rep.metrics.counter("a2a.fresh_bytes"),
+                rep.metrics.counter("a2a.saved_bytes")
+            );
+            let q = dice::quality::evaluate(&ctx.rt, &ctx.bank, &rep.samples, &ctx.refs)?;
+            println!(
+                "served-sample quality    FID-proxy {:.2}  IS {:.2}  precision {:.2}",
+                q.fid, q.is_score, q.precision
+            );
+        }
+    }
     Ok(())
 }

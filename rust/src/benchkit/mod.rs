@@ -10,11 +10,17 @@ use std::time::Instant;
 /// Timing summary of one benchmark case.
 #[derive(Debug, Clone)]
 pub struct Summary {
+    /// Case name.
     pub name: String,
+    /// Timed iterations (after warmup).
     pub iters: usize,
+    /// Mean seconds per iteration.
     pub mean_s: f64,
+    /// Median seconds per iteration.
     pub p50_s: f64,
+    /// 99th-percentile seconds per iteration.
     pub p99_s: f64,
+    /// Standard deviation of the iteration times.
     pub std_s: f64,
 }
 
@@ -60,6 +66,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// Empty table with a title and column headers.
     pub fn new(title: &str, headers: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -67,12 +74,14 @@ impl Table {
             rows: Vec::new(),
         }
     }
+    /// Append a row; panics when the width differs from the headers.
     pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
         assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
         self.rows.push(cells);
         self
     }
 
+    /// Render as aligned markdown.
     pub fn render(&self) -> String {
         let ncol = self.headers.len();
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
@@ -103,6 +112,7 @@ impl Table {
         s
     }
 
+    /// Print the rendered table to stdout.
     pub fn print(&self) {
         print!("{}", self.render());
     }

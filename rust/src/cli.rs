@@ -9,6 +9,7 @@ use std::collections::BTreeMap;
 /// Parsed command line.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// Positional arguments in order (e.g. the subcommand).
     pub positional: Vec<String>,
     kv: BTreeMap<String, String>,
     flags: Vec<String>,
@@ -53,6 +54,7 @@ impl Args {
         self
     }
 
+    /// Render the usage string from the declared options.
     pub fn usage(&self, program: &str) -> String {
         let mut s = format!("usage: {program} [options]\n");
         for (n, h, d) in &self.spec {
@@ -65,30 +67,36 @@ impl Args {
         s
     }
 
+    /// Whether a bare `--name` flag was passed.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Raw value of `--name value` / `--name=value`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.kv.get(name).map(|s| s.as_str())
     }
 
+    /// String option with a default.
     pub fn str_or(&self, name: &str, default: &str) -> String {
         self.get(name).unwrap_or(default).to_string()
     }
 
+    /// `usize` option with a default; panics on a malformed value.
     pub fn usize_or(&self, name: &str, default: usize) -> usize {
         self.get(name)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
             .unwrap_or(default)
     }
 
+    /// `u64` option with a default; panics on a malformed value.
     pub fn u64_or(&self, name: &str, default: u64) -> u64 {
         self.get(name)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
             .unwrap_or(default)
     }
 
+    /// `f64` option with a default; panics on a malformed value.
     pub fn f64_or(&self, name: &str, default: f64) -> f64 {
         self.get(name)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {v:?}")))

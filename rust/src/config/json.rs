@@ -10,15 +10,22 @@ use std::fmt;
 /// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (stored as f64, like JavaScript).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object with sorted keys (stable serialisation).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document (trailing data is an error).
     pub fn parse(s: &str) -> Result<Json, JsonError> {
         let mut p = Parser {
             b: s.as_bytes(),
@@ -33,27 +40,32 @@ impl Json {
         Ok(v)
     }
 
+    /// The number value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
             _ => None,
         }
     }
+    /// The number value truncated to `usize`, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|f| f as usize)
     }
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
             _ => None,
         }
     }
+    /// The key/value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -70,10 +82,13 @@ impl Json {
     }
 }
 
+/// Parse failure with the byte position it occurred at.
 #[derive(Debug, thiserror::Error)]
 #[error("json error at byte {pos}: {msg}")]
 pub struct JsonError {
+    /// Byte offset into the input where parsing failed.
     pub pos: usize,
+    /// What the parser expected / found.
     pub msg: String,
 }
 

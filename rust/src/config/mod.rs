@@ -14,25 +14,39 @@ use anyhow::{bail, Context, Result};
 /// Model architecture (mirrors `python/compile/configs.py`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelConfig {
+    /// Preset name (`tiny` | `xl` | `g`).
     pub name: String,
+    /// Square image (or latent) side length in pixels.
     pub image_size: usize,
+    /// Image channels (1 for tiny, 4 for the latent-space presets).
     pub channels: usize,
+    /// Patch side length (tokens = (image_size/patch)²).
     pub patch: usize,
+    /// Transformer width.
     pub d_model: usize,
+    /// Attention heads.
     pub n_heads: usize,
+    /// Transformer blocks.
     pub n_layers: usize,
+    /// Per-expert FFN hidden width.
     pub d_ffn: usize,
+    /// Routed experts per layer.
     pub n_experts: usize,
+    /// Experts selected per token.
     pub top_k: usize,
+    /// Always-on shared experts per layer.
     pub n_shared: usize,
+    /// Class-conditioning vocabulary size.
     pub n_classes: usize,
 }
 
 impl ModelConfig {
+    /// Sequence length: (image_size / patch)².
     pub fn tokens(&self) -> usize {
         let side = self.image_size / self.patch;
         side * side
     }
+    /// Elements per patch (patch² · channels).
     pub fn patch_dim(&self) -> usize {
         self.patch * self.patch * self.channels
     }
@@ -115,6 +129,7 @@ pub enum Strategy {
 }
 
 impl Strategy {
+    /// Parse a CLI strategy name (several aliases per strategy).
     pub fn parse(s: &str) -> Result<Strategy> {
         Ok(match s {
             "sync" | "sync_ep" | "ep" => Strategy::SyncEp,
@@ -125,6 +140,7 @@ impl Strategy {
             _ => bail!("unknown strategy {s:?} (sync|displaced|interweaved|distrifusion|staggered_batch)"),
         })
     }
+    /// Canonical strategy name.
     pub fn name(&self) -> &'static str {
         match self {
             Strategy::SyncEp => "sync_ep",
@@ -160,6 +176,7 @@ pub enum SelectiveSync {
 }
 
 impl SelectiveSync {
+    /// Parse a CLI policy name.
     pub fn parse(s: &str) -> Result<SelectiveSync> {
         Ok(match s {
             "none" => SelectiveSync::None,
@@ -178,6 +195,7 @@ impl SelectiveSync {
             SelectiveSync::Staggered => layer % 2 == 1,
         }
     }
+    /// Canonical policy name.
     pub fn name(&self) -> &'static str {
         match self {
             SelectiveSync::None => "none",
@@ -206,6 +224,7 @@ pub enum CondCommSelector {
 }
 
 impl CondCommSelector {
+    /// Parse a CLI selector name.
     pub fn parse(s: &str) -> Result<CondCommSelector> {
         Ok(match s {
             "off" | "none" => CondCommSelector::Off,
@@ -215,6 +234,7 @@ impl CondCommSelector {
             _ => bail!("unknown cond-comm selector {s:?}"),
         })
     }
+    /// Canonical selector name.
     pub fn name(&self) -> &'static str {
         match self {
             CondCommSelector::Off => "off",
@@ -228,7 +248,9 @@ impl CondCommSelector {
 /// The DICE knobs layered on top of a base [`Strategy`].
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DiceOptions {
+    /// Layer-level synchronization policy (Sec. 4.2).
     pub selective_sync: SelectiveSync,
+    /// Token-level conditional-communication selector (Sec. 4.3).
     pub cond_comm: CondCommSelector,
     /// Refresh period for throttled (token, expert) pairs (paper fig. 7
     /// uses stride 2).
@@ -242,6 +264,7 @@ pub struct DiceOptions {
 }
 
 impl DiceOptions {
+    /// Every DICE refinement disabled (the plain base strategy).
     pub fn none() -> Self {
         DiceOptions {
             selective_sync: SelectiveSync::None,
@@ -261,10 +284,12 @@ impl DiceOptions {
             only_async_layer: None,
         }
     }
+    /// Set the synchronous warmup step count.
     pub fn with_warmup(mut self, steps: usize) -> Self {
         self.warmup_sync_steps = steps;
         self
     }
+    /// Probe mode: run only `layer` asynchronously (Sec. 4.2 probe).
     pub fn with_only_async_layer(mut self, layer: usize) -> Self {
         self.only_async_layer = Some(layer);
         self

@@ -12,8 +12,11 @@
 use super::ModelConfig;
 use anyhow::{bail, Result};
 
+/// Alias kept for call sites that read better as "preset".
 pub type ModelPreset = ModelConfig;
 
+/// Look up a model preset by name (`tiny` | `xl` | `g`). `tiny` is the
+/// trained numerics config; `xl`/`g` exist for the cost model only.
 pub fn model_preset(name: &str) -> Result<ModelConfig> {
     Ok(match name {
         "tiny" => ModelConfig {
@@ -68,6 +71,7 @@ pub fn model_preset(name: &str) -> Result<ModelConfig> {
 /// Hardware profile for the simulation-mode cost model.
 #[derive(Debug, Clone, PartialEq)]
 pub struct HardwareProfile {
+    /// Profile name (`rtx4090_pcie` | `rtx3080_pcie` | `nvlink`).
     pub name: String,
     /// Effective dense f16 throughput per GPU, FLOP/s (well below peak —
     /// DiT inference at moderate batch reaches a fraction of the spec
@@ -89,6 +93,8 @@ pub struct HardwareProfile {
     pub sat_tokens: f64,
 }
 
+/// Look up a hardware profile by name (the paper's two PCIe testbeds
+/// plus a hypothetical NVLink box for the §10 discussion).
 pub fn hardware_profile(name: &str) -> Result<HardwareProfile> {
     Ok(match name {
         // RTX 4090, PCIe 4.0 x16 (~25 GB/s pairwise effective). Dense

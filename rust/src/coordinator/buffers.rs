@@ -14,8 +14,11 @@ use crate::tensor::Tensor;
 /// paper scales by the STALE scores, §9 "Expert Score Scaling").
 #[derive(Debug, Clone)]
 pub struct PendingDispatch {
+    /// The MoE input activations ([tokens, D]).
     pub xin: Tensor,
+    /// The routing decisions (and stale scores) that travel with it.
     pub routing: RoutingTable,
+    /// Diffusion step the payload was captured at.
     pub captured_step: usize,
 }
 
@@ -23,7 +26,9 @@ pub struct PendingDispatch {
 /// captured at `captured_step`.
 #[derive(Debug, Clone)]
 pub struct PendingCombine {
+    /// The scattered expert output ([tokens, D]).
     pub moe_out: Tensor,
+    /// Diffusion step the inputs were captured at.
     pub captured_step: usize,
 }
 
@@ -37,6 +42,7 @@ pub struct BufferManager {
 }
 
 impl BufferManager {
+    /// Empty buffer slots for `n_layers` layers.
     pub fn new(n_layers: usize) -> BufferManager {
         BufferManager {
             dispatch: (0..n_layers).map(|_| None).collect(),
@@ -82,16 +88,20 @@ impl BufferManager {
         std::mem::replace(&mut self.combine[layer], new)
     }
 
+    /// The in-flight combine of a layer, if any.
     pub fn peek_combine(&self, layer: usize) -> Option<&PendingCombine> {
         self.combine[layer].as_ref()
     }
+    /// The in-flight dispatch of a layer, if any.
     pub fn peek_dispatch(&self, layer: usize) -> Option<&PendingDispatch> {
         self.dispatch[layer].as_ref()
     }
 
+    /// Bytes currently held across all slots.
     pub fn live_bytes(&self) -> usize {
         self.live_bytes
     }
+    /// High-water mark of `live_bytes` over the run.
     pub fn peak_bytes(&self) -> usize {
         self.peak_bytes
     }

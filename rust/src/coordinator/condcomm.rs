@@ -26,6 +26,7 @@ pub struct CondCommCache {
 }
 
 impl CondCommCache {
+    /// Empty cache for `n_tokens` × `n_experts` slots of width `d_model`.
     pub fn new(n_tokens: usize, n_experts: usize, d_model: usize) -> CondCommCache {
         CondCommCache {
             d_model,
@@ -39,6 +40,7 @@ impl CondCommCache {
         token * self.n_experts + expert
     }
 
+    /// The cached expert output for (token, expert), if present.
     pub fn get(&self, token: usize, expert: usize) -> Option<&[f32]> {
         let s = &self.slots[self.idx(token, expert)];
         if s.is_empty() {
@@ -48,6 +50,7 @@ impl CondCommCache {
         }
     }
 
+    /// Store (or overwrite) the expert output for (token, expert).
     pub fn put(&mut self, token: usize, expert: usize, out: &[f32]) {
         debug_assert_eq!(out.len(), self.d_model);
         let i = self.idx(token, expert);
@@ -89,13 +92,16 @@ pub fn is_fresh(
 /// Outcome summary of one layer's conditional-communication filter.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct CommStats {
+    /// (token, expert) pairs transmitted fresh.
     pub fresh_entries: usize,
+    /// Pairs served from the cache instead of transmitted.
     pub reused_entries: usize,
     /// entries forced fresh because the cache had no value yet.
     pub forced_fresh: usize,
 }
 
 impl CommStats {
+    /// Fraction of all pairs that went fresh (1.0 when nothing ran).
     pub fn fresh_fraction(&self) -> f64 {
         let total = self.fresh_entries + self.reused_entries;
         if total == 0 {
@@ -104,6 +110,7 @@ impl CommStats {
             self.fresh_entries as f64 / total as f64
         }
     }
+    /// Accumulate another layer's stats into this one.
     pub fn merge(&mut self, o: &CommStats) {
         self.fresh_entries += o.fresh_entries;
         self.reused_entries += o.reused_entries;

@@ -36,15 +36,20 @@ use crate::tensor::{ops, Tensor};
 /// Engine configuration for one run.
 #[derive(Debug, Clone, Copy)]
 pub struct EngineConfig {
+    /// Base parallelism strategy (Algorithms 1–4 / baselines).
     pub strategy: Strategy,
+    /// DICE refinements layered on the strategy.
     pub opts: DiceOptions,
+    /// Logical device count.
     pub devices: usize,
 }
 
 /// Everything a run reports besides the samples.
 #[derive(Debug, Default)]
 pub struct RunStats {
+    /// Consumed-activation ages per (step, layer).
     pub staleness: StalenessLedger,
+    /// Conditional-communication fresh/reuse accounting.
     pub comm: CommStats,
     /// cross-device activation bytes actually transferred (dispatch +
     /// combine, or DFU shard exchange).
@@ -68,13 +73,18 @@ pub struct RunStats {
 /// The coordinator engine. Holds borrowed runtime + staged weights so
 /// many runs (sweeps, ablations) reuse one compile cache.
 pub struct Engine<'a> {
+    /// Artifact runtime the engine executes through.
     pub rt: &'a Runtime,
+    /// Pre-staged device weights.
     pub bank: &'a WeightBank,
+    /// Strategy + options + devices for this engine.
     pub cfg: EngineConfig,
     tile: usize,
 }
 
 impl<'a> Engine<'a> {
+    /// Bind an engine to a runtime + staged weights; validates that the
+    /// device count divides the expert count.
     pub fn new(rt: &'a Runtime, bank: &'a WeightBank, cfg: EngineConfig) -> Result<Engine<'a>> {
         let tile = rt
             .manifest

@@ -16,10 +16,15 @@ use crate::netsim::{CostModel, Workload};
 /// Memory breakdown per device (bytes).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct MemReport {
+    /// Resident parameter bytes.
     pub params: f64,
+    /// Peak activation working set.
     pub activations: f64,
+    /// Staleness / sequence-parallel buffer bytes.
     pub buffers: f64,
+    /// Total including the fixed runtime overhead.
     pub total: f64,
+    /// Whether `total` exceeds the profile's device memory.
     pub oom: bool,
 }
 
@@ -33,6 +38,7 @@ pub struct SimReport {
     /// share of the makespan the comm stream spends in all-to-all /
     /// shard exchange (Table 5's metric).
     pub a2a_share: f64,
+    /// Per-device memory model outcome.
     pub mem: MemReport,
 }
 

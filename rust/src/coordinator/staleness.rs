@@ -12,10 +12,13 @@ pub struct StalenessLedger {
 }
 
 impl StalenessLedger {
+    /// Record that step `step`, layer `layer` consumed activations of
+    /// the given age (in diffusion steps).
     pub fn record(&mut self, step: usize, layer: usize, age: usize) {
         self.records.push((step, layer, age));
     }
 
+    /// Whether nothing has been recorded.
     pub fn is_empty(&self) -> bool {
         self.records.is_empty()
     }

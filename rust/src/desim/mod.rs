@@ -17,7 +17,9 @@ use std::collections::BTreeMap;
 /// Which serial resource an op occupies.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Resource {
+    /// The device's compute stream (kernels).
     Compute,
+    /// The device's communication stream (collectives, copies).
     Comm,
 }
 
@@ -43,8 +45,11 @@ pub struct Sim {
 /// Result of a simulation run.
 #[derive(Debug)]
 pub struct Schedule {
+    /// Finish time of each op, indexed by insertion order.
     pub finish: Vec<f64>,
+    /// Start time of each op, indexed by insertion order.
     pub start: Vec<f64>,
+    /// Completion time of the whole schedule.
     pub makespan: f64,
     /// busy seconds per (device, resource).
     pub busy: BTreeMap<(usize, Resource), f64>,
@@ -53,6 +58,7 @@ pub struct Schedule {
 }
 
 impl Sim {
+    /// Empty simulator.
     pub fn new() -> Sim {
         Sim::default()
     }
@@ -86,9 +92,11 @@ impl Sim {
         self.add(device, Resource::Compute, 0.0, deps, "join")
     }
 
+    /// Number of ops added so far.
     pub fn len(&self) -> usize {
         self.ops.len()
     }
+    /// Whether no ops have been added.
     pub fn is_empty(&self) -> bool {
         self.ops.is_empty()
     }
@@ -131,9 +139,11 @@ impl Sim {
 }
 
 impl Schedule {
+    /// Finish time of a specific op.
     pub fn finish_of(&self, op: OpId) -> f64 {
         self.finish[op.0]
     }
+    /// Start time of a specific op.
     pub fn start_of(&self, op: OpId) -> f64 {
         self.start[op.0]
     }

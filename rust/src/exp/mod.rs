@@ -19,8 +19,11 @@ use crate::tensor::stf::StfFile;
 
 /// Shared experiment context: runtime + staged weights + metric refs.
 pub struct Ctx {
+    /// Artifact runtime.
     pub rt: Runtime,
+    /// Pre-staged device weights.
     pub bank: WeightBank,
+    /// FID/sFID reference moments + real features.
     pub refs: StfFile,
 }
 

@@ -10,7 +10,9 @@ use crate::benchkit::Table;
 use crate::config::{obj, DiceOptions, Json, Strategy};
 use crate::coordinator::{Engine, EngineConfig};
 
+/// Routing-similarity heatmap for one probe layer.
 pub struct SimilarityResult {
+    /// The probed layer.
     pub layer: usize,
     /// [steps x steps] similarity matrix, row-major.
     pub matrix: Vec<Vec<f32>>,

@@ -33,6 +33,7 @@ fn points() -> Vec<(&'static str, Strategy, DiceOptions)> {
     ]
 }
 
+/// Figure 10: the latency–quality scatter (OOM points unplotted).
 pub fn fig10(ctx: &Ctx, n_samples: usize, steps: usize, warmup: usize, seed: u64) -> Result<(Table, Json)> {
     let cm = CostModel::new(
         model_preset("xl")?,

@@ -12,10 +12,14 @@
 //!   conditional communication, the serving stack, and the evaluation
 //!   harness that regenerates every table and figure of the paper.
 //!
-//! The offline crate universe is tiny (the `xla` closure plus `anyhow` /
-//! `thiserror` / `once_cell`), so the usual ecosystem pieces — CLI parsing,
-//! config, tensors, dense linalg, RNG, metrics, property-test and bench
-//! harnesses — are implemented in-tree as substrates (see DESIGN.md §4).
+//! The offline crate universe is tiny (the in-tree `xla` stub crate plus
+//! `anyhow` / `thiserror` / `once_cell`), so the usual ecosystem pieces —
+//! CLI parsing, config, tensors, dense linalg, RNG, metrics, property-test
+//! and bench harnesses — are implemented in-tree as substrates (see
+//! DESIGN.md §4). The serving stack that fronts the engine is described
+//! in DESIGN.md §6.
+
+#![warn(missing_docs)]
 
 pub mod benchkit;
 pub mod cli;

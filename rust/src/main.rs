@@ -3,7 +3,10 @@
 //! Subcommands:
 //!   info                       artifact + model summary
 //!   generate [...]             generate a batch with a chosen strategy
-//!   serve [...]                run the serving loop on a Poisson trace
+//!   serve [...]                run the serving loop on a workload
+//!                              scenario (real numerics over artifacts,
+//!                              or `--sim` for cost-model-only serving
+//!                              that needs no artifacts)
 //!   sim [...]                  paper-scale virtual-time what-ifs
 //!   exp <name> [...]           run an experiment driver (table1, table2,
 //!                              table3, table4, table5, fig2, fig4, fig9,
@@ -17,18 +20,23 @@ use dice::config::{hardware_profile, model_preset, DiceOptions, SelectiveSync, S
 use dice::coordinator::{simulate, Engine, EngineConfig};
 use dice::exp::{self, Ctx};
 use dice::netsim::{CostModel, Workload};
-use dice::server::{serve, BatchPolicy};
-use dice::workload::poisson_trace;
+use dice::server::{serve_sim, serve_with, AdmissionPolicy, BatchPolicy, EngineExecutor, ServeConfig};
+use dice::workload::{scenarios, Scenario};
 
 fn usage() -> String {
-    "usage: dice <info|generate|serve|sim|exp> [--help]\n\
-     \n\
-     dice generate --strategy interweaved --samples 32 --steps 50 \\\n\
-                   --selective deep --condcomm low --warmup 4\n\
-     dice serve    --requests 64 --rate 2.0 --strategy interweaved\n\
-     dice sim      --model xl --hw rtx4090_pcie --batch 16 --devices 8\n\
-     dice exp      table1 --samples 256\n"
-        .to_string()
+    format!(
+        "usage: dice <info|generate|serve|sim|exp> [--help]\n\
+         \n\
+         dice generate --strategy interweaved --samples 32 --steps 50 \\\n\
+         \x20             --selective deep --condcomm low --warmup 4\n\
+         dice serve    --requests 64 --rate 2.0 --strategy interweaved \\\n\
+         \x20             --scenario steady [--sim] [--queue-cap N] [--slo SECONDS]\n\
+         dice sim      --model xl --hw rtx4090_pcie --batch 16 --devices 8\n\
+         dice exp      table1 --samples 256\n\
+         \n\
+         serve scenarios:\n{}",
+        scenarios::catalog()
+    )
 }
 
 fn opts_from(a: &Args) -> Result<DiceOptions> {
@@ -92,42 +100,56 @@ fn main() -> Result<()> {
             );
         }
         "serve" => {
-            let ctx = Ctx::open()?;
             let strategy = Strategy::parse(&a.str_or("strategy", "interweaved"))?;
-            let eng = Engine::new(
-                &ctx.rt,
-                &ctx.bank,
-                EngineConfig {
-                    strategy,
-                    opts: opts_from(&a)?,
-                    devices: a.usize_or("devices", 4),
-                },
-            )?;
+            let rate = a.f64_or("rate", 2.0);
+            let scenario = Scenario::parse(&a.str_or("scenario", "steady"), rate)?;
+            let n_requests = a.usize_or("requests", 64);
             let cm = CostModel::new(
-                model_preset("xl")?,
+                model_preset(&a.str_or("model", "xl"))?,
                 hardware_profile(&a.str_or("hw", "rtx4090_pcie"))?,
             );
-            let trace = poisson_trace(
-                a.usize_or("requests", 64),
-                a.f64_or("rate", 2.0),
-                ctx.rt.model.n_classes,
-                a.u64_or("seed", 42),
-            );
-            let rep = serve(
-                &eng,
-                &cm,
-                &trace,
-                BatchPolicy {
-                    max_global: a.usize_or("max-batch", 32),
-                    max_wait: a.f64_or("max-wait", 3.0),
-                },
-                a.usize_or("steps", 50),
-                7,
-            )?;
+            let policy = BatchPolicy {
+                max_global: a.usize_or("max-batch", 32),
+                max_wait: a.f64_or("max-wait", 3.0),
+            };
+            let mut cfg = ServeConfig::new(policy, a.usize_or("steps", 50), 7)
+                .with_slo(a.f64_or("slo", f64::INFINITY));
+            let cap = a.usize_or("queue-cap", usize::MAX);
+            if cap != usize::MAX {
+                cfg = cfg.with_admission(AdmissionPolicy::bounded(cap));
+            }
+            let rep = if a.flag("sim") {
+                // Cost-model-only serving: no artifacts required.
+                let trace = scenario.trace(n_requests, cm.model.n_classes, a.u64_or("seed", 42));
+                serve_sim(
+                    &cm,
+                    strategy,
+                    opts_from(&a)?,
+                    a.usize_or("devices", 8),
+                    &trace,
+                    cfg,
+                )?
+            } else {
+                let ctx = Ctx::open()?;
+                let eng = Engine::new(
+                    &ctx.rt,
+                    &ctx.bank,
+                    EngineConfig {
+                        strategy,
+                        opts: opts_from(&a)?,
+                        devices: a.usize_or("devices", 4),
+                    },
+                )?;
+                let trace = scenario.trace(n_requests, ctx.rt.model.n_classes, a.u64_or("seed", 42));
+                let mut ex = EngineExecutor::new(&eng, &cm);
+                serve_with(&mut ex, &trace, cfg)?
+            };
             println!("{}", rep.metrics.render());
             println!(
-                "throughput {:.2} req/s over {:.1}s virtual",
-                rep.throughput, rep.span
+                "[{} x {}] {}",
+                scenario.name(),
+                strategy.name(),
+                rep.summary_line()
             );
         }
         "sim" => {

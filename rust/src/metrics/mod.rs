@@ -49,6 +49,7 @@ impl Histogram {
         b.min(self.buckets.len() - 1)
     }
 
+    /// Record one observation.
     pub fn record(&mut self, v: f64) {
         let b = self.bucket_of(v);
         self.buckets[b] += 1;
@@ -58,9 +59,11 @@ impl Histogram {
         self.min_seen = self.min_seen.min(v);
     }
 
+    /// Number of recorded observations.
     pub fn count(&self) -> u64 {
         self.count
     }
+    /// Mean of all observations (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -68,6 +71,7 @@ impl Histogram {
             self.sum / self.count as f64
         }
     }
+    /// Largest observation (0 when empty).
     pub fn max(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -75,6 +79,7 @@ impl Histogram {
             self.max_seen
         }
     }
+    /// Smallest observation (0 when empty).
     pub fn min(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -107,28 +112,34 @@ impl Histogram {
 /// Named counters + histograms.
 #[derive(Default, Debug)]
 pub struct Registry {
+    /// Monotonic counters by name.
     pub counters: BTreeMap<String, u64>,
+    /// Streaming histograms by name.
     pub hists: BTreeMap<String, Histogram>,
 }
 
 impl Registry {
+    /// Increment the named counter by `by` (creating it at 0).
     pub fn inc(&mut self, name: &str, by: u64) {
         *self.counters.entry(name.to_string()).or_default() += by;
     }
+    /// Record an observation into the named histogram (creating it).
     pub fn observe(&mut self, name: &str, v: f64) {
         self.hists
             .entry(name.to_string())
             .or_default()
             .record(v);
     }
+    /// Current value of a counter (0 when absent).
     pub fn counter(&self, name: &str) -> u64 {
         self.counters.get(name).copied().unwrap_or(0)
     }
+    /// The named histogram, if any observation was recorded.
     pub fn hist(&self, name: &str) -> Option<&Histogram> {
         self.hists.get(name)
     }
 
-    /// Human-readable dump (examples/serve_trace report).
+    /// Human-readable dump (the `dice serve` report).
     pub fn render(&self) -> String {
         let mut s = String::new();
         for (k, v) in &self.counters {
@@ -136,10 +147,11 @@ impl Registry {
         }
         for (k, h) in &self.hists {
             s.push_str(&format!(
-                "{k:<40} n={} mean={:.6} p50={:.6} p99={:.6} max={:.6}\n",
+                "{k:<40} n={} mean={:.6} p50={:.6} p95={:.6} p99={:.6} max={:.6}\n",
                 h.count(),
                 h.mean(),
                 h.percentile(50.0),
+                h.percentile(95.0),
                 h.percentile(99.0),
                 h.max()
             ));

@@ -9,18 +9,23 @@ use crate::tensor::{ops, Tensor};
 /// (device d owns experts [d·E/D, (d+1)·E/D)).
 #[derive(Debug, Clone, Copy)]
 pub struct Placement {
+    /// Total routed experts.
     pub n_experts: usize,
+    /// Devices the experts are sharded over.
     pub devices: usize,
 }
 
 impl Placement {
+    /// Contiguous-block placement; panics unless devices divides experts.
     pub fn new(n_experts: usize, devices: usize) -> Placement {
         assert!(n_experts % devices == 0, "experts {n_experts} % devices {devices} != 0");
         Placement { n_experts, devices }
     }
+    /// Device that owns `expert`.
     pub fn owner(&self, expert: usize) -> usize {
         expert / (self.n_experts / self.devices)
     }
+    /// The expert-id range a device owns.
     pub fn experts_of(&self, device: usize) -> std::ops::Range<usize> {
         let per = self.n_experts / self.devices;
         device * per..(device + 1) * per
@@ -34,8 +39,11 @@ impl Placement {
 /// stable across diffusion steps, can key on them directly.
 #[derive(Debug, Clone)]
 pub struct RoutingTable {
+    /// Tokens routed (global flat count).
     pub n_tokens: usize,
+    /// Experts chosen per token.
     pub top_k: usize,
+    /// Total experts the router chose from.
     pub n_experts: usize,
     /// [n_tokens * top_k] expert ids, rank-major per token (rank 0 first).
     pub experts: Vec<usize>,
@@ -93,9 +101,13 @@ impl RoutingTable {
 /// conditional communication).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DispatchEntry {
+    /// Global flat token index.
     pub token: usize,
+    /// Destination expert id.
     pub expert: usize,
+    /// Position in the token's top-k (0 = top-1).
     pub rank: usize,
+    /// Router score the combine scales by.
     pub score: f32,
     /// device that owns the token (source of the dispatch transfer).
     pub src_device: usize,
@@ -104,6 +116,7 @@ pub struct DispatchEntry {
 /// A dispatch plan groups entries per expert (the all-to-all payload).
 #[derive(Debug, Clone, Default)]
 pub struct DispatchPlan {
+    /// Entries grouped by destination expert.
     pub per_expert: Vec<Vec<DispatchEntry>>,
 }
 
@@ -126,6 +139,7 @@ impl DispatchPlan {
         DispatchPlan { per_expert }
     }
 
+    /// Total (token, expert) assignments in the plan.
     pub fn total_entries(&self) -> usize {
         self.per_expert.iter().map(Vec::len).sum()
     }

@@ -17,12 +17,16 @@ pub const ELEM_BYTES: f64 = 2.0;
 /// images per device with `tokens` tokens per image.
 #[derive(Debug, Clone, Copy)]
 pub struct Workload {
+    /// Images per device.
     pub local_batch: usize,
+    /// GPU count.
     pub devices: usize,
+    /// Tokens per image.
     pub tokens: usize,
 }
 
 impl Workload {
+    /// Total images in flight (local_batch × devices).
     pub fn global_batch(&self) -> usize {
         self.local_batch * self.devices
     }
@@ -53,11 +57,14 @@ pub struct LayerCosts {
 /// Analytic cost model.
 #[derive(Debug, Clone)]
 pub struct CostModel {
+    /// Model architecture being priced.
     pub model: ModelConfig,
+    /// Hardware profile the costs are calibrated to.
     pub hw: HardwareProfile,
 }
 
 impl CostModel {
+    /// Bind a model architecture to a hardware profile.
     pub fn new(model: ModelConfig, hw: HardwareProfile) -> CostModel {
         CostModel { model, hw }
     }

@@ -22,14 +22,20 @@ use crate::tensor::{ops, stf::StfFile, Tensor};
 /// The five reported metrics.
 #[derive(Debug, Clone, Copy)]
 pub struct QualityReport {
+    /// FID proxy (pooled features).
     pub fid: f32,
+    /// sFID proxy (spatial features).
     pub sfid: f32,
+    /// Inception-Score proxy.
     pub is_score: f32,
+    /// Kynkäänniemi precision.
     pub precision: f32,
+    /// Kynkäänniemi recall.
     pub recall: f32,
 }
 
 impl QualityReport {
+    /// The five metrics formatted as table cells.
     pub fn row(&self) -> Vec<String> {
         vec![
             format!("{:.2}", self.fid),

@@ -28,6 +28,7 @@ impl Rng {
         }
     }
 
+    /// Next raw 64-bit output of the generator.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[0]
@@ -76,6 +77,7 @@ impl Rng {
         }
     }
 
+    /// Standard-normal draw narrowed to f32.
     pub fn normal_f32(&mut self) -> f32 {
         self.normal() as f32
     }

@@ -21,18 +21,23 @@ use crate::tensor::{stf::StfFile, Tensor};
 
 /// Device-resident weights, grouped per call site.
 pub struct WeightBank {
+    /// embed-module weight args.
     pub embed: Vec<xla::PjRtBuffer>,
+    /// cond-module weight args.
     pub cond: Vec<xla::PjRtBuffer>,
     /// per layer: block_pre weight args
     pub block_pre: Vec<Vec<xla::PjRtBuffer>>,
     /// per layer: block_post weight args
     pub block_post: Vec<Vec<xla::PjRtBuffer>>,
+    /// final-module weight args.
     pub final_: Vec<xla::PjRtBuffer>,
     /// per layer: stacked expert weights (moe_dense / dfu)
     pub stacked: Vec<Vec<xla::PjRtBuffer>>,
     /// per layer, per expert: expert_tile weight args
     pub experts: Vec<Vec<Vec<xla::PjRtBuffer>>>,
+    /// feature-net weight args (quality metrics).
     pub featnet: Vec<xla::PjRtBuffer>,
+    /// classifier weight args (quality metrics).
     pub classifier: Vec<xla::PjRtBuffer>,
     /// Host copies of router probs scalers etc. kept for byte accounting.
     pub param_bytes: usize,
@@ -59,6 +64,8 @@ fn stack(rt: &Runtime, w: &StfFile, layer: usize, field: &str, n_experts: usize,
 }
 
 impl WeightBank {
+    /// Upload every weight group from an STF file to device buffers
+    /// (once per process; the hot loop reuses them every step).
     pub fn stage(rt: &Runtime, w: &StfFile) -> Result<WeightBank> {
         let m = &rt.model;
         let mut bytes = 0usize;

@@ -28,7 +28,9 @@ pub use artifacts::WeightBank;
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
+    /// Parsed `manifest.json` (module inventory + export config).
     pub manifest: Json,
+    /// Model architecture the artifacts were exported at.
     pub model: ModelConfig,
     /// module name -> compiled executable (compiled lazily, cached).
     exes: RefCell<BTreeMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
@@ -54,10 +56,12 @@ impl Runtime {
         })
     }
 
+    /// The underlying PJRT client.
     pub fn client(&self) -> &xla::PjRtClient {
         &self.client
     }
 
+    /// The artifact directory this runtime was opened on.
     pub fn artifact_dir(&self) -> &Path {
         &self.dir
     }

@@ -16,13 +16,21 @@ pub struct JobResult {
     pub samples: Tensor,
     /// labels aligned with samples.
     pub labels: Vec<usize>,
+    /// Cross-device activation bytes transferred across all runs.
     pub fresh_bytes: usize,
+    /// Bytes avoided by conditional communication across all runs.
     pub saved_bytes: usize,
+    /// Peak staleness-buffer bytes over all runs.
     pub peak_buffer_bytes: usize,
+    /// Peak DistriFusion full-sequence buffer bytes over all runs.
     pub dfu_buffer_bytes: usize,
+    /// Mean consumed-activation age (post-warmup), in diffusion steps.
     pub mean_staleness: f64,
+    /// Max consumed-activation age (post-warmup), in diffusion steps.
     pub max_staleness: usize,
+    /// Total PJRT executions issued.
     pub exec_calls: u64,
+    /// Fraction of (token, expert) pairs transmitted fresh.
     pub fresh_fraction: f64,
     /// per-layer mean staleness (probe for Sec. 4.2).
     pub per_layer_staleness: Vec<f64>,

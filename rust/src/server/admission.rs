@@ -1,0 +1,188 @@
+//! Admission control: a bounded FIFO request queue with shed-on-full
+//! backpressure.
+//!
+//! A serving system that "absorbs heavy traffic" cannot let its queue
+//! grow without bound — under sustained overload an unbounded queue
+//! turns every request's latency into the age of the backlog. The
+//! controller therefore rejects arrivals once the queue holds
+//! `capacity` requests; rejected requests are counted (and surfaced as
+//! the `rejected` counter / [`crate::server::ServeReport`] field) so
+//! goodput under overload is measurable rather than silently inflated.
+//!
+//! The legacy [`crate::server::serve`] entry point uses
+//! [`AdmissionPolicy::unbounded`], which preserves the original
+//! "every request is eventually served" contract relied on by the
+//! integration tests.
+
+use std::collections::VecDeque;
+
+use crate::workload::Request;
+
+/// Queueing policy for the admission controller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdmissionPolicy {
+    /// Maximum number of requests the pending queue may hold. Arrivals
+    /// beyond this are shed. `usize::MAX` means unbounded.
+    pub capacity: usize,
+}
+
+impl AdmissionPolicy {
+    /// No backpressure: every offered request is admitted.
+    pub fn unbounded() -> AdmissionPolicy {
+        AdmissionPolicy {
+            capacity: usize::MAX,
+        }
+    }
+
+    /// Bounded queue of at least one slot (a zero-capacity queue could
+    /// never serve anything, so the bound is clamped to 1).
+    pub fn bounded(capacity: usize) -> AdmissionPolicy {
+        AdmissionPolicy {
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Whether this policy ever sheds load.
+    pub fn is_bounded(&self) -> bool {
+        self.capacity != usize::MAX
+    }
+}
+
+impl Default for AdmissionPolicy {
+    fn default() -> AdmissionPolicy {
+        AdmissionPolicy::unbounded()
+    }
+}
+
+/// Bounded FIFO queue with admit/reject accounting.
+#[derive(Debug)]
+pub struct AdmissionController {
+    policy: AdmissionPolicy,
+    queue: VecDeque<Request>,
+    admitted: usize,
+    rejected: usize,
+}
+
+impl AdmissionController {
+    /// Fresh controller with an empty queue.
+    pub fn new(policy: AdmissionPolicy) -> AdmissionController {
+        AdmissionController {
+            policy,
+            queue: VecDeque::new(),
+            admitted: 0,
+            rejected: 0,
+        }
+    }
+
+    /// Offer an arriving request. Returns `true` if admitted, `false`
+    /// if shed because the queue is at capacity.
+    pub fn offer(&mut self, r: Request) -> bool {
+        if self.queue.len() >= self.policy.capacity {
+            self.rejected += 1;
+            false
+        } else {
+            self.queue.push_back(r);
+            self.admitted += 1;
+            true
+        }
+    }
+
+    /// Pop up to `n` requests in arrival order.
+    pub fn take(&mut self, n: usize) -> Vec<Request> {
+        let k = n.min(self.queue.len());
+        self.queue.drain(..k).collect()
+    }
+
+    /// Arrival time of the oldest queued request, if any.
+    pub fn oldest_arrival(&self) -> Option<f64> {
+        self.queue.front().map(|r| r.arrival)
+    }
+
+    /// Requests currently queued.
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Whether the queue is empty.
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Total requests admitted so far.
+    pub fn admitted(&self) -> usize {
+        self.admitted
+    }
+
+    /// Total requests shed so far.
+    pub fn rejected(&self) -> usize {
+        self.rejected
+    }
+
+    /// Queue fill fraction in [0, 1]; 0 for unbounded policies.
+    pub fn occupancy(&self) -> f64 {
+        if self.policy.is_bounded() {
+            self.queue.len() as f64 / self.policy.capacity as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: usize, arrival: f64) -> Request {
+        Request {
+            id,
+            label: 0,
+            arrival,
+        }
+    }
+
+    #[test]
+    fn unbounded_admits_everything() {
+        let mut c = AdmissionController::new(AdmissionPolicy::unbounded());
+        for i in 0..10_000 {
+            assert!(c.offer(req(i, i as f64)));
+        }
+        assert_eq!(c.admitted(), 10_000);
+        assert_eq!(c.rejected(), 0);
+        assert_eq!(c.occupancy(), 0.0);
+    }
+
+    #[test]
+    fn bounded_sheds_when_full() {
+        let mut c = AdmissionController::new(AdmissionPolicy::bounded(2));
+        assert!(c.offer(req(0, 0.0)));
+        assert!(c.offer(req(1, 0.1)));
+        assert!(!c.offer(req(2, 0.2)), "third arrival must be shed");
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.rejected(), 1);
+        assert!((c.occupancy() - 1.0).abs() < 1e-12);
+        // draining frees capacity again
+        let taken = c.take(1);
+        assert_eq!(taken[0].id, 0);
+        assert!(c.offer(req(3, 0.3)));
+    }
+
+    #[test]
+    fn take_is_fifo_and_clamped() {
+        let mut c = AdmissionController::new(AdmissionPolicy::unbounded());
+        for i in 0..5 {
+            c.offer(req(i, i as f64));
+        }
+        let first = c.take(3);
+        assert_eq!(first.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        let rest = c.take(10); // clamped to what's left
+        assert_eq!(rest.len(), 2);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let p = AdmissionPolicy::bounded(0);
+        assert_eq!(p.capacity, 1);
+        assert!(p.is_bounded());
+    }
+}

@@ -1,0 +1,173 @@
+//! Multi-bucket dynamic batcher.
+//!
+//! The AOT artifacts exist only at a fixed set of per-device batch
+//! buckets (`manifest.json` → `ep_batch_buckets`), so the batcher's job
+//! is shape selection: given the pending-queue depth, pick the global
+//! batch (devices × local bucket) to dispatch. The policy is
+//! smallest-bucket-that-fits — equivalently the largest *usable* shape
+//! once pending work saturates the cap — bounded by
+//! [`BatchPolicy::max_global`]; a partial batch is padded up to the
+//! bucket with filler samples whose outputs are dropped.
+//!
+//! Time-based dispatch (the `max_wait` deadline) lives in the serve
+//! loop; this module is pure shape arithmetic so it can be tested
+//! exhaustively without a trace.
+
+/// Batch-formation policy for the serve loop.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Max global batch (devices × largest usable local bucket).
+    pub max_global: usize,
+    /// Max virtual seconds the oldest pending request may wait before a
+    /// partial batch is dispatched. `0.0` dispatches immediately with
+    /// whatever has arrived.
+    pub max_wait: f64,
+}
+
+impl BatchPolicy {
+    /// The defaults used by the CLI and examples (global cap 32, 3 s
+    /// coalescing window).
+    pub fn standard() -> BatchPolicy {
+        BatchPolicy {
+            max_global: 32,
+            max_wait: 3.0,
+        }
+    }
+}
+
+/// Pick the smallest exported local bucket whose global size fits `n`
+/// pending requests (or the largest available if `n` exceeds all).
+///
+/// Thin one-shot wrapper over [`Batcher`] (the single home of the
+/// selection logic). Panics if no bucket yields a global size within
+/// `max_global`.
+pub fn pick_bucket(buckets: &[usize], devices: usize, pending: usize, max_global: usize) -> usize {
+    Batcher::new(
+        buckets.to_vec(),
+        devices,
+        BatchPolicy {
+            max_global,
+            max_wait: 0.0,
+        },
+    )
+    .global_bucket(pending)
+}
+
+/// Shape-bucket selector bound to one artifact set + policy.
+#[derive(Debug, Clone)]
+pub struct Batcher {
+    /// Usable global batch sizes, ascending (precomputed once).
+    usable: Vec<usize>,
+    policy: BatchPolicy,
+}
+
+impl Batcher {
+    /// Build a batcher over the exported local `buckets` for `devices`
+    /// logical devices. Panics unless at least one bucket is usable
+    /// under `policy.max_global`.
+    pub fn new(buckets: Vec<usize>, devices: usize, policy: BatchPolicy) -> Batcher {
+        assert!(!buckets.is_empty(), "no batch buckets exported");
+        let mut usable: Vec<usize> = buckets
+            .iter()
+            .map(|&b| b * devices)
+            .filter(|&g| g <= policy.max_global)
+            .collect();
+        usable.sort();
+        assert!(
+            !usable.is_empty(),
+            "no bucket fits: local buckets {buckets:?} x {devices} devices all exceed max_global {}",
+            policy.max_global
+        );
+        Batcher { usable, policy }
+    }
+
+    /// All usable global batch sizes, ascending.
+    pub fn usable_globals(&self) -> Vec<usize> {
+        self.usable.clone()
+    }
+
+    /// Global batch to dispatch for `pending` queued requests: the
+    /// smallest usable global that fits, or the largest one when the
+    /// backlog exceeds every bucket.
+    pub fn global_bucket(&self, pending: usize) -> usize {
+        for &g in &self.usable {
+            if pending <= g {
+                return g;
+            }
+        }
+        *self.usable.last().expect("validated in new")
+    }
+
+    /// The policy this batcher was built with.
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Padded slots a dispatch of `pending` requests would waste.
+    pub fn padding_for(&self, pending: usize) -> usize {
+        let g = self.global_bucket(pending);
+        g.saturating_sub(pending)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_selection() {
+        let buckets = vec![1, 2, 4, 8, 32];
+        // 4 devices: global sizes 4, 8, 16, 32, 128 (capped at 32)
+        assert_eq!(pick_bucket(&buckets, 4, 3, 32), 4);
+        assert_eq!(pick_bucket(&buckets, 4, 4, 32), 4);
+        assert_eq!(pick_bucket(&buckets, 4, 5, 32), 8);
+        assert_eq!(pick_bucket(&buckets, 4, 20, 32), 32);
+        assert_eq!(pick_bucket(&buckets, 4, 100, 32), 32);
+    }
+
+    #[test]
+    fn bucket_never_exceeds_cap() {
+        let buckets = vec![1, 2, 4, 8, 32];
+        for pending in 1..200 {
+            let g = pick_bucket(&buckets, 4, pending, 16);
+            assert!(g <= 16);
+        }
+    }
+
+    #[test]
+    fn batcher_globals_and_padding() {
+        let b = Batcher::new(
+            vec![1, 2, 4, 8, 32],
+            4,
+            BatchPolicy {
+                max_global: 32,
+                max_wait: 1.0,
+            },
+        );
+        assert_eq!(b.usable_globals(), vec![4, 8, 16, 32]);
+        assert_eq!(b.global_bucket(1), 4);
+        assert_eq!(b.padding_for(1), 3, "single request pads a 4-slot bucket");
+        assert_eq!(b.padding_for(16), 0);
+        assert_eq!(b.padding_for(100), 0, "overflow takes the largest bucket fully");
+    }
+
+    #[test]
+    #[should_panic(expected = "no bucket fits")]
+    fn batcher_rejects_unusable_config() {
+        Batcher::new(
+            vec![8, 32],
+            8,
+            BatchPolicy {
+                max_global: 4,
+                max_wait: 1.0,
+            },
+        );
+    }
+
+    #[test]
+    fn standard_policy() {
+        let p = BatchPolicy::standard();
+        assert_eq!(p.max_global, 32);
+        assert!(p.max_wait > 0.0);
+    }
+}

@@ -1,202 +1,39 @@
-//! Serving stack: dynamic batcher over the exported shape buckets plus a
-//! virtual-time serve loop.
+//! The serving stack (DESIGN.md §6): admission control → dynamic
+//! batching → virtual-time serve loop → latency/goodput reporting.
 //!
-//! Requests arrive on a trace; the batcher forms global batches (devices
-//! × local-bucket) under a max-wait deadline; the engine generates the
-//! batch with REAL numerics while the per-batch latency is taken from
-//! the strategy's virtual-time simulation at the served scale — wall
-//! clock on this 1-core host measures the host CPU, not the modelled
-//! 8-GPU testbed (DESIGN.md §2).
+//! The subsystem is split by concern:
+//!
+//! * [`admission`] — bounded FIFO request queue with shed-on-full
+//!   backpressure and admit/reject accounting.
+//! * [`batcher`] — multi-bucket dynamic batcher over the exported
+//!   shape buckets ([`BatchPolicy`], [`Batcher`]).
+//! * [`serve_loop`] — the virtual-time loop, generic over a
+//!   [`BatchExecutor`]: [`EngineExecutor`] runs REAL numerics over the
+//!   AOT artifacts, [`SimExecutor`] replays the same queueing dynamics
+//!   against the cost model alone (runs on a clean checkout).
+//! * [`report`] — [`ServeReport`] with p50/p95/p99 latency, throughput
+//!   and SLO goodput, plus the cross-strategy comparison table.
+//!
+//! Batches are generated with real numerics where artifacts exist,
+//! while per-batch latency always comes from the strategy's
+//! virtual-time simulation at the served scale — wall clock on this
+//! 1-core host measures the host CPU, not the modelled 8-GPU testbed
+//! (DESIGN.md §2).
+//!
+//! Workload scenarios (steady Poisson, diurnal ramp, burst-recovery)
+//! live in [`crate::workload::scenarios`] and feed traces into
+//! [`serve_with`] via the CLI (`dice serve`) and
+//! `examples/serve_trace.rs`.
 
-use anyhow::Result;
+pub mod admission;
+pub mod batcher;
+pub mod report;
+pub mod serve_loop;
 
-use crate::coordinator::{simulate, Engine};
-use crate::metrics::Registry;
-use crate::netsim::{CostModel, Workload};
-use crate::tensor::{ops, Tensor};
-use crate::workload::Request;
-
-/// Batcher policy.
-#[derive(Debug, Clone, Copy)]
-pub struct BatchPolicy {
-    /// max global batch (devices * largest usable bucket).
-    pub max_global: usize,
-    /// max seconds the oldest pending request may wait before a partial
-    /// batch is dispatched.
-    pub max_wait: f64,
-}
-
-/// One served batch (for inspection / tests).
-#[derive(Debug, Clone)]
-pub struct ServedBatch {
-    pub request_ids: Vec<usize>,
-    pub global_batch: usize,
-    pub start: f64,
-    pub end: f64,
-}
-
-/// Serve-loop outcome.
-pub struct ServeReport {
-    pub batches: Vec<ServedBatch>,
-    pub samples: Tensor,
-    pub labels: Vec<usize>,
-    pub metrics: Registry,
-    /// virtual seconds from first arrival to last completion.
-    pub span: f64,
-    pub throughput: f64,
-}
-
-/// Pick the smallest exported local bucket whose global size fits `n`
-/// pending requests (or the largest available if n exceeds all).
-fn pick_bucket(buckets: &[usize], devices: usize, pending: usize, max_global: usize) -> usize {
-    let mut usable: Vec<usize> = buckets
-        .iter()
-        .map(|&b| b * devices)
-        .filter(|&g| g <= max_global)
-        .collect();
-    usable.sort();
-    for &g in &usable {
-        if pending <= g {
-            return g;
-        }
-    }
-    *usable.last().expect("no usable bucket")
-}
-
-/// Run the virtual-time serve loop over a trace.
-///
-/// The engine generates every batch (numerics); `cm`/`steps` provide the
-/// per-batch virtual latency. Requests are padded to the bucket with
-/// filler samples when a deadline forces a partial batch; filler outputs
-/// are dropped.
-pub fn serve(
-    engine: &Engine,
-    cm: &CostModel,
-    trace: &[Request],
-    policy: BatchPolicy,
-    steps: usize,
-    seed: u64,
-) -> Result<ServeReport> {
-    let devices = engine.cfg.devices;
-    let buckets = engine.rt.batch_buckets();
-    // the DFU artifact exists only at global 32; EP buckets are local.
-    let mut now = 0.0f64;
-    let mut i = 0usize;
-    let mut batches = Vec::new();
-    let mut out_chunks: Vec<Tensor> = Vec::new();
-    let mut labels = Vec::new();
-    let mut metrics = Registry::default();
-
-    while i < trace.len() {
-        // wait for at least one request
-        now = now.max(trace[i].arrival);
-        // admit everything that has arrived by `now`
-        let mut pending_end = i;
-        while pending_end < trace.len() && trace[pending_end].arrival <= now {
-            pending_end += 1;
-        }
-        let mut pending = pending_end - i;
-        // wait for more work up to the deadline or a full batch
-        let deadline = now + policy.max_wait;
-        while pending < policy.max_global && pending_end < trace.len() {
-            let next = trace[pending_end].arrival;
-            if next > deadline {
-                break;
-            }
-            now = next;
-            pending_end += 1;
-            pending += 1;
-        }
-        if pending_end < trace.len() && pending < policy.max_global {
-            now = deadline.min(trace[pending_end].arrival.max(now));
-        } else if pending < policy.max_global {
-            // trace exhausted; flush at deadline
-            now = deadline.min(now + policy.max_wait);
-        }
-
-        let global = pick_bucket(&buckets, devices, pending, policy.max_global);
-        let take = pending.min(global);
-        let reqs = &trace[i..i + take];
-        i += take;
-
-        // pad with filler labels to the bucket size
-        let mut batch_labels: Vec<usize> = reqs.iter().map(|r| r.label).collect();
-        while batch_labels.len() < global {
-            batch_labels.push(0);
-        }
-        let (x, stats) = engine.generate(&batch_labels, steps, seed ^ (i as u64), None)?;
-
-        // virtual latency of this batch at the modelled scale
-        let wl = Workload {
-            local_batch: global / devices,
-            devices,
-            tokens: cm.model.tokens(),
-        };
-        let sim = simulate(cm, &wl, engine.cfg.strategy, &engine.cfg.opts, steps);
-        let start = now;
-        let end = now + sim.total_time;
-        now = end;
-
-        for r in reqs {
-            metrics.observe("request.latency", end - r.arrival);
-        }
-        metrics.inc("batches", 1);
-        metrics.inc("requests", take as u64);
-        metrics.inc("padded_slots", (global - take) as u64);
-        metrics.inc("a2a.fresh_bytes", stats.fresh_bytes as u64);
-        metrics.inc("a2a.saved_bytes", stats.saved_bytes as u64);
-        metrics.observe("batch.virtual_latency", sim.total_time);
-
-        // keep only the real requests' samples
-        let img: usize = x.shape()[1..].iter().product();
-        let mut kept = Tensor::zeros(&[take, 1, 8, 8]);
-        kept.data_mut()
-            .copy_from_slice(&x.data()[..take * img]);
-        out_chunks.push(kept);
-        labels.extend(reqs.iter().map(|r| r.label));
-        batches.push(ServedBatch {
-            request_ids: reqs.iter().map(|r| r.id).collect(),
-            global_batch: global,
-            start,
-            end,
-        });
-    }
-
-    let samples = ops::concat_batch(&out_chunks);
-    let first = trace.first().map(|r| r.arrival).unwrap_or(0.0);
-    let span = (now - first).max(1e-9);
-    let throughput = trace.len() as f64 / span;
-    Ok(ServeReport {
-        batches,
-        samples,
-        labels,
-        metrics,
-        span,
-        throughput,
-    })
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn bucket_selection() {
-        let buckets = vec![1, 2, 4, 8, 32];
-        // 4 devices: global sizes 4, 8, 16, 32, 128 (capped at 32)
-        assert_eq!(pick_bucket(&buckets, 4, 3, 32), 4);
-        assert_eq!(pick_bucket(&buckets, 4, 4, 32), 4);
-        assert_eq!(pick_bucket(&buckets, 4, 5, 32), 8);
-        assert_eq!(pick_bucket(&buckets, 4, 20, 32), 32);
-        assert_eq!(pick_bucket(&buckets, 4, 100, 32), 32);
-    }
-
-    #[test]
-    fn bucket_never_exceeds_cap() {
-        let buckets = vec![1, 2, 4, 8, 32];
-        for pending in 1..200 {
-            let g = pick_bucket(&buckets, 4, pending, 16);
-            assert!(g <= 16);
-        }
-    }
-}
+pub use admission::{AdmissionController, AdmissionPolicy};
+pub use batcher::{pick_bucket, BatchPolicy, Batcher};
+pub use report::{comparison_table, LatencySummary, ServeReport, ServedBatch};
+pub use serve_loop::{
+    serve, serve_sim, serve_with, BatchExecutor, EngineExecutor, ExecOutcome, ServeConfig,
+    SimExecutor,
+};

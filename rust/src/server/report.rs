@@ -1,0 +1,190 @@
+//! Serve-loop reports: per-batch records, latency percentiles, goodput
+//! and the cross-strategy comparison table printed by
+//! `examples/serve_trace.rs` and `dice serve`.
+//!
+//! Latency here is *virtual* time at the modelled scale (DESIGN.md §2:
+//! time is accounting) — the percentiles therefore describe the 8-GPU
+//! testbed the cost model is calibrated to, not the host CPU.
+
+use crate::benchkit::Table;
+use crate::metrics::Registry;
+use crate::tensor::Tensor;
+
+/// One dispatched batch (for inspection / tests).
+#[derive(Debug, Clone)]
+pub struct ServedBatch {
+    /// Ids of the real requests in the batch (padding excluded).
+    pub request_ids: Vec<usize>,
+    /// Global shape bucket the batch was padded to.
+    pub global_batch: usize,
+    /// Virtual time the batch started executing.
+    pub start: f64,
+    /// Virtual time the batch completed.
+    pub end: f64,
+}
+
+/// Outcome of one serve-loop run.
+#[derive(Debug)]
+pub struct ServeReport {
+    /// Every dispatched batch in virtual-time order.
+    pub batches: Vec<ServedBatch>,
+    /// Generated samples of the served requests (`[N, C, S, S]`), or an
+    /// empty tensor in simulation-only mode (no numerics executed).
+    pub samples: Tensor,
+    /// Class labels aligned with `samples`.
+    pub labels: Vec<usize>,
+    /// Counters + histograms recorded during the run (`request.latency`,
+    /// `request.queue_delay`, `batch.virtual_latency`, `padded_slots`,
+    /// `a2a.fresh_bytes`, `a2a.saved_bytes`, `rejected`, ...).
+    pub metrics: Registry,
+    /// Virtual seconds from first arrival to last completion.
+    pub span: f64,
+    /// Served requests per virtual second.
+    pub throughput: f64,
+    /// Requests completing within the latency SLO per virtual second
+    /// (equals `throughput` when no SLO is set).
+    pub goodput: f64,
+    /// Requests offered by the trace.
+    pub offered: usize,
+    /// Requests admitted and served.
+    pub served: usize,
+    /// Requests shed by admission control.
+    pub rejected: usize,
+}
+
+/// Latency distribution summary (virtual seconds).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencySummary {
+    /// Number of completed requests observed.
+    pub count: u64,
+    /// Mean request latency.
+    pub mean: f64,
+    /// Median request latency.
+    pub p50: f64,
+    /// 95th-percentile request latency.
+    pub p95: f64,
+    /// 99th-percentile request latency.
+    pub p99: f64,
+    /// Worst observed request latency.
+    pub max: f64,
+}
+
+impl ServeReport {
+    /// Percentile summary of the `request.latency` histogram.
+    pub fn latency(&self) -> LatencySummary {
+        match self.metrics.hist("request.latency") {
+            None => LatencySummary::default(),
+            Some(h) => LatencySummary {
+                count: h.count(),
+                mean: h.mean(),
+                p50: h.percentile(50.0),
+                p95: h.percentile(95.0),
+                p99: h.percentile(99.0),
+                max: h.max(),
+            },
+        }
+    }
+
+    /// One-line human summary (used by the CLI).
+    pub fn summary_line(&self) -> String {
+        let l = self.latency();
+        format!(
+            "served {}/{} (rejected {}) in {:.1}s virtual — p50 {:.2}s p95 {:.2}s p99 {:.2}s, \
+             {:.2} req/s throughput, {:.2} req/s goodput",
+            self.served,
+            self.offered,
+            self.rejected,
+            self.span,
+            l.p50,
+            l.p95,
+            l.p99,
+            self.throughput,
+            self.goodput
+        )
+    }
+
+    /// Table cells for [`comparison_table`] rows.
+    fn cells(&self) -> Vec<String> {
+        let l = self.latency();
+        vec![
+            format!("{:.2}", l.p50),
+            format!("{:.2}", l.p95),
+            format!("{:.2}", l.p99),
+            format!("{:.2}", self.throughput),
+            format!("{:.2}", self.goodput),
+            format!("{}", self.rejected),
+        ]
+    }
+}
+
+/// Build the (scenario, strategy) comparison table from labelled
+/// reports — the per-strategy latency-percentile / goodput view the
+/// serving experiments print.
+pub fn comparison_table(title: &str, rows: &[(String, String, ServeReport)]) -> Table {
+    let mut t = Table::new(
+        title,
+        &[
+            "Scenario", "Strategy", "p50 (s)", "p95 (s)", "p99 (s)", "req/s", "goodput/s",
+            "rejected",
+        ],
+    );
+    for (scenario, strategy, rep) in rows {
+        let mut cells = vec![scenario.clone(), strategy.clone()];
+        cells.extend(rep.cells());
+        t.row(cells);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn empty_report() -> ServeReport {
+        ServeReport {
+            batches: Vec::new(),
+            samples: Tensor::zeros(&[0]),
+            labels: Vec::new(),
+            metrics: Registry::default(),
+            span: 1e-9,
+            throughput: 0.0,
+            goodput: 0.0,
+            offered: 0,
+            served: 0,
+            rejected: 0,
+        }
+    }
+
+    #[test]
+    fn empty_report_has_zero_latency() {
+        let r = empty_report();
+        let l = r.latency();
+        assert_eq!(l.count, 0);
+        assert_eq!(l.p99, 0.0);
+        assert!(r.summary_line().contains("served 0/0"));
+    }
+
+    #[test]
+    fn latency_summary_orders_percentiles() {
+        let mut r = empty_report();
+        for i in 1..=100 {
+            r.metrics.observe("request.latency", i as f64 / 10.0);
+        }
+        let l = r.latency();
+        assert_eq!(l.count, 100);
+        assert!(l.p50 <= l.p95 && l.p95 <= l.p99 && l.p99 <= l.max * 1.05);
+        assert!(l.p50 > 4.0 && l.p50 < 6.0, "{}", l.p50);
+        assert!(l.p95 > 8.5 && l.p95 < 10.5, "{}", l.p95);
+    }
+
+    #[test]
+    fn comparison_table_renders() {
+        let t = comparison_table(
+            "x",
+            &[("steady".into(), "sync_ep".into(), empty_report())],
+        );
+        let md = t.render();
+        assert!(md.contains("sync_ep"));
+        assert!(md.contains("goodput"));
+    }
+}

@@ -1,0 +1,546 @@
+//! The virtual-time serve loop, generic over a batch executor.
+//!
+//! Requests arrive on a trace; admission control bounds the pending
+//! queue; the batcher forms global batches (devices × local bucket)
+//! under a max-wait deadline; a [`BatchExecutor`] runs each batch and
+//! prices it in virtual time. Two executors implement the trait:
+//!
+//! * [`EngineExecutor`] — REAL numerics through the expert-parallel
+//!   engine over the AOT artifacts, priced by the strategy's
+//!   virtual-time simulation at the served scale (wall clock on a
+//!   1-core host would measure the host CPU, not the modelled 8-GPU
+//!   testbed — DESIGN.md §2).
+//! * [`SimExecutor`] — cost-model-only: identical queueing/batching
+//!   dynamics, no numerics. This is what lets `dice serve --sim` and
+//!   `examples/serve_trace.rs` run on a clean checkout, before any
+//!   artifacts are built.
+
+use anyhow::Result;
+
+use super::admission::{AdmissionController, AdmissionPolicy};
+use super::batcher::{BatchPolicy, Batcher};
+use super::report::{ServeReport, ServedBatch};
+use crate::config::{CondCommSelector, DiceOptions, Strategy};
+use crate::coordinator::{simulate, Engine};
+use crate::metrics::Registry;
+use crate::netsim::{CostModel, Workload};
+use crate::tensor::{ops, Tensor};
+use crate::workload::Request;
+
+/// Everything the serve loop needs to know about one run.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Batch-formation policy (global cap + coalescing deadline).
+    pub policy: BatchPolicy,
+    /// Queueing policy (bounded queue + shedding, or unbounded).
+    pub admission: AdmissionPolicy,
+    /// Diffusion steps per generated batch.
+    pub steps: usize,
+    /// Base seed; each batch derives its own seed from it.
+    pub seed: u64,
+    /// Latency SLO (virtual seconds) for goodput accounting. Requests
+    /// completing within the SLO count toward goodput; `f64::INFINITY`
+    /// makes goodput equal throughput.
+    pub slo: f64,
+}
+
+impl ServeConfig {
+    /// Defaults mirroring the legacy `serve` entry point: standard
+    /// batching, unbounded queue, no SLO.
+    pub fn new(policy: BatchPolicy, steps: usize, seed: u64) -> ServeConfig {
+        ServeConfig {
+            policy,
+            admission: AdmissionPolicy::unbounded(),
+            steps,
+            seed,
+            slo: f64::INFINITY,
+        }
+    }
+
+    /// Replace the admission policy.
+    pub fn with_admission(mut self, admission: AdmissionPolicy) -> ServeConfig {
+        self.admission = admission;
+        self
+    }
+
+    /// Set the goodput latency SLO (virtual seconds).
+    pub fn with_slo(mut self, slo: f64) -> ServeConfig {
+        self.slo = slo;
+        self
+    }
+}
+
+/// Result of executing one batch.
+#[derive(Debug)]
+pub struct ExecOutcome {
+    /// Generated samples for the whole (padded) batch, or `None` in
+    /// simulation-only mode.
+    pub samples: Option<Tensor>,
+    /// Cross-device activation bytes actually transferred.
+    pub fresh_bytes: u64,
+    /// Bytes avoided by conditional communication.
+    pub saved_bytes: u64,
+    /// Virtual latency of the batch at the modelled scale (seconds).
+    pub virtual_latency: f64,
+}
+
+/// A strategy-under-test the serve loop can dispatch batches to.
+pub trait BatchExecutor {
+    /// Logical device count (global batch = devices × local bucket).
+    fn devices(&self) -> usize;
+    /// Exported per-device shape buckets.
+    fn buckets(&self) -> Vec<usize>;
+    /// Execute one padded batch of `labels` and price it in virtual
+    /// time. `labels.len()` is always a usable global bucket.
+    fn execute(&mut self, labels: &[usize], steps: usize, seed: u64) -> Result<ExecOutcome>;
+}
+
+/// Real-numerics executor: the expert-parallel [`Engine`] generates the
+/// batch; the per-batch latency comes from the strategy's virtual-time
+/// simulation on `cm` at the served scale.
+pub struct EngineExecutor<'a> {
+    engine: &'a Engine<'a>,
+    cm: &'a CostModel,
+}
+
+impl<'a> EngineExecutor<'a> {
+    /// Wrap an engine + cost model.
+    pub fn new(engine: &'a Engine<'a>, cm: &'a CostModel) -> EngineExecutor<'a> {
+        EngineExecutor { engine, cm }
+    }
+}
+
+impl BatchExecutor for EngineExecutor<'_> {
+    fn devices(&self) -> usize {
+        self.engine.cfg.devices
+    }
+
+    fn buckets(&self) -> Vec<usize> {
+        self.engine.rt.batch_buckets()
+    }
+
+    fn execute(&mut self, labels: &[usize], steps: usize, seed: u64) -> Result<ExecOutcome> {
+        let (x, stats) = self.engine.generate(labels, steps, seed, None)?;
+        let devices = self.engine.cfg.devices;
+        let wl = Workload {
+            local_batch: labels.len() / devices,
+            devices,
+            tokens: self.cm.model.tokens(),
+        };
+        let sim = simulate(self.cm, &wl, self.engine.cfg.strategy, &self.engine.cfg.opts, steps);
+        Ok(ExecOutcome {
+            samples: Some(x),
+            fresh_bytes: stats.fresh_bytes as u64,
+            saved_bytes: stats.saved_bytes as u64,
+            virtual_latency: sim.total_time,
+        })
+    }
+}
+
+/// Cost-model-only executor: queueing, batching and virtual-time
+/// dynamics without numerics. Bytes are the analytic all-to-all volume
+/// (two collectives per MoE layer per step), throttled by the
+/// conditional-communication fresh fraction when enabled.
+#[derive(Debug, Clone)]
+pub struct SimExecutor {
+    cm: CostModel,
+    strategy: Strategy,
+    opts: DiceOptions,
+    devices: usize,
+    buckets: Vec<usize>,
+}
+
+impl SimExecutor {
+    /// Build a simulation executor with the default shape buckets
+    /// (`[1, 2, 4, 8, 32]`, matching the artifact export).
+    pub fn new(cm: CostModel, strategy: Strategy, opts: DiceOptions, devices: usize) -> SimExecutor {
+        SimExecutor {
+            cm,
+            strategy,
+            opts,
+            devices,
+            buckets: vec![1, 2, 4, 8, 32],
+        }
+    }
+
+    /// Override the exported shape buckets.
+    pub fn with_buckets(mut self, buckets: Vec<usize>) -> SimExecutor {
+        assert!(!buckets.is_empty());
+        self.buckets = buckets;
+        self
+    }
+}
+
+impl BatchExecutor for SimExecutor {
+    fn devices(&self) -> usize {
+        self.devices
+    }
+
+    fn buckets(&self) -> Vec<usize> {
+        self.buckets.clone()
+    }
+
+    fn execute(&mut self, labels: &[usize], steps: usize, _seed: u64) -> Result<ExecOutcome> {
+        let wl = Workload {
+            local_batch: labels.len() / self.devices,
+            devices: self.devices,
+            tokens: self.cm.model.tokens(),
+        };
+        let sim = simulate(&self.cm, &wl, self.strategy, &self.opts, steps);
+        let fresh_frac = match self.opts.cond_comm {
+            CondCommSelector::Off => 1.0,
+            _ => crate::coordinator::condcomm::low_score_fresh_fraction(
+                self.cm.model.top_k,
+                self.opts.cond_comm_stride,
+            ),
+        };
+        let full = self.cm.a2a_bytes(&wl)
+            * 2.0
+            * (self.cm.model.n_layers * steps) as f64
+            * wl.devices as f64;
+        Ok(ExecOutcome {
+            samples: None,
+            fresh_bytes: (full * fresh_frac) as u64,
+            saved_bytes: (full * (1.0 - fresh_frac)) as u64,
+            virtual_latency: sim.total_time,
+        })
+    }
+}
+
+/// Run the virtual-time serve loop over a trace with any executor.
+///
+/// Requests are admitted in arrival order (shed when the bounded queue
+/// is full), coalesced until the batch fills or the oldest pending
+/// request has waited `policy.max_wait`, padded to the selected shape
+/// bucket with filler samples (outputs dropped), executed, and priced
+/// in virtual time. Batches never overlap: the loop models one serial
+/// serving pipeline, which is exactly how the engine executes.
+pub fn serve_with<E: BatchExecutor>(
+    ex: &mut E,
+    trace: &[Request],
+    cfg: ServeConfig,
+) -> Result<ServeReport> {
+    let batcher = Batcher::new(ex.buckets(), ex.devices(), cfg.policy);
+    let mut admission = AdmissionController::new(cfg.admission);
+    let mut metrics = Registry::default();
+    let mut batches = Vec::new();
+    let mut out_chunks: Vec<Tensor> = Vec::new();
+    let mut labels = Vec::new();
+    let mut now = 0.0f64;
+    let mut next = 0usize;
+    let mut served = 0usize;
+    let mut within_slo = 0usize;
+
+    while next < trace.len() || !admission.is_empty() {
+        // wait for at least one request
+        if admission.is_empty() {
+            now = now.max(trace[next].arrival);
+        }
+        // admit everything that has arrived by `now`
+        while next < trace.len() && trace[next].arrival <= now {
+            admission.offer(trace[next]);
+            next += 1;
+        }
+        // Unreachable via AdmissionPolicy::bounded (capacity >= 1), but a
+        // hand-built zero-capacity policy sheds every arrival: skip ahead
+        // (the admit loop above consumed at least one trace entry).
+        if admission.is_empty() {
+            continue;
+        }
+        // coalesce more work until the batch fills or the OLDEST pending
+        // request has waited out max_wait (backlog that already waited
+        // longer — e.g. leftovers from the previous batch — dispatches
+        // immediately rather than idling another window).
+        let oldest = admission.oldest_arrival().unwrap_or(now);
+        let deadline = (oldest + cfg.policy.max_wait).max(now);
+        while admission.len() < cfg.policy.max_global
+            && next < trace.len()
+            && trace[next].arrival <= deadline
+        {
+            now = trace[next].arrival;
+            admission.offer(trace[next]);
+            next += 1;
+        }
+        if admission.len() < cfg.policy.max_global {
+            now = deadline; // partial batch: flush at the deadline
+        }
+        metrics.observe("queue.depth", admission.len() as f64);
+
+        // pick the shape bucket and dispatch
+        let pending = admission.len();
+        let global = batcher.global_bucket(pending);
+        let reqs = admission.take(pending.min(global));
+        let take = reqs.len();
+        served += take;
+
+        let mut batch_labels: Vec<usize> = reqs.iter().map(|r| r.label).collect();
+        batch_labels.resize(global, 0); // pad with filler labels
+        let out = ex.execute(&batch_labels, cfg.steps, cfg.seed ^ (served as u64))?;
+
+        let start = now;
+        let end = now + out.virtual_latency;
+        now = end;
+
+        for r in &reqs {
+            let lat = end - r.arrival;
+            metrics.observe("request.latency", lat);
+            metrics.observe("request.queue_delay", start - r.arrival);
+            if lat <= cfg.slo {
+                within_slo += 1;
+            }
+        }
+        metrics.inc("batches", 1);
+        metrics.inc("requests", take as u64);
+        metrics.inc("padded_slots", (global - take) as u64);
+        metrics.inc("a2a.fresh_bytes", out.fresh_bytes);
+        metrics.inc("a2a.saved_bytes", out.saved_bytes);
+        metrics.observe("batch.virtual_latency", out.virtual_latency);
+
+        // keep only the real requests' samples
+        if let Some(x) = out.samples {
+            let img: usize = x.shape()[1..].iter().product();
+            let mut shape = x.shape().to_vec();
+            shape[0] = take;
+            let mut kept = Tensor::zeros(&shape);
+            kept.data_mut().copy_from_slice(&x.data()[..take * img]);
+            out_chunks.push(kept);
+            labels.extend(reqs.iter().map(|r| r.label));
+        }
+        batches.push(ServedBatch {
+            request_ids: reqs.iter().map(|r| r.id).collect(),
+            global_batch: global,
+            start,
+            end,
+        });
+    }
+
+    let samples = if out_chunks.is_empty() {
+        Tensor::zeros(&[0])
+    } else {
+        ops::concat_batch(&out_chunks)
+    };
+    // admission holds the single source of truth for shed requests
+    let rejected = admission.rejected();
+    metrics.inc("rejected", rejected as u64);
+    let first = trace.first().map(|r| r.arrival).unwrap_or(0.0);
+    let span = (now - first).max(1e-9);
+    Ok(ServeReport {
+        batches,
+        samples,
+        labels,
+        metrics,
+        span,
+        throughput: served as f64 / span,
+        goodput: within_slo as f64 / span,
+        offered: trace.len(),
+        served,
+        rejected,
+    })
+}
+
+/// Run the serve loop with REAL numerics (legacy entry point): the
+/// engine generates every batch, the queue is unbounded and no SLO is
+/// applied — every offered request is served exactly once.
+pub fn serve(
+    engine: &Engine,
+    cm: &CostModel,
+    trace: &[Request],
+    policy: BatchPolicy,
+    steps: usize,
+    seed: u64,
+) -> Result<ServeReport> {
+    let mut ex = EngineExecutor::new(engine, cm);
+    serve_with(&mut ex, trace, ServeConfig::new(policy, steps, seed))
+}
+
+/// Run the serve loop in simulation-only mode (no artifacts needed).
+pub fn serve_sim(
+    cm: &CostModel,
+    strategy: Strategy,
+    opts: DiceOptions,
+    devices: usize,
+    trace: &[Request],
+    cfg: ServeConfig,
+) -> Result<ServeReport> {
+    let mut ex = SimExecutor::new(cm.clone(), strategy, opts, devices);
+    serve_with(&mut ex, trace, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{hardware_profile, model_preset};
+    use crate::workload::{burst_trace, poisson_trace, uniform_trace};
+
+    fn sim_ex(strategy: Strategy, opts: DiceOptions) -> SimExecutor {
+        let cm = CostModel::new(
+            model_preset("xl").unwrap(),
+            hardware_profile("rtx4090_pcie").unwrap(),
+        );
+        SimExecutor::new(cm, strategy, opts, 8)
+    }
+
+    fn cfg(max_global: usize, max_wait: f64) -> ServeConfig {
+        ServeConfig::new(
+            BatchPolicy {
+                max_global,
+                max_wait,
+            },
+            4,
+            7,
+        )
+    }
+
+    #[test]
+    fn empty_trace_yields_empty_report() {
+        let mut ex = sim_ex(Strategy::SyncEp, DiceOptions::none());
+        let rep = serve_with(&mut ex, &[], cfg(32, 1.0)).unwrap();
+        assert_eq!(rep.batches.len(), 0);
+        assert_eq!(rep.offered, 0);
+        assert_eq!(rep.served, 0);
+        assert_eq!(rep.throughput, 0.0);
+        assert_eq!(rep.samples.len(), 0);
+    }
+
+    #[test]
+    fn single_request_partial_batch() {
+        let mut ex = sim_ex(Strategy::SyncEp, DiceOptions::none());
+        let trace = uniform_trace(1, 1.0, 4, 0);
+        let rep = serve_with(&mut ex, &trace, cfg(32, 0.5)).unwrap();
+        assert_eq!(rep.batches.len(), 1);
+        // 8 devices × smallest bucket 1 = global 8; one real request
+        assert_eq!(rep.batches[0].global_batch, 8);
+        assert_eq!(rep.metrics.counter("padded_slots"), 7);
+        assert_eq!(rep.served, 1);
+        // the partial batch waited out the full deadline before dispatch
+        let lat = rep.metrics.hist("request.latency").unwrap().max();
+        assert!(lat >= 0.5, "{lat}");
+    }
+
+    #[test]
+    fn zero_max_wait_dispatches_immediately() {
+        let mut ex = sim_ex(Strategy::SyncEp, DiceOptions::none());
+        // well-spaced arrivals: with max_wait 0 every request ships alone
+        let trace = uniform_trace(3, 0.0001, 4, 0);
+        let rep = serve_with(&mut ex, &trace, cfg(32, 0.0)).unwrap();
+        assert_eq!(rep.batches.len(), 3, "no coalescing at max_wait = 0");
+        for b in &rep.batches {
+            assert_eq!(b.request_ids.len(), 1);
+        }
+        // queue delay is exactly zero for every request
+        let qd = rep.metrics.hist("request.queue_delay").unwrap();
+        assert!(qd.percentile(99.0) <= 1e-6, "{}", qd.percentile(99.0));
+    }
+
+    #[test]
+    fn sim_serve_conserves_requests_and_orders_batches() {
+        let mut ex = sim_ex(Strategy::Interweaved, DiceOptions::dice());
+        let trace = poisson_trace(41, 5.0, 4, 3);
+        let rep = serve_with(&mut ex, &trace, cfg(32, 1.0)).unwrap();
+        let mut ids: Vec<usize> = rep
+            .batches
+            .iter()
+            .flat_map(|b| b.request_ids.iter().copied())
+            .collect();
+        ids.sort();
+        assert_eq!(ids, (0..41).collect::<Vec<_>>());
+        for w in rep.batches.windows(2) {
+            assert!(w[1].start >= w[0].end - 1e-9, "batches overlap");
+        }
+        assert_eq!(rep.served, 41);
+        assert_eq!(rep.rejected, 0);
+        // sim mode produces no samples
+        assert_eq!(rep.samples.len(), 0);
+        assert!(rep.metrics.counter("a2a.fresh_bytes") > 0);
+        assert!(rep.metrics.counter("a2a.saved_bytes") > 0, "cond comm saves bytes");
+    }
+
+    #[test]
+    fn bounded_queue_sheds_under_burst() {
+        let mut ex = sim_ex(Strategy::SyncEp, DiceOptions::none());
+        let trace = burst_trace(100, 4, 1);
+        let c = cfg(32, 0.1).with_admission(AdmissionPolicy::bounded(40));
+        let rep = serve_with(&mut ex, &trace, c).unwrap();
+        assert!(rep.rejected > 0, "a 100-burst into a 40-slot queue must shed");
+        assert_eq!(rep.served + rep.rejected, 100);
+        assert_eq!(rep.served, rep.metrics.counter("requests") as usize);
+        assert_eq!(rep.rejected, rep.metrics.counter("rejected") as usize);
+        // every *served* request appears exactly once
+        let mut ids: Vec<usize> = rep
+            .batches
+            .iter()
+            .flat_map(|b| b.request_ids.iter().copied())
+            .collect();
+        let n = ids.len();
+        ids.dedup();
+        assert_eq!(ids.len(), n);
+    }
+
+    #[test]
+    fn hand_built_zero_capacity_policy_terminates() {
+        // AdmissionPolicy::bounded clamps to >= 1, but the field is pub;
+        // a zero-capacity policy must shed everything and still terminate.
+        let mut ex = sim_ex(Strategy::SyncEp, DiceOptions::none());
+        let trace = uniform_trace(5, 1.0, 4, 0);
+        let c = cfg(32, 0.5).with_admission(AdmissionPolicy { capacity: 0 });
+        let rep = serve_with(&mut ex, &trace, c).unwrap();
+        assert_eq!(rep.served, 0);
+        assert_eq!(rep.rejected, 5);
+        assert_eq!(rep.batches.len(), 0);
+        assert_eq!(rep.metrics.counter("rejected"), 5);
+    }
+
+    #[test]
+    fn leftover_backlog_does_not_idle_an_extra_window() {
+        // 40-burst, cap 32: the 8 leftovers arrived at t=0. Once their
+        // max_wait window has elapsed (here during batch 1's service
+        // time), batch 2 must start right at batch 1's end rather than
+        // idling another full window.
+        let mut ex = sim_ex(Strategy::SyncEp, DiceOptions::none());
+        let trace = burst_trace(40, 4, 2);
+        let rep = serve_with(&mut ex, &trace, cfg(32, 0.001)).unwrap();
+        assert_eq!(rep.batches.len(), 2);
+        let (b1, b2) = (&rep.batches[0], &rep.batches[1]);
+        assert!(
+            (b2.start - b1.end).abs() < 1e-9,
+            "batch 2 starts at {} but batch 1 ended at {}",
+            b2.start,
+            b1.end
+        );
+    }
+
+    #[test]
+    fn goodput_counts_slo_hits_only() {
+        let mut ex = sim_ex(Strategy::SyncEp, DiceOptions::none());
+        let trace = poisson_trace(24, 4.0, 4, 5);
+        let strict = serve_with(&mut ex, &trace, cfg(32, 0.5).with_slo(1e-6)).unwrap();
+        assert_eq!(strict.goodput, 0.0, "nothing completes in a microsecond");
+        let lax = serve_with(&mut ex, &trace, cfg(32, 0.5)).unwrap();
+        assert!((lax.goodput - lax.throughput).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dice_beats_sync_ep_on_served_latency() {
+        // end-to-end sanity of the whole stack: the paper's speedup
+        // survives queueing. A saturating burst forms one full batch
+        // (global 64 = local 8 × 8 devices — the workload point where
+        // the simulate tests pin deep-sync < sync) at t=0 in both
+        // systems, so the comparison is deterministic.
+        let trace = burst_trace(64, 4, 11);
+        let mut sync = sim_ex(Strategy::SyncEp, DiceOptions::none());
+        let mut dice = sim_ex(Strategy::Interweaved, DiceOptions::dice());
+        let rs = serve_with(&mut sync, &trace, cfg(64, 1.0)).unwrap();
+        let rd = serve_with(&mut dice, &trace, cfg(64, 1.0)).unwrap();
+        assert_eq!(rs.batches.len(), 1);
+        assert_eq!(rd.batches.len(), 1);
+        // mean latency is exact (not histogram-bucketed): strict win
+        assert!(
+            rd.latency().mean < rs.latency().mean,
+            "dice {} vs sync {}",
+            rd.latency().mean,
+            rs.latency().mean
+        );
+        assert!(rd.latency().p50 <= rs.latency().p50);
+        assert!(rd.throughput > rs.throughput);
+    }
+}

@@ -17,6 +17,7 @@ pub struct Tensor {
 }
 
 impl Tensor {
+    /// All-zeros tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Tensor {
         let n = shape.iter().product();
         Tensor {
@@ -25,6 +26,7 @@ impl Tensor {
         }
     }
 
+    /// Wrap an owned buffer; panics when `data.len()` ≠ product(shape).
     pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
         assert_eq!(
             shape.iter().product::<usize>(),
@@ -39,6 +41,7 @@ impl Tensor {
         }
     }
 
+    /// Constant-filled tensor of the given shape.
     pub fn full(shape: &[usize], v: f32) -> Tensor {
         let n = shape.iter().product();
         Tensor {
@@ -47,21 +50,27 @@ impl Tensor {
         }
     }
 
+    /// The shape (dimension sizes, outermost first).
     pub fn shape(&self) -> &[usize] {
         &self.shape
     }
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
+    /// Whether the tensor holds zero elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
+    /// Row-major element view.
     pub fn data(&self) -> &[f32] {
         &self.data
     }
+    /// Mutable row-major element view.
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }
+    /// Consume into the raw element buffer.
     pub fn into_vec(self) -> Vec<f32> {
         self.data
     }
@@ -94,9 +103,11 @@ impl Tensor {
         flat
     }
 
+    /// Element at a multi-index.
     pub fn at(&self, idx: &[usize]) -> f32 {
         self.data[self.index(idx)]
     }
+    /// Overwrite the element at a multi-index.
     pub fn set(&mut self, idx: &[usize], v: f32) {
         let i = self.index(idx);
         self.data[i] = v;
@@ -113,6 +124,7 @@ impl Tensor {
         let (_, r) = self.rows();
         &self.data[i * r..(i + 1) * r]
     }
+    /// Mutable row i of the flattened [N, row] view.
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
         let (_, r) = self.rows();
         &mut self.data[i * r..(i + 1) * r]
@@ -126,6 +138,7 @@ impl Tensor {
         }
     }
 
+    /// Multiply every element by `s` in place.
     pub fn scale(&mut self, s: f32) {
         for a in self.data.iter_mut() {
             *a *= s;
@@ -163,7 +176,9 @@ impl Tensor {
 /// Integer tensor (labels, routing indices).
 #[derive(Clone, Debug, PartialEq)]
 pub struct IntTensor {
+    /// Dimension sizes, outermost first.
     pub shape: Vec<usize>,
+    /// Row-major elements.
     pub data: Vec<i32>,
 }
 

@@ -15,11 +15,14 @@ use super::{IntTensor, Tensor};
 /// All tensors from one STF file.
 #[derive(Debug, Default)]
 pub struct StfFile {
+    /// Float tensors by name.
     pub f32s: BTreeMap<String, Tensor>,
+    /// Integer tensors by name.
     pub i32s: BTreeMap<String, IntTensor>,
 }
 
 impl StfFile {
+    /// Read and parse an STF file from disk.
     pub fn load(path: &Path) -> Result<StfFile> {
         let mut f = std::fs::File::open(path)
             .with_context(|| format!("open {}", path.display()))?;
@@ -28,6 +31,8 @@ impl StfFile {
         Self::parse(&buf).with_context(|| format!("parse {}", path.display()))
     }
 
+    /// Parse STF bytes (format in the module docs); rejects trailing
+    /// data and truncation.
     pub fn parse(b: &[u8]) -> Result<StfFile> {
         let mut r = Cursor { b, i: 0 };
         if r.take(4)? != b"STF1" {

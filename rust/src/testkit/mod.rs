@@ -22,26 +22,33 @@ use std::ops::Range;
 
 /// Random-case generator handed to properties.
 pub struct Gen {
+    /// The case-seeded generator (exposed for ad-hoc draws).
     pub rng: Rng,
 }
 
 impl Gen {
+    /// Uniform `usize` in the half-open range.
     pub fn usize_in(&mut self, r: Range<usize>) -> usize {
         r.start + self.rng.below(r.end - r.start)
     }
+    /// Uniform `f32` in `[lo, hi)`.
     pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
         lo + (hi - lo) * self.rng.uniform_f32()
     }
+    /// Standard-normal `f32`.
     pub fn f32_normal(&mut self) -> f32 {
         self.rng.normal_f32()
     }
+    /// Fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.rng.next_u64() & 1 == 1
     }
+    /// Vector of uniform `usize` draws; element range × length range.
     pub fn vec_usize(&mut self, each: Range<usize>, len: Range<usize>) -> Vec<usize> {
         let n = self.usize_in(len);
         (0..n).map(|_| self.usize_in(each.clone())).collect()
     }
+    /// Vector of standard-normal `f32` draws of random length.
     pub fn vec_f32(&mut self, len: Range<usize>) -> Vec<f32> {
         let n = self.usize_in(len);
         (0..n).map(|_| self.f32_normal()).collect()

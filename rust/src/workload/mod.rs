@@ -1,12 +1,23 @@
-//! Workload generation for the serving experiments: Poisson and
-//! uniform open-loop arrival processes, class mixes, and trace replay.
+//! Workload generation for the serving experiments: Poisson, uniform
+//! and burst open-loop arrival processes, plus the named scenario
+//! presets (steady / diurnal ramp / burst-recovery) in [`scenarios`].
+//!
+//! Traces are plain `Vec<Request>` sorted by arrival time, so they can
+//! be generated once and replayed against any strategy or serving
+//! policy (the comparison experiments depend on identical traces).
+
+pub mod scenarios;
+
+pub use scenarios::{burst_recovery_trace, diurnal_trace, Scenario};
 
 use crate::rng::Rng;
 
 /// A generation request.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Request {
+    /// Trace-unique request id (position in the trace).
     pub id: usize,
+    /// Class label to generate.
     pub label: usize,
     /// arrival time in (virtual) seconds from trace start.
     pub arrival: f64,
@@ -73,6 +84,15 @@ mod tests {
     fn uniform_spacing() {
         let tr = uniform_trace(10, 2.0, 4, 0);
         assert!((tr[1].arrival - tr[0].arrival - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn burst_all_at_zero() {
+        let tr = burst_trace(64, 4, 9);
+        assert_eq!(tr.len(), 64);
+        assert!(tr.iter().all(|r| r.arrival == 0.0));
+        assert!(tr.iter().enumerate().all(|(i, r)| r.id == i));
+        assert!(tr.iter().all(|r| r.label < 4));
     }
 
     #[test]
