@@ -1,0 +1,21 @@
+//! Residual-compression trade-off (DESIGN.md §7): for each codec,
+//! bytes-per-A2A reduction vs. the identity baseline, real-numerics
+//! reconstruction error on a synthetic diffusion-like trajectory, and
+//! the analytic XL-scale step latency. Artifact-free. The driver
+//! asserts the headline property (int8 strictly fewer bytes than
+//! identity at bounded error) and fails loudly if it regresses.
+use dice::cli::Args;
+use dice::exp::{compress::tradeoff, write_results};
+
+fn main() -> anyhow::Result<()> {
+    let a = Args::parse();
+    let (t, j) = tradeoff(
+        a.usize_or("tokens", 64),
+        a.usize_or("dim", 64),
+        a.usize_or("steps", 32),
+        a.u64_or("seed", 1234),
+    )?;
+    t.print();
+    write_results("compress_tradeoff", &t.render(), &j)?;
+    Ok(())
+}

@@ -9,8 +9,25 @@ cd "$(dirname "$0")"
 echo "==> cargo build --release"
 cargo build --release
 
-echo "==> cargo test -q"
-cargo test -q
+# --lib --bins --tests runs everything plain `cargo test` would EXCEPT
+# doctests, which the explicit --doc step covers — nothing runs twice.
+# (NOT --all-targets: that would execute the harness=false bench
+# binaries, several of which need artifacts and a lot of CPU.)
+echo "==> cargo test (lib + bins + integration)"
+cargo test -q --lib --bins --tests
+
+echo "==> cargo test --doc"
+cargo test -q --doc
+
+# Docs gates: rustdoc warnings (broken links, bad code-block attrs) are
+# errors, and missing_docs — warn-level in the sources so local builds
+# stay friendly — is escalated to deny here so new public items cannot
+# land undocumented. Registry deps are cap-linted and unaffected.
+echo "==> cargo doc --no-deps (deny rustdoc warnings)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --workspace --quiet
+
+echo "==> missing_docs deny gate"
+RUSTFLAGS="-D missing_docs" cargo check --workspace --quiet
 
 if cargo fmt --version >/dev/null 2>&1; then
     echo "==> cargo fmt --check"

@@ -1,0 +1,638 @@
+//! Residual all-to-all compression (DESIGN.md §7).
+//!
+//! DICE reduces *how often* the expert-parallel all-to-alls pay their
+//! full blocking cost; this module attacks the orthogonal axis — *how
+//! many bytes* each all-to-all moves. Diffusion steps are temporally
+//! redundant (the same latent patches iterate), so the delta between
+//! the activations dispatched this step and the ones dispatched last
+//! step for the same (token, expert) pair is small and highly
+//! compressible ("Accelerating Parallel Diffusion Model Serving with
+//! Residual Compression", arXiv 2507.17511).
+//!
+//! The scheme is classic residual coding with error feedback: sender
+//! and receiver both hold a per-(token, expert) *reference* row (a
+//! [`RefStore`]); the sender encodes `residual = current − reference`,
+//! the receiver decodes and reconstructs `reference + decoded`, and
+//! **both sides advance the reference to the reconstruction** so the
+//! streams never drift apart. Quantization error therefore shows up in
+//! the next step's residual and is re-transmitted rather than
+//! accumulating.
+//!
+//! Three codecs implement [`ResidualCodec`]:
+//!
+//! * [`IdentityCodec`] — dense f32 round trip, zero loss, zero saving.
+//!   The baseline every other codec is compared against.
+//! * [`Int8Codec`] — symmetric int8 quantization with **per-channel**
+//!   scales (one f32 scale per model channel, shared by every row of
+//!   the block). Absolute error is bounded by half a quantization step
+//!   per channel.
+//! * [`TopKCodec`] — per-row magnitude sparsification: only the
+//!   `keep` largest-|residual| channels of each row travel (value +
+//!   u16 channel index); everything else decodes to zero and is
+//!   retried next step via the error feedback.
+//!
+//! The engine applies codecs to the rows that actually cross devices
+//! (`coordinator::engine::Engine`); the analytic cost model prices the
+//! same byte math at the paper's scales (`netsim::CostModel`); both are
+//! selected by the `CompressionCodec` config knob (`--compress`).
+
+use crate::config::CompressionCodec;
+use crate::tensor::Tensor;
+
+/// Default kept-channel fraction of [`TopKCodec`] (1 in 8 channels).
+pub const TOPK_KEEP_FRAC: f64 = 0.125;
+
+/// Wire bytes of one top-k entry: f32 value + u16 channel index.
+const TOPK_ENTRY_BYTES: usize = 6;
+
+/// An encoded residual block: the wire payload for one all-to-all
+/// destination, plus byte accounting. Self-describing — [`Encoded::decode`]
+/// reconstructs the dense residual without further codec state.
+#[derive(Debug, Clone)]
+pub struct Encoded {
+    /// Bytes this block occupies on the wire (payload + side info such
+    /// as per-channel scales or sparse indices).
+    pub wire_bytes: usize,
+    /// Dense f32 bytes the block replaced (`rows × d × 4`).
+    pub raw_bytes: usize,
+    rows: usize,
+    d: usize,
+    payload: Payload,
+}
+
+#[derive(Debug, Clone)]
+enum Payload {
+    /// Dense f32 residual values.
+    Dense(Vec<f32>),
+    /// Per-channel scales + row-major int8 codes.
+    Int8 { scales: Vec<f32>, q: Vec<i8> },
+    /// Per-row sparse entries: `kept` (channel, value) pairs per row.
+    TopK { kept: usize, idx: Vec<u16>, vals: Vec<f32> },
+}
+
+impl Encoded {
+    /// Decode to the dense `[rows, d]` residual the receiver reconstructs.
+    pub fn decode(&self) -> Tensor {
+        let mut out = Tensor::zeros(&[self.rows, self.d]);
+        match &self.payload {
+            Payload::Dense(v) => out.data_mut().copy_from_slice(v),
+            Payload::Int8 { scales, q } => {
+                for r in 0..self.rows {
+                    let row = out.row_mut(r);
+                    for c in 0..row.len() {
+                        row[c] = q[r * scales.len() + c] as f32 * scales[c];
+                    }
+                }
+            }
+            Payload::TopK { kept, idx, vals } => {
+                for r in 0..self.rows {
+                    let row = out.row_mut(r);
+                    for j in 0..*kept {
+                        row[idx[r * kept + j] as usize] = vals[r * kept + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// A residual codec: encodes the delta between the activations
+/// dispatched this step and the reference both endpoints share.
+///
+/// # Examples
+///
+/// ```
+/// use dice::compress::{Int8Codec, ResidualCodec};
+/// use dice::tensor::Tensor;
+///
+/// let residual = Tensor::from_vec(&[2, 3], vec![0.5, -1.0, 0.0, 0.25, 1.0, -0.5]);
+/// let codec = Int8Codec;
+/// let enc = codec.encode(&residual);
+/// assert!(enc.wire_bytes < enc.raw_bytes, "int8 must shrink the block");
+/// let decoded = enc.decode();
+/// // error bounded by half a quantization step per channel
+/// assert!(residual.max_abs_diff(&decoded).unwrap() <= 0.5 * (1.0 / 127.0) + 1e-6);
+/// ```
+pub trait ResidualCodec {
+    /// Canonical codec name (matches `CompressionCodec::name`).
+    fn name(&self) -> &'static str;
+
+    /// Encode an `[rows, d]` residual block.
+    fn encode(&self, residual: &Tensor) -> Encoded;
+
+    /// Analytic wire bytes for a block of `rows` tokens of width `d` at
+    /// `elem_bytes` per raw element. Fractional `rows` are allowed (the
+    /// cost model prices expected payloads); at `elem_bytes = 4.0` and
+    /// integral `rows` this matches [`ResidualCodec::encode`] exactly.
+    fn wire_bytes(&self, rows: f64, d: usize, elem_bytes: f64) -> f64;
+}
+
+/// Lossless dense baseline: the residual travels as-is.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IdentityCodec;
+
+impl ResidualCodec for IdentityCodec {
+    fn name(&self) -> &'static str {
+        "identity"
+    }
+
+    fn encode(&self, residual: &Tensor) -> Encoded {
+        let (rows, d) = residual.rows();
+        let raw = rows * d * 4;
+        Encoded {
+            wire_bytes: raw,
+            raw_bytes: raw,
+            rows,
+            d,
+            payload: Payload::Dense(residual.data().to_vec()),
+        }
+    }
+
+    fn wire_bytes(&self, rows: f64, d: usize, elem_bytes: f64) -> f64 {
+        rows * d as f64 * elem_bytes
+    }
+}
+
+/// Symmetric int8 residual quantization with per-channel scales: for
+/// each model channel `c`, `scale[c] = max_rows |r[·,c]| / 127`, codes
+/// are `round(r / scale)`. Decoded error is ≤ `scale[c] / 2`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Int8Codec;
+
+impl ResidualCodec for Int8Codec {
+    fn name(&self) -> &'static str {
+        "int8"
+    }
+
+    fn encode(&self, residual: &Tensor) -> Encoded {
+        let (rows, d) = residual.rows();
+        let mut scales = vec![0.0f32; d];
+        for r in 0..rows {
+            for (c, v) in residual.row(r).iter().enumerate() {
+                scales[c] = scales[c].max(v.abs());
+            }
+        }
+        for s in scales.iter_mut() {
+            *s /= 127.0;
+        }
+        let mut q = Vec::with_capacity(rows * d);
+        for r in 0..rows {
+            for (c, v) in residual.row(r).iter().enumerate() {
+                let code = if scales[c] > 0.0 {
+                    (v / scales[c]).round().clamp(-127.0, 127.0) as i8
+                } else {
+                    0
+                };
+                q.push(code);
+            }
+        }
+        Encoded {
+            wire_bytes: rows * d + d * 4,
+            raw_bytes: rows * d * 4,
+            rows,
+            d,
+            payload: Payload::Int8 { scales, q },
+        }
+    }
+
+    fn wire_bytes(&self, rows: f64, d: usize, elem_bytes: f64) -> f64 {
+        // 1 byte per element + one scale per channel at raw precision.
+        rows * d as f64 + d as f64 * elem_bytes
+    }
+}
+
+/// Per-row top-k residual sparsification: the `keep` largest-magnitude
+/// channels of each row travel exactly (value + u16 index), the rest
+/// decode to zero and are recovered by the error feedback next step.
+#[derive(Debug, Clone, Copy)]
+pub struct TopKCodec {
+    keep_frac: f64,
+}
+
+impl TopKCodec {
+    /// Codec keeping `keep_frac` of each row's channels (at least one).
+    pub fn new(keep_frac: f64) -> TopKCodec {
+        assert!(keep_frac > 0.0 && keep_frac <= 1.0, "keep_frac {keep_frac}");
+        TopKCodec { keep_frac }
+    }
+
+    /// Channels kept per row of width `d`.
+    pub fn kept(&self, d: usize) -> usize {
+        ((d as f64 * self.keep_frac).ceil() as usize).clamp(1, d)
+    }
+}
+
+impl Default for TopKCodec {
+    fn default() -> TopKCodec {
+        TopKCodec::new(TOPK_KEEP_FRAC)
+    }
+}
+
+impl ResidualCodec for TopKCodec {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+
+    fn encode(&self, residual: &Tensor) -> Encoded {
+        let (rows, d) = residual.rows();
+        assert!(d <= u16::MAX as usize + 1, "channel index must fit u16");
+        let kept = self.kept(d);
+        let mut idx = Vec::with_capacity(rows * kept);
+        let mut vals = Vec::with_capacity(rows * kept);
+        let mut order: Vec<usize> = Vec::with_capacity(d);
+        for r in 0..rows {
+            let row = residual.row(r);
+            order.clear();
+            order.extend(0..d);
+            // magnitude-descending, index-ascending tie-break (deterministic)
+            order.sort_by(|&a, &b| {
+                row[b].abs().partial_cmp(&row[a].abs()).unwrap().then(a.cmp(&b))
+            });
+            let mut top: Vec<usize> = order[..kept].to_vec();
+            top.sort_unstable();
+            for c in top {
+                idx.push(c as u16);
+                vals.push(row[c]);
+            }
+        }
+        Encoded {
+            wire_bytes: rows * kept * TOPK_ENTRY_BYTES,
+            raw_bytes: rows * d * 4,
+            rows,
+            d,
+            payload: Payload::TopK { kept, idx, vals },
+        }
+    }
+
+    fn wire_bytes(&self, rows: f64, d: usize, elem_bytes: f64) -> f64 {
+        // value at raw precision + u16 channel index per kept entry.
+        rows * self.kept(d) as f64 * (elem_bytes + 2.0)
+    }
+}
+
+/// Instantiate the codec a [`CompressionCodec`] config selects
+/// (`None` means the compression machinery is bypassed entirely).
+pub fn build(codec: CompressionCodec) -> Option<Box<dyn ResidualCodec>> {
+    match codec {
+        CompressionCodec::None => None,
+        CompressionCodec::Identity => Some(Box::new(IdentityCodec)),
+        CompressionCodec::Int8 => Some(Box::new(Int8Codec)),
+        CompressionCodec::TopK => Some(Box::new(TopKCodec::default())),
+    }
+}
+
+/// Per-(token, expert) reference rows the residual is taken against.
+/// Implemented by `coordinator::buffers::ResidualRefCache` (dispatch
+/// side) and `coordinator::condcomm::CondCommCache` (combine side —
+/// the cached expert output IS the last transmitted reconstruction).
+pub trait RefStore {
+    /// The reference row for (token, expert), if one has been stored.
+    fn get_ref(&self, token: usize, expert: usize) -> Option<&[f32]>;
+    /// Advance the reference to `row` (the RECONSTRUCTED value both
+    /// endpoints share after decode).
+    fn put_ref(&mut self, token: usize, expert: usize, row: &[f32]);
+}
+
+/// Byte/row accounting of codec work (merged into `RunStats`).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CodecStats {
+    /// Dense f32 bytes the transmitted rows would have cost.
+    pub raw_bytes: usize,
+    /// Bytes actually on the wire (encoded payloads + cold-start rows).
+    pub wire_bytes: usize,
+    /// Rows that went through an encode→decode round trip.
+    pub coded_rows: usize,
+    /// Rows transmitted dense because no reference existed yet.
+    pub dense_rows: usize,
+    /// Encoded blocks produced.
+    pub blocks: usize,
+}
+
+impl CodecStats {
+    /// Bytes the codec avoided (`raw - wire`; 0 when it expanded).
+    pub fn saved_bytes(&self) -> usize {
+        self.raw_bytes.saturating_sub(self.wire_bytes)
+    }
+
+    /// Accumulate another stage's stats into this one.
+    pub fn merge(&mut self, o: &CodecStats) {
+        self.raw_bytes += o.raw_bytes;
+        self.wire_bytes += o.wire_bytes;
+        self.coded_rows += o.coded_rows;
+        self.dense_rows += o.dense_rows;
+        self.blocks += o.blocks;
+    }
+}
+
+/// Compress-and-reconstruct one all-to-all block in place.
+///
+/// `rows[i]` indexes a row of `block` that crosses devices and is keyed
+/// by `keys[i] = (token, expert)`. Rows with a reference in `refs` are
+/// encoded as one residual block, decoded, and **overwritten with the
+/// reconstruction** (what the receiver actually sees); rows without a
+/// reference travel dense (cold start). Either way the reference
+/// advances to the transmitted value, keeping sender and receiver in
+/// lockstep. Rows not listed in `rows` (local to the expert's owner)
+/// are untouched — and conditional-communication *reused* entries never
+/// reach this function at all, so cached-step tokens skip codec work
+/// entirely.
+pub fn transcode_block(
+    codec: &dyn ResidualCodec,
+    block: &mut Tensor,
+    rows: &[usize],
+    keys: &[(usize, usize)],
+    refs: &mut dyn RefStore,
+    stats: &mut CodecStats,
+) {
+    debug_assert_eq!(rows.len(), keys.len());
+    if rows.is_empty() {
+        return;
+    }
+    let (_, d) = block.rows();
+    // split cold-start rows from codable ones, copying references out
+    // (the borrow ends before we advance them below).
+    let mut coded: Vec<(usize, (usize, usize), Vec<f32>)> = Vec::new();
+    for (&r, &(token, expert)) in rows.iter().zip(keys) {
+        match refs.get_ref(token, expert) {
+            Some(reference) => coded.push((r, (token, expert), reference.to_vec())),
+            None => {
+                stats.raw_bytes += d * 4;
+                stats.wire_bytes += d * 4;
+                stats.dense_rows += 1;
+                refs.put_ref(token, expert, block.row(r));
+            }
+        }
+    }
+    if coded.is_empty() {
+        return;
+    }
+    let mut residual = Tensor::zeros(&[coded.len(), d]);
+    for (i, (r, _, reference)) in coded.iter().enumerate() {
+        let dst = residual.row_mut(i);
+        for (c, (x, rf)) in block.row(*r).iter().zip(reference).enumerate() {
+            dst[c] = x - rf;
+        }
+    }
+    let enc = codec.encode(&residual);
+    stats.raw_bytes += enc.raw_bytes;
+    stats.wire_bytes += enc.wire_bytes;
+    stats.coded_rows += coded.len();
+    stats.blocks += 1;
+    let decoded = enc.decode();
+    for (i, (r, (token, expert), reference)) in coded.iter().enumerate() {
+        let row = block.row_mut(*r);
+        for (c, (rf, dv)) in reference.iter().zip(decoded.row(i)).enumerate() {
+            row[c] = rf + dv;
+        }
+        refs.put_ref(*token, *expert, block.row(*r));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CondCommSelector;
+    use crate::coordinator::buffers::ResidualRefCache;
+    use crate::coordinator::condcomm::{self, CondCommCache};
+    use crate::moe::{DispatchPlan, RoutingTable};
+    use crate::rng::Rng;
+    use crate::testkit::{forall, Gen};
+
+    fn random_block(g: &mut Gen, rows: usize, d: usize) -> Tensor {
+        Tensor::from_vec(&[rows, d], (0..rows * d).map(|_| g.f32_normal()).collect())
+    }
+
+    #[test]
+    fn identity_is_lossless_and_full_size() {
+        forall(32, 0xC0DEC, |g| {
+            let (rows, d) = (g.usize_in(1..9), g.usize_in(1..33));
+            let r = random_block(g, rows, d);
+            let enc = IdentityCodec.encode(&r);
+            assert_eq!(enc.wire_bytes, rows * d * 4);
+            assert_eq!(enc.decode(), r);
+        });
+    }
+
+    #[test]
+    fn int8_error_bounded_by_half_scale_per_channel() {
+        forall(32, 0xC0DEC + 1, |g| {
+            let (rows, d) = (g.usize_in(1..9), g.usize_in(1..33));
+            let r = random_block(g, rows, d);
+            let enc = Int8Codec.encode(&r);
+            assert_eq!(enc.wire_bytes, rows * d + d * 4);
+            let dec = enc.decode();
+            // recompute the per-channel scale the codec used
+            for c in 0..d {
+                let maxabs = (0..rows).map(|i| r.row(i)[c].abs()).fold(0.0f32, f32::max);
+                let scale = maxabs / 127.0;
+                for i in 0..rows {
+                    let err = (r.row(i)[c] - dec.row(i)[c]).abs();
+                    assert!(err <= 0.5 * scale + 1e-6, "err {err} scale {scale}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn int8_zero_residual_roundtrips_exactly() {
+        let z = Tensor::zeros(&[3, 5]);
+        assert_eq!(Int8Codec.encode(&z).decode(), z);
+    }
+
+    #[test]
+    fn topk_preserves_the_k_largest_and_zeros_the_rest() {
+        let codec = TopKCodec::new(0.25); // keep 2 of 8
+        let r = Tensor::from_vec(
+            &[1, 8],
+            vec![0.1, -3.0, 0.2, 0.05, 2.5, -0.3, 0.0, 0.15],
+        );
+        let enc = codec.encode(&r);
+        assert_eq!(enc.wire_bytes, 2 * TOPK_ENTRY_BYTES);
+        let dec = enc.decode();
+        assert_eq!(
+            dec.data(),
+            &[0.0, -3.0, 0.0, 0.0, 2.5, 0.0, 0.0, 0.0],
+            "only the two largest-|residual| channels survive"
+        );
+    }
+
+    #[test]
+    fn topk_property_keeps_largest_magnitudes() {
+        forall(32, 0xC0DEC + 2, |g| {
+            let (rows, d) = (g.usize_in(1..6), g.usize_in(4..40));
+            let codec = TopKCodec::default();
+            let kept = codec.kept(d);
+            let r = random_block(g, rows, d);
+            let dec = codec.encode(&r).decode();
+            for i in 0..rows {
+                let row = r.row(i);
+                let drow = dec.row(i);
+                let min_kept = drow
+                    .iter()
+                    .zip(row)
+                    .filter(|(dv, _)| **dv != 0.0)
+                    .map(|(_, v)| v.abs())
+                    .fold(f32::INFINITY, f32::min);
+                let n_kept = drow.iter().filter(|v| **v != 0.0).count();
+                assert!(n_kept <= kept);
+                for (dv, v) in drow.iter().zip(row) {
+                    if *dv != 0.0 {
+                        assert_eq!(dv, v, "kept values travel exactly");
+                    } else {
+                        // anything dropped is no larger than the smallest kept
+                        assert!(v.abs() <= min_kept + 1e-6);
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn analytic_wire_bytes_match_encode_at_f32() {
+        forall(24, 0xC0DEC + 3, |g| {
+            let (rows, d) = (g.usize_in(1..9), g.usize_in(2..40));
+            let r = random_block(g, rows, d);
+            let codecs: Vec<Box<dyn ResidualCodec>> = vec![
+                Box::new(IdentityCodec),
+                Box::new(Int8Codec),
+                Box::new(TopKCodec::default()),
+            ];
+            for c in codecs {
+                let enc = c.encode(&r);
+                let analytic = c.wire_bytes(rows as f64, d, 4.0);
+                assert!(
+                    (analytic - enc.wire_bytes as f64).abs() < 1e-6,
+                    "{}: analytic {analytic} vs encoded {}",
+                    c.name(),
+                    enc.wire_bytes
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn build_matches_config() {
+        assert!(build(CompressionCodec::None).is_none());
+        for (cfg, name) in [
+            (CompressionCodec::Identity, "identity"),
+            (CompressionCodec::Int8, "int8"),
+            (CompressionCodec::TopK, "topk"),
+        ] {
+            assert_eq!(build(cfg).unwrap().name(), name);
+        }
+    }
+
+    #[test]
+    fn transcode_error_feedback_keeps_streams_in_lockstep() {
+        // Drive 20 steps of a smoothly-drifting block through int8 and
+        // check the reconstruction error stays bounded (error feedback)
+        // and the stored reference equals the transmitted block exactly.
+        let (rows, d) = (4usize, 16usize);
+        let mut rng = Rng::new(7);
+        let mut truth = Tensor::zeros(&[rows, d]);
+        rng.fill_normal(truth.data_mut());
+        let mut refs = ResidualRefCache::new(rows, 1, d);
+        let keys: Vec<(usize, usize)> = (0..rows).map(|t| (t, 0)).collect();
+        let idx: Vec<usize> = (0..rows).collect();
+        for step in 0..20 {
+            for v in truth.data_mut() {
+                *v += 0.05 * rng.normal_f32();
+            }
+            let mut block = truth.clone();
+            let mut cs = CodecStats::default();
+            transcode_block(&Int8Codec, &mut block, &idx, &keys, &mut refs, &mut cs);
+            if step == 0 {
+                assert_eq!(cs.dense_rows, rows, "cold start is dense");
+                assert_eq!(block, truth);
+            } else {
+                assert_eq!(cs.coded_rows, rows);
+                let err = block.rel_l2(&truth).unwrap();
+                assert!(err < 0.01, "step {step} err {err}");
+            }
+            for (t, _) in &keys {
+                assert_eq!(refs.get_ref(*t, 0).unwrap(), block.row(*t));
+            }
+        }
+    }
+
+    #[test]
+    fn condcomm_reused_entries_skip_codec_work_entirely() {
+        // Mirror of the engine's ep_moe decision order: the
+        // conditional-communication filter splits entries into fresh vs
+        // cache-reused FIRST, and only fresh crossing rows ever reach
+        // transcode_block. With LowScore stride 2 at an odd step, every
+        // rank>0 entry is served from the cache and the codec must see
+        // exactly the rank-0 crossing rows.
+        let n_tokens = 8usize;
+        let (e, k, d, devices) = (4usize, 2usize, 6usize, 2usize);
+        let mut g = Rng::new(11);
+        let probs = {
+            let mut data = Vec::new();
+            for _ in 0..n_tokens {
+                let mut row: Vec<f32> = (0..e).map(|_| g.uniform_f32() + 0.01).collect();
+                let s: f32 = row.iter().sum();
+                row.iter_mut().for_each(|v| *v /= s);
+                data.extend(row);
+            }
+            Tensor::from_vec(&[n_tokens, e], data)
+        };
+        let rt = RoutingTable::from_probs(&probs, k);
+        let plan = DispatchPlan::build(&rt, n_tokens / devices);
+        let placement = crate::moe::Placement::new(e, devices);
+
+        let mut cache = CondCommCache::new(n_tokens, e, d);
+        // step 0: everything fresh — prime the cache for every entry.
+        for entries in &plan.per_expert {
+            for en in entries {
+                cache.put(en.token, en.expert, &vec![1.0; d]);
+            }
+        }
+
+        // step 1 (odd): LowScore throttles every rank>0 entry.
+        let mut refs = ResidualRefCache::new(n_tokens, e, d);
+        let mut cs = CodecStats::default();
+        let mut rng = Rng::new(0);
+        let mut reused = 0usize;
+        let mut expected_coded_or_dense = 0usize;
+        for (ei, entries) in plan.per_expert.iter().enumerate() {
+            let owner = placement.owner(ei);
+            let mut rows = Vec::new();
+            let mut keys = Vec::new();
+            let mut block_rows = Vec::new();
+            for en in entries {
+                let fresh =
+                    condcomm::is_fresh(CondCommSelector::LowScore, en, 1, 2, &mut rng)
+                        || cache.get(en.token, en.expert).is_none();
+                if !fresh {
+                    reused += 1;
+                    continue; // served from cache: no codec work
+                }
+                if en.src_device != owner {
+                    rows.push(block_rows.len());
+                    keys.push((en.token, en.expert));
+                    expected_coded_or_dense += 1;
+                }
+                block_rows.push(en.token);
+            }
+            let mut block = Tensor::from_vec(
+                &[block_rows.len().max(1), d],
+                vec![0.5; block_rows.len().max(1) * d],
+            );
+            transcode_block(&Int8Codec, &mut block, &rows, &keys, &mut refs, &mut cs);
+        }
+        assert!(reused > 0, "stride-2 at an odd step must reuse rank-1 entries");
+        assert_eq!(
+            cs.coded_rows + cs.dense_rows,
+            expected_coded_or_dense,
+            "codec work is exactly the fresh crossing rows"
+        );
+        // every reused entry was rank > 0 and its reference never materialised
+        assert_eq!(reused, n_tokens * (k - 1) - plan
+            .per_expert
+            .iter()
+            .flatten()
+            .filter(|en| en.rank > 0 && cache.get(en.token, en.expert).is_none())
+            .count());
+    }
+}

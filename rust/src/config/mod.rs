@@ -245,6 +245,46 @@ impl CondCommSelector {
     }
 }
 
+/// Residual all-to-all compression codec (DESIGN.md §7): shrinks the
+/// bytes each dispatch/combine moves by encoding the delta between this
+/// step's payload and the previous step's, which diffusion's temporal
+/// redundancy makes highly compressible. Orthogonal to [`Strategy`] and
+/// the other DICE knobs; the codecs themselves live in `crate::compress`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CompressionCodec {
+    /// Disabled: payloads travel dense, no codec machinery runs.
+    None,
+    /// Dense f32 round trip — zero loss, zero saving (the baseline the
+    /// lossy codecs are measured against).
+    Identity,
+    /// Symmetric int8 residual quantization with per-channel scales.
+    Int8,
+    /// Per-row top-k residual sparsification (largest |residual| wins).
+    TopK,
+}
+
+impl CompressionCodec {
+    /// Parse a CLI codec name.
+    pub fn parse(s: &str) -> Result<CompressionCodec> {
+        Ok(match s {
+            "none" | "off" => CompressionCodec::None,
+            "identity" | "id" => CompressionCodec::Identity,
+            "int8" | "q8" => CompressionCodec::Int8,
+            "topk" | "top_k" => CompressionCodec::TopK,
+            _ => bail!("unknown compression codec {s:?} (none|identity|int8|topk)"),
+        })
+    }
+    /// Canonical codec name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CompressionCodec::None => "none",
+            CompressionCodec::Identity => "identity",
+            CompressionCodec::Int8 => "int8",
+            CompressionCodec::TopK => "topk",
+        }
+    }
+}
+
 /// The DICE knobs layered on top of a base [`Strategy`].
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DiceOptions {
@@ -261,6 +301,8 @@ pub struct DiceOptions {
     /// Probe mode (staleness sensitivity, Sec. 4.2): run every layer
     /// synchronously EXCEPT this one. Overrides `selective_sync`.
     pub only_async_layer: Option<usize>,
+    /// Residual all-to-all compression codec (DESIGN.md §7).
+    pub compress: CompressionCodec,
 }
 
 impl DiceOptions {
@@ -272,9 +314,12 @@ impl DiceOptions {
             cond_comm_stride: 2,
             warmup_sync_steps: 0,
             only_async_layer: None,
+            compress: CompressionCodec::None,
         }
     }
     /// The full DICE configuration used in the paper's main results.
+    /// (Residual compression stays off — it is our extension, not a
+    /// paper knob; enable it with [`DiceOptions::with_compress`].)
     pub fn dice() -> Self {
         DiceOptions {
             selective_sync: SelectiveSync::Deep,
@@ -282,7 +327,13 @@ impl DiceOptions {
             cond_comm_stride: 2,
             warmup_sync_steps: 0,
             only_async_layer: None,
+            compress: CompressionCodec::None,
         }
+    }
+    /// Select a residual compression codec for the all-to-all payloads.
+    pub fn with_compress(mut self, codec: CompressionCodec) -> Self {
+        self.compress = codec;
+        self
     }
     /// Set the synchronous warmup step count.
     pub fn with_warmup(mut self, steps: usize) -> Self {
@@ -347,6 +398,28 @@ mod tests {
             .filter(|&l| SelectiveSync::Staggered.is_sync_layer(l, n))
             .count();
         assert_eq!(staggered, 3);
+    }
+
+    #[test]
+    fn compression_codec_parse_roundtrip() {
+        for c in [
+            CompressionCodec::None,
+            CompressionCodec::Identity,
+            CompressionCodec::Int8,
+            CompressionCodec::TopK,
+        ] {
+            assert_eq!(CompressionCodec::parse(c.name()).unwrap(), c);
+        }
+        assert_eq!(
+            CompressionCodec::parse("q8").unwrap(),
+            CompressionCodec::Int8
+        );
+        assert!(CompressionCodec::parse("zstd").is_err());
+        // compression defaults off in both canned option sets
+        assert_eq!(DiceOptions::none().compress, CompressionCodec::None);
+        assert_eq!(DiceOptions::dice().compress, CompressionCodec::None);
+        let on = DiceOptions::dice().with_compress(CompressionCodec::TopK);
+        assert_eq!(on.compress, CompressionCodec::TopK);
     }
 
     #[test]

@@ -91,6 +91,11 @@ pub struct HardwareProfile {
     /// Token count at which compute throughput reaches 50% of peak
     /// (GPU utilisation ramp — see `CostModel::t_compute_at`).
     pub sat_tokens: f64,
+    /// Effective residual-codec throughput, raw bytes/s processed by a
+    /// fused encode+decode pass (quantize/sparsify kernels are
+    /// memory-bound elementwise work — see `CostModel::t_codec` and
+    /// DESIGN.md §7).
+    pub codec_bw: f64,
 }
 
 /// Look up a hardware profile by name (the paper's two PCIe testbeds
@@ -110,6 +115,7 @@ pub fn hardware_profile(name: &str) -> Result<HardwareProfile> {
             mem_bytes: 24 * (1 << 30),
             coll_overhead: 60e-6,
             sat_tokens: 256.0,
+            codec_bw: 250.0e9,
         },
         // RTX 3080 20GB (the paper's AutoDL variant) on a PCIe 3.0
         // platform (Xeon 8352V): both compute AND interconnect are about
@@ -125,6 +131,7 @@ pub fn hardware_profile(name: &str) -> Result<HardwareProfile> {
             mem_bytes: 20 * (1 << 30),
             coll_overhead: 70e-6,
             sat_tokens: 300.0,
+            codec_bw: 120.0e9,
         },
         // A hypothetical NVLink box (paper §10 "Applicability to NVLink").
         "nvlink" => HardwareProfile {
@@ -136,6 +143,7 @@ pub fn hardware_profile(name: &str) -> Result<HardwareProfile> {
             mem_bytes: 80 * (1 << 30),
             coll_overhead: 20e-6,
             sat_tokens: 256.0,
+            codec_bw: 400.0e9,
         },
         _ => bail!("unknown hardware profile {name:?} (rtx4090_pcie|rtx3080_pcie|nvlink)"),
     })

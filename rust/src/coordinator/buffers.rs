@@ -5,7 +5,14 @@
 //! while interweaved parallelism persists ONLY the combine result —
 //! "halving the required buffer size". This module owns those buffers
 //! and tracks the live/peak byte counts so the claim is measurable.
+//!
+//! It also owns [`ResidualRefCache`], the dispatch-side per-(token,
+//! expert) reference rows residual compression (DESIGN.md §7) encodes
+//! deltas against — the same grid-of-rows shape as the conditional-
+//! communication cache, with the same byte accounting.
 
+use super::condcomm::CondCommCache;
+use crate::compress::RefStore;
 use crate::moe::RoutingTable;
 use crate::tensor::Tensor;
 
@@ -115,6 +122,40 @@ impl BufferManager {
     }
 }
 
+/// Dispatch-side reference rows for residual compression: the last
+/// RECONSTRUCTED activation transmitted per (token, expert) pair.
+/// Sender and receiver advance it identically (error feedback), so it
+/// doubles as the receiver's decode state. Reuses the conditional-
+/// communication cache's dense (token × expert) grid.
+#[derive(Debug)]
+pub struct ResidualRefCache {
+    cache: CondCommCache,
+}
+
+impl ResidualRefCache {
+    /// Empty reference grid for `n_tokens` × `n_experts` rows of width
+    /// `d_model`.
+    pub fn new(n_tokens: usize, n_experts: usize, d_model: usize) -> ResidualRefCache {
+        ResidualRefCache {
+            cache: CondCommCache::new(n_tokens, n_experts, d_model),
+        }
+    }
+
+    /// Bytes of live reference rows (memory accounting).
+    pub fn live_bytes(&self) -> usize {
+        self.cache.live_bytes
+    }
+}
+
+impl RefStore for ResidualRefCache {
+    fn get_ref(&self, token: usize, expert: usize) -> Option<&[f32]> {
+        self.cache.get(token, expert)
+    }
+    fn put_ref(&mut self, token: usize, expert: usize, row: &[f32]) {
+        self.cache.put(token, expert, row);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -161,6 +202,17 @@ mod tests {
         let b = bm.live_bytes();
         bm.swap_dispatch(0, Some(dummy_dispatch(5)));
         assert_eq!(bm.live_bytes(), b);
+    }
+
+    #[test]
+    fn residual_ref_cache_roundtrip_and_bytes() {
+        let mut refs = ResidualRefCache::new(4, 2, 3);
+        assert!(refs.get_ref(2, 1).is_none());
+        refs.put_ref(2, 1, &[1.0, 2.0, 3.0]);
+        assert_eq!(refs.get_ref(2, 1).unwrap(), &[1.0, 2.0, 3.0]);
+        assert_eq!(refs.live_bytes(), 12);
+        refs.put_ref(2, 1, &[4.0, 5.0, 6.0]); // overwrite: no growth
+        assert_eq!(refs.live_bytes(), 12);
     }
 
     #[test]

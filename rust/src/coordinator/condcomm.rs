@@ -62,6 +62,20 @@ impl CondCommCache {
     }
 }
 
+/// The conditional-communication cache doubles as the combine-side
+/// reference store for residual compression (DESIGN.md §7): the cached
+/// expert output IS the last transmitted reconstruction, so the codec
+/// encodes combine deltas against it and advances it on every fresh
+/// transmission.
+impl crate::compress::RefStore for CondCommCache {
+    fn get_ref(&self, token: usize, expert: usize) -> Option<&[f32]> {
+        self.get(token, expert)
+    }
+    fn put_ref(&mut self, token: usize, expert: usize, row: &[f32]) {
+        self.put(token, expert, row);
+    }
+}
+
 /// The per-step freshness decision of Algorithm 4.
 ///
 /// Returns true if the (token, expert) pair must be TRANSMITTED this

@@ -20,13 +20,17 @@
 //!
 //! Selective synchronization forces chosen layers back to SyncEp
 //! semantics; conditional communication throttles non-top-1
-//! (token, expert) pairs via `condcomm`.
+//! (token, expert) pairs via `condcomm`; residual compression
+//! (`crate::compress`, DESIGN.md §7) shrinks the bytes every crossing
+//! row moves — and its reconstruction error flows through the real
+//! numerics into the quality metrics.
 
 use anyhow::{bail, Context, Result};
 
-use super::buffers::{BufferManager, PendingCombine, PendingDispatch};
+use super::buffers::{BufferManager, PendingCombine, PendingDispatch, ResidualRefCache};
 use super::condcomm::{self, CommStats, CondCommCache};
 use super::staleness::StalenessLedger;
+use crate::compress::{self, CodecStats};
 use crate::config::{CondCommSelector, DiceOptions, Strategy};
 use crate::moe::{DispatchPlan, Placement, RoutingTable};
 use crate::rng::Rng;
@@ -52,10 +56,20 @@ pub struct RunStats {
     /// Conditional-communication fresh/reuse accounting.
     pub comm: CommStats,
     /// cross-device activation bytes actually transferred (dispatch +
-    /// combine, or DFU shard exchange).
+    /// combine, or DFU shard exchange). With residual compression on,
+    /// these are the POST-codec wire bytes.
     pub fresh_bytes: usize,
-    /// bytes avoided by conditional communication.
+    /// bytes avoided by conditional communication (dense-equivalent:
+    /// what a full refresh of the reused pairs would have cost).
     pub saved_bytes: usize,
+    /// bytes avoided by residual compression (dense minus wire).
+    pub codec_saved_bytes: usize,
+    /// rows that went through a residual encode→decode round trip.
+    pub codec_coded_rows: usize,
+    /// rows sent dense because no reference existed yet (cold start).
+    pub codec_dense_rows: usize,
+    /// dispatch-side residual reference buffer bytes.
+    pub ref_cache_bytes: usize,
     /// peak staleness-buffer bytes (displaced 2x vs interweaved 1x claim).
     pub peak_buffer_bytes: usize,
     /// conditional-communication cache bytes.
@@ -68,6 +82,16 @@ pub struct RunStats {
     pub routing_snapshots: Vec<RoutingTable>,
     /// per-expert token loads accumulated over the run (imbalance).
     pub expert_loads: Vec<usize>,
+}
+
+impl RunStats {
+    /// Fold one transcode pass's accounting into the run totals.
+    fn merge_codec(&mut self, cs: &CodecStats) {
+        self.fresh_bytes += cs.wire_bytes;
+        self.codec_saved_bytes += cs.saved_bytes();
+        self.codec_coded_rows += cs.coded_rows;
+        self.codec_dense_rows += cs.dense_rows;
+    }
 }
 
 /// The coordinator engine. Holds borrowed runtime + staged weights so
@@ -147,6 +171,7 @@ impl<'a> Engine<'a> {
         let m = &self.rt.model;
         let placement = Placement::new(m.n_experts, self.cfg.devices);
         let mut cache = CondCommCache::new(xin_g.rows().0, m.n_experts, m.d_model);
+        let mut refs = ResidualRefCache::new(xin_g.rows().0, m.n_experts, m.d_model);
         let mut rng = Rng::new(0);
         let mut stats = RunStats {
             expert_loads: vec![0; m.n_experts],
@@ -160,6 +185,7 @@ impl<'a> Engine<'a> {
             CondCommSelector::Off,
             &placement,
             &mut cache,
+            &mut refs,
             &mut rng,
             &mut stats,
         )
@@ -206,6 +232,11 @@ impl<'a> Engine<'a> {
         let mut bufs = BufferManager::new(m.n_layers);
         let mut caches: Vec<CondCommCache> = (0..m.n_layers)
             .map(|_| CondCommCache::new(n_global_tokens, m.n_experts, m.d_model))
+            .collect();
+        // dispatch-side residual references (one grid per layer); stays
+        // empty when compression is off.
+        let mut disp_refs: Vec<ResidualRefCache> = (0..m.n_layers)
+            .map(|_| ResidualRefCache::new(n_global_tokens, m.n_experts, m.d_model))
             .collect();
         let mut cc_rng = Rng::new(0xC0DE ^ labels.len() as u64);
 
@@ -288,6 +319,7 @@ impl<'a> Engine<'a> {
                         cc,
                         &placement,
                         &mut caches[l],
+                        &mut disp_refs[l],
                         &mut cc_rng,
                         &mut stats,
                     )?;
@@ -347,6 +379,7 @@ impl<'a> Engine<'a> {
                                         cc,
                                         &placement,
                                         &mut caches[l],
+                                        &mut disp_refs[l],
                                         &mut cc_rng,
                                         &mut stats,
                                     )?;
@@ -368,7 +401,7 @@ impl<'a> Engine<'a> {
                                     // mandatory synchronized first steps.
                                     let fresh = self.ep_moe(
                                         &xin_g, &routing, l, step_i, cc, &placement,
-                                        &mut caches[l], &mut cc_rng, &mut stats,
+                                        &mut caches[l], &mut disp_refs[l], &mut cc_rng, &mut stats,
                                     )?;
                                     (fresh, 0)
                                 }
@@ -386,6 +419,7 @@ impl<'a> Engine<'a> {
                                 cc,
                                 &placement,
                                 &mut caches[l],
+                                &mut disp_refs[l],
                                 &mut cc_rng,
                                 &mut stats,
                             )?;
@@ -403,7 +437,7 @@ impl<'a> Engine<'a> {
                                 None => {
                                     let fresh = self.ep_moe(
                                         &xin_g, &routing, l, step_i, cc, &placement,
-                                        &mut caches[l], &mut cc_rng, &mut stats,
+                                        &mut caches[l], &mut disp_refs[l], &mut cc_rng, &mut stats,
                                     )?;
                                     (fresh, 0)
                                 }
@@ -449,13 +483,17 @@ impl<'a> Engine<'a> {
         }
 
         stats.cache_bytes = caches.iter().map(|c| c.live_bytes).sum();
+        stats.ref_cache_bytes = disp_refs.iter().map(ResidualRefCache::live_bytes).sum();
         Ok((x, stats))
     }
 
     /// The emulated all-to-all + expert computation: gather the plan's
-    /// fresh tokens per expert, run the Pallas expert tile, scatter back
-    /// scaled by the (possibly stale) router scores, serve throttled
-    /// pairs from the conditional-communication cache.
+    /// fresh tokens per expert, residual-compress the rows that cross
+    /// devices (dispatch side), run the Pallas expert tile on the
+    /// RECONSTRUCTED activations, residual-compress the crossing outputs
+    /// (combine side), scatter back scaled by the (possibly stale)
+    /// router scores, and serve throttled pairs from the conditional-
+    /// communication cache — which never touch the codec at all.
     #[allow(clippy::too_many_arguments)]
     fn ep_moe(
         &self,
@@ -466,6 +504,7 @@ impl<'a> Engine<'a> {
         cc: CondCommSelector,
         placement: &Placement,
         cache: &mut CondCommCache,
+        refs: &mut ResidualRefCache,
         cc_rng: &mut Rng,
         stats: &mut RunStats,
     ) -> Result<Tensor> {
@@ -474,6 +513,7 @@ impl<'a> Engine<'a> {
         let mut out = Tensor::zeros(&[n_tokens, d]);
         let stride = self.cfg.opts.cond_comm_stride;
         let elem = 4usize; // f32 activations in numerics mode
+        let codec = compress::build(self.cfg.opts.compress);
 
         for (e, entries) in plan.per_expert.iter().enumerate() {
             stats.expert_loads[e] += entries.len();
@@ -485,9 +525,6 @@ impl<'a> Engine<'a> {
                 if want_fresh {
                     fresh.push(en);
                     stats.comm.fresh_entries += 1;
-                    if en.src_device != owner {
-                        stats.fresh_bytes += 2 * d * elem; // dispatch + combine
-                    }
                 } else if let Some(cached) = cache.get(en.token, en.expert) {
                     stats.comm.reused_entries += 1;
                     if en.src_device != owner {
@@ -502,13 +539,37 @@ impl<'a> Engine<'a> {
                     fresh.push(en);
                     stats.comm.fresh_entries += 1;
                     stats.comm.forced_fresh += 1;
-                    if en.src_device != owner {
-                        stats.fresh_bytes += 2 * d * elem;
-                    }
                 }
             }
             if fresh.is_empty() {
                 continue;
+            }
+            // rows of the gathered block that cross devices — the actual
+            // all-to-all payload, and the only rows the codec touches.
+            let remote_rows: Vec<usize> = fresh
+                .iter()
+                .enumerate()
+                .filter(|(_, en)| en.src_device != owner)
+                .map(|(r, _)| r)
+                .collect();
+            let remote_keys: Vec<(usize, usize)> = remote_rows
+                .iter()
+                .map(|&r| (fresh[r].token, fresh[r].expert))
+                .collect();
+            let idx: Vec<usize> = fresh.iter().map(|en| en.token).collect();
+            let mut gathered = ops::gather_rows(xin_g, &idx);
+            // dispatch-side residual compression: the expert consumes the
+            // reconstruction, so quality metrics see codec error
+            // end-to-end.
+            match codec.as_deref() {
+                Some(c) => {
+                    let mut cs = CodecStats::default();
+                    compress::transcode_block(
+                        c, &mut gathered, &remote_rows, &remote_keys, &mut *refs, &mut cs,
+                    );
+                    stats.merge_codec(&cs);
+                }
+                None => stats.fresh_bytes += remote_rows.len() * d * elem,
             }
             // tile the fresh tokens through the expert artifact.
             // §Perf note: a 4x "expert_tile_l" artifact was tried (halves
@@ -516,8 +577,6 @@ impl<'a> Engine<'a> {
             // padding waste exceeds the saved dispatch overhead at tiny
             // shapes. Reverted; the large tile remains exported for real
             // hardware where call overhead dominates harder.
-            let idx: Vec<usize> = fresh.iter().map(|en| en.token).collect();
-            let gathered = ops::gather_rows(xin_g, &idx);
             let n = idx.len();
             let mut outputs = Tensor::zeros(&[n, d]);
             let mut row0 = 0usize;
@@ -537,10 +596,33 @@ impl<'a> Engine<'a> {
                     .copy_from_slice(&y.data()[..take * d]);
                 row0 += take;
             }
-            // scatter with router-score scaling + refresh the cache
+            // combine-side residual compression against the cond-comm
+            // cache (the last transmitted reconstruction), then refresh
+            // the cache with what the receiver actually holds.
+            match codec.as_deref() {
+                Some(c) => {
+                    let mut cs = CodecStats::default();
+                    compress::transcode_block(
+                        c, &mut outputs, &remote_rows, &remote_keys, &mut *cache, &mut cs,
+                    );
+                    stats.merge_codec(&cs);
+                    for (r, en) in fresh.iter().enumerate() {
+                        if en.src_device == owner {
+                            // local rows never hit the wire: cache exact
+                            cache.put(en.token, en.expert, outputs.row(r));
+                        }
+                    }
+                }
+                None => {
+                    stats.fresh_bytes += remote_rows.len() * d * elem;
+                    for (r, en) in fresh.iter().enumerate() {
+                        cache.put(en.token, en.expert, outputs.row(r));
+                    }
+                }
+            }
+            // scatter with router-score scaling
             for (r, en) in fresh.iter().enumerate() {
                 let src = &outputs.data()[r * d..(r + 1) * d];
-                cache.put(en.token, en.expert, src);
                 let dst = out.row_mut(en.token);
                 for (o, s) in dst.iter_mut().zip(src) {
                     *o += en.score * s;

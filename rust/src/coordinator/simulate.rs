@@ -8,7 +8,7 @@
 //! DistriFusion / staggered-batch baselines), so overlap — and the lack
 //! of it — emerges from the dependencies rather than being asserted.
 
-use crate::config::{CondCommSelector, DiceOptions, Strategy};
+use crate::config::{CompressionCodec, CondCommSelector, DiceOptions, Strategy};
 use crate::coordinator::condcomm::low_score_fresh_fraction;
 use crate::desim::{OpId, Resource, Sim};
 use crate::netsim::{CostModel, Workload};
@@ -59,7 +59,16 @@ pub fn simulate(
         // differs, bytes do not.
         _ => low_score_fresh_fraction(cm.model.top_k, opts.cond_comm_stride),
     };
-    let t_a2a_cc = cm.t_a2a(c.a2a_bytes * fresh_frac, wl.devices);
+    // Residual compression (DESIGN.md §7): the collectives move the
+    // codec's wire bytes and additionally pay an α+β encode+decode
+    // overhead, folded into the a2a op so it rides the comm stream
+    // (the codec sits on the transfer's critical path).
+    let a2a_op = |frac: f64| {
+        cm.t_a2a(cm.a2a_wire_bytes(wl, opts.compress, frac), wl.devices)
+            + cm.t_codec(wl, opts.compress, frac)
+    };
+    let t_a2a_full = a2a_op(1.0);
+    let t_a2a_cc = a2a_op(fresh_frac);
 
     let mut sim = Sim::new();
     let dev = 0usize;
@@ -80,9 +89,9 @@ pub fn simulate(
             Strategy::SyncEp => {
                 for _ in 0..l {
                     let pre = sim.add(dev, Resource::Compute, c.t_pre, &dep(chain), "pre");
-                    let d = sim.add(dev, Resource::Comm, c.t_a2a, &[pre], "a2a");
+                    let d = sim.add(dev, Resource::Comm, t_a2a_full, &[pre], "a2a");
                     let e = sim.add(dev, Resource::Compute, c.t_expert, &[d], "expert");
-                    let cb = sim.add(dev, Resource::Comm, c.t_a2a, &[e], "a2a");
+                    let cb = sim.add(dev, Resource::Comm, t_a2a_full, &[e], "a2a");
                     let post = sim.add(dev, Resource::Compute, c.t_post, &[cb], "post");
                     chain = Some(post);
                 }
@@ -100,9 +109,9 @@ pub fn simulate(
                             comb_prev[intw_pending_layer] = Some(cb);
                         }
                         let pre = sim.add(dev, Resource::Compute, c.t_pre, &dep(chain), "pre");
-                        let d = sim.add(dev, Resource::Comm, c.t_a2a, &[pre], "a2a");
+                        let d = sim.add(dev, Resource::Comm, t_a2a_full, &[pre], "a2a");
                         let e = sim.add(dev, Resource::Compute, c.t_expert, &[d], "expert");
-                        let cb = sim.add(dev, Resource::Comm, c.t_a2a, &[e], "a2a");
+                        let cb = sim.add(dev, Resource::Comm, t_a2a_full, &[e], "a2a");
                         let post = sim.add(dev, Resource::Compute, c.t_post, &[cb], "post");
                         disp_prev[li] = Some(d);
                         comb_prev[li] = Some(cb);
@@ -193,13 +202,16 @@ pub fn simulate(
                     ..*wl
                 };
                 let ch = cm.layer_costs(&half);
+                // same codec pricing at the half-batch payload
+                let t_a2a_half = cm.t_a2a(cm.a2a_wire_bytes(&half, opts.compress, 1.0), wl.devices)
+                    + cm.t_codec(&half, opts.compress, 1.0);
                 for _ in 0..l {
                     let mut last_post = None;
                     for _half in 0..2 {
                         let pre = sim.add(dev, Resource::Compute, ch.t_pre, &dep(chain), "pre");
-                        let d = sim.add(dev, Resource::Comm, ch.t_a2a, &[pre], "a2a");
+                        let d = sim.add(dev, Resource::Comm, t_a2a_half, &[pre], "a2a");
                         let e = sim.add(dev, Resource::Compute, ch.t_expert, &[d], "expert");
-                        let cb = sim.add(dev, Resource::Comm, ch.t_a2a, &[e], "a2a");
+                        let cb = sim.add(dev, Resource::Comm, t_a2a_half, &[e], "a2a");
                         let post = sim.add(dev, Resource::Compute, ch.t_post, &[cb], "post");
                         chain = Some(pre); // next half starts after this pre
                         last_post = Some(post);
@@ -258,12 +270,30 @@ pub fn memory_report(
                 * m.n_layers as f64
         }
     };
+    // Residual-compression reference rows (DESIGN.md §7): one row per
+    // (token, chosen expert) per layer on EACH side — dispatch refs in
+    // `ResidualRefCache`, combine refs in the cond-comm cache (which
+    // the engine fills for every routed pair, rank 0 included). Where
+    // that cache is already charged above (Interweaved with cond comm
+    // on) subtract it rather than double-count.
+    let comp_refs = match opts.compress {
+        CompressionCodec::None => 0.0,
+        _ => {
+            let side = wl.local_tokens() as f64
+                * m.top_k as f64
+                * m.d_model as f64
+                * crate::netsim::ELEM_BYTES
+                * m.n_layers as f64;
+            let already_counted = if strategy == Strategy::Interweaved { cc_cache } else { 0.0 };
+            2.0 * side - already_counted
+        }
+    };
     let buffers = match strategy {
-        Strategy::SyncEp => 0.0,
-        Strategy::DisplacedEp => cm.staleness_buffer_bytes(wl, 2.0),
-        Strategy::Interweaved => cm.staleness_buffer_bytes(wl, 1.0) + cc_cache,
-        Strategy::DistriFusion => cm.dfu_buffer_bytes(wl),
-        Strategy::StaggeredBatch => cm.staleness_buffer_bytes(wl, 2.0),
+        Strategy::SyncEp => comp_refs,
+        Strategy::DisplacedEp => cm.staleness_buffer_bytes(wl, 2.0) + comp_refs,
+        Strategy::Interweaved => cm.staleness_buffer_bytes(wl, 1.0) + cc_cache + comp_refs,
+        Strategy::DistriFusion => cm.dfu_buffer_bytes(wl), // codec targets EP payloads
+        Strategy::StaggeredBatch => cm.staleness_buffer_bytes(wl, 2.0) + comp_refs,
     };
     // fixed framework/runtime footprint (CUDA context, NCCL, allocator)
     let overhead = 1.5e9;
@@ -345,6 +375,52 @@ mod tests {
         assert!(deep.step_time > none.step_time, "sync layers must block");
         let sync = run(Strategy::SyncEp, DiceOptions::none());
         assert!(deep.step_time < sync.step_time, "but less than full sync");
+    }
+
+    #[test]
+    fn int8_compression_cuts_step_time_identity_does_not() {
+        // bytes dominate at XL scale, so int8's halved payload must beat
+        // the dense schedule even after the α+β codec overhead — while
+        // the identity codec pays the overhead for zero byte savings.
+        for strategy in [Strategy::SyncEp, Strategy::Interweaved] {
+            let none = run(strategy, DiceOptions::none());
+            let int8 = run(
+                strategy,
+                DiceOptions::none().with_compress(CompressionCodec::Int8),
+            );
+            let id = run(
+                strategy,
+                DiceOptions::none().with_compress(CompressionCodec::Identity),
+            );
+            assert!(
+                int8.step_time < 0.95 * none.step_time,
+                "{strategy:?}: int8 {} vs dense {}",
+                int8.step_time,
+                none.step_time
+            );
+            assert!(
+                id.step_time >= none.step_time,
+                "{strategy:?}: identity cannot be faster than no codec"
+            );
+        }
+    }
+
+    #[test]
+    fn compression_composes_with_dice() {
+        let dice = run(Strategy::Interweaved, DiceOptions::dice());
+        let dice_c = run(
+            Strategy::Interweaved,
+            DiceOptions::dice().with_compress(CompressionCodec::Int8),
+        );
+        assert!(
+            dice_c.step_time < dice.step_time,
+            "compressed DICE {} vs DICE {}",
+            dice_c.step_time,
+            dice.step_time
+        );
+        // and the reference rows cost memory
+        assert!(dice_c.mem.buffers > dice.mem.buffers);
+        assert!(!dice_c.mem.oom);
     }
 
     #[test]

@@ -1,0 +1,227 @@
+//! Residual-compression trade-off driver (DESIGN.md §7): bytes-per-A2A
+//! reduction vs. reconstruction error vs. analytic step latency, per
+//! codec. Artifact-free — the quality column comes from REAL codec
+//! numerics on a synthetic diffusion-like activation trajectory (a
+//! smooth random walk, mimicking the temporal redundancy the codecs
+//! exploit), and the latency column from the XL-scale virtual-time
+//! simulation at the paper's batch-16 plotting point.
+
+use anyhow::{ensure, Result};
+
+use crate::benchkit::{fmt_bytes, Table};
+use crate::compress::{self, CodecStats, ResidualCodec};
+use crate::config::{
+    hardware_profile, model_preset, obj, CompressionCodec, DiceOptions, Json,
+};
+use crate::coordinator::buffers::ResidualRefCache;
+use crate::coordinator::simulate;
+use crate::netsim::{CostModel, Workload};
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+/// Measured outcome of one codec on the synthetic trajectory.
+#[derive(Debug, Clone, Copy)]
+struct CodecRun {
+    bytes_per_a2a: f64,
+    mean_rel_l2: f64,
+}
+
+/// Drive `steps` steps of a smoothly-drifting [n_tokens, d] activation
+/// block through the engine's canonical transcode path
+/// (`compress::transcode_block`, with a `ResidualRefCache` holding one
+/// reference per row) and measure wire bytes + reconstruction error.
+/// The first step travels dense (cold start), exactly as in `ep_moe`.
+fn run_codec(codec: &dyn ResidualCodec, traj: &[Tensor], n_tokens: usize, d: usize) -> CodecRun {
+    let mut refs = ResidualRefCache::new(n_tokens, 1, d);
+    let rows: Vec<usize> = (0..n_tokens).collect();
+    let keys: Vec<(usize, usize)> = (0..n_tokens).map(|t| (t, 0)).collect();
+    let mut stats = CodecStats::default();
+    let mut err_sum = 0.0f64;
+    let mut coded_steps = 0usize;
+    for x in traj {
+        let coded_before = stats.coded_rows;
+        let mut block = x.clone();
+        compress::transcode_block(codec, &mut block, &rows, &keys, &mut refs, &mut stats);
+        if stats.coded_rows > coded_before {
+            // block now holds the receiver's reconstruction
+            err_sum += block.rel_l2(x).expect("same shape") as f64;
+            coded_steps += 1;
+        }
+    }
+    CodecRun {
+        bytes_per_a2a: stats.wire_bytes as f64 / traj.len() as f64,
+        mean_rel_l2: if coded_steps == 0 { 0.0 } else { err_sum / coded_steps as f64 },
+    }
+}
+
+/// XL-scale DICE step latency with a codec (batch 16 on 8×4090, the
+/// Figure-10 plotting point).
+fn xl_step_time(codec: CompressionCodec) -> Result<f64> {
+    let cm = CostModel::new(model_preset("xl")?, hardware_profile("rtx4090_pcie")?);
+    let wl = Workload {
+        local_batch: 16,
+        devices: 8,
+        tokens: cm.model.tokens(),
+    };
+    let opts = DiceOptions::dice().with_compress(codec);
+    Ok(simulate(&cm, &wl, crate::config::Strategy::Interweaved, &opts, 50).step_time)
+}
+
+/// The residual-compression trade-off table: one row per codec with
+/// measured bytes per all-to-all payload, the reduction vs. the
+/// identity baseline, the mean reconstruction error, and the analytic
+/// XL-scale step latency. Fails (rather than silently reporting) if
+/// int8 does not move strictly fewer bytes than identity at bounded
+/// reconstruction error — the property the whole subsystem exists for.
+pub fn tradeoff(n_tokens: usize, d: usize, steps: usize, seed: u64) -> Result<(Table, Json)> {
+    ensure!(n_tokens > 0 && d > 0 && steps >= 2, "need a non-trivial trajectory");
+    // synthetic diffusion-like trajectory: x_{t+1} = x_t + σ·N(0, 1)
+    let sigma = 0.1f32;
+    let mut rng = Rng::new(seed);
+    let mut x = Tensor::zeros(&[n_tokens, d]);
+    rng.fill_normal(x.data_mut());
+    let mut traj = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        for v in x.data_mut() {
+            *v += sigma * rng.normal_f32();
+        }
+        traj.push(x.clone());
+    }
+
+    let cases = [
+        CompressionCodec::Identity,
+        CompressionCodec::Int8,
+        CompressionCodec::TopK,
+    ];
+    let mut table = Table::new(
+        &format!(
+            "Residual compression trade-off — [{n_tokens}×{d}] payload, {steps} steps \
+             (latency: DICE on XL, batch 16, 8×4090)"
+        ),
+        &["Codec", "wire bytes/A2A", "vs identity", "rel-L2 err", "XL step latency"],
+    );
+    let mut rows = Vec::new();
+
+    // context row: no codec at all (dense payload, no α+β overhead)
+    let dense_bytes = (n_tokens * d * 4) as f64;
+    let t_none = xl_step_time(CompressionCodec::None)?;
+    table.row(vec![
+        "none".into(),
+        fmt_bytes(dense_bytes as usize),
+        "-".into(),
+        "0".into(),
+        format!("{:.2} ms", t_none * 1e3),
+    ]);
+    rows.push(obj(vec![
+        ("codec", Json::Str("none".into())),
+        ("bytes_per_a2a", Json::Num(dense_bytes)),
+        ("mean_rel_l2", Json::Num(0.0)),
+        ("xl_step_time", Json::Num(t_none)),
+    ]));
+
+    let mut by_name: Vec<(&'static str, CodecRun, f64)> = Vec::new();
+    for cfg in cases {
+        let codec = compress::build(cfg).expect("real codec");
+        let run = run_codec(codec.as_ref(), &traj, n_tokens, d);
+        let t_step = xl_step_time(cfg)?;
+        by_name.push((cfg.name(), run, t_step));
+    }
+    let identity = by_name[0].1;
+    for (name, run, t_step) in &by_name {
+        table.row(vec![
+            (*name).to_string(),
+            fmt_bytes(run.bytes_per_a2a as usize),
+            format!("{:.2}x fewer", identity.bytes_per_a2a / run.bytes_per_a2a),
+            format!("{:.2e}", run.mean_rel_l2),
+            format!("{:.2} ms", t_step * 1e3),
+        ]);
+        rows.push(obj(vec![
+            ("codec", Json::Str((*name).into())),
+            ("bytes_per_a2a", Json::Num(run.bytes_per_a2a)),
+            (
+                "reduction_vs_identity",
+                Json::Num(1.0 - run.bytes_per_a2a / identity.bytes_per_a2a),
+            ),
+            ("mean_rel_l2", Json::Num(run.mean_rel_l2)),
+            ("xl_step_time", Json::Num(*t_step)),
+        ]));
+    }
+
+    // the acceptance property: int8 strictly shrinks the payload at
+    // bounded reconstruction error (identity is exact by construction).
+    let int8 = by_name[1].1;
+    ensure!(
+        int8.bytes_per_a2a < identity.bytes_per_a2a,
+        "int8 must move strictly fewer bytes than identity ({} vs {})",
+        int8.bytes_per_a2a,
+        identity.bytes_per_a2a
+    );
+    ensure!(
+        int8.mean_rel_l2 < 0.02,
+        "int8 reconstruction error unbounded: {}",
+        int8.mean_rel_l2
+    );
+    ensure!(
+        identity.mean_rel_l2 < 1e-6,
+        "identity must be lossless: {}",
+        identity.mean_rel_l2
+    );
+
+    let json = obj(vec![
+        ("n_tokens", Json::Num(n_tokens as f64)),
+        ("d", Json::Num(d as f64)),
+        ("steps", Json::Num(steps as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    Ok((table, json))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row<'a>(json: &'a Json, codec: &str) -> &'a Json {
+        json.get("rows")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .find(|r| r.get("codec").map(|c| c.as_str()) == Some(Some(codec)))
+            .unwrap()
+    }
+
+    fn num(j: &Json, k: &str) -> f64 {
+        j.get(k).unwrap().as_f64().unwrap()
+    }
+
+    #[test]
+    fn tradeoff_orders_codecs_as_designed() {
+        let (_, json) = tradeoff(32, 32, 16, 7).unwrap();
+        let (id, i8r, tk, none) = (
+            row(&json, "identity"),
+            row(&json, "int8"),
+            row(&json, "topk"),
+            row(&json, "none"),
+        );
+        // bytes: topk < int8 < identity == dense
+        assert!(num(i8r, "bytes_per_a2a") < num(id, "bytes_per_a2a"));
+        assert!(num(tk, "bytes_per_a2a") < num(i8r, "bytes_per_a2a"));
+        assert!((num(id, "bytes_per_a2a") - num(none, "bytes_per_a2a")).abs() < 1e-6);
+        // error: identity exact, int8 tight, topk bounded by feedback
+        assert!(num(id, "mean_rel_l2") < 1e-6);
+        assert!(num(i8r, "mean_rel_l2") < 0.02);
+        assert!(num(tk, "mean_rel_l2") < 0.5);
+        assert!(num(i8r, "mean_rel_l2") <= num(tk, "mean_rel_l2") + 1e-9);
+        // latency: fewer wire bytes ⇒ faster XL step; identity pays the
+        // codec overhead for nothing
+        assert!(num(i8r, "xl_step_time") < num(id, "xl_step_time"));
+        assert!(num(id, "xl_step_time") >= num(none, "xl_step_time"));
+        assert!(num(tk, "xl_step_time") <= num(i8r, "xl_step_time"));
+    }
+
+    #[test]
+    fn tradeoff_rejects_degenerate_input() {
+        assert!(tradeoff(0, 8, 8, 1).is_err());
+        assert!(tradeoff(8, 8, 1, 1).is_err());
+    }
+}

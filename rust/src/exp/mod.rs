@@ -3,6 +3,7 @@
 //! writes machine-readable JSON next to it via [`write_results`]); the
 //! `benches/*.rs` binaries are thin wrappers.
 
+pub mod compress;
 pub mod quality;
 pub mod scaling;
 pub mod schedules;

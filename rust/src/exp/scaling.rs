@@ -5,7 +5,9 @@
 use anyhow::Result;
 
 use crate::benchkit::{fmt_bytes, fmt_secs, Table};
-use crate::config::{hardware_profile, model_preset, obj, DiceOptions, Json, Strategy};
+use crate::config::{
+    hardware_profile, model_preset, obj, CompressionCodec, DiceOptions, Json, Strategy,
+};
 use crate::coordinator::{memory_report, simulate};
 use crate::netsim::{CostModel, Workload};
 
@@ -79,13 +81,20 @@ pub fn motivation() -> Result<(Table, Json)> {
     Ok((table, obj(vec![("rows", Json::Arr(rows))])))
 }
 
-/// The four methods plotted in Figures 9/14/15.
+/// The four methods plotted in Figures 9/14/15, plus our
+/// residual-compression extension (DESIGN.md §7) as a fifth row so the
+/// scaling tables price the bytes-on-the-wire axis too.
 fn fig9_methods() -> Vec<(&'static str, Strategy, DiceOptions)> {
     vec![
         ("Expert Parallelism", Strategy::SyncEp, DiceOptions::none()),
         ("DistriFusion", Strategy::DistriFusion, DiceOptions::none()),
         ("Displaced EP", Strategy::DisplacedEp, DiceOptions::none()),
         ("DICE", Strategy::Interweaved, DiceOptions::dice()),
+        (
+            "DICE + int8 residual",
+            Strategy::Interweaved,
+            DiceOptions::dice().with_compress(CompressionCodec::Int8),
+        ),
     ]
 }
 
@@ -271,6 +280,29 @@ mod tests {
                 assert_eq!(r.get("oom").unwrap(), &Json::Bool(true));
             }
         }
+    }
+
+    #[test]
+    fn compressed_dice_beats_dice_in_batch_scaling() {
+        let (_, json) = scaling("xl", "rtx4090_pcie", 4).unwrap();
+        let rows = json.get("rows").unwrap().as_arr().unwrap();
+        let lat = |method: &str| {
+            rows.iter()
+                .find(|r| {
+                    r.get("kind").map(|k| k.as_str()) == Some(Some("batch"))
+                        && r.get("method").map(|m| m.as_str()) == Some(Some(method))
+                        && r.get("batch").and_then(|b| b.as_f64()) == Some(16.0)
+                })
+                .unwrap()
+                .get("latency")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        assert!(
+            lat("DICE + int8 residual") < lat("DICE"),
+            "the bytes-on-the-wire axis must compound with DICE's staleness axis"
+        );
     }
 
     #[test]

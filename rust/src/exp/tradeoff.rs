@@ -9,8 +9,8 @@ use anyhow::Result;
 use super::{quality::run_method, Ctx};
 use crate::benchkit::{fmt_secs, Table};
 use crate::config::{
-    hardware_profile, model_preset, obj, CondCommSelector, DiceOptions, Json, SelectiveSync,
-    Strategy,
+    hardware_profile, model_preset, obj, CompressionCodec, CondCommSelector, DiceOptions, Json,
+    SelectiveSync, Strategy,
 };
 use crate::coordinator::{memory_report, simulate};
 use crate::netsim::{CostModel, Workload};
@@ -30,6 +30,13 @@ fn points() -> Vec<(&'static str, Strategy, DiceOptions)> {
         ("Interweaved + deep sync", Strategy::Interweaved, intw_deep),
         ("Interweaved + cond comm", Strategy::Interweaved, intw_cc),
         ("DICE (full)", Strategy::Interweaved, dice),
+        // our extension beyond the paper: DICE with int8 residual
+        // compression on the all-to-all payloads (DESIGN.md §7)
+        (
+            "DICE + int8 residual",
+            Strategy::Interweaved,
+            DiceOptions::dice().with_compress(CompressionCodec::Int8),
+        ),
     ]
 }
 

@@ -9,8 +9,9 @@
 //! * **L3 (this crate)** — the coordinator: expert-parallel engine, the
 //!   paper's parallelism strategies (synchronous EP, displaced EP,
 //!   interweaved parallelism, DistriFusion), selective synchronization,
-//!   conditional communication, the serving stack, and the evaluation
-//!   harness that regenerates every table and figure of the paper.
+//!   conditional communication, residual all-to-all compression
+//!   (DESIGN.md §7), the serving stack, and the evaluation harness that
+//!   regenerates every table and figure of the paper.
 //!
 //! The offline crate universe is tiny (the in-tree `xla` stub crate plus
 //! `anyhow` / `thiserror` / `once_cell`), so the usual ecosystem pieces —
@@ -23,6 +24,7 @@
 
 pub mod benchkit;
 pub mod cli;
+pub mod compress;
 pub mod config;
 pub mod coordinator;
 pub mod desim;

@@ -15,7 +15,7 @@
 use anyhow::{bail, Result};
 
 use dice::cli::Args;
-use dice::config::CondCommSelector;
+use dice::config::{CompressionCodec, CondCommSelector};
 use dice::config::{hardware_profile, model_preset, DiceOptions, SelectiveSync, Strategy};
 use dice::coordinator::{simulate, Engine, EngineConfig};
 use dice::exp::{self, Ctx};
@@ -28,11 +28,13 @@ fn usage() -> String {
         "usage: dice <info|generate|serve|sim|exp> [--help]\n\
          \n\
          dice generate --strategy interweaved --samples 32 --steps 50 \\\n\
-         \x20             --selective deep --condcomm low --warmup 4\n\
+         \x20             --selective deep --condcomm low --warmup 4 [--compress int8]\n\
          dice serve    --requests 64 --rate 2.0 --strategy interweaved \\\n\
          \x20             --scenario steady [--sim] [--queue-cap N] [--slo SECONDS]\n\
-         dice sim      --model xl --hw rtx4090_pcie --batch 16 --devices 8\n\
+         \x20             [--compress none|identity|int8|topk]\n\
+         dice sim      --model xl --hw rtx4090_pcie --batch 16 --devices 8 [--compress int8]\n\
          dice exp      table1 --samples 256\n\
+         dice exp      compress            residual-codec trade-off (artifact-free)\n\
          \n\
          serve scenarios:\n{}",
         scenarios::catalog()
@@ -46,6 +48,7 @@ fn opts_from(a: &Args) -> Result<DiceOptions> {
         cond_comm_stride: a.usize_or("stride", 2),
         warmup_sync_steps: a.usize_or("warmup", 4),
         only_async_layer: None,
+        compress: CompressionCodec::parse(&a.str_or("compress", "none"))?,
     })
 }
 
@@ -222,6 +225,16 @@ fn main() -> Result<()> {
                     let (t, j) = exp::scaling::table5()?;
                     t.print();
                     exp::write_results("table5_a2a_pct", &t.render(), &j)?;
+                }
+                "compress" => {
+                    let (t, j) = exp::compress::tradeoff(
+                        a.usize_or("tokens", 64),
+                        a.usize_or("dim", 64),
+                        a.usize_or("steps", 32),
+                        seed,
+                    )?;
+                    t.print();
+                    exp::write_results("compress_tradeoff", &t.render(), &j)?;
                 }
                 "motivation" => {
                     let (t, j) = exp::scaling::motivation()?;

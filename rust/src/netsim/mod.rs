@@ -8,7 +8,8 @@
 //! (latency & memory scaling) and the OOM behaviour of DistriFusion.
 //! Absolute seconds are calibrated, ratios are the claim.
 
-use crate::config::{HardwareProfile, ModelConfig};
+use crate::compress;
+use crate::config::{CompressionCodec, HardwareProfile, ModelConfig};
 
 /// Serving precision assumed by the cost model (bytes per element).
 pub const ELEM_BYTES: f64 = 2.0;
@@ -55,6 +56,26 @@ pub struct LayerCosts {
 }
 
 /// Analytic cost model.
+///
+/// # Examples
+///
+/// ```
+/// use dice::config::{hardware_profile, model_preset, CompressionCodec};
+/// use dice::netsim::{CostModel, Workload};
+///
+/// let cm = CostModel::new(
+///     model_preset("xl").unwrap(),
+///     hardware_profile("rtx4090_pcie").unwrap(),
+/// );
+/// let wl = Workload { local_batch: 8, devices: 8, tokens: cm.model.tokens() };
+/// let c = cm.layer_costs(&wl);
+/// // the paper's bottleneck: the two all-to-alls outweigh the block compute
+/// assert!(2.0 * c.t_a2a > c.t_pre + c.t_expert + c.t_post);
+/// // int8 residual compression moves fewer bytes than the dense payload
+/// let dense = cm.a2a_wire_bytes(&wl, CompressionCodec::None, 1.0);
+/// let int8 = cm.a2a_wire_bytes(&wl, CompressionCodec::Int8, 1.0);
+/// assert!(int8 < dense);
+/// ```
 #[derive(Debug, Clone)]
 pub struct CostModel {
     /// Model architecture being priced.
@@ -103,12 +124,46 @@ impl CostModel {
     }
 
     /// Bytes one device contributes to a single all-to-all (dispatch or
-    /// combine): its `local_tokens · top_k` routed activations of width
-    /// D, of which `(devices-1)/devices` actually cross the wire.
+    /// combine): the crossing rows ([`CostModel::a2a_rows`]) at width D
+    /// and serving precision.
     pub fn a2a_bytes(&self, wl: &Workload) -> f64 {
-        let d = self.model.d_model as f64;
+        self.a2a_rows(wl) * self.model.d_model as f64 * ELEM_BYTES
+    }
+
+    /// Token-rows one device contributes to a single all-to-all that
+    /// actually cross the wire (`local_tokens · top_k` routed rows, of
+    /// which `(devices-1)/devices` leave the device).
+    pub fn a2a_rows(&self, wl: &Workload) -> f64 {
         let cross = (wl.devices - 1) as f64 / wl.devices as f64;
-        wl.local_tokens() as f64 * self.model.top_k as f64 * d * ELEM_BYTES * cross
+        wl.local_tokens() as f64 * self.model.top_k as f64 * cross
+    }
+
+    /// Bytes one device contributes to a single all-to-all after the
+    /// residual codec, with `fresh_frac` of the rows actually travelling
+    /// (conditional communication throttles the rest). `None` prices the
+    /// dense payload — identical to [`CostModel::a2a_bytes`] at
+    /// `fresh_frac = 1.0`. The per-device payload is treated as one
+    /// encoded block (one per-channel scale vector per collective).
+    pub fn a2a_wire_bytes(&self, wl: &Workload, codec: CompressionCodec, fresh_frac: f64) -> f64 {
+        let rows = self.a2a_rows(wl) * fresh_frac;
+        let d = self.model.d_model;
+        match compress::build(codec) {
+            None => rows * d as f64 * ELEM_BYTES,
+            Some(c) => c.wire_bytes(rows, d, ELEM_BYTES),
+        }
+    }
+
+    /// α+β-style codec overhead for one all-to-all: fixed encode+decode
+    /// launch cost plus the raw payload streamed through the profile's
+    /// fused quantize/sparsify throughput (`codec_bw`). Zero when
+    /// compression is off; the *identity* codec pays the overhead
+    /// without saving bytes, which is exactly why it is the baseline.
+    pub fn t_codec(&self, wl: &Workload, codec: CompressionCodec, fresh_frac: f64) -> f64 {
+        if codec == CompressionCodec::None {
+            return 0.0;
+        }
+        let raw = self.a2a_rows(wl) * fresh_frac * self.model.d_model as f64 * ELEM_BYTES;
+        0.5 * self.hw.coll_overhead + raw / self.hw.codec_bw
     }
 
     /// All-to-all latency for `bytes` per device: all traffic funnels
@@ -275,6 +330,38 @@ mod tests {
         assert!(g.param_bytes() > hw.mem_bytes);
         // EP on 8 devices shards the experts: fits.
         assert!(g.param_bytes_per_device_ep(8) < hw.mem_bytes);
+    }
+
+    #[test]
+    fn codec_wire_bytes_ordering_and_consistency() {
+        let (cm, wl) = xl8(8);
+        let dense = cm.a2a_wire_bytes(&wl, CompressionCodec::None, 1.0);
+        assert!((dense - cm.a2a_bytes(&wl)).abs() < 1e-6, "None == dense payload");
+        let id = cm.a2a_wire_bytes(&wl, CompressionCodec::Identity, 1.0);
+        assert!((id - dense).abs() < 1e-6, "identity saves nothing");
+        let int8 = cm.a2a_wire_bytes(&wl, CompressionCodec::Int8, 1.0);
+        let topk = cm.a2a_wire_bytes(&wl, CompressionCodec::TopK, 1.0);
+        assert!(int8 < dense, "int8 {int8} vs dense {dense}");
+        assert!(topk < int8, "topk {topk} vs int8 {int8}");
+        // at f16 serving precision int8 halves the payload (+ scales)
+        assert!(int8 / dense > 0.45 && int8 / dense < 0.55, "{}", int8 / dense);
+        // throttled rows compress proportionally
+        let int8_cc = cm.a2a_wire_bytes(&wl, CompressionCodec::Int8, 0.75);
+        assert!(int8_cc < int8);
+    }
+
+    #[test]
+    fn codec_overhead_is_alpha_beta() {
+        let (cm, wl) = xl8(8);
+        assert_eq!(cm.t_codec(&wl, CompressionCodec::None, 1.0), 0.0);
+        let t1 = cm.t_codec(&wl, CompressionCodec::Int8, 1.0);
+        let t2 = cm.t_codec(&wl, CompressionCodec::Int8, 0.5);
+        // α survives at small payloads, β scales with the raw bytes
+        assert!(t1 > t2 && t2 > 0.5 * cm.hw.coll_overhead);
+        // the overhead must stay well under the a2a it shortens,
+        // otherwise compression could never win
+        let c = cm.layer_costs(&wl);
+        assert!(t1 < 0.1 * c.t_a2a, "codec {t1} vs a2a {}", c.t_a2a);
     }
 
     #[test]

@@ -10,7 +10,10 @@
 //! * [`serve_loop`] — the virtual-time loop, generic over a
 //!   [`BatchExecutor`]: [`EngineExecutor`] runs REAL numerics over the
 //!   AOT artifacts, [`SimExecutor`] replays the same queueing dynamics
-//!   against the cost model alone (runs on a clean checkout).
+//!   against the cost model alone (runs on a clean checkout). Both
+//!   price the residual-compression codec (`--compress`, DESIGN.md §7):
+//!   the engine reports post-codec wire bytes, the sim executor the
+//!   analytic equivalent.
 //! * [`report`] — [`ServeReport`] with p50/p95/p99 latency, throughput
 //!   and SLO goodput, plus the cross-strategy comparison table.
 //!
