@@ -1,0 +1,175 @@
+//! Perf gate + trajectory recorder (DESIGN.md §8): benches the host
+//! engine step (dispatch → expert FFN → combine over the worker pool)
+//! serial vs parallel, plus the simulation sweep fan-out, and appends
+//! every summary to repo-root `BENCH_engine.json` (JSON lines) — the
+//! perf trajectory across PRs. Artifact-free.
+//!
+//!     cargo bench --bench perf_gate              # full iterations
+//!     cargo bench --bench perf_gate -- --check   # CI: few iters +
+//!                                                # gate assertions
+//!
+//! `--check` asserts (on ≥ 2 cores) that the parallel engine step is no
+//! slower than serial, that the engine output is bit-exact across pool
+//! widths, and that `BENCH_engine.json` is valid JSON lines.
+
+use std::path::PathBuf;
+
+use dice::benchkit::{self, fmt_secs, Summary, Table};
+use dice::cli::Args;
+use dice::config::{hardware_profile, model_preset, DiceOptions, Json, Strategy};
+use dice::coordinator::{simulate_sweep_with, SweepCase};
+use dice::moe::host::{HostMoeConfig, HostMoeLayer};
+use dice::netsim::{CostModel, Workload};
+use dice::par::ParPool;
+use dice::rng::Rng;
+use dice::tensor::Tensor;
+
+/// Repo root (the bench runs with the package dir `rust/` as cwd).
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+        .to_path_buf()
+}
+
+fn main() -> anyhow::Result<()> {
+    let a = Args::parse();
+    if let Some(t) = a.get("threads") {
+        dice::par::set_threads(t.parse()?);
+    }
+    let check = a.flag("check");
+    let (warmup, iters) = if check { (1, 5) } else { (3, 12) };
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let par_threads = ParPool::current().threads().min(cores.max(1)).max(2);
+
+    // --- host engine step: serial vs parallel --------------------------
+    let cfg = HostMoeConfig {
+        n_experts: 8,
+        top_k: 2,
+        d_model: 128,
+        d_ff: 512,
+        devices: 4,
+    };
+    let layer = HostMoeLayer::synth(cfg, 0xD1CE);
+    let n_tokens = a.usize_or("tokens", 512);
+    let mut x = Tensor::zeros(&[n_tokens, cfg.d_model]);
+    Rng::new(7).fill_normal(x.data_mut());
+
+    let serial_pool = ParPool::new(1);
+    let par_pool = ParPool::new(par_threads);
+    let s_serial = benchkit::bench("engine_step_serial", warmup, iters, || {
+        std::hint::black_box(layer.step(&serial_pool, &x));
+    });
+    let s_par = benchkit::bench(
+        &format!("engine_step_t{par_threads}"),
+        warmup,
+        iters,
+        || {
+            std::hint::black_box(layer.step(&par_pool, &x));
+        },
+    );
+
+    // --- sim sweep fan-out: serial vs parallel -------------------------
+    let cm = CostModel::new(model_preset("xl")?, hardware_profile("rtx4090_pcie")?);
+    let cases: Vec<SweepCase> = [4usize, 8, 16, 32]
+        .iter()
+        .flat_map(|&b| {
+            [
+                (Strategy::SyncEp, DiceOptions::none()),
+                (Strategy::DisplacedEp, DiceOptions::none()),
+                (Strategy::Interweaved, DiceOptions::dice()),
+            ]
+            .into_iter()
+            .map(move |(strategy, opts)| SweepCase {
+                wl: Workload {
+                    local_batch: b,
+                    devices: 8,
+                    tokens: 256,
+                },
+                strategy,
+                opts,
+                steps: 20,
+            })
+        })
+        .collect();
+    let w_serial = benchkit::bench("sim_sweep_serial", warmup, iters, || {
+        std::hint::black_box(simulate_sweep_with(&serial_pool, &cm, &cases));
+    });
+    let w_par = benchkit::bench(
+        &format!("sim_sweep_t{par_threads}"),
+        warmup,
+        iters,
+        || {
+            std::hint::black_box(simulate_sweep_with(&par_pool, &cm, &cases));
+        },
+    );
+
+    let summaries: Vec<Summary> = vec![
+        s_serial.clone(),
+        s_par.clone(),
+        w_serial.clone(),
+        w_par.clone(),
+    ];
+    let mut t = Table::new(
+        "Perf gate — engine step + sim sweep, serial vs parallel",
+        &["case", "mean", "p50", "p95", "p99"],
+    );
+    for s in &summaries {
+        t.row(vec![
+            s.name.clone(),
+            fmt_secs(s.mean_s),
+            fmt_secs(s.p50_s),
+            fmt_secs(s.p95_s),
+            fmt_secs(s.p99_s),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nengine-step speedup {:.2}x, sim-sweep speedup {:.2}x ({} threads, {} cores)",
+        s_serial.mean_s / s_par.mean_s,
+        w_serial.mean_s / w_par.mean_s,
+        par_threads,
+        cores
+    );
+
+    // --- trajectory ----------------------------------------------------
+    let bench_path = repo_root().join("BENCH_engine.json");
+    benchkit::append_jsonl(&bench_path, &summaries)?;
+    println!("appended {} records to {}", summaries.len(), bench_path.display());
+
+    // --- gates ---------------------------------------------------------
+    // determinism: parallel output bit-exact vs serial, always checked
+    let want = layer.step(&serial_pool, &x);
+    for tn in [2usize, 4] {
+        let got = layer.step(&ParPool::new(tn), &x);
+        assert!(want == got, "engine step must be bit-exact at {tn} threads");
+    }
+    // JSON-lines validity of the trajectory file
+    let text = std::fs::read_to_string(&bench_path)?;
+    let mut lines = 0usize;
+    for line in text.lines() {
+        Json::parse(line)
+            .map_err(|e| anyhow::anyhow!("BENCH_engine.json line {}: {e}", lines + 1))?;
+        lines += 1;
+    }
+    assert!(lines >= summaries.len(), "trajectory must retain records");
+    if check {
+        if cores >= 2 {
+            // median with a small noise margin: a real speedup has huge
+            // headroom under this, while a broken pool (par == serial)
+            // still fails on any honest multi-core host
+            assert!(
+                s_par.p50_s <= 1.05 * s_serial.p50_s,
+                "parallel engine step regressed: p50 {} vs serial p50 {}",
+                s_par.p50_s,
+                s_serial.p50_s
+            );
+        } else {
+            println!("single-core host: skipping parallel-vs-serial gate");
+        }
+        println!("perf gate OK ({lines} trajectory records)");
+    }
+    Ok(())
+}

@@ -19,6 +19,12 @@ cargo test -q --lib --bins --tests
 echo "==> cargo test --doc"
 cargo test -q --doc
 
+# Perf gate: few-iteration run of the serial-vs-parallel engine-step
+# bench. Asserts bit-exact parallel output, valid JSON-lines in
+# BENCH_engine.json, and (on >= 2 cores) parallel <= serial mean.
+echo "==> perf gate (cargo bench --bench perf_gate -- --check)"
+cargo bench --bench perf_gate -- --check
+
 # Docs gates: rustdoc warnings (broken links, bad code-block attrs) are
 # errors, and missing_docs — warn-level in the sources so local builds
 # stay friendly — is escalated to deny here so new public items cannot

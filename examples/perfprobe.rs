@@ -1,6 +1,33 @@
-//! Perf probe for the §Perf log: one DICE quality run, timed.
+//! Perf probe for the §Perf log.
+//!
+//! Default mode runs one DICE quality run over the AOT artifacts and
+//! times it. `--sim` needs NO artifacts: it drives the host engine step
+//! (`dice::moe::host`, the same dispatch→expert→combine hot path) for
+//! `--steps` steps and reports per-phase wall time — route / dispatch /
+//! expert / combine — plus the cost model's price for the measured
+//! dispatch plan. `--threads N` pins the worker-pool width in both
+//! modes.
+//!
+//!     cargo run --release --example perfprobe -- --sim --threads 4
+
 use std::time::Instant;
+
+use dice::benchkit::{fmt_secs, Table};
+use dice::cli::Args;
+use dice::moe::host::{HostMoeConfig, HostMoeLayer, HostPhases};
+use dice::netsim::CostModel;
+use dice::par::ParPool;
+use dice::rng::Rng;
+use dice::tensor::Tensor;
+
 fn main() -> anyhow::Result<()> {
+    let a = Args::parse();
+    if let Some(t) = a.get("threads") {
+        dice::par::set_threads(t.parse()?);
+    }
+    if a.flag("sim") {
+        return sim_probe(&a);
+    }
     let rt = dice::runtime::Runtime::open(std::path::Path::new("artifacts"))?;
     let w = rt.load_weights()?;
     let bank = dice::runtime::WeightBank::stage(&rt, &w)?;
@@ -17,5 +44,81 @@ fn main() -> anyhow::Result<()> {
     let dt = t0.elapsed().as_secs_f64();
     println!("32 samples, 50 steps: {:.2}s  ({} execs, {:.0} execs/s)  checksum {:.4}",
         dt, stats.exec_calls, stats.exec_calls as f64 / dt, x.data().iter().map(|v| v.abs() as f64).sum::<f64>() / x.len() as f64);
+    Ok(())
+}
+
+/// Artifact-free probe: host engine steps with per-phase timings.
+fn sim_probe(a: &Args) -> anyhow::Result<()> {
+    let pool = ParPool::current();
+    let steps = a.usize_or("steps", 50);
+    let n_tokens = a.usize_or("tokens", 512);
+    let cfg = HostMoeConfig {
+        n_experts: a.usize_or("experts", 8),
+        top_k: 2,
+        d_model: a.usize_or("dim", 128),
+        d_ff: 4 * a.usize_or("dim", 128),
+        devices: a.usize_or("devices", 4),
+    };
+    let layer = HostMoeLayer::synth(cfg, 0xD1CE);
+    let mut x = Tensor::zeros(&[n_tokens, cfg.d_model]);
+    Rng::new(1).fill_normal(x.data_mut());
+
+    let t0 = Instant::now();
+    let mut phases = HostPhases::default();
+    let mut checksum = 0.0f64;
+    for _ in 0..steps {
+        let (out, ph) = layer.step_timed(&pool, &x);
+        phases.accumulate(&ph);
+        checksum = out.data().iter().map(|v| v.abs() as f64).sum::<f64>() / out.len() as f64;
+        // feed a damped output back in so every step routes fresh data
+        for (xi, oi) in x.data_mut().iter_mut().zip(out.data()) {
+            *xi = 0.7 * *xi + 0.3 * oi;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut t = Table::new(
+        &format!(
+            "perfprobe --sim — {} steps, {} tokens, {} experts on {} devices, {} threads",
+            steps,
+            n_tokens,
+            cfg.n_experts,
+            cfg.devices,
+            pool.threads()
+        ),
+        &["phase", "total", "per step", "share"],
+    );
+    let total = phases.total_s().max(1e-12);
+    for (name, s) in [
+        ("route", phases.route_s),
+        ("dispatch", phases.dispatch_s),
+        ("expert", phases.expert_s),
+        ("combine", phases.combine_s),
+    ] {
+        t.row(vec![
+            name.into(),
+            fmt_secs(s),
+            fmt_secs(s / steps as f64),
+            format!("{:.1}%", 100.0 * s / total),
+        ]);
+    }
+    t.print();
+
+    // price the measured dispatch plan at paper scale (memoized
+    // cross-bytes: both collectives priced from one entry scan)
+    let cm = CostModel::new(
+        dice::config::model_preset("xl")?,
+        dice::config::hardware_profile("rtx4090_pcie")?,
+    );
+    let (_, plan) = layer.route(&pool, &x);
+    let t_a2a = cm.t_a2a_measured(&plan, layer.placement());
+    println!(
+        "\nwall {:.2}s ({:.1} steps/s), checksum {:.4}; modelled a2a per collective \
+         from the measured plan: {}",
+        wall,
+        steps as f64 / wall,
+        checksum,
+        fmt_secs(t_a2a)
+    );
     Ok(())
 }

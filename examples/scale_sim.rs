@@ -5,12 +5,15 @@
 
 use dice::cli::Args;
 use dice::config::{hardware_profile, model_preset, DiceOptions, Strategy};
-use dice::coordinator::simulate;
+use dice::coordinator::{simulate_sweep, SweepCase};
 use dice::benchkit::{fmt_bytes, fmt_secs, Table};
 use dice::netsim::{CostModel, Workload};
 
 fn main() -> anyhow::Result<()> {
     let a = Args::parse();
+    if let Some(t) = a.get("threads") {
+        dice::par::set_threads(t.parse()?);
+    }
     let model = model_preset(&a.str_or("model", "xl"))?;
     let hw = hardware_profile(&a.str_or("hw", "rtx4090_pcie"))?;
     let batch = a.usize_or("batch", 16);
@@ -37,10 +40,20 @@ fn main() -> anyhow::Result<()> {
         ("DistriFusion", Strategy::DistriFusion, DiceOptions::none()),
         ("staggered batch", Strategy::StaggeredBatch, DiceOptions::none()),
     ];
-    for (name, s, o) in configs {
-        let r = simulate(&cm, &wl, s, &o, steps);
+    // all strategies simulate concurrently on the worker pool
+    let cases: Vec<SweepCase> = configs
+        .iter()
+        .map(|&(_, strategy, opts)| SweepCase {
+            wl,
+            strategy,
+            opts,
+            steps,
+        })
+        .collect();
+    let reports = simulate_sweep(&cm, &cases);
+    for ((name, _, _), r) in configs.iter().zip(reports) {
         t.row(vec![
-            name.into(),
+            (*name).into(),
             fmt_secs(r.total_time),
             fmt_secs(r.step_time),
             format!("{:.1}%", r.a2a_share * 100.0),

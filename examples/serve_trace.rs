@@ -18,7 +18,10 @@ use dice::config::{hardware_profile, model_preset, DiceOptions, Strategy};
 use dice::coordinator::{Engine, EngineConfig};
 use dice::exp::Ctx;
 use dice::netsim::CostModel;
-use dice::server::{comparison_table, serve_sim, AdmissionPolicy, BatchPolicy, ServeConfig};
+use dice::server::{
+    comparison_table, serve_scenarios, AdmissionPolicy, BatchPolicy, ServeConfig, ServeReport,
+    SimExecutor,
+};
 use dice::workload::Scenario;
 
 fn main() -> anyhow::Result<()> {
@@ -58,15 +61,32 @@ fn main() -> anyhow::Result<()> {
          ({steps} steps, SLO {slo}s, virtual time)...",
         cm.model.name, cm.hw.name
     );
-    let mut rows = Vec::new();
-    for scenario in &scenarios {
-        // identical trace per scenario so strategies compete fairly
-        let trace = scenario.trace(n_requests, cm.model.n_classes, seed);
-        for (name, strategy, opts) in &strategies {
-            let rep = serve_sim(&cm, *strategy, *opts, devices, &trace, cfg)?;
-            rows.push((scenario.name().to_string(), name.to_string(), rep));
+    // identical trace per scenario so strategies compete fairly
+    let traces: Vec<_> = scenarios
+        .iter()
+        .map(|s| s.trace(n_requests, cm.model.n_classes, seed))
+        .collect();
+    // per strategy, all scenarios serve concurrently on the worker pool
+    // (DESIGN.md §8; virtual time keeps the fan-out deterministic)
+    let mut indexed = Vec::new();
+    for (ti, (_, strategy, opts)) in strategies.iter().enumerate() {
+        let ex = SimExecutor::new(cm.clone(), *strategy, *opts, devices);
+        let reps = serve_scenarios(&ex, &traces, cfg)?;
+        for (si, rep) in reps.into_iter().enumerate() {
+            indexed.push((si, ti, rep));
         }
     }
+    indexed.sort_by_key(|t| (t.0, t.1)); // scenario-major, as served serially
+    let rows: Vec<(String, String, ServeReport)> = indexed
+        .into_iter()
+        .map(|(si, ti, rep)| {
+            (
+                scenarios[si].name().to_string(),
+                strategies[ti].0.to_string(),
+                rep,
+            )
+        })
+        .collect();
     comparison_table(
         &format!(
             "Serving comparison — {} on {}x {} (virtual time)",

@@ -5,6 +5,8 @@
 //! paper-table reproductions. Results can also be appended as JSON lines
 //! for post-processing.
 
+use std::io::Write;
+use std::path::Path;
 use std::time::Instant;
 
 /// Timing summary of one benchmark case.
@@ -18,10 +20,49 @@ pub struct Summary {
     pub mean_s: f64,
     /// Median seconds per iteration.
     pub p50_s: f64,
+    /// 95th-percentile seconds per iteration (the serving SLO knee the
+    /// server reports; benches track the same tail).
+    pub p95_s: f64,
     /// 99th-percentile seconds per iteration.
     pub p99_s: f64,
     /// Standard deviation of the iteration times.
     pub std_s: f64,
+}
+
+impl Summary {
+    /// Render as one JSON object (a single line, no trailing newline) —
+    /// the record format of the `BENCH_*.json` trajectory files.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"name\":\"{}\",\"iters\":{},\"mean_s\":{:.9},\"p50_s\":{:.9},\
+             \"p95_s\":{:.9},\"p99_s\":{:.9},\"std_s\":{:.9}}}",
+            json_escape(&self.name),
+            self.iters,
+            self.mean_s,
+            self.p50_s,
+            self.p95_s,
+            self.p99_s,
+            self.std_s
+        )
+    }
+}
+
+/// Escape a string for embedding in a JSON literal.
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Append summaries to a JSON-lines file (one object per line),
+/// creating it if missing — successive runs grow the perf trajectory.
+pub fn append_jsonl(path: &Path, rows: &[Summary]) -> std::io::Result<()> {
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)?;
+    for r in rows {
+        writeln!(f, "{}", r.to_json())?;
+    }
+    Ok(())
 }
 
 /// Run `f` with warmup, returning the timing summary.
@@ -53,6 +94,7 @@ pub fn summarize(name: &str, samples: &[f64]) -> Summary {
         iters: samples.len(),
         mean_s: mean,
         p50_s: pct(50.0),
+        p95_s: pct(95.0),
         p99_s: pct(99.0),
         std_s: var.sqrt(),
     }
@@ -163,7 +205,43 @@ mod tests {
         let s = summarize("x", &samples);
         assert!((s.mean_s - 50.5).abs() < 1e-9);
         assert!((s.p50_s - 51.0).abs() <= 1.0);
+        assert!(s.p95_s >= 94.0 && s.p95_s <= s.p99_s);
         assert!(s.p99_s >= 99.0);
+    }
+
+    #[test]
+    fn to_json_is_parseable_and_escaped() {
+        let mut s = summarize("engine \"step\"", &[0.25, 0.5, 0.75]);
+        s.iters = 3;
+        let j = s.to_json();
+        let parsed = crate::config::Json::parse(&j).expect("valid JSON");
+        assert_eq!(
+            parsed.get("name").and_then(crate::config::Json::as_str),
+            Some("engine \"step\"")
+        );
+        assert_eq!(parsed.get("iters").and_then(crate::config::Json::as_usize), Some(3));
+        let mean = parsed.get("mean_s").and_then(crate::config::Json::as_f64).unwrap();
+        assert!((mean - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn jsonl_appends_across_runs() {
+        let path = std::env::temp_dir().join(format!(
+            "benchkit_jsonl_{}.json",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let s1 = summarize("a", &[0.1]);
+        let s2 = summarize("b", &[0.2]);
+        append_jsonl(&path, &[s1]).unwrap();
+        append_jsonl(&path, &[s2]).unwrap(); // second run appends
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for l in &lines {
+            crate::config::Json::parse(l).expect("each line is one JSON object");
+        }
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

@@ -10,6 +10,12 @@
 //! expert) reference rows residual compression (DESIGN.md §7) encodes
 //! deltas against — the same grid-of-rows shape as the conditional-
 //! communication cache, with the same byte accounting.
+//!
+//! [`TensorArena`] is the step-scoped allocation pool behind the
+//! engine's zero-copy hot path (DESIGN.md §8): activation/KV/scratch
+//! tensors retired at step *t* are recycled at step *t+1*, so the
+//! per-step deep clones of the big buffers become memcpys into reused
+//! allocations (or plain moves into the staleness buffers).
 
 use super::condcomm::CondCommCache;
 use crate::compress::RefStore;
@@ -122,6 +128,87 @@ impl BufferManager {
     }
 }
 
+/// Step-scoped tensor allocation pool. `take` hands out a tensor whose
+/// contents are UNSPECIFIED (the caller overwrites every element);
+/// `take_zeroed` / `copy_of` are the accumulator / clone-replacement
+/// variants. `recycle` returns a tensor's buffer to the free list.
+///
+/// Ownership rules (DESIGN.md §8): a tensor taken from the arena is
+/// owned by exactly one holder at a time; holders that retire a tensor
+/// recycle it rather than dropping it, and anything still outstanding
+/// when the arena drops is simply freed — the arena is an optimization,
+/// never a correctness dependency.
+#[derive(Debug, Default)]
+pub struct TensorArena {
+    free: Vec<Vec<f32>>,
+    /// `take` calls served from the free list (no allocation).
+    pub hits: usize,
+    /// `take` calls that had to allocate fresh.
+    pub misses: usize,
+}
+
+impl TensorArena {
+    /// Empty arena.
+    pub fn new() -> TensorArena {
+        TensorArena::default()
+    }
+
+    /// A tensor of `shape` with unspecified contents: best-fit reuse
+    /// from the free list (smallest capacity that fits), else a fresh
+    /// zeroed allocation.
+    pub fn take(&mut self, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        let mut best: Option<usize> = None;
+        for (i, v) in self.free.iter().enumerate() {
+            if v.capacity() >= n
+                && best
+                    .map(|b| self.free[b].capacity() > v.capacity())
+                    .unwrap_or(true)
+            {
+                best = Some(i);
+            }
+        }
+        match best {
+            Some(i) => {
+                self.hits += 1;
+                let mut v = self.free.swap_remove(i);
+                v.resize(n, 0.0);
+                Tensor::from_vec(shape, v)
+            }
+            None => {
+                self.misses += 1;
+                Tensor::zeros(shape)
+            }
+        }
+    }
+
+    /// A zero-filled tensor of `shape` (accumulator slots).
+    pub fn take_zeroed(&mut self, shape: &[usize]) -> Tensor {
+        let mut t = self.take(shape);
+        t.data_mut().fill(0.0);
+        t
+    }
+
+    /// A copy of `src` in a recycled allocation — the hot-path
+    /// replacement for `clone()`: a memcpy on a free-list hit, never a
+    /// realloc-and-copy-twice.
+    pub fn copy_of(&mut self, src: &Tensor) -> Tensor {
+        let mut t = self.take(src.shape());
+        t.data_mut().copy_from_slice(src.data());
+        t
+    }
+
+    /// Return a retired tensor's buffer to the free list.
+    pub fn recycle(&mut self, t: Tensor) {
+        self.free.push(t.into_vec());
+    }
+
+    /// Number of buffers currently parked on the free list.
+    pub fn free_slots(&self) -> usize {
+        self.free.len()
+    }
+}
+
 /// Dispatch-side reference rows for residual compression: the last
 /// RECONSTRUCTED activation transmitted per (token, expert) pair.
 /// Sender and receiver advance it identically (error feedback), so it
@@ -202,6 +289,52 @@ mod tests {
         let b = bm.live_bytes();
         bm.swap_dispatch(0, Some(dummy_dispatch(5)));
         assert_eq!(bm.live_bytes(), b);
+    }
+
+    #[test]
+    fn arena_reuses_buffers_and_counts() {
+        let mut a = TensorArena::new();
+        let t = a.take(&[4, 8]); // cold: fresh allocation
+        assert_eq!((a.hits, a.misses), (0, 1));
+        assert_eq!(t.data(), &vec![0.0; 32][..], "fresh takes are zeroed");
+        a.recycle(t);
+        assert_eq!(a.free_slots(), 1);
+        let t2 = a.take(&[2, 16]); // same element count: free-list hit
+        assert_eq!((a.hits, a.misses), (1, 1));
+        assert_eq!(t2.shape(), &[2, 16]);
+        a.recycle(t2);
+        // smaller shape also reuses (capacity fits)
+        let t3 = a.take(&[3, 3]);
+        assert_eq!((a.hits, a.misses), (2, 1));
+        assert_eq!(t3.len(), 9);
+    }
+
+    #[test]
+    fn arena_copy_and_zeroed_semantics() {
+        let mut a = TensorArena::new();
+        let mut src = Tensor::zeros(&[2, 3]);
+        src.data_mut().copy_from_slice(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let c = a.copy_of(&src);
+        assert_eq!(c, src);
+        a.recycle(c);
+        // recycled garbage must not leak through take_zeroed
+        let z = a.take_zeroed(&[2, 3]);
+        assert_eq!(a.hits, 1);
+        assert!(z.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn arena_best_fit_prefers_smallest_capacity() {
+        let mut a = TensorArena::new();
+        a.recycle(Tensor::zeros(&[64]));
+        a.recycle(Tensor::zeros(&[8]));
+        let t = a.take(&[6]);
+        // the 8-slot (not the 64-slot) should have been consumed
+        assert_eq!(t.len(), 6);
+        assert_eq!(a.free_slots(), 1);
+        let big = a.take(&[32]);
+        assert_eq!(big.len(), 32);
+        assert_eq!((a.hits, a.misses), (2, 0));
     }
 
     #[test]

@@ -24,15 +24,30 @@
 //! (`crate::compress`, DESIGN.md §7) shrinks the bytes every crossing
 //! row moves — and its reconstruction error flows through the real
 //! numerics into the quality metrics.
+//!
+//! Execution runtime (DESIGN.md §8): the step loop runs over a
+//! [`ParPool`] and a [`TensorArena`]. Host-side stages — the combine
+//! scatter (per-device output rows are disjoint), the Euler update —
+//! fan out across the pool with a fixed per-row accumulation order, so
+//! output is bit-exact for any `--threads` value. PJRT executions stay
+//! on the caller thread (the runtime handle is single-threaded by
+//! design — its compile cache is interior-mutable); with real bindings
+//! the pool boundary is exactly where per-device streams are issued.
+//! The arena recycles the large cross-step activation/KV/scratch
+//! tensors — the former per-step deep clones of dispatch payloads and
+//! routing tables are now moves into the staleness buffers, and the
+//! remaining bulk copies land in reused buffers instead of fresh
+//! allocations. (Small per-layer bookkeeping Vecs still allocate.)
 
 use anyhow::{bail, Context, Result};
 
-use super::buffers::{BufferManager, PendingCombine, PendingDispatch, ResidualRefCache};
+use super::buffers::{BufferManager, PendingCombine, PendingDispatch, ResidualRefCache, TensorArena};
 use super::condcomm::{self, CommStats, CondCommCache};
 use super::staleness::StalenessLedger;
 use crate::compress::{self, CodecStats};
 use crate::config::{CondCommSelector, DiceOptions, Strategy};
-use crate::moe::{DispatchPlan, Placement, RoutingTable};
+use crate::moe::{DispatchEntry, DispatchPlan, Placement, RoutingTable};
+use crate::par::ParPool;
 use crate::rng::Rng;
 use crate::runtime::{Runtime, WeightBank};
 use crate::tensor::{ops, Tensor};
@@ -177,6 +192,8 @@ impl<'a> Engine<'a> {
             expert_loads: vec![0; m.n_experts],
             ..Default::default()
         };
+        let pool = ParPool::current();
+        let mut arena = TensorArena::new();
         self.ep_moe(
             xin_g,
             routing,
@@ -188,6 +205,8 @@ impl<'a> Engine<'a> {
             &mut refs,
             &mut rng,
             &mut stats,
+            &pool,
+            &mut arena,
         )
     }
 
@@ -239,6 +258,9 @@ impl<'a> Engine<'a> {
             .map(|_| ResidualRefCache::new(n_global_tokens, m.n_experts, m.d_model))
             .collect();
         let mut cc_rng = Rng::new(0xC0DE ^ labels.len() as u64);
+        // execution runtime: worker pool + step-scoped allocation arena
+        let pool = ParPool::current();
+        let mut arena = TensorArena::new();
 
         let mut x = x0;
         assert_eq!(x.shape()[0], bg, "x0 batch mismatch");
@@ -322,36 +344,47 @@ impl<'a> Engine<'a> {
                         &mut disp_refs[l],
                         &mut cc_rng,
                         &mut stats,
+                        &pool,
+                        &mut arena,
                     )?;
                     // prefill staleness buffers so the async steps that
                     // follow warmup have in-flight data (paper: N sync
-                    // steps post cold start).
+                    // steps post cold start). The payload + routing MOVE
+                    // into the buffer (they are dead in this branch);
+                    // only the combine result, which is also returned,
+                    // is copied — into an arena slot, not a fresh alloc.
                     match self.cfg.strategy {
                         Strategy::DisplacedEp => {
-                            bufs.swap_dispatch(
+                            if let Some(old) = bufs.swap_dispatch(
                                 l,
                                 Some(PendingDispatch {
-                                    xin: xin_g.clone(),
-                                    routing: routing.clone(),
+                                    xin: xin_g,
+                                    routing,
                                     captured_step: step_i,
                                 }),
-                            );
-                            bufs.swap_combine(
+                            ) {
+                                arena.recycle(old.xin);
+                            }
+                            if let Some(old) = bufs.swap_combine(
                                 l,
                                 Some(PendingCombine {
-                                    moe_out: fresh.clone(),
+                                    moe_out: arena.copy_of(&fresh),
                                     captured_step: step_i,
                                 }),
-                            );
+                            ) {
+                                arena.recycle(old.moe_out);
+                            }
                         }
                         Strategy::Interweaved => {
-                            bufs.swap_combine(
+                            if let Some(old) = bufs.swap_combine(
                                 l,
                                 Some(PendingCombine {
-                                    moe_out: fresh.clone(),
+                                    moe_out: arena.copy_of(&fresh),
                                     captured_step: step_i,
                                 }),
-                            );
+                            ) {
+                                arena.recycle(old.moe_out);
+                            }
                         }
                         _ => {}
                     }
@@ -361,11 +394,15 @@ impl<'a> Engine<'a> {
                         Strategy::DisplacedEp => {
                             // Algorithm 2: experts run on the dispatch from
                             // t-1; the combine used now was captured at t-2.
+                            // This step's payload + routing MOVE into the
+                            // buffer (no deep clone); the retired payload's
+                            // buffer goes back to the arena after its expert
+                            // pass.
                             let prev_disp = bufs.swap_dispatch(
                                 l,
                                 Some(PendingDispatch {
-                                    xin: xin_g.clone(),
-                                    routing: routing.clone(),
+                                    xin: xin_g,
+                                    routing,
                                     captured_step: step_i,
                                 }),
                             );
@@ -382,7 +419,10 @@ impl<'a> Engine<'a> {
                                         &mut disp_refs[l],
                                         &mut cc_rng,
                                         &mut stats,
+                                        &pool,
+                                        &mut arena,
                                     )?;
+                                    arena.recycle(pd.xin);
                                     Some(PendingCombine {
                                         moe_out: out,
                                         captured_step: pd.captured_step,
@@ -398,10 +438,16 @@ impl<'a> Engine<'a> {
                                 None => {
                                     // true cold start (no warmup): blocking
                                     // fresh computation, like the paper's
-                                    // mandatory synchronized first steps.
+                                    // mandatory synchronized first steps. The
+                                    // payload now lives in the dispatch slot
+                                    // we just filled — borrow it back.
+                                    let pd = bufs
+                                        .peek_dispatch(l)
+                                        .expect("dispatch buffered this step");
                                     let fresh = self.ep_moe(
-                                        &xin_g, &routing, l, step_i, cc, &placement,
-                                        &mut caches[l], &mut disp_refs[l], &mut cc_rng, &mut stats,
+                                        &pd.xin, &pd.routing, l, step_i, cc, &placement,
+                                        &mut caches[l], &mut disp_refs[l], &mut cc_rng,
+                                        &mut stats, &pool, &mut arena,
                                     )?;
                                     (fresh, 0)
                                 }
@@ -410,7 +456,7 @@ impl<'a> Engine<'a> {
                         Strategy::Interweaved => {
                             // Algorithm 3: dispatch + experts of THIS step's
                             // activations complete within the step; only the
-                            // combine crosses into t+1.
+                            // combine crosses into t+1 (moved, not cloned).
                             let out = self.ep_moe(
                                 &xin_g,
                                 &routing,
@@ -422,6 +468,8 @@ impl<'a> Engine<'a> {
                                 &mut disp_refs[l],
                                 &mut cc_rng,
                                 &mut stats,
+                                &pool,
+                                &mut arena,
                             )?;
                             match bufs.swap_combine(
                                 l,
@@ -437,7 +485,8 @@ impl<'a> Engine<'a> {
                                 None => {
                                     let fresh = self.ep_moe(
                                         &xin_g, &routing, l, step_i, cc, &placement,
-                                        &mut caches[l], &mut disp_refs[l], &mut cc_rng, &mut stats,
+                                        &mut caches[l], &mut disp_refs[l], &mut cc_rng,
+                                        &mut stats, &pool, &mut arena,
                                     )?;
                                     (fresh, 0)
                                 }
@@ -454,6 +503,7 @@ impl<'a> Engine<'a> {
                 // block_post per part
                 let moe_g3 = moe_g.reshape(&[bg, t_tokens, m.d_model]);
                 let moe_shards = ops::split_batch(&moe_g3, parts);
+                arena.recycle(moe_g3); // expert output retired → next step's slot
                 for d in 0..parts {
                     let h = self.rt.execute(
                         &format!("block_post_b{pb}"),
@@ -477,9 +527,7 @@ impl<'a> Engine<'a> {
                 v_shards.push(v);
             }
             let v = ops::concat_batch(&v_shards);
-            for (xi, vi) in x.data_mut().iter_mut().zip(v.data()) {
-                *xi -= dt * vi;
-            }
+            euler_update(&pool, &mut x, &v, dt);
         }
 
         stats.cache_bytes = caches.iter().map(|c| c.live_bytes).sum();
@@ -494,6 +542,14 @@ impl<'a> Engine<'a> {
     /// (combine side), scatter back scaled by the (possibly stale)
     /// router scores, and serve throttled pairs from the conditional-
     /// communication cache — which never touch the codec at all.
+    ///
+    /// Two-phase execution (DESIGN.md §8): the expert phase runs per
+    /// expert on the caller thread (PJRT + the stateful condcomm/codec
+    /// caches are single-threaded), holding its scratch in arena slots;
+    /// the combine scatter then fans out over the pool with one task per
+    /// emulated device — each device owns a disjoint block of output
+    /// rows and accumulates them in fixed (expert, entry) order, so the
+    /// result is bit-exact for any pool width.
     #[allow(clippy::too_many_arguments)]
     fn ep_moe(
         &self,
@@ -507,23 +563,45 @@ impl<'a> Engine<'a> {
         refs: &mut ResidualRefCache,
         cc_rng: &mut Rng,
         stats: &mut RunStats,
+        pool: &ParPool,
+        arena: &mut TensorArena,
     ) -> Result<Tensor> {
         let (n_tokens, d) = xin_g.rows();
+        // generate_ep guarantees this (global batch % devices == 0), but
+        // the public ep_moe_for_test hook can feed arbitrary shapes and
+        // the device-bucketed combine below indexes by token / tpd.
+        assert!(
+            n_tokens % self.cfg.devices == 0 && n_tokens >= self.cfg.devices,
+            "ep_moe: tokens {n_tokens} must split evenly over {} devices",
+            self.cfg.devices
+        );
         let plan = DispatchPlan::build(routing, n_tokens / self.cfg.devices);
-        let mut out = Tensor::zeros(&[n_tokens, d]);
+        let mut out = arena.take_zeroed(&[n_tokens, d]);
         let stride = self.cfg.opts.cond_comm_stride;
         let elem = 4usize; // f32 activations in numerics mode
         let codec = compress::build(self.cfg.opts.compress);
 
+        // Phase 1 — per-expert: condcomm filter (cache-served pairs are
+        // accumulated here, serially, before the parallel scatter), then
+        // gather → dispatch codec → expert tiles → combine codec.
+        // `dev_entries` buckets every fresh (expert, row) by the device
+        // that owns the token, so the phase-2 scatter touches each entry
+        // exactly once instead of range-filtering all entries per device.
+        let n_experts = plan.per_expert.len();
+        let tokens_per_dev = n_tokens / self.cfg.devices;
+        let mut fresh_lists: Vec<Vec<DispatchEntry>> = Vec::with_capacity(n_experts);
+        let mut expert_outs: Vec<Option<Tensor>> = Vec::with_capacity(n_experts);
+        let mut dev_entries: Vec<Vec<(usize, usize)>> = vec![Vec::new(); self.cfg.devices];
+        let mut tile_in = arena.take(&[self.tile, d]);
         for (e, entries) in plan.per_expert.iter().enumerate() {
             stats.expert_loads[e] += entries.len();
             let owner = placement.owner(e);
             // split fresh vs reused
-            let mut fresh: Vec<&crate::moe::DispatchEntry> = Vec::with_capacity(entries.len());
+            let mut fresh: Vec<DispatchEntry> = Vec::with_capacity(entries.len());
             for en in entries {
                 let want_fresh = condcomm::is_fresh(cc, en, step, stride, cc_rng);
                 if want_fresh {
-                    fresh.push(en);
+                    fresh.push(*en);
                     stats.comm.fresh_entries += 1;
                 } else if let Some(cached) = cache.get(en.token, en.expert) {
                     stats.comm.reused_entries += 1;
@@ -536,12 +614,14 @@ impl<'a> Engine<'a> {
                     }
                 } else {
                     // no cached value yet: must transmit
-                    fresh.push(en);
+                    fresh.push(*en);
                     stats.comm.fresh_entries += 1;
                     stats.comm.forced_fresh += 1;
                 }
             }
             if fresh.is_empty() {
+                fresh_lists.push(fresh);
+                expert_outs.push(None);
                 continue;
             }
             // rows of the gathered block that cross devices — the actual
@@ -557,7 +637,8 @@ impl<'a> Engine<'a> {
                 .map(|&r| (fresh[r].token, fresh[r].expert))
                 .collect();
             let idx: Vec<usize> = fresh.iter().map(|en| en.token).collect();
-            let mut gathered = ops::gather_rows(xin_g, &idx);
+            let mut gathered = arena.take(&[idx.len(), d]);
+            ops::gather_rows_into(xin_g, &idx, &mut gathered);
             // dispatch-side residual compression: the expert consumes the
             // reconstruction, so quality metrics see codec error
             // end-to-end.
@@ -578,13 +659,14 @@ impl<'a> Engine<'a> {
             // shapes. Reverted; the large tile remains exported for real
             // hardware where call overhead dominates harder.
             let n = idx.len();
-            let mut outputs = Tensor::zeros(&[n, d]);
+            let mut outputs = arena.take(&[n, d]);
             let mut row0 = 0usize;
             while row0 < n {
                 let take = (n - row0).min(self.tile);
-                let mut tile_in = Tensor::zeros(&[self.tile, d]);
                 tile_in.data_mut()[..take * d]
                     .copy_from_slice(&gathered.data()[row0 * d..(row0 + take) * d]);
+                // zero the pad tail (the reused slot may hold stale rows)
+                tile_in.data_mut()[take * d..].fill(0.0);
                 let y = self.rt.execute(
                     "expert_tile",
                     &[&tile_in],
@@ -596,6 +678,7 @@ impl<'a> Engine<'a> {
                     .copy_from_slice(&y.data()[..take * d]);
                 row0 += take;
             }
+            arena.recycle(gathered);
             // combine-side residual compression against the cond-comm
             // cache (the last transmitted reconstruction), then refresh
             // the cache with what the receiver actually holds.
@@ -620,13 +703,39 @@ impl<'a> Engine<'a> {
                     }
                 }
             }
-            // scatter with router-score scaling
             for (r, en) in fresh.iter().enumerate() {
-                let src = &outputs.data()[r * d..(r + 1) * d];
-                let dst = out.row_mut(en.token);
-                for (o, s) in dst.iter_mut().zip(src) {
-                    *o += en.score * s;
+                dev_entries[en.token / tokens_per_dev].push((e, r));
+            }
+            fresh_lists.push(fresh);
+            expert_outs.push(Some(outputs));
+        }
+        arena.recycle(tile_in);
+
+        // Phase 2 — the combine barrier: scatter with router-score
+        // scaling, one pool task per emulated device over its disjoint
+        // block of output rows. Each device walks only ITS bucket, whose
+        // append order (expert asc, entry asc) fixes the per-row
+        // accumulation order independent of the pool width.
+        {
+            let fl = &fresh_lists;
+            let eo = &expert_outs;
+            let de = &dev_entries;
+            pool.for_chunks_mut(out.data_mut(), tokens_per_dev * d, |dev, chunk| {
+                let t_lo = dev * tokens_per_dev;
+                for &(e, r) in &de[dev] {
+                    let en = &fl[e][r];
+                    let outputs = eo[e].as_ref().expect("fresh expert has outputs");
+                    let at = (en.token - t_lo) * d;
+                    let dst = &mut chunk[at..at + d];
+                    for (o, s) in dst.iter_mut().zip(outputs.row(r)) {
+                        *o += en.score * s;
+                    }
                 }
+            });
+        }
+        for o in expert_outs {
+            if let Some(t) = o {
+                arena.recycle(t);
             }
         }
         Ok(out)
@@ -659,6 +768,8 @@ impl<'a> Engine<'a> {
             expert_loads: vec![0; m.n_experts],
             ..Default::default()
         };
+        let pool = ParPool::current();
+        let mut arena = TensorArena::new();
         let mut x = x0;
         assert_eq!(x.shape()[0], bg, "x0 batch mismatch");
         let y1h = one_hot(labels, m.n_classes);
@@ -679,11 +790,12 @@ impl<'a> Engine<'a> {
                 let sync_layer = step_i < self.cfg.opts.warmup_sync_steps
                     || self.cfg.opts.layer_is_sync(l, m.n_layers);
                 let fresh_full = ops::concat_tokens(&shards);
-                let (kv_source, age) = if sync_layer || prev_h[l].is_none() {
-                    (fresh_full.clone(), 0usize)
-                } else {
-                    (prev_h[l].clone().unwrap(), 1usize)
-                };
+                // zero-copy: the KV source is BORROWED (the stale buffer
+                // or this step's fresh assembly), never cloned per layer
+                // — and the per-device assembly below reuses one arena
+                // slot instead of cloning the full sequence per device.
+                let use_stale = !sync_layer && prev_h[l].is_some();
+                let age = usize::from(use_stale);
                 stats.staleness.record(step_i, l, age);
                 // async shard broadcast bytes (each device sends its shard
                 // to every other device); sync layers pay the same bytes
@@ -691,17 +803,29 @@ impl<'a> Engine<'a> {
                 stats.fresh_bytes += dvs * (dvs - 1) * shard_bytes;
 
                 let mut new_shards = Vec::with_capacity(dvs);
-                for dev in 0..dvs {
-                    // own shard is always fresh in the KV assembly
-                    let mut kv = kv_source.clone();
-                    replace_token_shard(&mut kv, &shards[dev], dev, dvs);
-                    let out = self.rt.execute(
-                        &format!("dfu_block_b{bg}"),
-                        &[&shards[dev], &kv, &c],
-                        &self.bank.dfu_refs(l),
-                    )?;
-                    stats.exec_calls += 1;
-                    new_shards.push(out.into_iter().next().context("dfu out")?);
+                {
+                    let kv_source: &Tensor = if use_stale {
+                        prev_h[l].as_ref().expect("stale buffer present")
+                    } else {
+                        &fresh_full
+                    };
+                    let mut kv = arena.take(kv_source.shape());
+                    for dev in 0..dvs {
+                        // own shard is always fresh in the KV assembly
+                        kv.data_mut().copy_from_slice(kv_source.data());
+                        replace_token_shard(&mut kv, &shards[dev], dev, dvs);
+                        let out = self.rt.execute(
+                            &format!("dfu_block_b{bg}"),
+                            &[&shards[dev], &kv, &c],
+                            &self.bank.dfu_refs(l),
+                        )?;
+                        stats.exec_calls += 1;
+                        new_shards.push(out.into_iter().next().context("dfu out")?);
+                    }
+                    arena.recycle(kv);
+                }
+                if let Some(old) = prev_h[l].take() {
+                    arena.recycle(old);
                 }
                 prev_h[l] = Some(fresh_full);
                 shards = new_shards;
@@ -712,9 +836,7 @@ impl<'a> Engine<'a> {
 
             let h_final = ops::concat_tokens(&shards);
             let v = self.call1(&format!("final_b{bg}"), &[&h_final, &c], &self.bank.final_, &mut stats)?;
-            for (xi, vi) in x.data_mut().iter_mut().zip(v.data()) {
-                *xi -= dt * vi;
-            }
+            euler_update(&pool, &mut x, &v, dt);
         }
         Ok((x, stats))
     }
@@ -731,6 +853,24 @@ impl<'a> Engine<'a> {
         stats.exec_calls += 1;
         out.into_iter().next().context("missing output")
     }
+}
+
+/// x ← x − dt·v over the pool. Elementwise with chunk-local writes, so
+/// bit-exact for any pool width.
+fn euler_update(pool: &ParPool, x: &mut Tensor, v: &Tensor, dt: f32) {
+    debug_assert_eq!(x.len(), v.len());
+    let n = x.len();
+    if n == 0 {
+        return;
+    }
+    let chunk = n.div_ceil(pool.threads());
+    let vd = v.data();
+    pool.for_chunks_mut(x.data_mut(), chunk, |ci, xs| {
+        let off = ci * chunk;
+        for (xi, vi) in xs.iter_mut().zip(&vd[off..off + xs.len()]) {
+            *xi -= dt * vi;
+        }
+    });
 }
 
 /// One-hot encode labels.
@@ -767,6 +907,23 @@ mod tests {
         assert_eq!(t.row(0), &[0.0, 1.0, 0.0, 0.0]);
         assert_eq!(t.row(1), &[1.0, 0.0, 0.0, 0.0]);
         assert_eq!(t.row(2), &[0.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn euler_update_bit_exact_across_pool_widths() {
+        let mut x0 = Tensor::zeros(&[3, 5, 7]);
+        let mut v = Tensor::zeros(&[3, 5, 7]);
+        Rng::new(1).fill_normal(x0.data_mut());
+        Rng::new(2).fill_normal(v.data_mut());
+        let mut serial = x0.clone();
+        euler_update(&ParPool::new(1), &mut serial, &v, 0.02);
+        for t in [2usize, 4, 16] {
+            let mut par = x0.clone();
+            euler_update(&ParPool::new(t), &mut par, &v, 0.02);
+            assert_eq!(serial, par, "threads={t}");
+        }
+        // and it actually moved
+        assert!(serial.max_abs_diff(&x0).unwrap() > 0.0);
     }
 
     #[test]

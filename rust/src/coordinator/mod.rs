@@ -16,4 +16,6 @@ pub mod simulate;
 pub mod staleness;
 
 pub use engine::{one_hot, Engine, EngineConfig, RunStats};
-pub use simulate::{memory_report, simulate, MemReport, SimReport};
+pub use simulate::{
+    memory_report, simulate, simulate_sweep, simulate_sweep_with, MemReport, SimReport, SweepCase,
+};

@@ -12,6 +12,7 @@ use crate::config::{CompressionCodec, CondCommSelector, DiceOptions, Strategy};
 use crate::coordinator::condcomm::low_score_fresh_fraction;
 use crate::desim::{OpId, Resource, Sim};
 use crate::netsim::{CostModel, Workload};
+use crate::par::ParPool;
 
 /// Memory breakdown per device (bytes).
 #[derive(Debug, Clone, Copy, Default)]
@@ -246,6 +247,34 @@ pub fn simulate(
     }
 }
 
+/// One point of a simulation sweep (a workload × strategy × options ×
+/// step-count tuple).
+#[derive(Debug, Clone, Copy)]
+pub struct SweepCase {
+    /// Workload point (batch / devices / tokens).
+    pub wl: Workload,
+    /// Parallelism strategy under test.
+    pub strategy: Strategy,
+    /// DICE refinements layered on the strategy.
+    pub opts: DiceOptions,
+    /// Diffusion steps to simulate.
+    pub steps: usize,
+}
+
+/// Simulate a sweep of independent cases through an explicit worker
+/// pool (DESIGN.md §8). Each case builds its own `Sim`, so the fan-out
+/// is embarrassingly parallel; reports come back in case order and are
+/// identical for any pool width (virtual time is deterministic).
+pub fn simulate_sweep_with(pool: &ParPool, cm: &CostModel, cases: &[SweepCase]) -> Vec<SimReport> {
+    pool.map(cases, |_, c| simulate(cm, &c.wl, c.strategy, &c.opts, c.steps))
+}
+
+/// As [`simulate_sweep_with`] on the ambient pool
+/// ([`ParPool::current`], i.e. the `--threads` / `PAR_THREADS` knob).
+pub fn simulate_sweep(cm: &CostModel, cases: &[SweepCase]) -> Vec<SimReport> {
+    simulate_sweep_with(&ParPool::current(), cm, cases)
+}
+
 /// Per-device memory model for a strategy.
 pub fn memory_report(
     cm: &CostModel,
@@ -430,6 +459,40 @@ mod tests {
         let with = simulate(&cm, &wl, Strategy::Interweaved, &o, 10);
         let without = simulate(&cm, &wl, Strategy::Interweaved, &DiceOptions::none(), 10);
         assert!(with.total_time > without.total_time);
+    }
+
+    #[test]
+    fn sweep_matches_serial_simulate_exactly() {
+        let (cm, _) = setup();
+        let cases: Vec<SweepCase> = [4usize, 8, 16, 32]
+            .iter()
+            .flat_map(|&b| {
+                [
+                    (Strategy::SyncEp, DiceOptions::none()),
+                    (Strategy::Interweaved, DiceOptions::dice()),
+                ]
+                .into_iter()
+                .map(move |(strategy, opts)| (b, strategy, opts))
+            })
+            .map(|(b, strategy, opts)| SweepCase {
+                wl: Workload {
+                    local_batch: b,
+                    devices: 8,
+                    tokens: cm.model.tokens(),
+                },
+                strategy,
+                opts,
+                steps: 4,
+            })
+            .collect();
+        let serial = simulate_sweep_with(&crate::par::ParPool::new(1), &cm, &cases);
+        let par = simulate_sweep_with(&crate::par::ParPool::new(4), &cm, &cases);
+        assert_eq!(serial.len(), cases.len());
+        for (i, (s, p)) in serial.iter().zip(&par).enumerate() {
+            assert_eq!(s.step_time, p.step_time, "case {i}");
+            assert_eq!(s.total_time, p.total_time, "case {i}");
+            assert_eq!(s.a2a_share, p.a2a_share, "case {i}");
+        }
     }
 
     #[test]

@@ -8,7 +8,7 @@ use crate::benchkit::{fmt_bytes, fmt_secs, Table};
 use crate::config::{
     hardware_profile, model_preset, obj, CompressionCodec, DiceOptions, Json, Strategy,
 };
-use crate::coordinator::{memory_report, simulate};
+use crate::coordinator::{memory_report, simulate, simulate_sweep, SweepCase};
 use crate::netsim::{CostModel, Workload};
 
 /// Table 5: all-to-all share of synchronous EP step time across
@@ -25,13 +25,21 @@ pub fn table5() -> Result<(Table, Json)> {
             let cm = CostModel::new(model_preset(model)?, hw.clone());
             let mut cells = vec![format!("DiT-MoE-{}", model.to_uppercase()), devices.to_string()];
             let mut shares = Vec::new();
-            for b in [4usize, 8, 16, 32] {
-                let wl = Workload {
-                    local_batch: b,
-                    devices,
-                    tokens: cm.model.tokens(),
-                };
-                let rep = simulate(&cm, &wl, Strategy::SyncEp, &DiceOptions::none(), 4);
+            // batch sweep fans out over the worker pool (DESIGN.md §8)
+            let cases: Vec<SweepCase> = [4usize, 8, 16, 32]
+                .iter()
+                .map(|&b| SweepCase {
+                    wl: Workload {
+                        local_batch: b,
+                        devices,
+                        tokens: cm.model.tokens(),
+                    },
+                    strategy: Strategy::SyncEp,
+                    opts: DiceOptions::none(),
+                    steps: 4,
+                })
+                .collect();
+            for rep in simulate_sweep(&cm, &cases) {
                 cells.push(format!("{:.1}%", rep.a2a_share * 100.0));
                 shares.push(Json::Num(rep.a2a_share));
             }

@@ -33,6 +33,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod moe;
 pub mod netsim;
+pub mod par;
 pub mod quality;
 pub mod rng;
 pub mod runtime;

@@ -7,30 +7,87 @@
 //! S = C1^{1/2}·C2·C1^{1/2} is symmetric PSD — so only symmetric
 //! eigenproblems are needed (two sqrtm calls, both Jacobi).
 
+use crate::par::ParPool;
 use crate::tensor::Tensor;
 
-/// C = A · B for [m,k] x [k,n] row-major tensors.
-pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+/// Output-tile height of the blocked kernel (rows of C per task chunk).
+const MB: usize = 16;
+/// Output-tile width: the Bᵀ rows streamed against one A block stay
+/// resident in L1/L2 across the whole block.
+const NB: usize = 64;
+
+/// C = A · Bᵀ for [m, k] × [n, k] row-major tensors — the cache-blocked
+/// kernel behind both the host expert-FFN path and the FID `sqrtm`
+/// pipeline. Both operands are traversed row-contiguously (that is the
+/// point of the transposed-B layout), the output is tiled MB × NB, and
+/// the row tiles fan out over `pool`. Each C row is produced by exactly
+/// one worker with a fixed accumulation order, so the result is
+/// bit-exact for any pool width (DESIGN.md §8 determinism contract).
+pub fn matmul_bt_with(pool: &ParPool, a: &Tensor, bt: &Tensor) -> Tensor {
     let (m, k) = (a.shape()[0], a.shape()[1]);
-    let (k2, n) = (b.shape()[0], b.shape()[1]);
-    assert_eq!(k, k2, "matmul {:?} x {:?}", a.shape(), b.shape());
+    let (n, k2) = (bt.shape()[0], bt.shape()[1]);
+    assert_eq!(k, k2, "matmul_bt {:?} x {:?}ᵀ", a.shape(), bt.shape());
     let mut c = Tensor::zeros(&[m, n]);
-    let (ad, bd) = (a.data(), b.data());
-    let cd = c.data_mut();
-    for i in 0..m {
-        for l in 0..k {
-            let av = ad[i * k + l];
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &bd[l * n..(l + 1) * n];
-            let crow = &mut cd[i * n..(i + 1) * n];
-            for j in 0..n {
-                crow[j] += av * brow[j];
-            }
-        }
+    if m == 0 || n == 0 || k == 0 {
+        return c;
     }
+    // below ~256k MACs the thread-spawn cost exceeds the work (tiny
+    // FID-pipeline matrices): run the same kernel inline. Identical
+    // numerics — the tile walk does not depend on the pool width.
+    let serial = ParPool::new(1);
+    let pool = if m * n * k < (1 << 18) { &serial } else { pool };
+    let ad = a.data();
+    let btd = bt.data();
+    pool.for_chunks_mut(c.data_mut(), MB * n, |blk, cchunk| {
+        let i0 = blk * MB;
+        let rows = cchunk.len() / n;
+        let mut j0 = 0usize;
+        while j0 < n {
+            let j1 = (j0 + NB).min(n);
+            for i in 0..rows {
+                let arow = &ad[(i0 + i) * k..(i0 + i + 1) * k];
+                let crow = &mut cchunk[i * n..(i + 1) * n];
+                for j in j0..j1 {
+                    let brow = &btd[j * k..(j + 1) * k];
+                    let mut acc = 0.0f32;
+                    let mut l = 0usize;
+                    while l + 4 <= k {
+                        acc += arow[l] * brow[l]
+                            + arow[l + 1] * brow[l + 1]
+                            + arow[l + 2] * brow[l + 2]
+                            + arow[l + 3] * brow[l + 3];
+                        l += 4;
+                    }
+                    while l < k {
+                        acc += arow[l] * brow[l];
+                        l += 1;
+                    }
+                    crow[j] = acc;
+                }
+            }
+            j0 = j1;
+        }
+    });
     c
+}
+
+/// C = A · Bᵀ on the ambient pool ([`ParPool::current`]).
+pub fn matmul_bt(a: &Tensor, bt: &Tensor) -> Tensor {
+    matmul_bt_with(&ParPool::current(), a, bt)
+}
+
+/// C = A · B for [m,k] x [k,n] row-major tensors: transposes B once and
+/// runs the blocked transposed-B kernel on the ambient pool.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(
+        a.shape()[1],
+        b.shape()[0],
+        "matmul {:?} x {:?}",
+        a.shape(),
+        b.shape()
+    );
+    let bt = transpose(b);
+    matmul_bt(a, &bt)
 }
 
 /// Transpose of a [m,n] tensor.
@@ -176,6 +233,72 @@ mod tests {
         let b = Tensor::from_vec(&[2, 2], vec![5.0, 6.0, 7.0, 8.0]);
         let c = matmul(&a, &b);
         assert_eq!(c.data(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    /// Naive triple loop oracle for the blocked kernel.
+    fn matmul_naive(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = (a.shape()[0], a.shape()[1]);
+        let n = b.shape()[1];
+        let mut c = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for l in 0..k {
+                    acc += (a.at(&[i, l]) * b.at(&[l, j])) as f64;
+                }
+                c.set(&[i, j], acc as f32);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn blocked_kernel_matches_naive_at_odd_shapes() {
+        // shapes straddling the MB/NB tile edges and the 4-wide unroll
+        for (m, k, n) in [(1usize, 1usize, 1usize), (3, 5, 7), (17, 9, 65), (33, 12, 64)] {
+            let mut r = Rng::new((m * 1000 + k * 10 + n) as u64);
+            let mut a = Tensor::zeros(&[m, k]);
+            let mut b = Tensor::zeros(&[k, n]);
+            for v in a.data_mut() {
+                *v = r.normal_f32();
+            }
+            for v in b.data_mut() {
+                *v = r.normal_f32();
+            }
+            let got = matmul(&a, &b);
+            let want = matmul_naive(&a, &b);
+            assert!(
+                got.max_abs_diff(&want).unwrap() < 1e-4,
+                "({m},{k},{n}): {}",
+                got.max_abs_diff(&want).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_kernel_bit_exact_across_pool_widths() {
+        // big enough to clear the inline-work threshold → really parallel
+        let mut r = Rng::new(99);
+        let mut a = Tensor::zeros(&[67, 96]);
+        let mut bt = Tensor::zeros(&[95, 96]);
+        for v in a.data_mut() {
+            *v = r.normal_f32();
+        }
+        for v in bt.data_mut() {
+            *v = r.normal_f32();
+        }
+        let serial = matmul_bt_with(&crate::par::ParPool::new(1), &a, &bt);
+        for t in [2usize, 3, 4, 8] {
+            let par = matmul_bt_with(&crate::par::ParPool::new(t), &a, &bt);
+            assert_eq!(serial, par, "threads={t} must be bit-exact");
+        }
+    }
+
+    #[test]
+    fn matmul_bt_empty_dims() {
+        let a = Tensor::zeros(&[0, 4]);
+        let bt = Tensor::zeros(&[3, 4]);
+        assert_eq!(matmul_bt(&a, &bt).shape(), &[0, 3]);
     }
 
     #[test]

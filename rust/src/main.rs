@@ -36,6 +36,10 @@ fn usage() -> String {
          dice exp      table1 --samples 256\n\
          dice exp      compress            residual-codec trade-off (artifact-free)\n\
          \n\
+         global: --threads N      worker-pool width for the execution runtime\n\
+         \x20       (default: PAR_THREADS env, else all cores; output is\n\
+         \x20       bit-exact for any value)\n\
+         \n\
          serve scenarios:\n{}",
         scenarios::catalog()
     )
@@ -54,6 +58,11 @@ fn opts_from(a: &Args) -> Result<DiceOptions> {
 
 fn main() -> Result<()> {
     let a = Args::parse();
+    // global worker-pool width (DESIGN.md §8); PAR_THREADS env also works
+    let threads = a.usize_or("threads", 0);
+    if threads > 0 {
+        dice::par::set_threads(threads);
+    }
     let cmd = a.positional.first().map(String::as_str).unwrap_or("help");
     match cmd {
         "info" => {

@@ -1,0 +1,326 @@
+//! Host-numerics expert-parallel MoE step: the engine's dispatch →
+//! expert-FFN → combine hot path executed with in-process numerics on
+//! the worker pool, independent of the PJRT artifacts.
+//!
+//! This is what `benches/perf_gate.rs` times ("engine steps", serial vs
+//! parallel), what the `par_determinism` integration suite pins
+//! bit-exact across thread counts, and what `examples/perfprobe.rs
+//! --sim` instruments per phase. It reuses the artifact engine's exact
+//! routing types ([`RoutingTable`], [`DispatchPlan`], [`Placement`]),
+//! and its parallel decomposition mirrors `coordinator::Engine::ep_moe`
+//! one-to-one: experts fan out across workers, the combine is a pool
+//! barrier, and each emulated device owns a disjoint block of output
+//! token rows (DESIGN.md §8).
+
+use std::time::Instant;
+
+use crate::linalg;
+use crate::par::ParPool;
+use crate::rng::Rng;
+use crate::tensor::{ops, Tensor};
+
+use super::{DispatchPlan, Placement, RoutingTable};
+
+/// tanh-approximation GELU (the same form the Pallas expert kernel
+/// lowers, `python/compile/kernels/expert_ffn.py`).
+fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (0.797_884_6 * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// In-place softmax over the last axis.
+fn softmax_rows(t: &mut Tensor) {
+    let (n, _) = t.rows();
+    for i in 0..n {
+        let row = t.row_mut(i);
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+/// One expert's FFN weights, stored in transposed-B layout (rows are
+/// output channels) so both projections run through the cache-blocked
+/// [`linalg::matmul_bt_with`] kernel without re-transposition.
+#[derive(Debug, Clone)]
+pub struct ExpertFfn {
+    /// First projection, transposed: [d_ff, d_model].
+    pub w1t: Tensor,
+    /// Second projection, transposed: [d_model, d_ff].
+    pub w2t: Tensor,
+}
+
+impl ExpertFfn {
+    /// Synthesize 1/√fan-in scaled normal weights from a seed.
+    pub fn synth(d_model: usize, d_ff: usize, seed: u64) -> ExpertFfn {
+        let mut rng = Rng::new(seed);
+        let mut w1t = Tensor::zeros(&[d_ff, d_model]);
+        rng.fill_normal(w1t.data_mut());
+        w1t.scale(1.0 / (d_model as f32).sqrt());
+        let mut w2t = Tensor::zeros(&[d_model, d_ff]);
+        rng.fill_normal(w2t.data_mut());
+        w2t.scale(1.0 / (d_ff as f32).sqrt());
+        ExpertFfn { w1t, w2t }
+    }
+
+    /// y = gelu(x · W1ᵀ) · W2ᵀ over [n, d_model] rows.
+    pub fn forward(&self, pool: &ParPool, x: &Tensor) -> Tensor {
+        let mut h = linalg::matmul_bt_with(pool, x, &self.w1t);
+        for v in h.data_mut() {
+            *v = gelu(*v);
+        }
+        linalg::matmul_bt_with(pool, &h, &self.w2t)
+    }
+}
+
+/// Shape of a host MoE layer.
+#[derive(Debug, Clone, Copy)]
+pub struct HostMoeConfig {
+    /// Routed experts.
+    pub n_experts: usize,
+    /// Experts chosen per token.
+    pub top_k: usize,
+    /// Token width.
+    pub d_model: usize,
+    /// Expert FFN hidden width.
+    pub d_ff: usize,
+    /// Emulated devices (expert owners / token-shard owners).
+    pub devices: usize,
+}
+
+/// A host MoE layer: router projection + per-expert FFNs + placement.
+#[derive(Debug, Clone)]
+pub struct HostMoeLayer {
+    /// Layer shape.
+    pub cfg: HostMoeConfig,
+    /// Router projection, transposed-B layout: [n_experts, d_model].
+    pub router_t: Tensor,
+    /// One FFN per routed expert.
+    pub experts: Vec<ExpertFfn>,
+    placement: Placement,
+}
+
+/// Wall-clock seconds per phase of one host engine step.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HostPhases {
+    /// Router probs + top-k table + dispatch plan.
+    pub route_s: f64,
+    /// Per-expert token gather (the dispatch payload assembly).
+    pub dispatch_s: f64,
+    /// Expert FFN execution.
+    pub expert_s: f64,
+    /// Score-scaled scatter back to per-device token rows (pool barrier).
+    pub combine_s: f64,
+}
+
+impl HostPhases {
+    /// Sum of all four phases.
+    pub fn total_s(&self) -> f64 {
+        self.route_s + self.dispatch_s + self.expert_s + self.combine_s
+    }
+
+    /// Accumulate another step's phase times into this one.
+    pub fn accumulate(&mut self, o: &HostPhases) {
+        self.route_s += o.route_s;
+        self.dispatch_s += o.dispatch_s;
+        self.expert_s += o.expert_s;
+        self.combine_s += o.combine_s;
+    }
+}
+
+impl HostMoeLayer {
+    /// Synthesize a layer from a seed. Panics unless `devices` divides
+    /// `n_experts` (the engine's placement invariant).
+    pub fn synth(cfg: HostMoeConfig, seed: u64) -> HostMoeLayer {
+        let placement = Placement::new(cfg.n_experts, cfg.devices);
+        let mut rng = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15);
+        let mut router_t = Tensor::zeros(&[cfg.n_experts, cfg.d_model]);
+        rng.fill_normal(router_t.data_mut());
+        router_t.scale(1.0 / (cfg.d_model as f32).sqrt());
+        let experts = (0..cfg.n_experts)
+            .map(|e| ExpertFfn::synth(cfg.d_model, cfg.d_ff, seed.wrapping_add(1 + e as u64)))
+            .collect();
+        HostMoeLayer {
+            cfg,
+            router_t,
+            experts,
+            placement,
+        }
+    }
+
+    /// The expert→device placement of this layer.
+    pub fn placement(&self) -> &Placement {
+        &self.placement
+    }
+
+    /// Route `x` ([n_tokens, d_model]) and build the dispatch plan.
+    pub fn route(&self, pool: &ParPool, x: &Tensor) -> (RoutingTable, DispatchPlan) {
+        let (n_tokens, _) = x.rows();
+        let mut logits = linalg::matmul_bt_with(pool, x, &self.router_t);
+        softmax_rows(&mut logits);
+        let routing = RoutingTable::from_probs(&logits, self.cfg.top_k);
+        let plan = DispatchPlan::build(&routing, n_tokens / self.cfg.devices);
+        (routing, plan)
+    }
+
+    /// One dispatch→expert→combine engine step over [n_tokens, d_model]
+    /// tokens. `n_tokens` must split evenly over the devices. Bit-exact
+    /// for any pool width: every output row is accumulated by exactly
+    /// one worker in a fixed (expert, entry) order.
+    pub fn step(&self, pool: &ParPool, x: &Tensor) -> Tensor {
+        self.step_timed(pool, x).0
+    }
+
+    /// As [`HostMoeLayer::step`], also returning per-phase timings.
+    pub fn step_timed(&self, pool: &ParPool, x: &Tensor) -> (Tensor, HostPhases) {
+        let (n_tokens, d) = x.rows();
+        assert_eq!(d, self.cfg.d_model, "token width {d} != d_model");
+        assert_eq!(
+            n_tokens % self.cfg.devices,
+            0,
+            "tokens {n_tokens} % devices {} != 0",
+            self.cfg.devices
+        );
+        let tokens_per_dev = n_tokens / self.cfg.devices;
+        let mut ph = HostPhases::default();
+
+        let t0 = Instant::now();
+        let (_routing, plan) = self.route(pool, x);
+        ph.route_s = t0.elapsed().as_secs_f64();
+        // Only the Sync field escapes into pool closures: &DispatchPlan
+        // itself is !Sync (the cross-bytes memo cell).
+        let per_expert = &plan.per_expert;
+
+        // dispatch: assemble each expert's token block (parallel fan-out
+        // over experts — the all-to-all send side).
+        let t0 = Instant::now();
+        let gathered: Vec<Tensor> = pool.map(per_expert, |_, entries| {
+            let idx: Vec<usize> = entries.iter().map(|en| en.token).collect();
+            ops::gather_rows(x, &idx)
+        });
+        ph.dispatch_s = t0.elapsed().as_secs_f64();
+
+        // expert FFNs: one worker per expert; the inner matmuls run
+        // serially inside the worker — the expert fan-out IS the
+        // device-parallel axis.
+        let t0 = Instant::now();
+        let serial = ParPool::new(1);
+        let outputs: Vec<Tensor> =
+            pool.map(&gathered, |e, g| self.experts[e].forward(&serial, g));
+        ph.expert_s = t0.elapsed().as_secs_f64();
+
+        // combine: pool barrier; device `dev` owns output rows
+        // [dev·tpd, (dev+1)·tpd) and walks only ITS bucket of (expert,
+        // row) pairs, whose append order (expert asc, entry asc) fixes
+        // the per-row accumulation order — disjoint writes,
+        // deterministic sums, each entry touched exactly once.
+        let t0 = Instant::now();
+        let mut dev_entries: Vec<Vec<(usize, usize)>> = vec![Vec::new(); self.cfg.devices];
+        for (e, entries) in per_expert.iter().enumerate() {
+            for (r, en) in entries.iter().enumerate() {
+                dev_entries[en.token / tokens_per_dev].push((e, r));
+            }
+        }
+        let mut out = Tensor::zeros(&[n_tokens, d]);
+        let outs = &outputs;
+        let de = &dev_entries;
+        pool.for_chunks_mut(out.data_mut(), tokens_per_dev * d, |dev, chunk| {
+            let t_lo = dev * tokens_per_dev;
+            for &(e, r) in &de[dev] {
+                let en = &per_expert[e][r];
+                let at = (en.token - t_lo) * d;
+                let dst = &mut chunk[at..at + d];
+                for (o, s) in dst.iter_mut().zip(outs[e].row(r)) {
+                    *o += en.score * s;
+                }
+            }
+        });
+        ph.combine_s = t0.elapsed().as_secs_f64();
+        (out, ph)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer() -> HostMoeLayer {
+        HostMoeLayer::synth(
+            HostMoeConfig {
+                n_experts: 8,
+                top_k: 2,
+                d_model: 16,
+                d_ff: 32,
+                devices: 4,
+            },
+            0xD1CE,
+        )
+    }
+
+    fn tokens(n: usize, d: usize, seed: u64) -> Tensor {
+        let mut x = Tensor::zeros(&[n, d]);
+        Rng::new(seed).fill_normal(x.data_mut());
+        x
+    }
+
+    #[test]
+    fn step_shape_and_coverage() {
+        let l = layer();
+        let x = tokens(32, 16, 1);
+        let (out, ph) = l.step_timed(&ParPool::new(2), &x);
+        assert_eq!(out.shape(), &[32, 16]);
+        assert!(out.data().iter().any(|&v| v != 0.0));
+        assert!(ph.total_s() >= 0.0);
+        // every token got top_k expert contributions
+        let (routing, plan) = l.route(&ParPool::new(1), &x);
+        assert_eq!(routing.top_k, 2);
+        assert_eq!(plan.total_entries(), 32 * 2);
+    }
+
+    #[test]
+    fn step_is_bit_exact_across_pool_widths() {
+        let l = layer();
+        let x = tokens(64, 16, 7);
+        let serial = l.step(&ParPool::new(1), &x);
+        for t in [2usize, 4, 8] {
+            assert_eq!(serial, l.step(&ParPool::new(t), &x), "threads={t}");
+        }
+    }
+
+    #[test]
+    fn empty_experts_are_tolerated() {
+        // top-1 routing over many experts leaves some experts with no
+        // tokens; their gather/FFN blocks are [0, d] and must no-op.
+        let l = HostMoeLayer::synth(
+            HostMoeConfig {
+                n_experts: 16,
+                top_k: 1,
+                d_model: 8,
+                d_ff: 16,
+                devices: 2,
+            },
+            3,
+        );
+        let x = tokens(4, 8, 11);
+        let out = l.step(&ParPool::new(4), &x);
+        assert_eq!(out.shape(), &[4, 8]);
+    }
+
+    #[test]
+    fn expert_ffn_matches_manual_small_case() {
+        let ffn = ExpertFfn {
+            w1t: Tensor::from_vec(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]), // identity
+            w2t: Tensor::from_vec(&[2, 2], vec![2.0, 0.0, 0.0, 2.0]), // 2·identity
+        };
+        let x = Tensor::from_vec(&[1, 2], vec![3.0, -3.0]);
+        let y = ffn.forward(&ParPool::new(1), &x);
+        // gelu(3) ≈ 2.9964, gelu(-3) ≈ -0.00363; doubled by w2
+        assert!((y.data()[0] - 2.0 * 2.9964).abs() < 1e-2, "{:?}", y.data());
+        assert!((y.data()[1] + 2.0 * 0.00363).abs() < 1e-2, "{:?}", y.data());
+    }
+}

@@ -3,6 +3,10 @@
 //! (who sends which token to which expert) that the engine's all-to-all
 //! emulation and the conditional-communication filter operate on.
 
+pub mod host;
+
+use std::cell::Cell;
+
 use crate::tensor::{ops, Tensor};
 
 /// Expert placement: contiguous blocks of experts per device
@@ -58,9 +62,13 @@ impl RoutingTable {
         let (n_tokens, e) = probs.rows();
         let mut experts = Vec::with_capacity(n_tokens * top_k);
         let mut scores = Vec::with_capacity(n_tokens * top_k);
+        // one scratch index buffer for the whole table: the per-row
+        // top-k extraction allocates nothing after the first row.
+        let mut scratch = Vec::with_capacity(e);
         for i in 0..n_tokens {
             let row = probs.row(i);
-            for &idx in ops::topk_idx(row, top_k).iter() {
+            ops::topk_idx_into(row, top_k, &mut scratch);
+            for &idx in scratch.iter() {
                 experts.push(idx);
                 scores.push(row[idx]);
             }
@@ -113,18 +121,34 @@ pub struct DispatchEntry {
     pub src_device: usize,
 }
 
+/// Memo key for [`DispatchPlan::cross_bytes`]: the placement identity
+/// plus the pricing dims.
+type CrossKey = (usize, usize, usize, usize);
+
 /// A dispatch plan groups entries per expert (the all-to-all payload).
+///
+/// Plans are immutable after [`DispatchPlan::build`]; the
+/// [`DispatchPlan::cross_bytes`] memo relies on that.
 #[derive(Debug, Clone, Default)]
 pub struct DispatchPlan {
     /// Entries grouped by destination expert.
     pub per_expert: Vec<Vec<DispatchEntry>>,
+    /// Last (placement, dims) → crossing-bytes answer.
+    cross_memo: Cell<Option<(CrossKey, usize)>>,
 }
 
 impl DispatchPlan {
     /// Build the full (un-throttled) plan from a routing table.
     /// `tokens_per_device` maps global token index -> owning device.
+    /// Per-expert entry vectors are sized exactly in a counting pass, so
+    /// the build allocates once per expert and never regrows.
     pub fn build(rt: &RoutingTable, tokens_per_device: usize) -> DispatchPlan {
-        let mut per_expert = vec![Vec::new(); rt.n_experts];
+        let mut counts = vec![0usize; rt.n_experts];
+        for &e in &rt.experts {
+            counts[e] += 1;
+        }
+        let mut per_expert: Vec<Vec<DispatchEntry>> =
+            counts.iter().map(|&c| Vec::with_capacity(c)).collect();
         for i in 0..rt.n_tokens {
             for (rank, expert, score) in rt.of_token(i) {
                 per_expert[expert].push(DispatchEntry {
@@ -136,7 +160,10 @@ impl DispatchPlan {
                 });
             }
         }
-        DispatchPlan { per_expert }
+        DispatchPlan {
+            per_expert,
+            cross_memo: Cell::new(None),
+        }
     }
 
     /// Total (token, expert) assignments in the plan.
@@ -148,13 +175,27 @@ impl DispatchPlan {
     /// or combine), counting only entries whose source device differs
     /// from the expert's owner. `elem_bytes` is the activation element
     /// size, `d_model` the token width.
+    ///
+    /// Memoized per (placement, dims): repeat pricing of the same plan
+    /// (`CostModel::t_a2a_measured` callers such as `perfprobe --sim`)
+    /// scans the entries once instead of once per priced collective.
+    /// The memo cell makes `DispatchPlan` `!Sync` — pool closures must
+    /// capture the `per_expert` field, not the plan itself.
     pub fn cross_bytes(&self, placement: &Placement, d_model: usize, elem_bytes: usize) -> usize {
+        let key = (placement.n_experts, placement.devices, d_model, elem_bytes);
+        if let Some((k, v)) = self.cross_memo.get() {
+            if k == key {
+                return v;
+            }
+        }
         let mut n = 0usize;
         for (e, entries) in self.per_expert.iter().enumerate() {
             let owner = placement.owner(e);
             n += entries.iter().filter(|en| en.src_device != owner).count();
         }
-        n * d_model * elem_bytes
+        let bytes = n * d_model * elem_bytes;
+        self.cross_memo.set(Some((key, bytes)));
+        bytes
     }
 
     /// Per-expert token loads (imbalance diagnostics).
@@ -244,6 +285,31 @@ mod tests {
         let plan = DispatchPlan::build(&rt, 6); // all tokens on device 0
         let p = Placement::new(2, 1);
         assert_eq!(plan.cross_bytes(&p, 64, 4), 0);
+    }
+
+    #[test]
+    fn cross_bytes_memo_is_keyed_on_placement_and_dims() {
+        let probs = probs_of(vec![vec![0.6, 0.4]; 8]);
+        let rt = RoutingTable::from_probs(&probs, 2);
+        let plan = DispatchPlan::build(&rt, 4); // tokens on 2 devices
+        let p2 = Placement::new(2, 2);
+        let p1 = Placement::new(2, 1);
+        let first = plan.cross_bytes(&p2, 16, 4);
+        assert_eq!(plan.cross_bytes(&p2, 16, 4), first, "memo hit must agree");
+        // a different placement / dims must not be served from the memo
+        assert_eq!(plan.cross_bytes(&p1, 16, 4), 0);
+        assert_eq!(plan.cross_bytes(&p2, 32, 4), 2 * first);
+        assert_eq!(plan.cross_bytes(&p2, 16, 4), first, "re-memoized");
+    }
+
+    #[test]
+    fn build_preallocates_exact_capacity() {
+        let probs = probs_of(vec![vec![0.5, 0.3, 0.2]; 12]);
+        let rt = RoutingTable::from_probs(&probs, 2);
+        let plan = DispatchPlan::build(&rt, 3);
+        for entries in &plan.per_expert {
+            assert!(entries.capacity() == entries.len() || entries.is_empty());
+        }
     }
 
     #[test]

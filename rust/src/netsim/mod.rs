@@ -181,6 +181,20 @@ impl CostModel {
         self.hw.msg_latency + bytes / self.hw.link_bw
     }
 
+    /// All-to-all latency priced from a MEASURED engine dispatch plan
+    /// rather than the analytic balanced-routing payload: the crossing
+    /// bytes come from [`crate::moe::DispatchPlan::cross_bytes`], whose
+    /// per-plan memo means pricing both collectives of every layer from
+    /// one plan scans the entries once, not once per priced collective.
+    pub fn t_a2a_measured(
+        &self,
+        plan: &crate::moe::DispatchPlan,
+        placement: &crate::moe::Placement,
+    ) -> f64 {
+        let bytes = plan.cross_bytes(placement, self.model.d_model, ELEM_BYTES as usize) as f64;
+        self.t_a2a(bytes, placement.devices)
+    }
+
     /// Effective compute time: small batches under-utilise the GPU, so
     /// throughput ramps with the resident token count and saturates at
     /// the profile's peak (this is why the paper's a2a share RISES with
@@ -362,6 +376,30 @@ mod tests {
         // otherwise compression could never win
         let c = cm.layer_costs(&wl);
         assert!(t1 < 0.1 * c.t_a2a, "codec {t1} vs a2a {}", c.t_a2a);
+    }
+
+    #[test]
+    fn measured_plan_pricing_matches_direct_formula() {
+        use crate::moe::{DispatchPlan, Placement, RoutingTable};
+        use crate::tensor::Tensor;
+        let cm = CostModel::new(
+            model_preset("xl").unwrap(),
+            hardware_profile("rtx4090_pcie").unwrap(),
+        );
+        // 8 tokens on 2 devices, every token to both of 2 experts
+        let probs = Tensor::from_vec(&[8, 2], vec![0.6, 0.4].repeat(8));
+        let rt = RoutingTable::from_probs(&probs, 2);
+        let plan = DispatchPlan::build(&rt, 4);
+        let p = Placement::new(2, 2);
+        let direct = cm.t_a2a(
+            plan.cross_bytes(&p, cm.model.d_model, ELEM_BYTES as usize) as f64,
+            2,
+        );
+        let measured = cm.t_a2a_measured(&plan, &p);
+        assert_eq!(measured, direct);
+        // second call serves the byte count from the plan's memo
+        assert_eq!(cm.t_a2a_measured(&plan, &p), measured);
+        assert!(measured > 0.0);
     }
 
     #[test]

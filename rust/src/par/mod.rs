@@ -1,0 +1,290 @@
+//! Execution runtime: a scoped worker pool on `std::thread` (DESIGN.md
+//! §8) that gives the emulated devices real thread-level parallelism.
+//!
+//! Design contract (the determinism rules every caller relies on):
+//!
+//! * **Static decomposition** — work is split into contiguous index
+//!   ranges (or caller-chosen chunk boundaries) that depend only on the
+//!   item count, never on the thread count's scheduling. Results are
+//!   returned in index order.
+//! * **Disjoint writes** — [`ParPool::for_chunks_mut`] hands each task a
+//!   chunk of a mutable slice; chunk boundaries are fixed by the caller,
+//!   so every element is written by exactly one task.
+//! * **Bit-exact reductions** — combined with fixed per-task iteration
+//!   order, the two rules above make every pool-driven computation in
+//!   this crate produce identical bits for any `--threads` value (the
+//!   `par_determinism` integration suite pins this).
+//! * **Panic propagation** — a panicking task panics the caller (first
+//!   panic wins, remaining tasks are joined first).
+//!
+//! Thread count resolution: [`set_threads`] (the `--threads` CLI knob) >
+//! `PAR_THREADS` env var > `std::thread::available_parallelism`. Pools
+//! are cheap value objects — no persistent threads; each parallel region
+//! is a `std::thread::scope` so borrows of caller state need no `Arc`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Process-wide thread-count override (0 = unset). Set by `--threads`.
+static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Install a process-wide worker count (the `--threads` CLI knob).
+/// Passing 0 clears the override, falling back to `PAR_THREADS` / the
+/// machine's available parallelism.
+pub fn set_threads(n: usize) {
+    GLOBAL_THREADS.store(n, Ordering::Relaxed);
+}
+
+/// Resolve the effective worker count: [`set_threads`] override, else
+/// the `PAR_THREADS` environment variable, else available parallelism.
+pub fn configured_threads() -> usize {
+    let g = GLOBAL_THREADS.load(Ordering::Relaxed);
+    if g > 0 {
+        return g;
+    }
+    if let Ok(v) = std::env::var("PAR_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// A scoped worker pool: a width plus the determinism contract in the
+/// module docs. Copyable; spawning happens per parallel region.
+#[derive(Debug, Clone, Copy)]
+pub struct ParPool {
+    threads: usize,
+}
+
+/// Contiguous index range `[lo, hi)` of part `w` when `n` items are
+/// split into `parts` near-equal parts (first `n % parts` parts get one
+/// extra item). Depends only on (n, parts, w).
+fn chunk_range(n: usize, parts: usize, w: usize) -> (usize, usize) {
+    let base = n / parts;
+    let rem = n % parts;
+    let lo = w * base + w.min(rem);
+    let hi = lo + base + usize::from(w < rem);
+    (lo, hi)
+}
+
+impl ParPool {
+    /// Pool of exactly `threads` workers (clamped to ≥ 1).
+    pub fn new(threads: usize) -> ParPool {
+        ParPool {
+            threads: threads.max(1),
+        }
+    }
+
+    /// Pool at the configured width ([`configured_threads`]).
+    pub fn current() -> ParPool {
+        ParPool::new(configured_threads())
+    }
+
+    /// The worker count of this pool.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Map `f(index, item)` over `items`, returning results in index
+    /// order. Items are split into contiguous per-worker ranges; a
+    /// 1-wide pool (or a single item) runs inline without spawning.
+    pub fn map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let workers = self.threads.min(n);
+        if workers == 1 {
+            return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        }
+        let mut parts: Vec<Vec<R>> = Vec::with_capacity(workers);
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(workers);
+            for w in 0..workers {
+                let (lo, hi) = chunk_range(n, workers, w);
+                let slice = &items[lo..hi];
+                let f = &f;
+                handles.push(s.spawn(move || {
+                    slice
+                        .iter()
+                        .enumerate()
+                        .map(|(i, t)| f(lo + i, t))
+                        .collect::<Vec<R>>()
+                }));
+            }
+            for h in handles {
+                match h.join() {
+                    Ok(v) => parts.push(v),
+                    Err(p) => std::panic::resume_unwind(p),
+                }
+            }
+        });
+        parts.into_iter().flatten().collect()
+    }
+
+    /// Run `f(chunk_index, chunk)` over the contiguous `chunk_len`-sized
+    /// chunks of `data` (last chunk may be shorter). Chunk boundaries
+    /// are fixed by `chunk_len` — independent of the pool width — so
+    /// writes are disjoint and deterministic. This is the pool's
+    /// barrier: it returns only when every chunk is done.
+    pub fn for_chunks_mut<T, F>(&self, data: &mut [T], chunk_len: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        assert!(chunk_len > 0, "for_chunks_mut: chunk_len must be > 0");
+        if data.is_empty() {
+            return;
+        }
+        if self.threads == 1 {
+            for (i, c) in data.chunks_mut(chunk_len).enumerate() {
+                f(i, c);
+            }
+            return;
+        }
+        let chunks: Vec<&mut [T]> = data.chunks_mut(chunk_len).collect();
+        let n = chunks.len();
+        let workers = self.threads.min(n);
+        if workers == 1 {
+            for (i, c) in chunks.into_iter().enumerate() {
+                f(i, c);
+            }
+            return;
+        }
+        // each worker takes OWNERSHIP of its contiguous run of chunk
+        // slices, so there is no shared mutable state to reborrow
+        let mut it = chunks.into_iter().enumerate();
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(workers);
+            for w in 0..workers {
+                let (lo, hi) = chunk_range(n, workers, w);
+                let batch: Vec<(usize, &mut [T])> = it.by_ref().take(hi - lo).collect();
+                let f = &f;
+                handles.push(s.spawn(move || {
+                    for (i, c) in batch {
+                        f(i, c);
+                    }
+                }));
+            }
+            for h in handles {
+                if let Err(p) = h.join() {
+                    std::panic::resume_unwind(p);
+                }
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        for n in [0usize, 1, 5, 7, 16, 33] {
+            for parts in [1usize, 2, 3, 4, 8] {
+                let mut covered = Vec::new();
+                for w in 0..parts {
+                    let (lo, hi) = chunk_range(n, parts, w);
+                    covered.extend(lo..hi);
+                }
+                assert_eq!(covered, (0..n).collect::<Vec<_>>(), "n={n} parts={parts}");
+            }
+        }
+    }
+
+    #[test]
+    fn map_preserves_index_order() {
+        let items: Vec<usize> = (0..37).collect();
+        for t in [1usize, 2, 3, 8] {
+            let out = ParPool::new(t).map(&items, |i, &x| {
+                assert_eq!(i, x);
+                x * 10
+            });
+            assert_eq!(out, (0..37).map(|x| x * 10).collect::<Vec<_>>(), "t={t}");
+        }
+    }
+
+    #[test]
+    fn zero_work_spawns_nothing() {
+        let items: Vec<u32> = Vec::new();
+        let out = ParPool::new(4).map(&items, |_, &x| x);
+        assert!(out.is_empty());
+        let mut data: Vec<u32> = Vec::new();
+        ParPool::new(4).for_chunks_mut(&mut data, 3, |_, _| panic!("no chunks"));
+    }
+
+    #[test]
+    fn chunks_are_disjoint_and_indexed() {
+        let mut data = vec![0usize; 22];
+        for t in [1usize, 2, 4, 7] {
+            data.iter_mut().for_each(|v| *v = 0);
+            ParPool::new(t).for_chunks_mut(&mut data, 5, |ci, chunk| {
+                for v in chunk.iter_mut() {
+                    *v += 100 * (ci + 1); // += catches double-writes
+                }
+            });
+            let want: Vec<usize> = (0..22).map(|i| 100 * (i / 5 + 1)).collect();
+            assert_eq!(data, want, "t={t}");
+        }
+    }
+
+    #[test]
+    fn nested_scopes_work() {
+        let outer = ParPool::new(2);
+        let inner = ParPool::new(2);
+        let items: Vec<usize> = (0..4).collect();
+        let out = outer.map(&items, |_, &x| {
+            let sub: Vec<usize> = (0..3).collect();
+            inner.map(&sub, |_, &y| x * 10 + y).iter().sum::<usize>()
+        });
+        // each item: x*10*3 + (0+1+2)
+        assert_eq!(out, vec![3, 33, 63, 93]);
+    }
+
+    #[test]
+    #[should_panic(expected = "task 3 exploded")]
+    fn panics_propagate_to_caller() {
+        let items: Vec<usize> = (0..8).collect();
+        ParPool::new(4).map(&items, |_, &x| {
+            if x == 3 {
+                panic!("task 3 exploded");
+            }
+            x
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "chunk panic")]
+    fn chunk_panics_propagate() {
+        let mut data = vec![0u8; 16];
+        ParPool::new(2).for_chunks_mut(&mut data, 4, |ci, _| {
+            if ci == 2 {
+                panic!("chunk panic");
+            }
+        });
+    }
+
+    #[test]
+    fn set_threads_overrides_and_clears() {
+        set_threads(3);
+        assert_eq!(configured_threads(), 3);
+        assert_eq!(ParPool::current().threads(), 3);
+        set_threads(0); // restore auto
+        assert!(configured_threads() >= 1);
+    }
+
+    #[test]
+    fn pool_width_clamped() {
+        assert_eq!(ParPool::new(0).threads(), 1);
+    }
+}

@@ -37,6 +37,6 @@ pub use admission::{AdmissionController, AdmissionPolicy};
 pub use batcher::{pick_bucket, BatchPolicy, Batcher};
 pub use report::{comparison_table, LatencySummary, ServeReport, ServedBatch};
 pub use serve_loop::{
-    serve, serve_sim, serve_with, BatchExecutor, EngineExecutor, ExecOutcome, ServeConfig,
-    SimExecutor,
+    serve, serve_scenarios, serve_sim, serve_with, BatchExecutor, EngineExecutor, ExecOutcome,
+    ServeConfig, SimExecutor,
 };

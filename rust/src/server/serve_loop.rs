@@ -394,6 +394,32 @@ pub fn serve_sim(
     serve_with(&mut ex, trace, cfg)
 }
 
+/// Fan independent workload traces over the worker pool (DESIGN.md §8):
+/// one serve loop per trace, each against its own clone of `ex`, with
+/// reports returned in trace order. Virtual time makes every loop
+/// deterministic, so the fan-out is bit-identical to serving the traces
+/// one after another.
+///
+/// The `Clone + Send + Sync` bound restricts this to simulation-style
+/// executors ([`SimExecutor`] and friends): [`EngineExecutor`] borrows
+/// the PJRT runtime handle, which is single-threaded by design.
+pub fn serve_scenarios<E>(
+    ex: &E,
+    traces: &[Vec<Request>],
+    cfg: ServeConfig,
+) -> Result<Vec<ServeReport>>
+where
+    E: BatchExecutor + Clone + Send + Sync,
+{
+    let pool = crate::par::ParPool::current();
+    pool.map(traces, |_, trace| {
+        let mut e = ex.clone();
+        serve_with(&mut e, trace, cfg)
+    })
+    .into_iter()
+    .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -567,6 +593,30 @@ mod tests {
             "codec savings pool with cond-comm savings"
         );
         assert!(rc.latency().mean < rp.latency().mean);
+    }
+
+    #[test]
+    fn scenario_fanout_matches_serial_serving() {
+        let ex = sim_ex(Strategy::Interweaved, DiceOptions::dice());
+        let traces: Vec<Vec<crate::workload::Request>> = vec![
+            poisson_trace(17, 3.0, 4, 1),
+            burst_trace(40, 4, 2),
+            uniform_trace(9, 0.5, 4, 3),
+        ];
+        let fanned = serve_scenarios(&ex, &traces, cfg(32, 0.5)).unwrap();
+        assert_eq!(fanned.len(), 3);
+        for (i, trace) in traces.iter().enumerate() {
+            let mut solo = ex.clone();
+            let want = serve_with(&mut solo, trace, cfg(32, 0.5)).unwrap();
+            assert_eq!(fanned[i].served, want.served, "trace {i}");
+            assert_eq!(fanned[i].batches.len(), want.batches.len(), "trace {i}");
+            assert_eq!(fanned[i].span, want.span, "trace {i}");
+            assert_eq!(
+                fanned[i].metrics.counter("a2a.fresh_bytes"),
+                want.metrics.counter("a2a.fresh_bytes"),
+                "trace {i}"
+            );
+        }
     }
 
     #[test]

@@ -9,10 +9,19 @@ use super::Tensor;
 pub fn gather_rows(t: &Tensor, idx: &[usize]) -> Tensor {
     let (_, d) = t.rows();
     let mut out = Tensor::zeros(&[idx.len(), d]);
+    gather_rows_into(t, idx, &mut out);
+    out
+}
+
+/// As [`gather_rows`] but into a caller-provided [idx.len(), D] tensor
+/// (an arena slot on the engine's zero-copy hot path); every row of
+/// `out` is overwritten.
+pub fn gather_rows_into(t: &Tensor, idx: &[usize], out: &mut Tensor) {
+    let (_, d) = t.rows();
+    debug_assert_eq!(out.rows(), (idx.len(), d), "gather_rows_into shape");
     for (o, &i) in idx.iter().enumerate() {
         out.row_mut(o).copy_from_slice(t.row(i));
     }
-    out
 }
 
 /// Scatter-add rows of `src` into `dst` at `idx`, scaling row r by `w[r]`.
@@ -99,10 +108,18 @@ pub fn concat_batch(shards: &[Tensor]) -> Tensor {
 
 /// Indices of the k largest values (descending), stable on ties.
 pub fn topk_idx(row: &[f32], k: usize) -> Vec<usize> {
-    let mut idx: Vec<usize> = (0..row.len()).collect();
+    let mut idx = Vec::with_capacity(row.len());
+    topk_idx_into(row, k, &mut idx);
+    idx
+}
+
+/// As [`topk_idx`] but reusing a caller-owned scratch vector, so
+/// per-row routing extraction allocates nothing after the first row.
+pub fn topk_idx_into(row: &[f32], k: usize, idx: &mut Vec<usize>) {
+    idx.clear();
+    idx.extend(0..row.len());
     idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap().then(a.cmp(&b)));
     idx.truncate(k);
-    idx
 }
 
 /// Mean over axis 0 of a [N, D] view.
@@ -191,6 +208,25 @@ mod tests {
     fn topk_orders_desc_with_stable_ties() {
         assert_eq!(topk_idx(&[0.1, 0.9, 0.5, 0.9], 3), vec![1, 3, 2]);
         assert_eq!(topk_idx(&[1.0], 1), vec![0]);
+    }
+
+    #[test]
+    fn topk_into_reuses_scratch() {
+        let mut scratch = Vec::new();
+        topk_idx_into(&[0.1, 0.9, 0.5], 2, &mut scratch);
+        assert_eq!(scratch, vec![1, 2]);
+        // second row through the same scratch: previous content is gone
+        topk_idx_into(&[0.7, 0.2, 0.3, 0.1], 1, &mut scratch);
+        assert_eq!(scratch, vec![0]);
+    }
+
+    #[test]
+    fn gather_into_overwrites_stale_slot() {
+        let t = seq(&[4, 3]);
+        let mut out = Tensor::full(&[2, 3], 7.0); // stale arena contents
+        gather_rows_into(&t, &[3, 1], &mut out);
+        assert_eq!(out.row(0), t.row(3));
+        assert_eq!(out.row(1), t.row(1));
     }
 
     #[test]

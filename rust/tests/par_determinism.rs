@@ -1,0 +1,155 @@
+//! Integration: the execution runtime's determinism contract
+//! (DESIGN.md §8). Parallel engine output must be BIT-EXACT equal to
+//! serial for every `--threads` width — these tests pin that for the
+//! host engine step, the blocked matmul kernels, the simulation sweep
+//! fan-out, and the scenario serving fan-out, at widths 1 / 2 / 4.
+//! Artifact-free: everything here runs on a clean checkout.
+
+use dice::config::{hardware_profile, model_preset, DiceOptions, Strategy};
+use dice::coordinator::{simulate_sweep_with, SweepCase};
+use dice::linalg;
+use dice::moe::host::{HostMoeConfig, HostMoeLayer};
+use dice::netsim::{CostModel, Workload};
+use dice::par::ParPool;
+use dice::rng::Rng;
+use dice::server::{serve_scenarios, BatchPolicy, ServeConfig, SimExecutor};
+use dice::tensor::Tensor;
+use dice::workload::poisson_trace;
+
+fn normal(shape: &[usize], seed: u64) -> Tensor {
+    let mut t = Tensor::zeros(shape);
+    Rng::new(seed).fill_normal(t.data_mut());
+    t
+}
+
+/// f64 checksum of a tensor — an order-fixed serial reduction, so two
+/// bit-identical tensors have identical checksums.
+fn checksum(t: &Tensor) -> f64 {
+    t.data().iter().map(|&v| v as f64).sum()
+}
+
+#[test]
+fn host_engine_step_bit_exact_across_threads_1_2_4() {
+    let layer = HostMoeLayer::synth(
+        HostMoeConfig {
+            n_experts: 8,
+            top_k: 2,
+            d_model: 32,
+            d_ff: 64,
+            devices: 4,
+        },
+        0xD1CE,
+    );
+    let x = normal(&[128, 32], 11);
+    let serial = layer.step(&ParPool::new(1), &x);
+    let cs = checksum(&serial);
+    for threads in [1usize, 2, 4] {
+        let out = layer.step(&ParPool::new(threads), &x);
+        assert_eq!(serial, out, "--threads {threads} output differs from serial");
+        assert_eq!(cs, checksum(&out), "--threads {threads} checksum differs");
+    }
+}
+
+#[test]
+fn multi_step_trajectory_bit_exact_across_threads() {
+    // 10 feedback steps: any nondeterminism would compound and show
+    let layer = HostMoeLayer::synth(
+        HostMoeConfig {
+            n_experts: 4,
+            top_k: 2,
+            d_model: 16,
+            d_ff: 32,
+            devices: 2,
+        },
+        42,
+    );
+    let run = |threads: usize| -> Tensor {
+        let pool = ParPool::new(threads);
+        let mut x = normal(&[32, 16], 5);
+        for _ in 0..10 {
+            let out = layer.step(&pool, &x);
+            for (xi, oi) in x.data_mut().iter_mut().zip(out.data()) {
+                *xi = 0.5 * *xi + 0.5 * oi;
+            }
+        }
+        x
+    };
+    let serial = run(1);
+    for threads in [2usize, 4] {
+        assert_eq!(serial, run(threads), "trajectory diverged at {threads} threads");
+    }
+}
+
+#[test]
+fn blocked_matmul_bit_exact_across_threads() {
+    // 97·80·83 ≈ 640k MACs: above the kernel's inline-work threshold,
+    // so the pool really fans out
+    let a = normal(&[97, 80], 1);
+    let bt = normal(&[83, 80], 2);
+    let serial = linalg::matmul_bt_with(&ParPool::new(1), &a, &bt);
+    for threads in [2usize, 4] {
+        assert_eq!(
+            serial,
+            linalg::matmul_bt_with(&ParPool::new(threads), &a, &bt),
+            "matmul_bt diverged at {threads} threads"
+        );
+    }
+}
+
+#[test]
+fn sim_sweep_identical_for_any_pool_width() {
+    let cm = CostModel::new(
+        model_preset("xl").unwrap(),
+        hardware_profile("rtx4090_pcie").unwrap(),
+    );
+    let cases: Vec<SweepCase> = [4usize, 8, 16]
+        .iter()
+        .map(|&b| SweepCase {
+            wl: Workload {
+                local_batch: b,
+                devices: 8,
+                tokens: cm.model.tokens(),
+            },
+            strategy: Strategy::Interweaved,
+            opts: DiceOptions::dice(),
+            steps: 6,
+        })
+        .collect();
+    let serial = simulate_sweep_with(&ParPool::new(1), &cm, &cases);
+    for threads in [2usize, 4] {
+        let par = simulate_sweep_with(&ParPool::new(threads), &cm, &cases);
+        for (s, p) in serial.iter().zip(&par) {
+            assert_eq!(s.total_time, p.total_time, "{threads} threads");
+            assert_eq!(s.a2a_share, p.a2a_share, "{threads} threads");
+        }
+    }
+}
+
+#[test]
+fn scenario_fanout_is_deterministic() {
+    let cm = CostModel::new(
+        model_preset("xl").unwrap(),
+        hardware_profile("rtx4090_pcie").unwrap(),
+    );
+    let ex = SimExecutor::new(cm, Strategy::Interweaved, DiceOptions::dice(), 8);
+    let traces: Vec<_> = (0..4).map(|s| poisson_trace(20, 4.0, 4, s)).collect();
+    let cfg = ServeConfig::new(
+        BatchPolicy {
+            max_global: 32,
+            max_wait: 0.5,
+        },
+        4,
+        7,
+    );
+    // serve_scenarios reads the ambient pool: pin it per run
+    dice::par::set_threads(1);
+    let serial = serve_scenarios(&ex, &traces, cfg).unwrap();
+    dice::par::set_threads(4);
+    let par = serve_scenarios(&ex, &traces, cfg).unwrap();
+    dice::par::set_threads(0);
+    for (s, p) in serial.iter().zip(&par) {
+        assert_eq!(s.served, p.served);
+        assert_eq!(s.span, p.span);
+        assert_eq!(s.throughput, p.throughput);
+    }
+}
