@@ -1,8 +1,10 @@
 //! Perf gate + trajectory recorder (DESIGN.md §8): benches the host
 //! engine step (dispatch → expert FFN → combine over the worker pool)
-//! serial vs parallel, plus the simulation sweep fan-out, and appends
-//! every summary to repo-root `BENCH_engine.json` (JSON lines) — the
-//! perf trajectory across PRs. Artifact-free.
+//! serial vs parallel, the simulation sweep fan-out, and the
+//! placement-policy sweep (three solves + crossing-bytes pricing on a
+//! skewed plan, DESIGN.md §9), and appends every summary to repo-root
+//! `BENCH_engine.json` (JSON lines) — the perf trajectory across PRs.
+//! Artifact-free.
 //!
 //!     cargo bench --bench perf_gate              # full iterations
 //!     cargo bench --bench perf_gate -- --check   # CI: few iters +
@@ -16,11 +18,13 @@ use std::path::PathBuf;
 
 use dice::benchkit::{self, fmt_secs, Summary, Table};
 use dice::cli::Args;
-use dice::config::{hardware_profile, model_preset, DiceOptions, Json, Strategy};
+use dice::config::{hardware_profile, model_preset, DiceOptions, Json, PlacementKind, Strategy};
 use dice::coordinator::{simulate_sweep_with, SweepCase};
 use dice::moe::host::{HostMoeConfig, HostMoeLayer};
+use dice::moe::{DispatchPlan, RoutingTable};
 use dice::netsim::{CostModel, Workload};
 use dice::par::ParPool;
+use dice::placement::{build, skewed_probs, RoutingStats};
 use dice::rng::Rng;
 use dice::tensor::Tensor;
 
@@ -106,11 +110,34 @@ fn main() -> anyhow::Result<()> {
         },
     );
 
+    // --- placement sweep: solve all three policies + price the plan ----
+    let (pe, pd, pk) = (16usize, 8usize, 2usize);
+    let p_tokens = 1024usize;
+    let probs = skewed_probs(p_tokens, pe, pd, 0xBEEF);
+    let p_rt = RoutingTable::from_probs(&probs, pk);
+    let p_plan = DispatchPlan::build(&p_rt, p_tokens / pd);
+    let mut p_stats = RoutingStats::new(pe, pd);
+    p_stats.observe(&p_rt, p_tokens / pd);
+    let p_kinds = [
+        PlacementKind::Contiguous,
+        PlacementKind::LoadBalanced,
+        PlacementKind::AffinityAware,
+    ];
+    let s_place = benchkit::bench("placement_sweep", warmup, iters, || {
+        for kind in p_kinds {
+            let p = build(kind).place(pe, pd, &p_stats);
+            // alternating placements defeat the memo on purpose: this
+            // times the solve + the full crossing-bytes scan
+            std::hint::black_box(p_plan.cross_bytes(&p, 64, 2));
+        }
+    });
+
     let summaries: Vec<Summary> = vec![
         s_serial.clone(),
         s_par.clone(),
         w_serial.clone(),
         w_par.clone(),
+        s_place.clone(),
     ];
     let mut t = Table::new(
         "Perf gate — engine step + sim sweep, serial vs parallel",
@@ -146,6 +173,14 @@ fn main() -> anyhow::Result<()> {
         let got = layer.step(&ParPool::new(tn), &x);
         assert!(want == got, "engine step must be bit-exact at {tn} threads");
     }
+    // placement: the affinity policy must not add crossing bytes on the
+    // skewed workload (DESIGN.md §9), always checked
+    let p_contig = build(PlacementKind::Contiguous).place(pe, pd, &p_stats);
+    let p_aff = build(PlacementKind::AffinityAware).place(pe, pd, &p_stats);
+    assert!(
+        p_plan.cross_bytes(&p_aff, 64, 2) <= p_plan.cross_bytes(&p_contig, 64, 2),
+        "affinity placement regressed crossing bytes"
+    );
     // JSON-lines validity of the trajectory file
     let text = std::fs::read_to_string(&bench_path)?;
     let mut lines = 0usize;

@@ -1,0 +1,12 @@
+//! Placement-policy study (DESIGN.md §9): load imbalance, crossing
+//! bytes and step time of contiguous / load-balanced / affinity-aware
+//! expert placement on a seeded skewed workload, rebalance migrations
+//! priced in. Artifact-free; also reachable as `dice exp placement`.
+use dice::exp::{placement::report, write_results};
+
+fn main() -> anyhow::Result<()> {
+    let (t, j) = report(2048, 16, 4, 1234)?;
+    t.print();
+    write_results("placement_policies", &t.render(), &j)?;
+    Ok(())
+}

@@ -21,9 +21,17 @@ cargo test -q --doc
 
 # Perf gate: few-iteration run of the serial-vs-parallel engine-step
 # bench. Asserts bit-exact parallel output, valid JSON-lines in
-# BENCH_engine.json, and (on >= 2 cores) parallel <= serial mean.
+# BENCH_engine.json, (on >= 2 cores) parallel <= serial mean, and that
+# the affinity placement never adds crossing bytes.
 echo "==> perf gate (cargo bench --bench perf_gate -- --check)"
 cargo bench --bench perf_gate -- --check
+
+# Placement gate (artifact-free): the experiment driver FAILS unless
+# LoadBalanced reduces max per-device load and AffinityAware reduces
+# crossing bytes vs the contiguous baseline on the seeded skewed
+# workload, with rebalance migrations priced into the step times.
+echo "==> placement gate (dice exp placement, artifact-free)"
+cargo run --release --quiet -- exp placement --steps 12 --tokens 1024
 
 # Docs gates: rustdoc warnings (broken links, bad code-block attrs) are
 # errors, and missing_docs — warn-level in the sources so local builds

@@ -50,11 +50,23 @@ impl ModelConfig {
     pub fn patch_dim(&self) -> usize {
         self.patch * self.patch * self.channels
     }
+    /// Parameters of ONE routed expert FFN (two projections + biases) —
+    /// the unit a placement rebalance migrates.
+    pub fn expert_param_count(&self) -> usize {
+        let d = self.d_model;
+        let f = self.d_ffn;
+        d * f + f + f * d + d
+    }
+    /// Bytes of one routed expert's weights at f16 serving precision
+    /// (what `netsim::CostModel::t_migrate` prices per moved expert).
+    pub fn expert_param_bytes(&self) -> usize {
+        self.expert_param_count() * 2
+    }
     /// Total parameter count (used by the memory model).
     pub fn param_count(&self) -> usize {
         let d = self.d_model;
         let f = self.d_ffn;
-        let per_expert = d * f + f + f * d + d;
+        let per_expert = self.expert_param_count();
         let per_block = d * 6 * d + 6 * d       // adaLN
             + d * 3 * d + 3 * d                 // qkv
             + d * d + d                         // proj
@@ -73,10 +85,7 @@ impl ModelConfig {
     /// Parameter bytes resident per device under expert parallelism:
     /// experts are sharded, everything else is replicated.
     pub fn param_bytes_per_device_ep(&self, devices: usize) -> usize {
-        let d = self.d_model;
-        let f = self.d_ffn;
-        let per_expert = (d * f + f + f * d + d) * 2;
-        let expert_total = self.n_layers * self.n_experts * per_expert;
+        let expert_total = self.n_layers * self.n_experts * self.expert_param_bytes();
         let rest = self.param_bytes() - expert_total;
         rest + expert_total.div_ceil(devices)
     }
@@ -285,6 +294,42 @@ impl CompressionCodec {
     }
 }
 
+/// Expert→device placement policy (DESIGN.md §9): selects how
+/// `moe::Placement` maps experts onto devices. Orthogonal to
+/// [`Strategy`] and the other DICE knobs, exactly as
+/// [`CompressionCodec`] is; the solvers live in `crate::placement`
+/// (`placement::build` mirrors `compress::build`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PlacementKind {
+    /// Fixed contiguous blocks (the baseline layout).
+    Contiguous,
+    /// Greedy capacity-constrained bin-pack on observed expert load.
+    LoadBalanced,
+    /// Co-locate high-co-activation expert pairs on the device sourcing
+    /// their traffic (ExFlow-style), cutting crossing bytes.
+    AffinityAware,
+}
+
+impl PlacementKind {
+    /// Parse a CLI policy name.
+    pub fn parse(s: &str) -> Result<PlacementKind> {
+        Ok(match s {
+            "contiguous" | "contig" => PlacementKind::Contiguous,
+            "load" | "load_balanced" => PlacementKind::LoadBalanced,
+            "affinity" | "affinity_aware" => PlacementKind::AffinityAware,
+            _ => bail!("unknown placement policy {s:?} (contiguous|load|affinity)"),
+        })
+    }
+    /// Canonical policy name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementKind::Contiguous => "contiguous",
+            PlacementKind::LoadBalanced => "load_balanced",
+            PlacementKind::AffinityAware => "affinity_aware",
+        }
+    }
+}
+
 /// The DICE knobs layered on top of a base [`Strategy`].
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DiceOptions {
@@ -303,6 +348,20 @@ pub struct DiceOptions {
     pub only_async_layer: Option<usize>,
     /// Residual all-to-all compression codec (DESIGN.md §7).
     pub compress: CompressionCodec,
+    /// Expert→device placement policy (DESIGN.md §9).
+    pub placement: PlacementKind,
+    /// Re-solve the placement every K diffusion steps from observed
+    /// routing statistics (0 = static placement, never rebalance).
+    pub rebalance_every: usize,
+    /// Analytic crossing-traffic scale for the placement policy
+    /// (`placement::measured_cross_scale`): the fraction of the
+    /// balanced-routing all-to-all payload that still crosses devices
+    /// under the solved map. 1.0 = the contiguous baseline; the
+    /// virtual-time schedules multiply their a2a payloads by this.
+    /// Typically ≤ 1, but a policy that ADDS crossing traffic (load
+    /// balancing trading locality for balance) carries its > 1 ratio
+    /// honestly rather than being clamped.
+    pub a2a_cross_scale: f64,
 }
 
 impl DiceOptions {
@@ -315,11 +374,15 @@ impl DiceOptions {
             warmup_sync_steps: 0,
             only_async_layer: None,
             compress: CompressionCodec::None,
+            placement: PlacementKind::Contiguous,
+            rebalance_every: 0,
+            a2a_cross_scale: 1.0,
         }
     }
     /// The full DICE configuration used in the paper's main results.
-    /// (Residual compression stays off — it is our extension, not a
-    /// paper knob; enable it with [`DiceOptions::with_compress`].)
+    /// (Residual compression and placement policies stay off — they are
+    /// our extensions, not paper knobs; enable them with
+    /// [`DiceOptions::with_compress`] / [`DiceOptions::with_placement`].)
     pub fn dice() -> Self {
         DiceOptions {
             selective_sync: SelectiveSync::Deep,
@@ -328,11 +391,30 @@ impl DiceOptions {
             warmup_sync_steps: 0,
             only_async_layer: None,
             compress: CompressionCodec::None,
+            placement: PlacementKind::Contiguous,
+            rebalance_every: 0,
+            a2a_cross_scale: 1.0,
         }
     }
     /// Select a residual compression codec for the all-to-all payloads.
     pub fn with_compress(mut self, codec: CompressionCodec) -> Self {
         self.compress = codec;
+        self
+    }
+    /// Select an expert placement policy and its rebalance interval
+    /// (K diffusion steps between re-solves; 0 = static).
+    pub fn with_placement(mut self, kind: PlacementKind, rebalance_every: usize) -> Self {
+        self.placement = kind;
+        self.rebalance_every = rebalance_every;
+        self
+    }
+    /// Install the measured crossing-traffic scale the virtual-time
+    /// schedules should price the placement at (see
+    /// `placement::measured_cross_scale`). Must be finite and positive;
+    /// values above 1.0 mean the policy added crossing traffic.
+    pub fn with_cross_scale(mut self, scale: f64) -> Self {
+        assert!(scale.is_finite() && scale > 0.0, "scale must be finite and positive");
+        self.a2a_cross_scale = scale;
         self
     }
     /// Set the synchronous warmup step count.
@@ -420,6 +502,42 @@ mod tests {
         assert_eq!(DiceOptions::dice().compress, CompressionCodec::None);
         let on = DiceOptions::dice().with_compress(CompressionCodec::TopK);
         assert_eq!(on.compress, CompressionCodec::TopK);
+    }
+
+    #[test]
+    fn placement_kind_parse_roundtrip() {
+        for k in [
+            PlacementKind::Contiguous,
+            PlacementKind::LoadBalanced,
+            PlacementKind::AffinityAware,
+        ] {
+            assert_eq!(PlacementKind::parse(k.name()).unwrap(), k);
+        }
+        assert_eq!(PlacementKind::parse("load").unwrap(), PlacementKind::LoadBalanced);
+        assert_eq!(PlacementKind::parse("affinity").unwrap(), PlacementKind::AffinityAware);
+        assert!(PlacementKind::parse("random").is_err());
+        // placement defaults off in both canned option sets
+        let none = DiceOptions::none();
+        assert_eq!(none.placement, PlacementKind::Contiguous);
+        assert_eq!(none.rebalance_every, 0);
+        assert_eq!(none.a2a_cross_scale, 1.0);
+        assert_eq!(DiceOptions::dice().placement, PlacementKind::Contiguous);
+        let on = DiceOptions::dice()
+            .with_placement(PlacementKind::AffinityAware, 4)
+            .with_cross_scale(0.5);
+        assert_eq!(on.placement, PlacementKind::AffinityAware);
+        assert_eq!(on.rebalance_every, 4);
+        assert_eq!(on.a2a_cross_scale, 0.5);
+    }
+
+    #[test]
+    fn expert_param_unit_consistent_with_totals() {
+        let xl = presets::model_preset("xl").unwrap();
+        // one expert's weights are a small fraction of the model but a
+        // non-trivial migration payload (tens of MB at XL scale)
+        let e = xl.expert_param_bytes();
+        assert!(e > 10_000_000 && e < 100_000_000, "{e}");
+        assert!(e * xl.n_experts * xl.n_layers < xl.param_bytes());
     }
 
     #[test]

@@ -48,6 +48,7 @@ use crate::compress::{self, CodecStats};
 use crate::config::{CondCommSelector, DiceOptions, Strategy};
 use crate::moe::{DispatchEntry, DispatchPlan, Placement, RoutingTable};
 use crate::par::ParPool;
+use crate::placement::Rebalancer;
 use crate::rng::Rng;
 use crate::runtime::{Runtime, WeightBank};
 use crate::tensor::{ops, Tensor};
@@ -97,6 +98,14 @@ pub struct RunStats {
     pub routing_snapshots: Vec<RoutingTable>,
     /// per-expert token loads accumulated over the run (imbalance).
     pub expert_loads: Vec<usize>,
+    /// placement re-solves that changed the expert→device map.
+    pub rebalances: usize,
+    /// experts whose owner changed across all rebalances.
+    pub migrated_experts: usize,
+    /// weight bytes moved by rebalances (f32 numerics precision —
+    /// `netsim::CostModel::t_migrate` prices the f16 serving-scale
+    /// equivalent in virtual time).
+    pub migration_bytes: usize,
 }
 
 impl RunStats {
@@ -122,17 +131,19 @@ pub struct Engine<'a> {
 }
 
 impl<'a> Engine<'a> {
-    /// Bind an engine to a runtime + staged weights; validates that the
-    /// device count divides the expert count.
+    /// Bind an engine to a runtime + staged weights. The device count
+    /// no longer has to divide the expert count — [`Placement::new`]
+    /// distributes the remainder over the first devices — but every
+    /// device must own at least one expert.
     pub fn new(rt: &'a Runtime, bank: &'a WeightBank, cfg: EngineConfig) -> Result<Engine<'a>> {
         let tile = rt
             .manifest
             .get("expert_tile")
             .and_then(crate::config::Json::as_usize)
             .unwrap_or(64);
-        if rt.model.n_experts % cfg.devices != 0 {
+        if cfg.devices == 0 || rt.model.n_experts < cfg.devices {
             bail!(
-                "devices {} must divide experts {}",
+                "devices {} needs 1..={} (one expert per device minimum)",
                 cfg.devices,
                 rt.model.n_experts
             );
@@ -242,7 +253,17 @@ impl<'a> Engine<'a> {
         let (parts, pb) = if fused { (1usize, bg) } else { (dvs, bl) };
         let t_tokens = m.tokens();
         let n_global_tokens = bg * t_tokens;
-        let placement = Placement::new(m.n_experts, dvs);
+        // policy placement (DESIGN.md §9): starts contiguous (no stats
+        // observed yet); the rebalancer re-solves the map from the
+        // observed routing every `opts.rebalance_every` steps and the
+        // migrated expert weights are charged at the step boundary.
+        let mut placement = Placement::new(m.n_experts, dvs);
+        let mut rebalancer = Rebalancer::new(
+            self.cfg.opts.placement,
+            m.n_experts,
+            dvs,
+            self.cfg.opts.rebalance_every,
+        );
 
         let mut stats = RunStats {
             expert_loads: vec![0; m.n_experts],
@@ -318,6 +339,11 @@ impl<'a> Engine<'a> {
                 let routing = RoutingTable::from_probs(&probs_g, m.top_k);
                 if record_routing == Some(l) {
                     stats.routing_snapshots.push(routing.clone());
+                }
+                // stats feed the rebalancer only; keep the hot loop
+                // untouched when rebalancing is off (the default)
+                if self.cfg.opts.rebalance_every > 0 {
+                    rebalancer.observe(&routing, n_global_tokens / dvs);
                 }
 
                 let sync_layer = self.cfg.strategy == Strategy::SyncEp
@@ -513,6 +539,17 @@ impl<'a> Engine<'a> {
                     stats.exec_calls += 1;
                     h_shards[d] = h.into_iter().next().context("block_post out")?;
                 }
+            }
+
+            // placement rebalance at the step boundary (DESIGN.md §9):
+            // install the re-solved map and account the moved weights
+            // (f32 numerics bytes; virtual time prices the f16
+            // serving-scale move via `CostModel::t_migrate`).
+            if let Some(mig) = rebalancer.end_step(&placement) {
+                stats.rebalances += 1;
+                stats.migrated_experts += mig.moved_experts;
+                stats.migration_bytes += mig.moved_experts * m.expert_param_count() * 4;
+                placement = mig.placement;
             }
 
             // final + Euler update per part

@@ -64,7 +64,15 @@ pub fn simulate(
     // codec's wire bytes and additionally pay an α+β encode+decode
     // overhead, folded into the a2a op so it rides the comm stream
     // (the codec sits on the transfer's critical path).
+    // Placement (DESIGN.md §9): the policy's measured crossing fraction
+    // (`opts.a2a_cross_scale`, vs. the balanced-routing (D-1)/D
+    // baseline) throttles the rows exactly like conditional
+    // communication does, so it composes multiplicatively with the
+    // cond-comm fresh fraction and the codec. DistriFusion's shard
+    // exchange is placement-independent (sequence, not expert, sharding)
+    // and is not scaled.
     let a2a_op = |frac: f64| {
+        let frac = frac * opts.a2a_cross_scale;
         cm.t_a2a(cm.a2a_wire_bytes(wl, opts.compress, frac), wl.devices)
             + cm.t_codec(wl, opts.compress, frac)
     };
@@ -203,9 +211,10 @@ pub fn simulate(
                     ..*wl
                 };
                 let ch = cm.layer_costs(&half);
-                // same codec pricing at the half-batch payload
-                let t_a2a_half = cm.t_a2a(cm.a2a_wire_bytes(&half, opts.compress, 1.0), wl.devices)
-                    + cm.t_codec(&half, opts.compress, 1.0);
+                // same codec + placement pricing at the half-batch payload
+                let hs = opts.a2a_cross_scale;
+                let t_a2a_half = cm.t_a2a(cm.a2a_wire_bytes(&half, opts.compress, hs), wl.devices)
+                    + cm.t_codec(&half, opts.compress, hs);
                 for _ in 0..l {
                     let mut last_post = None;
                     for _half in 0..2 {
@@ -450,6 +459,34 @@ mod tests {
         // and the reference rows cost memory
         assert!(dice_c.mem.buffers > dice.mem.buffers);
         assert!(!dice_c.mem.oom);
+    }
+
+    #[test]
+    fn placement_cross_scale_cuts_a2a_time_and_composes() {
+        // a measured crossing fraction < 1 (affinity placement) must
+        // shorten the EP schedules, compose with compression, and leave
+        // scale 1.0 runs bit-identical to the pre-placement behaviour.
+        for strategy in [Strategy::SyncEp, Strategy::Interweaved] {
+            let base = run(strategy, DiceOptions::none());
+            let unit = run(strategy, DiceOptions::none().with_cross_scale(1.0));
+            assert_eq!(base.step_time, unit.step_time, "scale 1.0 is the identity");
+            let placed = run(strategy, DiceOptions::none().with_cross_scale(0.5));
+            assert!(
+                placed.step_time < base.step_time,
+                "{strategy:?}: halved crossing traffic must cut step time"
+            );
+            let placed_int8 = run(
+                strategy,
+                DiceOptions::none()
+                    .with_cross_scale(0.5)
+                    .with_compress(CompressionCodec::Int8),
+            );
+            assert!(placed_int8.step_time < placed.step_time, "codec composes");
+        }
+        // DistriFusion has no expert all-to-all: the scale is a no-op
+        let dfu = run(Strategy::DistriFusion, DiceOptions::none());
+        let dfu_s = run(Strategy::DistriFusion, DiceOptions::none().with_cross_scale(0.5));
+        assert_eq!(dfu.step_time, dfu_s.step_time);
     }
 
     #[test]

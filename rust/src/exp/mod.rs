@@ -4,6 +4,7 @@
 //! `benches/*.rs` binaries are thin wrappers.
 
 pub mod compress;
+pub mod placement;
 pub mod quality;
 pub mod scaling;
 pub mod schedules;

@@ -1,0 +1,251 @@
+//! Placement-policy experiment (DESIGN.md §9): per-device load
+//! imbalance, crossing bytes and end-to-end step time of the three
+//! placement policies on a seeded skewed workload, with rebalance
+//! migration priced into the step times. Artifact-free — routing comes
+//! from the seeded skewed-router synthesis (`placement::skewed_probs`),
+//! crossing bytes from real [`DispatchPlan`] accounting, and time from
+//! the G-scale analytic cost model (16 experts on 8 devices, where a
+//! placement map has real freedom).
+//!
+//! This is the subsystem's acceptance harness: it FAILS (rather than
+//! silently reporting) unless `LoadBalanced` reduces the max per-device
+//! load and `AffinityAware` reduces the crossing bytes vs. the
+//! `Contiguous` baseline — `ci.sh` runs it on every build.
+
+use anyhow::{ensure, Result};
+
+use crate::benchkit::{fmt_bytes, Table};
+use crate::config::{hardware_profile, model_preset, obj, Json, PlacementKind};
+use crate::moe::{DispatchPlan, Placement, RoutingTable};
+use crate::netsim::{CostModel, Workload, ELEM_BYTES};
+use crate::placement::{skewed_probs, Rebalancer};
+
+/// Aggregates of one policy's run over the workload.
+#[derive(Debug, Clone, Copy)]
+struct PolicyRun {
+    /// max / mean per-device expert-compute load over the run.
+    imbalance: f64,
+    /// crossing bytes per step (one all-to-all direction).
+    cross_bytes_per_step: f64,
+    /// mean a2a latency per collective (seconds).
+    a2a_s: f64,
+    /// total migrated weight bytes (f16 serving precision).
+    migration_bytes: usize,
+    /// rebalances that changed the map.
+    rebalances: usize,
+    /// mean end-to-end step latency (seconds), migrations included.
+    step_s: f64,
+}
+
+/// Run one policy over the shared seeded workload.
+fn run_policy(
+    kind: PlacementKind,
+    cm: &CostModel,
+    wl: &Workload,
+    n_tokens: usize,
+    steps: usize,
+    rebalance_every: usize,
+    seed: u64,
+) -> PolicyRun {
+    let m = &cm.model;
+    let devices = wl.devices;
+    let c = cm.layer_costs(wl);
+    let mut placement = Placement::new(m.n_experts, devices);
+    let mut rebalancer = Rebalancer::new(kind, m.n_experts, devices, rebalance_every);
+    let (mut sum_max, mut sum_mean) = (0.0f64, 0.0f64);
+    let mut cross_total = 0usize;
+    let mut a2a_total = 0.0f64;
+    let mut migration_bytes = 0usize;
+    let mut step_total = 0.0f64;
+    for step in 0..steps {
+        // the SAME trace for every policy: seeds depend only on the step
+        let probs = skewed_probs(n_tokens, m.n_experts, devices, seed.wrapping_add(step as u64));
+        let rt = RoutingTable::from_probs(&probs, m.top_k);
+        let plan = DispatchPlan::build(&rt, n_tokens / devices);
+
+        let cross = plan.cross_bytes(&placement, m.d_model, ELEM_BYTES as usize);
+        cross_total += cross;
+        let dl = plan.device_loads(&placement);
+        let max = *dl.iter().max().unwrap() as f64;
+        let mean = dl.iter().sum::<usize>() as f64 / devices as f64;
+        sum_max += max;
+        sum_mean += mean;
+
+        // end-to-end step price: every layer pays its compute (expert
+        // time stretched by the realized device imbalance — the slowest
+        // device gates the barrier) and two measured all-to-alls.
+        let t_a2a = cm.t_a2a(cross as f64, devices);
+        a2a_total += t_a2a;
+        let imb = if mean > 0.0 { max / mean } else { 1.0 };
+        let mut t_step =
+            m.n_layers as f64 * (c.t_pre + c.t_expert * imb + c.t_post + 2.0 * t_a2a);
+
+        rebalancer.observe(&rt, n_tokens / devices);
+        if let Some(mig) = rebalancer.end_step(&placement) {
+            migration_bytes += mig.moved_experts * m.expert_param_bytes();
+            t_step += cm.t_migrate(mig.moved_experts);
+            placement = mig.placement;
+        }
+        step_total += t_step;
+    }
+    PolicyRun {
+        imbalance: sum_max / sum_mean,
+        cross_bytes_per_step: cross_total as f64 / steps as f64,
+        a2a_s: a2a_total / steps as f64,
+        migration_bytes,
+        rebalances: rebalancer.rebalances(),
+        step_s: step_total / steps as f64,
+    }
+}
+
+/// The placement experiment: one row per policy over a shared seeded
+/// skewed workload at the paper's G scale (16 experts on 8 devices,
+/// where a placement map has real freedom). Fails unless the adaptive
+/// policies beat the baseline on their objectives.
+pub fn report(
+    n_tokens: usize,
+    steps: usize,
+    rebalance_every: usize,
+    seed: u64,
+) -> Result<(Table, Json)> {
+    let cm = CostModel::new(model_preset("g")?, hardware_profile("rtx4090_pcie")?);
+    let devices = 8usize;
+    ensure!(
+        rebalance_every >= 1 && steps >= 2 * rebalance_every,
+        "need at least two rebalance intervals (steps {steps}, every {rebalance_every})"
+    );
+    // round the token count up to a full shard per device
+    let n_tokens = n_tokens.div_ceil(devices) * devices;
+    ensure!(n_tokens >= 64 * devices, "need a statistically meaningful token count");
+    let wl = Workload {
+        local_batch: 1,
+        devices,
+        tokens: n_tokens / devices,
+    };
+
+    let kinds = [
+        PlacementKind::Contiguous,
+        PlacementKind::LoadBalanced,
+        PlacementKind::AffinityAware,
+    ];
+    let runs: Vec<PolicyRun> = kinds
+        .iter()
+        .map(|&k| run_policy(k, &cm, &wl, n_tokens, steps, rebalance_every, seed))
+        .collect();
+
+    let mut table = Table::new(
+        &format!(
+            "Expert placement policies — skewed routing, DiT-MoE-G on 8×4090 \
+             ({n_tokens} tokens, {steps} steps, rebalance every {rebalance_every})"
+        ),
+        &["Policy", "load max/mean", "cross bytes/step", "a2a/step", "migrated", "step time"],
+    );
+    let mut rows = Vec::new();
+    for (kind, r) in kinds.iter().zip(&runs) {
+        table.row(vec![
+            kind.name().to_string(),
+            format!("{:.2}", r.imbalance),
+            fmt_bytes(r.cross_bytes_per_step as usize),
+            format!("{:.2} ms", r.a2a_s * 1e3),
+            format!("{} ({}x)", fmt_bytes(r.migration_bytes), r.rebalances),
+            format!("{:.1} ms", r.step_s * 1e3),
+        ]);
+        rows.push(obj(vec![
+            ("policy", Json::Str(kind.name().into())),
+            ("imbalance", Json::Num(r.imbalance)),
+            ("cross_bytes_per_step", Json::Num(r.cross_bytes_per_step)),
+            ("a2a_s", Json::Num(r.a2a_s)),
+            ("migration_bytes", Json::Num(r.migration_bytes as f64)),
+            ("rebalances", Json::Num(r.rebalances as f64)),
+            ("step_s", Json::Num(r.step_s)),
+        ]));
+    }
+
+    // acceptance properties (the ci.sh placement gate)
+    let (contig, lb, aff) = (runs[0], runs[1], runs[2]);
+    ensure!(
+        lb.imbalance < contig.imbalance,
+        "LoadBalanced must reduce max per-device load ({} vs {})",
+        lb.imbalance,
+        contig.imbalance
+    );
+    ensure!(
+        aff.cross_bytes_per_step <= contig.cross_bytes_per_step,
+        "AffinityAware must not add crossing bytes ({} vs {})",
+        aff.cross_bytes_per_step,
+        contig.cross_bytes_per_step
+    );
+    ensure!(
+        aff.cross_bytes_per_step < 0.9 * contig.cross_bytes_per_step,
+        "AffinityAware should cut crossing bytes materially on the skewed workload \
+         ({} vs {})",
+        aff.cross_bytes_per_step,
+        contig.cross_bytes_per_step
+    );
+    ensure!(
+        aff.migration_bytes > 0 && aff.rebalances > 0,
+        "the affinity run must actually rebalance (and pay for it)"
+    );
+
+    let json = obj(vec![
+        ("n_tokens", Json::Num(n_tokens as f64)),
+        ("steps", Json::Num(steps as f64)),
+        ("rebalance_every", Json::Num(rebalance_every as f64)),
+        ("devices", Json::Num(devices as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    Ok((table, json))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row<'a>(json: &'a Json, policy: &str) -> &'a Json {
+        json.get("rows")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .find(|r| r.get("policy").map(|p| p.as_str()) == Some(Some(policy)))
+            .unwrap()
+    }
+
+    fn num(j: &Json, k: &str) -> f64 {
+        j.get(k).unwrap().as_f64().unwrap()
+    }
+
+    #[test]
+    fn policies_ordered_as_designed() {
+        let (_, json) = report(512, 8, 2, 0xD1CE).unwrap();
+        let (c, l, a) = (
+            row(&json, "contiguous"),
+            row(&json, "load_balanced"),
+            row(&json, "affinity_aware"),
+        );
+        // the acceptance criteria, re-checked on the JSON payload
+        assert!(num(l, "imbalance") < num(c, "imbalance"));
+        assert!(num(a, "cross_bytes_per_step") < num(c, "cross_bytes_per_step"));
+        // migration is priced: the baseline never moves weights, the
+        // adaptive policies do (and still win on step time through the
+        // a2a/imbalance savings at this scale)
+        assert_eq!(num(c, "migration_bytes"), 0.0);
+        assert!(num(a, "migration_bytes") > 0.0);
+        assert!(num(a, "step_s") < num(c, "step_s"));
+        assert!(num(l, "step_s") < num(c, "step_s"));
+    }
+
+    #[test]
+    fn report_is_deterministic() {
+        let (ta, a) = report(512, 8, 2, 7).unwrap();
+        let (tb, b) = report(512, 8, 2, 7).unwrap();
+        assert_eq!(a.to_string(), b.to_string());
+        assert_eq!(ta.render(), tb.render());
+    }
+
+    #[test]
+    fn report_rejects_degenerate_input() {
+        assert!(report(512, 2, 4, 1).is_err(), "fewer than two intervals");
+        assert!(report(8, 8, 2, 1).is_err(), "too few tokens");
+    }
+}

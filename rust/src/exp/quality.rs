@@ -179,8 +179,7 @@ pub fn ablation_table(ctx: &Ctx, n_samples: usize, steps: usize, warmup: usize, 
             cond_comm: cc,
             cond_comm_stride: 2,
             warmup_sync_steps: warmup,
-            only_async_layer: None,
-            compress: crate::config::CompressionCodec::None,
+            ..DiceOptions::none()
         };
         let (q, job) = run_method(ctx, Strategy::Interweaved, opts, n_samples, steps, seed)?;
         let dfid = delta_fid(&job.samples, &sync_job.samples);

@@ -10,15 +10,68 @@
 //!   paper's parallelism strategies (synchronous EP, displaced EP,
 //!   interweaved parallelism, DistriFusion), selective synchronization,
 //!   conditional communication, residual all-to-all compression
-//!   (DESIGN.md §7), the serving stack, and the evaluation harness that
-//!   regenerates every table and figure of the paper.
+//!   (DESIGN.md §7), policy-driven expert placement (DESIGN.md §9), the
+//!   serving stack, and the evaluation harness that regenerates every
+//!   table and figure of the paper.
+//!
+//! ## Module map
+//!
+//! The runtime proper is eight modules; everything else is substrate
+//! (DESIGN.md §4).
+//!
+//! * [`coordinator`] — the paper's system contribution: the
+//!   real-numerics expert-parallel engine executing Algorithms 1–4 over
+//!   the AOT artifacts ([`coordinator::Engine`]), the virtual-time
+//!   schedule simulation of the same strategies at the paper's scales
+//!   ([`coordinator::simulate`](mod@coordinator::simulate)), the
+//!   stale-activation buffer manager
+//!   and allocation arena, the conditional-communication filter, and
+//!   the staleness ledger. Staleness is data, time is accounting
+//!   (DESIGN.md §2).
+//! * [`moe`] — routing bookkeeping shared by every execution path:
+//!   top-k [`moe::RoutingTable`]s, the expert→device [`moe::Placement`]
+//!   map, [`moe::DispatchPlan`] (the all-to-all payload, with memoized
+//!   crossing-bytes pricing), and the artifact-free host-numerics MoE
+//!   engine step ([`moe::host`]) that the perf gate and determinism
+//!   suite drive.
+//! * [`placement`] — load/affinity-aware expert placement (DESIGN.md
+//!   §9): [`placement::RoutingStats`] observed from routing tables, the
+//!   [`placement::PlacementPolicy`] solvers (contiguous / load-balanced
+//!   / affinity-aware), and the per-interval [`placement::Rebalancer`]
+//!   whose weight migrations `netsim` prices. Selected by
+//!   [`config::PlacementKind`] (`--placement`).
+//! * [`compress`] — residual all-to-all compression (DESIGN.md §7):
+//!   [`compress::ResidualCodec`] implementations (identity / int8 /
+//!   top-k) over inter-step activation deltas with error feedback,
+//!   transcoding exactly the rows that cross devices. Selected by
+//!   [`config::CompressionCodec`] (`--compress`).
+//! * [`par`] — the execution runtime (DESIGN.md §8): a scoped worker
+//!   pool ([`par::ParPool`]) with static decomposition and disjoint
+//!   writes, making every pool-driven computation bit-exact for any
+//!   `--threads` width.
+//! * [`netsim`] — the analytic cost model of the paper's testbeds:
+//!   α+β collectives under host-bridge contention, FLOP pricing with a
+//!   utilisation ramp, codec and migration overheads, and the
+//!   byte-accurate memory model ([`netsim::CostModel`]). Prices both
+//!   analytic payloads and measured [`moe::DispatchPlan`]s.
+//! * [`server`] — the serving stack (DESIGN.md §6): admission control,
+//!   multi-bucket dynamic batching, the virtual-time serve loop over a
+//!   [`server::BatchExecutor`] (real numerics or cost-model-only), and
+//!   latency/goodput reporting.
+//! * [`exp`] — experiment drivers, one per paper table/figure plus the
+//!   extension studies ([`exp::compress`], [`exp::placement`]); the
+//!   `benches/*.rs` binaries are thin wrappers.
+//!
+//! Substrates: [`cli`] (argument parsing), [`config`] (model/hardware
+//! presets, strategy + knob enums, JSON), [`tensor`] / [`linalg`] /
+//! [`rng`] (numerics), [`desim`] (virtual-time DES), [`metrics`],
+//! [`workload`] (arrival processes + scenario presets), [`quality`]
+//! (FID/sFID/IS), [`sampler`], [`runtime`] (PJRT artifact runtime),
+//! [`benchkit`] and [`testkit`] (bench/property harnesses).
 //!
 //! The offline crate universe is tiny (the in-tree `xla` stub crate plus
-//! `anyhow` / `thiserror` / `once_cell`), so the usual ecosystem pieces —
-//! CLI parsing, config, tensors, dense linalg, RNG, metrics, property-test
-//! and bench harnesses — are implemented in-tree as substrates (see
-//! DESIGN.md §4). The serving stack that fronts the engine is described
-//! in DESIGN.md §6.
+//! `anyhow` / `thiserror` / `once_cell`), so those substrates are
+//! implemented in-tree (DESIGN.md §4).
 
 #![warn(missing_docs)]
 
@@ -34,6 +87,7 @@ pub mod metrics;
 pub mod moe;
 pub mod netsim;
 pub mod par;
+pub mod placement;
 pub mod quality;
 pub mod rng;
 pub mod runtime;

@@ -10,12 +10,13 @@
 //!   sim [...]                  paper-scale virtual-time what-ifs
 //!   exp <name> [...]           run an experiment driver (table1, table2,
 //!                              table3, table4, table5, fig2, fig4, fig9,
-//!                              fig10, fig14, motivation)
+//!                              fig10, fig14, motivation, compress,
+//!                              placement)
 
 use anyhow::{bail, Result};
 
 use dice::cli::Args;
-use dice::config::{CompressionCodec, CondCommSelector};
+use dice::config::{CompressionCodec, CondCommSelector, PlacementKind};
 use dice::config::{hardware_profile, model_preset, DiceOptions, SelectiveSync, Strategy};
 use dice::coordinator::{simulate, Engine, EngineConfig};
 use dice::exp::{self, Ctx};
@@ -29,12 +30,15 @@ fn usage() -> String {
          \n\
          dice generate --strategy interweaved --samples 32 --steps 50 \\\n\
          \x20             --selective deep --condcomm low --warmup 4 [--compress int8]\n\
+         \x20             [--placement contiguous|load|affinity] [--rebalance-every K]\n\
          dice serve    --requests 64 --rate 2.0 --strategy interweaved \\\n\
          \x20             --scenario steady [--sim] [--queue-cap N] [--slo SECONDS]\n\
-         \x20             [--compress none|identity|int8|topk]\n\
+         \x20             [--compress none|identity|int8|topk] [--placement ...]\n\
          dice sim      --model xl --hw rtx4090_pcie --batch 16 --devices 8 [--compress int8]\n\
+         \x20             [--placement contiguous|load|affinity]\n\
          dice exp      table1 --samples 256\n\
          dice exp      compress            residual-codec trade-off (artifact-free)\n\
+         dice exp      placement           placement-policy study (artifact-free)\n\
          \n\
          global: --threads N      worker-pool width for the execution runtime\n\
          \x20       (default: PAR_THREADS env, else all cores; output is\n\
@@ -46,6 +50,13 @@ fn usage() -> String {
 }
 
 fn opts_from(a: &Args) -> Result<DiceOptions> {
+    let placement = PlacementKind::parse(&a.str_or("placement", "contiguous"))?;
+    // a non-contiguous policy defaults to rebalancing every 4 steps so
+    // `--placement load|affinity` alone actually engages it in the
+    // engine (placements solve from OBSERVED routing, so a policy that
+    // never re-solves would silently stay contiguous); an explicit
+    // `--rebalance-every 0` pins the static contiguous start.
+    let rebalance_default = if placement == PlacementKind::Contiguous { 0 } else { 4 };
     Ok(DiceOptions {
         selective_sync: SelectiveSync::parse(&a.str_or("selective", "none"))?,
         cond_comm: CondCommSelector::parse(&a.str_or("condcomm", "off"))?,
@@ -53,7 +64,35 @@ fn opts_from(a: &Args) -> Result<DiceOptions> {
         warmup_sync_steps: a.usize_or("warmup", 4),
         only_async_layer: None,
         compress: CompressionCodec::parse(&a.str_or("compress", "none"))?,
+        placement,
+        rebalance_every: a.usize_or("rebalance-every", rebalance_default),
+        a2a_cross_scale: 1.0,
     })
+}
+
+/// Fill in the analytic crossing-traffic scale for the chosen placement
+/// policy (DESIGN.md §9): virtual-time paths (`sim`, `serve`) price the
+/// policy's measured crossing fraction on the seeded skewed workload.
+/// A policy that never engages (`--rebalance-every 0` forces a static
+/// contiguous start) is priced as contiguous — the pricing must not
+/// claim savings the engine would not realize.
+fn with_measured_placement(
+    opts: DiceOptions,
+    model: &dice::config::ModelConfig,
+    devices: usize,
+    seed: u64,
+) -> DiceOptions {
+    if opts.placement == PlacementKind::Contiguous || opts.rebalance_every == 0 {
+        return opts;
+    }
+    let scale = dice::placement::measured_cross_scale(
+        opts.placement,
+        model.n_experts,
+        devices,
+        model.top_k,
+        seed,
+    );
+    opts.with_cross_scale(scale.max(1e-3))
 }
 
 fn main() -> Result<()> {
@@ -132,27 +171,26 @@ fn main() -> Result<()> {
             }
             let rep = if a.flag("sim") {
                 // Cost-model-only serving: no artifacts required.
-                let trace = scenario.trace(n_requests, cm.model.n_classes, a.u64_or("seed", 42));
-                serve_sim(
-                    &cm,
-                    strategy,
-                    opts_from(&a)?,
-                    a.usize_or("devices", 8),
-                    &trace,
-                    cfg,
-                )?
+                let devices = a.usize_or("devices", 8);
+                let seed = a.u64_or("seed", 42);
+                let opts = with_measured_placement(opts_from(&a)?, &cm.model, devices, seed);
+                let trace = scenario.trace(n_requests, cm.model.n_classes, seed);
+                serve_sim(&cm, strategy, opts, devices, &trace, cfg)?
             } else {
                 let ctx = Ctx::open()?;
+                let devices = a.usize_or("devices", 4);
+                let seed = a.u64_or("seed", 42);
+                let opts = with_measured_placement(opts_from(&a)?, &cm.model, devices, seed);
                 let eng = Engine::new(
                     &ctx.rt,
                     &ctx.bank,
                     EngineConfig {
                         strategy,
-                        opts: opts_from(&a)?,
-                        devices: a.usize_or("devices", 4),
+                        opts,
+                        devices,
                     },
                 )?;
-                let trace = scenario.trace(n_requests, ctx.rt.model.n_classes, a.u64_or("seed", 42));
+                let trace = scenario.trace(n_requests, ctx.rt.model.n_classes, seed);
                 let mut ex = EngineExecutor::new(&eng, &cm);
                 serve_with(&mut ex, &trace, cfg)?
             };
@@ -174,7 +212,9 @@ fn main() -> Result<()> {
                 tokens: model.tokens(),
             };
             let strategy = Strategy::parse(&a.str_or("strategy", "interweaved"))?;
-            let r = simulate(&cm, &wl, strategy, &opts_from(&a)?, a.usize_or("steps", 50));
+            let opts =
+                with_measured_placement(opts_from(&a)?, &model, wl.devices, a.u64_or("seed", 42));
+            let r = simulate(&cm, &wl, strategy, &opts, a.usize_or("steps", 50));
             println!(
                 "{}: total {:.3}s, step {:.4}s, a2a share {:.1}%, mem {:.2} GB{}",
                 strategy.name(),
@@ -244,6 +284,16 @@ fn main() -> Result<()> {
                     )?;
                     t.print();
                     exp::write_results("compress_tradeoff", &t.render(), &j)?;
+                }
+                "placement" => {
+                    let (t, j) = exp::placement::report(
+                        a.usize_or("tokens", 2048),
+                        a.usize_or("steps", 16),
+                        a.usize_or("rebalance-every", 4),
+                        seed,
+                    )?;
+                    t.print();
+                    exp::write_results("placement_policies", &t.render(), &j)?;
                 }
                 "motivation" => {
                     let (t, j) = exp::scaling::motivation()?;

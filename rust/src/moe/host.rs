@@ -134,8 +134,10 @@ impl HostPhases {
 }
 
 impl HostMoeLayer {
-    /// Synthesize a layer from a seed. Panics unless `devices` divides
-    /// `n_experts` (the engine's placement invariant).
+    /// Synthesize a layer from a seed, with the contiguous baseline
+    /// placement (remainders distributed — `devices` need not divide
+    /// `n_experts`). Install a policy-solved map with
+    /// [`HostMoeLayer::with_placement`].
     pub fn synth(cfg: HostMoeConfig, seed: u64) -> HostMoeLayer {
         let placement = Placement::new(cfg.n_experts, cfg.devices);
         let mut rng = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15);
@@ -156,6 +158,19 @@ impl HostMoeLayer {
     /// The expert→device placement of this layer.
     pub fn placement(&self) -> &Placement {
         &self.placement
+    }
+
+    /// Install a (policy-solved) expert→device map. The layer's
+    /// numerics are placement-INVARIANT — the combine scatters to
+    /// token-owned rows, so only the crossing-bytes accounting
+    /// ([`DispatchPlan::cross_bytes`] against [`HostMoeLayer::placement`])
+    /// changes — which is exactly the property the determinism suite
+    /// pins across placements and pool widths.
+    pub fn with_placement(mut self, placement: Placement) -> HostMoeLayer {
+        assert_eq!(placement.n_experts, self.cfg.n_experts, "placement expert count");
+        assert_eq!(placement.devices, self.cfg.devices, "placement device count");
+        self.placement = placement;
+        self
     }
 
     /// Route `x` ([n_tokens, d_model]) and build the dispatch plan.
@@ -309,6 +324,30 @@ mod tests {
         let x = tokens(4, 8, 11);
         let out = l.step(&ParPool::new(4), &x);
         assert_eq!(out.shape(), &[4, 8]);
+    }
+
+    #[test]
+    fn non_divisible_devices_and_policy_maps_are_tolerated() {
+        // 6 experts over 4 devices: remainder layout 2-2-1-1 instead of
+        // the old divisibility panic; and an installed policy map
+        // changes only the accounting, never the numerics.
+        let l = HostMoeLayer::synth(
+            HostMoeConfig {
+                n_experts: 6,
+                top_k: 2,
+                d_model: 8,
+                d_ff: 16,
+                devices: 4,
+            },
+            5,
+        );
+        assert_eq!(l.placement().experts_of(0), vec![0, 1]);
+        assert_eq!(l.placement().experts_of(3), vec![5]);
+        let x = tokens(8, 8, 3);
+        let out = l.step(&ParPool::new(2), &x);
+        let scrambled = Placement::from_owner(4, vec![3, 2, 1, 0, 0, 1]);
+        let l2 = l.clone().with_placement(scrambled);
+        assert_eq!(out, l2.step(&ParPool::new(2), &x), "numerics are placement-invariant");
     }
 
     #[test]

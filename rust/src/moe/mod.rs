@@ -9,30 +9,128 @@ use std::cell::Cell;
 
 use crate::tensor::{ops, Tensor};
 
-/// Expert placement: contiguous blocks of experts per device
-/// (device d owns experts [d·E/D, (d+1)·E/D)).
-#[derive(Debug, Clone, Copy)]
+/// Expert→device placement: an arbitrary owner map over the routed
+/// experts (DESIGN.md §9).
+///
+/// [`Placement::new`] builds the contiguous-block baseline (device d
+/// owns experts `[d·E/D, (d+1)·E/D)`, with the remainder distributed to
+/// the first `E mod D` devices); [`Placement::from_owner`] accepts any
+/// map, which is how the `crate::placement` policies express
+/// load-balanced and affinity-aware layouts. A FNV-1a fingerprint of
+/// the map is computed once at construction so pricing memos
+/// ([`DispatchPlan::cross_bytes`]) can key on the *map*, not just the
+/// `(n_experts, devices)` shape.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Placement {
     /// Total routed experts.
     pub n_experts: usize,
     /// Devices the experts are sharded over.
     pub devices: usize,
+    owner: Vec<usize>,
+    fingerprint: u64,
+}
+
+/// FNV-1a over the owner map (plus the device count so two maps over
+/// different device grids never collide trivially).
+fn owner_fingerprint(devices: usize, owner: &[usize]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET ^ (devices as u64).wrapping_mul(PRIME);
+    for &o in owner {
+        h = (h ^ (o as u64 + 1)).wrapping_mul(PRIME);
+    }
+    h
 }
 
 impl Placement {
-    /// Contiguous-block placement; panics unless devices divides experts.
+    /// Contiguous-block placement. `E` need not divide evenly: the first
+    /// `E mod D` devices own one extra expert (the same near-equal split
+    /// the worker pool uses for chunk ranges).
+    ///
+    /// ```
+    /// use dice::moe::Placement;
+    /// let p = Placement::new(8, 3); // 3-3-2 remainder layout
+    /// assert_eq!((p.owner(0), p.owner(3), p.owner(7)), (0, 1, 2));
+    /// assert_eq!(p.experts_of(1), vec![3, 4, 5]);
+    /// assert_eq!(p.experts_of(2), vec![6, 7]);
+    /// ```
     pub fn new(n_experts: usize, devices: usize) -> Placement {
-        assert!(n_experts % devices == 0, "experts {n_experts} % devices {devices} != 0");
-        Placement { n_experts, devices }
+        assert!(devices > 0 && n_experts >= devices, "need at least one expert per device");
+        let base = n_experts / devices;
+        let rem = n_experts % devices;
+        let mut owner = Vec::with_capacity(n_experts);
+        for d in 0..devices {
+            let cnt = base + usize::from(d < rem);
+            owner.resize(owner.len() + cnt, d);
+        }
+        Placement::from_owner(devices, owner)
     }
+
+    /// Placement from an explicit expert→device map. Panics if any
+    /// entry names a device outside `0..devices`.
+    pub fn from_owner(devices: usize, owner: Vec<usize>) -> Placement {
+        assert!(devices > 0, "need at least one device");
+        assert!(
+            owner.iter().all(|&d| d < devices),
+            "owner map names a device >= {devices}"
+        );
+        let fingerprint = owner_fingerprint(devices, &owner);
+        Placement {
+            n_experts: owner.len(),
+            devices,
+            owner,
+            fingerprint,
+        }
+    }
+
     /// Device that owns `expert`.
+    ///
+    /// ```
+    /// use dice::moe::Placement;
+    /// let p = Placement::from_owner(2, vec![1, 0, 1, 0]);
+    /// assert_eq!(p.owner(0), 1);
+    /// assert_eq!(p.owner(3), 0);
+    /// ```
     pub fn owner(&self, expert: usize) -> usize {
-        expert / (self.n_experts / self.devices)
+        self.owner[expert]
     }
-    /// The expert-id range a device owns.
-    pub fn experts_of(&self, device: usize) -> std::ops::Range<usize> {
-        let per = self.n_experts / self.devices;
-        device * per..(device + 1) * per
+
+    /// The expert ids a device owns, ascending (no longer necessarily a
+    /// contiguous range once a policy map is installed).
+    ///
+    /// ```
+    /// use dice::moe::Placement;
+    /// let p = Placement::from_owner(2, vec![1, 0, 1, 0]);
+    /// assert_eq!(p.experts_of(0), vec![1, 3]);
+    /// assert_eq!(p.experts_of(1), vec![0, 2]);
+    /// ```
+    pub fn experts_of(&self, device: usize) -> Vec<usize> {
+        (0..self.n_experts)
+            .filter(|&e| self.owner[e] == device)
+            .collect()
+    }
+
+    /// The full expert→device map.
+    pub fn owners(&self) -> &[usize] {
+        &self.owner
+    }
+
+    /// FNV-1a fingerprint of the owner map — the memo key
+    /// [`DispatchPlan::cross_bytes`] uses to tell placements apart.
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// Experts whose owner differs between `self` and `other` — the
+    /// weight-migration count a rebalance must pay for
+    /// (`netsim::CostModel::t_migrate` prices it).
+    pub fn moved_from(&self, other: &Placement) -> usize {
+        assert_eq!(self.n_experts, other.n_experts, "placement shape mismatch");
+        self.owner
+            .iter()
+            .zip(&other.owner)
+            .filter(|(a, b)| a != b)
+            .count()
     }
 }
 
@@ -121,9 +219,12 @@ pub struct DispatchEntry {
     pub src_device: usize,
 }
 
-/// Memo key for [`DispatchPlan::cross_bytes`]: the placement identity
-/// plus the pricing dims.
-type CrossKey = (usize, usize, usize, usize);
+/// Memo key for [`DispatchPlan::cross_bytes`]: the placement's owner-map
+/// fingerprint plus the pricing dims. Keying on the fingerprint (not
+/// just `(n_experts, devices)`) keeps the memo correct now that two
+/// placements can share a shape but map experts differently
+/// (DESIGN.md §9).
+type CrossKey = (u64, usize, usize);
 
 /// A dispatch plan groups entries per expert (the all-to-all payload).
 ///
@@ -176,13 +277,15 @@ impl DispatchPlan {
     /// from the expert's owner. `elem_bytes` is the activation element
     /// size, `d_model` the token width.
     ///
-    /// Memoized per (placement, dims): repeat pricing of the same plan
-    /// (`CostModel::t_a2a_measured` callers such as `perfprobe --sim`)
-    /// scans the entries once instead of once per priced collective.
+    /// Memoized per (placement fingerprint, dims): repeat pricing of the
+    /// same plan (`CostModel::t_a2a_measured` callers such as `perfprobe
+    /// --sim`) scans the entries once instead of once per priced
+    /// collective, and a rebalanced owner map with the same shape misses
+    /// the memo instead of being served a stale byte count.
     /// The memo cell makes `DispatchPlan` `!Sync` — pool closures must
     /// capture the `per_expert` field, not the plan itself.
     pub fn cross_bytes(&self, placement: &Placement, d_model: usize, elem_bytes: usize) -> usize {
-        let key = (placement.n_experts, placement.devices, d_model, elem_bytes);
+        let key = (placement.fingerprint(), d_model, elem_bytes);
         if let Some((k, v)) = self.cross_memo.get() {
             if k == key {
                 return v;
@@ -198,9 +301,29 @@ impl DispatchPlan {
         bytes
     }
 
-    /// Per-expert token loads (imbalance diagnostics).
+    /// Per-expert token loads (imbalance diagnostics; `exp placement`
+    /// folds these through a [`Placement`] into per-device loads).
+    ///
+    /// ```
+    /// use dice::moe::{DispatchPlan, RoutingTable};
+    /// use dice::tensor::Tensor;
+    /// let probs = Tensor::from_vec(&[2, 2], vec![0.9, 0.1, 0.8, 0.2]);
+    /// let rt = RoutingTable::from_probs(&probs, 1);
+    /// let plan = DispatchPlan::build(&rt, 2);
+    /// assert_eq!(plan.loads(), vec![2, 0]); // both tokens pick expert 0
+    /// ```
     pub fn loads(&self) -> Vec<usize> {
         self.per_expert.iter().map(Vec::len).collect()
+    }
+
+    /// Fold the per-expert loads through a placement into per-DEVICE
+    /// expert-compute loads (token-assignments each device executes).
+    pub fn device_loads(&self, placement: &Placement) -> Vec<usize> {
+        let mut dl = vec![0usize; placement.devices];
+        for (e, entries) in self.per_expert.iter().enumerate() {
+            dl[placement.owner(e)] += entries.len();
+        }
+        dl
     }
 }
 
@@ -217,17 +340,43 @@ mod tests {
 
     #[test]
     fn placement_blocks() {
+        // the divisible case keeps its historical contiguous layout
         let p = Placement::new(8, 4);
         assert_eq!(p.owner(0), 0);
         assert_eq!(p.owner(1), 0);
         assert_eq!(p.owner(7), 3);
-        assert_eq!(p.experts_of(2), 4..6);
+        assert_eq!(p.experts_of(2), vec![4, 5]);
+    }
+
+    #[test]
+    fn placement_distributes_remainder() {
+        // 8 experts over 3 devices: first 8 % 3 = 2 devices get an extra
+        // expert (3-3-2) instead of the old divisibility panic.
+        let p = Placement::new(8, 3);
+        assert_eq!(p.experts_of(0), vec![0, 1, 2]);
+        assert_eq!(p.experts_of(1), vec![3, 4, 5]);
+        assert_eq!(p.experts_of(2), vec![6, 7]);
+        let counts: Vec<usize> = (0..3).map(|d| p.experts_of(d).len()).collect();
+        assert_eq!(counts.iter().sum::<usize>(), 8);
+        assert_eq!(counts.iter().max().unwrap() - counts.iter().min().unwrap(), 1);
+    }
+
+    #[test]
+    fn placement_owner_map_and_fingerprint() {
+        let contig = Placement::new(4, 2);
+        let swapped = Placement::from_owner(2, vec![1, 0, 1, 0]);
+        assert_eq!(swapped.owner(0), 1);
+        assert_eq!(swapped.experts_of(0), vec![1, 3]);
+        assert_ne!(contig.fingerprint(), swapped.fingerprint());
+        assert_eq!(contig.fingerprint(), Placement::new(4, 2).fingerprint());
+        assert_eq!(swapped.moved_from(&contig), 4);
+        assert_eq!(swapped.moved_from(&swapped), 0);
     }
 
     #[test]
     #[should_panic]
-    fn placement_requires_divisibility() {
-        Placement::new(8, 3);
+    fn placement_rejects_out_of_range_owner() {
+        Placement::from_owner(2, vec![0, 2]);
     }
 
     #[test]
@@ -293,13 +442,51 @@ mod tests {
         let rt = RoutingTable::from_probs(&probs, 2);
         let plan = DispatchPlan::build(&rt, 4); // tokens on 2 devices
         let p2 = Placement::new(2, 2);
-        let p1 = Placement::new(2, 1);
         let first = plan.cross_bytes(&p2, 16, 4);
+        // every token hits both experts; under e0→d0, e1→d1 exactly the
+        // 4 opposite-device entries of each expert cross: 8 rows
+        assert_eq!(first, 8 * 16 * 4);
         assert_eq!(plan.cross_bytes(&p2, 16, 4), first, "memo hit must agree");
-        // a different placement / dims must not be served from the memo
-        assert_eq!(plan.cross_bytes(&p1, 16, 4), 0);
+        // different dims must not be served from the memo
         assert_eq!(plan.cross_bytes(&p2, 32, 4), 2 * first);
         assert_eq!(plan.cross_bytes(&p2, 16, 4), first, "re-memoized");
+        // a placement with a different owner-map fingerprint recomputes
+        // (both experts on device 0: only device-1-sourced rows cross)
+        let all_on_0 = Placement::from_owner(2, vec![0, 0]);
+        assert_eq!(plan.cross_bytes(&all_on_0, 16, 4), first, "8 rows again, not memo");
+        assert_eq!(plan.cross_bytes(&p2, 16, 4), first);
+    }
+
+    #[test]
+    fn cross_bytes_memo_distinguishes_same_shape_maps() {
+        // same (n_experts, devices) shape, different owner maps: the
+        // fingerprint key must keep the answers apart. Tokens 0-2 route
+        // to expert 0, token 3 to expert 1; tokens sharded 2+2.
+        let probs = probs_of(vec![
+            vec![1.0, 0.0],
+            vec![1.0, 0.0],
+            vec![1.0, 0.0],
+            vec![0.0, 1.0],
+        ]);
+        let rt = RoutingTable::from_probs(&probs, 1);
+        let plan = DispatchPlan::build(&rt, 2);
+        let contig = Placement::new(2, 2); // e0→d0, e1→d1
+        let swapped = Placement::from_owner(2, vec![1, 0]);
+        // contig: only token 2 (dev1 → e0@dev0) crosses
+        assert_eq!(plan.cross_bytes(&contig, 8, 4), 8 * 4);
+        // swapped: tokens 0,1 (dev0 → e0@dev1) and 3 (dev1 → e1@dev0)
+        assert_eq!(plan.cross_bytes(&swapped, 8, 4), 3 * 8 * 4);
+        assert_eq!(plan.cross_bytes(&contig, 8, 4), 8 * 4, "re-memoized");
+    }
+
+    #[test]
+    fn device_loads_fold_expert_loads_through_the_map() {
+        let probs = probs_of(vec![vec![0.7, 0.3]; 4]);
+        let rt = RoutingTable::from_probs(&probs, 2);
+        let plan = DispatchPlan::build(&rt, 2);
+        assert_eq!(plan.loads(), vec![4, 4]);
+        assert_eq!(plan.device_loads(&Placement::new(2, 2)), vec![4, 4]);
+        assert_eq!(plan.device_loads(&Placement::from_owner(2, vec![0, 0])), vec![8, 0]);
     }
 
     #[test]

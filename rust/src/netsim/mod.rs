@@ -181,11 +181,32 @@ impl CostModel {
         self.hw.msg_latency + bytes / self.hw.link_bw
     }
 
+    /// Placement-rebalance migration latency (DESIGN.md §9): the moved
+    /// experts' weights travel point-to-point between the old and new
+    /// owner at f16 serving precision, as one bulk transfer. Zero moves
+    /// cost zero (no α term — nothing is launched).
+    pub fn t_migrate(&self, moved_experts: usize) -> f64 {
+        if moved_experts == 0 {
+            return 0.0;
+        }
+        self.t_p2p(moved_experts as f64 * self.model.expert_param_bytes() as f64)
+    }
+
     /// All-to-all latency priced from a MEASURED engine dispatch plan
     /// rather than the analytic balanced-routing payload: the crossing
     /// bytes come from [`crate::moe::DispatchPlan::cross_bytes`], whose
     /// per-plan memo means pricing both collectives of every layer from
     /// one plan scans the entries once, not once per priced collective.
+    ///
+    /// This is the moe↔netsim pricing contract: `moe` decides *which*
+    /// rows cross (source device vs. the placement's owner map — so a
+    /// rebalanced [`crate::moe::Placement`] changes the payload, which
+    /// is why the memo keys on the map fingerprint), and this model
+    /// decides *what the bytes cost* (α+β under host-bridge contention).
+    /// The analytic [`CostModel::a2a_bytes`] path assumes balanced
+    /// routing with a `(D-1)/D` crossing fraction; placement policies
+    /// feed their measured fraction into the virtual-time schedules via
+    /// `DiceOptions::a2a_cross_scale` instead (DESIGN.md §9).
     pub fn t_a2a_measured(
         &self,
         plan: &crate::moe::DispatchPlan,
@@ -400,6 +421,21 @@ mod tests {
         // second call serves the byte count from the plan's memo
         assert_eq!(cm.t_a2a_measured(&plan, &p), measured);
         assert!(measured > 0.0);
+    }
+
+    #[test]
+    fn migration_pricing_scales_with_moved_experts() {
+        let (cm, wl) = xl8(8);
+        assert_eq!(cm.t_migrate(0), 0.0, "no moves, no launch");
+        let one = cm.t_migrate(1);
+        let four = cm.t_migrate(4);
+        assert!(one > 0.0);
+        // one bulk transfer: α paid once, β scales with the payload
+        assert!(four > 3.0 * one / 2.0 && four < 4.0 * one);
+        // a handful of moved experts must cost less than one full
+        // 50-step run's all-to-all time, or rebalancing could never pay
+        let c = cm.layer_costs(&wl);
+        assert!(four < 2.0 * c.t_a2a * cm.model.n_layers as f64 * 50.0);
     }
 
     #[test]

@@ -1,0 +1,333 @@
+//! The placement policies: contiguous baseline, greedy load-balanced
+//! bin-packing, and affinity-aware pair co-location (DESIGN.md §9).
+//!
+//! All policies are deterministic (fixed tie-breaks, no randomness) and
+//! **capacity-constrained**: device d may own at most as many experts
+//! as the contiguous layout gives it (`E/D`, +1 for the first `E mod D`
+//! devices), so expert-weight memory stays as balanced as the baseline
+//! no matter how skewed the traffic is. The two adaptive policies are
+//! additionally *never-worse by construction*: each compares its
+//! solution against the contiguous baseline on the objective it
+//! optimizes (max device load, crossing assignments) and returns the
+//! baseline when greedy lost — which is what turns the `exp placement`
+//! acceptance inequalities into invariants rather than hopes.
+
+use crate::moe::Placement;
+
+use super::stats::RoutingStats;
+
+/// A placement policy: solve an expert→device map from observed routing
+/// statistics. Implementations must be deterministic — the engine's
+/// bit-exactness contract across `--threads` extends to policy-driven
+/// placements.
+///
+/// ```
+/// use dice::placement::{build, RoutingStats};
+/// use dice::config::PlacementKind;
+///
+/// let policy = build(PlacementKind::LoadBalanced);
+/// // empty stats: every policy degrades to the contiguous baseline
+/// let p = policy.place(8, 4, &RoutingStats::new(8, 4));
+/// assert_eq!(p.experts_of(0), vec![0, 1]);
+/// assert_eq!(policy.name(), "load_balanced");
+/// ```
+pub trait PlacementPolicy {
+    /// Canonical policy name (matches `PlacementKind::name`).
+    fn name(&self) -> &'static str;
+    /// Solve a placement of `n_experts` over `devices` from `stats`.
+    /// With empty stats every policy returns [`Placement::new`].
+    fn place(&self, n_experts: usize, devices: usize, stats: &RoutingStats) -> Placement;
+}
+
+/// Per-device expert capacity: the contiguous layout's block sizes,
+/// derived from [`Placement::new`] itself so the capacity constraint
+/// and the baseline layout can never drift apart.
+fn capacities(n_experts: usize, devices: usize) -> Vec<usize> {
+    let mut cap = vec![0usize; devices];
+    for &d in Placement::new(n_experts, devices).owners() {
+        cap[d] += 1;
+    }
+    cap
+}
+
+/// The fixed contiguous-block baseline (ignores the stats).
+#[derive(Debug, Clone, Copy)]
+pub struct Contiguous;
+
+impl PlacementPolicy for Contiguous {
+    fn name(&self) -> &'static str {
+        "contiguous"
+    }
+    fn place(&self, n_experts: usize, devices: usize, _stats: &RoutingStats) -> Placement {
+        Placement::new(n_experts, devices)
+    }
+}
+
+/// Greedy longest-processing-time bin-pack on expert load: experts in
+/// descending load order, each assigned to the least-loaded device with
+/// free capacity. Falls back to contiguous if greedy somehow ends with
+/// a higher max device load (capacity constraints can defeat LPT on
+/// adversarial inputs), so `max_load(LoadBalanced) ≤ max_load(Contiguous)`
+/// holds unconditionally on the observed stats.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadBalanced;
+
+impl PlacementPolicy for LoadBalanced {
+    fn name(&self) -> &'static str {
+        "load_balanced"
+    }
+    fn place(&self, n_experts: usize, devices: usize, stats: &RoutingStats) -> Placement {
+        let contig = Placement::new(n_experts, devices);
+        if stats.is_empty() || devices < 2 {
+            return contig;
+        }
+        let cap = capacities(n_experts, devices);
+        let mut order: Vec<usize> = (0..n_experts).collect();
+        // descending load, expert id ascending on ties (determinism)
+        order.sort_by(|&a, &b| {
+            stats.expert_load[b]
+                .cmp(&stats.expert_load[a])
+                .then(a.cmp(&b))
+        });
+        let mut owner = vec![0usize; n_experts];
+        let mut dev_load = vec![0u64; devices];
+        let mut dev_count = vec![0usize; devices];
+        for &e in &order {
+            let mut best = usize::MAX;
+            for d in 0..devices {
+                if dev_count[d] < cap[d] && (best == usize::MAX || dev_load[d] < dev_load[best]) {
+                    best = d;
+                }
+            }
+            owner[e] = best;
+            dev_load[best] += stats.expert_load[e];
+            dev_count[best] += 1;
+        }
+        let packed = Placement::from_owner(devices, owner);
+        let max_packed = stats.device_loads(&packed).into_iter().max().unwrap_or(0);
+        let max_contig = stats.device_loads(&contig).into_iter().max().unwrap_or(0);
+        if max_packed > max_contig {
+            contig
+        } else {
+            packed
+        }
+    }
+}
+
+/// ExFlow-style affinity placement: expert pairs with the highest
+/// co-activation counts are co-located, on the device that *sources*
+/// the most of their combined traffic; remaining experts go (heaviest
+/// first) to the device sourcing most of their own traffic. Both moves
+/// cut crossing assignments directly — a token's top-k landing on the
+/// token's own device never touches the wire. Falls back to contiguous
+/// if the greedy layout would not reduce crossing assignments, so
+/// `crossing(AffinityAware) ≤ crossing(Contiguous)` holds
+/// unconditionally on the observed stats.
+#[derive(Debug, Clone, Copy)]
+pub struct AffinityAware;
+
+impl PlacementPolicy for AffinityAware {
+    fn name(&self) -> &'static str {
+        "affinity_aware"
+    }
+    fn place(&self, n_experts: usize, devices: usize, stats: &RoutingStats) -> Placement {
+        let contig = Placement::new(n_experts, devices);
+        if stats.is_empty() || devices < 2 {
+            return contig;
+        }
+        let cap = capacities(n_experts, devices);
+        let mut owner = vec![usize::MAX; n_experts];
+        let mut dev_count = vec![0usize; devices];
+
+        // pair phase: co-activated pairs, highest count first
+        let mut pairs: Vec<(u64, usize, usize)> = Vec::new();
+        for a in 0..n_experts {
+            for b in a + 1..n_experts {
+                let c = stats.coactivation(a, b);
+                if c > 0 {
+                    pairs.push((c, a, b));
+                }
+            }
+        }
+        pairs.sort_by(|x, y| y.0.cmp(&x.0).then(x.1.cmp(&y.1)).then(x.2.cmp(&y.2)));
+        for &(_, a, b) in &pairs {
+            if owner[a] != usize::MAX || owner[b] != usize::MAX {
+                continue;
+            }
+            // device sourcing the most combined traffic, with 2 free slots
+            let mut best = usize::MAX;
+            let mut best_src = 0u64;
+            for d in 0..devices {
+                if dev_count[d] + 2 > cap[d] {
+                    continue;
+                }
+                let s = stats.src_load[a * devices + d] + stats.src_load[b * devices + d];
+                if best == usize::MAX || s > best_src {
+                    best = d;
+                    best_src = s;
+                }
+            }
+            if best != usize::MAX {
+                owner[a] = best;
+                owner[b] = best;
+                dev_count[best] += 2;
+            }
+        }
+
+        // singles phase: heaviest unplaced experts to their top source
+        let mut rest: Vec<usize> = (0..n_experts).filter(|&e| owner[e] == usize::MAX).collect();
+        rest.sort_by(|&a, &b| {
+            stats.expert_load[b]
+                .cmp(&stats.expert_load[a])
+                .then(a.cmp(&b))
+        });
+        for e in rest {
+            let mut best = usize::MAX;
+            let mut best_src = 0u64;
+            for d in 0..devices {
+                if dev_count[d] >= cap[d] {
+                    continue;
+                }
+                let s = stats.src_load[e * devices + d];
+                if best == usize::MAX || s > best_src {
+                    best = d;
+                    best_src = s;
+                }
+            }
+            owner[e] = best;
+            dev_count[best] += 1;
+        }
+
+        let placed = Placement::from_owner(devices, owner);
+        if stats.crossing_assignments(&placed) > stats.crossing_assignments(&contig) {
+            contig
+        } else {
+            placed
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlacementKind;
+    use crate::moe::RoutingTable;
+    use crate::placement::{build, skewed_probs};
+    use crate::testkit::{forall, Gen};
+
+    fn skewed_stats(n_experts: usize, devices: usize, top_k: usize, seed: u64) -> RoutingStats {
+        let n_tokens = 64 * devices;
+        let mut st = RoutingStats::new(n_experts, devices);
+        for s in 0..3u64 {
+            let probs = skewed_probs(n_tokens, n_experts, devices, seed.wrapping_add(s));
+            let rt = RoutingTable::from_probs(&probs, top_k);
+            st.observe(&rt, n_tokens / devices);
+        }
+        st
+    }
+
+    /// Every policy must produce a complete, capacity-respecting map.
+    fn assert_well_formed(p: &Placement, n_experts: usize, devices: usize) {
+        assert_eq!(p.owners().len(), n_experts);
+        let cap = capacities(n_experts, devices);
+        let mut counts = vec![0usize; devices];
+        for &d in p.owners() {
+            assert!(d < devices);
+            counts[d] += 1;
+        }
+        assert_eq!(counts.iter().sum::<usize>(), n_experts, "each expert placed once");
+        for d in 0..devices {
+            assert!(counts[d] <= cap[d], "device {d} over capacity: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn policies_respect_assignment_and_capacity_invariants() {
+        forall(48, 0x9ACE, |g: &mut Gen| {
+            let devices = g.usize_in(2..6);
+            let n_experts = devices * g.usize_in(1..4) + g.usize_in(0..devices);
+            let top_k = g.usize_in(1..3.min(n_experts));
+            let seed = g.rng.next_u64();
+            let st = skewed_stats(n_experts, devices, top_k, seed);
+            for kind in [
+                PlacementKind::Contiguous,
+                PlacementKind::LoadBalanced,
+                PlacementKind::AffinityAware,
+            ] {
+                let p = build(kind).place(n_experts, devices, &st);
+                assert_well_formed(&p, n_experts, devices);
+            }
+        });
+    }
+
+    #[test]
+    fn load_balanced_never_exceeds_contiguous_max_load() {
+        forall(48, 0xBA1A, |g: &mut Gen| {
+            let devices = g.usize_in(2..8);
+            let n_experts = devices * g.usize_in(1..4);
+            let seed = g.rng.next_u64();
+            let st = skewed_stats(n_experts, devices, 2.min(n_experts), seed);
+            let lb = LoadBalanced.place(n_experts, devices, &st);
+            let contig = Placement::new(n_experts, devices);
+            let max_lb = st.device_loads(&lb).into_iter().max().unwrap();
+            let max_c = st.device_loads(&contig).into_iter().max().unwrap();
+            assert!(max_lb <= max_c, "LPT pack {max_lb} vs contiguous {max_c}");
+        });
+    }
+
+    #[test]
+    fn affinity_never_exceeds_contiguous_crossing() {
+        forall(48, 0xAFF1, |g: &mut Gen| {
+            let devices = g.usize_in(2..8);
+            let n_experts = devices * g.usize_in(1..4);
+            let seed = g.rng.next_u64();
+            let st = skewed_stats(n_experts, devices, 2.min(n_experts), seed);
+            let aff = AffinityAware.place(n_experts, devices, &st);
+            let contig = Placement::new(n_experts, devices);
+            assert!(
+                st.crossing_assignments(&aff) <= st.crossing_assignments(&contig),
+                "affinity must never add crossing traffic"
+            );
+        });
+    }
+
+    #[test]
+    fn adaptive_policies_strictly_improve_on_the_skewed_workload() {
+        // the seeded workload the experiment and CI gate use: both
+        // adaptive policies must strictly beat the baseline on their
+        // own objective (not just tie via the fallback).
+        let st = skewed_stats(16, 8, 2, 0xD1CE);
+        let contig = Placement::new(16, 8);
+        let lb = LoadBalanced.place(16, 8, &st);
+        assert!(
+            st.device_loads(&lb).into_iter().max().unwrap()
+                < st.device_loads(&contig).into_iter().max().unwrap()
+        );
+        let aff = AffinityAware.place(16, 8, &st);
+        assert!(st.crossing_assignments(&aff) < st.crossing_assignments(&contig));
+        assert_ne!(aff.fingerprint(), contig.fingerprint());
+    }
+
+    #[test]
+    fn empty_stats_degrade_to_contiguous() {
+        let st = RoutingStats::new(8, 4);
+        for kind in [
+            PlacementKind::Contiguous,
+            PlacementKind::LoadBalanced,
+            PlacementKind::AffinityAware,
+        ] {
+            let p = build(kind).place(8, 4, &st);
+            assert_eq!(p, Placement::new(8, 4), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn policies_are_deterministic() {
+        let st = skewed_stats(12, 4, 2, 9);
+        for kind in [PlacementKind::LoadBalanced, PlacementKind::AffinityAware] {
+            let a = build(kind).place(12, 4, &st);
+            let b = build(kind).place(12, 4, &st);
+            assert_eq!(a, b, "{kind:?}");
+        }
+    }
+}

@@ -1,0 +1,190 @@
+//! Per-interval placement rebalancing (DESIGN.md §9): observe routing
+//! every step, re-solve the policy's placement every K diffusion steps,
+//! and report how many experts moved so the caller can charge the
+//! weight migration (`netsim::CostModel::t_migrate`).
+
+use crate::config::PlacementKind;
+use crate::moe::{Placement, RoutingTable};
+
+use super::policies::PlacementPolicy;
+use super::stats::RoutingStats;
+
+/// The outcome of one re-solve that actually changed the map.
+#[derive(Debug, Clone)]
+pub struct Migration {
+    /// The new placement to install.
+    pub placement: Placement,
+    /// Experts whose owner changed — each one's weights must travel
+    /// (priced by [`crate::netsim::CostModel::t_migrate`]).
+    pub moved_experts: usize,
+}
+
+/// Drives a [`PlacementPolicy`] on a step cadence.
+///
+/// Feed every observed [`RoutingTable`] through
+/// [`Rebalancer::observe`]; call [`Rebalancer::end_step`] once per
+/// diffusion step. Every `every` steps the accumulated [`RoutingStats`]
+/// are re-solved (`every: 0` disables rebalancing entirely — the
+/// placement stays wherever it started); if the new map differs from
+/// `current`, the migration is returned for the caller to install and
+/// price.
+pub struct Rebalancer {
+    policy: Box<dyn PlacementPolicy>,
+    every: usize,
+    stats: RoutingStats,
+    steps_since_solve: usize,
+    rebalances: usize,
+    total_moved: usize,
+}
+
+impl Rebalancer {
+    /// A rebalancer for `kind` over an (experts × devices) grid,
+    /// re-solving every `every` steps (0 = never).
+    pub fn new(kind: PlacementKind, n_experts: usize, devices: usize, every: usize) -> Rebalancer {
+        Rebalancer {
+            policy: super::build(kind),
+            every,
+            stats: RoutingStats::new(n_experts, devices),
+            steps_since_solve: 0,
+            rebalances: 0,
+            total_moved: 0,
+        }
+    }
+
+    /// Fold a routing table into the accumulated statistics.
+    pub fn observe(&mut self, rt: &RoutingTable, tokens_per_device: usize) {
+        self.stats.observe(rt, tokens_per_device);
+    }
+
+    /// The accumulated statistics (read-only).
+    pub fn stats(&self) -> &RoutingStats {
+        &self.stats
+    }
+
+    /// Re-solves performed so far that changed the map.
+    pub fn rebalances(&self) -> usize {
+        self.rebalances
+    }
+
+    /// Total experts moved across all rebalances.
+    pub fn total_moved(&self) -> usize {
+        self.total_moved
+    }
+
+    /// Mark the end of one diffusion step; on every K-th step re-solve
+    /// the placement from the accumulated stats. Returns the migration
+    /// when the solved map differs from `current` (the caller installs
+    /// `migration.placement` and charges `moved_experts`).
+    pub fn end_step(&mut self, current: &Placement) -> Option<Migration> {
+        if self.every == 0 {
+            return None;
+        }
+        self.steps_since_solve += 1;
+        if self.steps_since_solve < self.every || self.stats.is_empty() {
+            return None;
+        }
+        self.steps_since_solve = 0;
+        let solved = self
+            .policy
+            .place(self.stats.n_experts, self.stats.devices, &self.stats);
+        let moved = solved.moved_from(current);
+        if moved == 0 {
+            return None;
+        }
+        self.rebalances += 1;
+        self.total_moved += moved;
+        Some(Migration {
+            placement: solved,
+            moved_experts: moved,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::RoutingTable;
+    use crate::placement::skewed_probs;
+    use crate::testkit::{forall, Gen};
+
+    fn observe_step(rb: &mut Rebalancer, n_tokens: usize, e: usize, d: usize, seed: u64) {
+        let probs = skewed_probs(n_tokens, e, d, seed);
+        let rt = RoutingTable::from_probs(&probs, 2);
+        rb.observe(&rt, n_tokens / d);
+    }
+
+    #[test]
+    fn fires_on_the_configured_cadence() {
+        let (e, d, k) = (16usize, 4usize, 3usize);
+        let mut rb = Rebalancer::new(PlacementKind::AffinityAware, e, d, k);
+        let mut placement = Placement::new(e, d);
+        let mut fired_at = Vec::new();
+        for step in 0..9 {
+            observe_step(&mut rb, 128, e, d, step as u64);
+            if let Some(m) = rb.end_step(&placement) {
+                assert!(m.moved_experts > 0);
+                placement = m.placement;
+                fired_at.push(step);
+            }
+        }
+        // the first solve at step k-1 moves experts; later solves only
+        // fire when drift changes the map again (often never on a
+        // stationary workload).
+        assert_eq!(fired_at.first(), Some(&(k - 1)), "{fired_at:?}");
+        assert_eq!(rb.rebalances(), fired_at.len());
+        assert!(rb.total_moved() >= fired_at.len());
+    }
+
+    #[test]
+    fn disabled_rebalancer_never_fires() {
+        let mut rb = Rebalancer::new(PlacementKind::LoadBalanced, 8, 4, 0);
+        let placement = Placement::new(8, 4);
+        for step in 0..6 {
+            observe_step(&mut rb, 64, 8, 4, step as u64);
+            assert!(rb.end_step(&placement).is_none());
+        }
+        assert_eq!(rb.rebalances(), 0);
+    }
+
+    #[test]
+    fn every_rebalanced_map_assigns_each_expert_exactly_once() {
+        // the rebalancer-level assignment property: whatever cadence,
+        // policy and workload, an installed map is a complete
+        // permutation-with-capacity of the experts.
+        forall(32, 0x9EBA, |g: &mut Gen| {
+            let d = g.usize_in(2..6);
+            let e = d * g.usize_in(1..4) + g.usize_in(0..d);
+            let kind = if g.bool() {
+                PlacementKind::LoadBalanced
+            } else {
+                PlacementKind::AffinityAware
+            };
+            let every = g.usize_in(1..4);
+            let mut rb = Rebalancer::new(kind, e, d, every);
+            let mut placement = Placement::new(e, d);
+            for step in 0..6u64 {
+                observe_step(&mut rb, 64 * d, e, d, g.rng.next_u64() ^ step);
+                if let Some(m) = rb.end_step(&placement) {
+                    let mut seen = vec![0usize; e];
+                    for (ex, &owner) in m.placement.owners().iter().enumerate() {
+                        assert!(owner < d);
+                        seen[ex] += 1;
+                    }
+                    assert!(seen.iter().all(|&c| c == 1), "expert assigned != once");
+                    assert_eq!(m.moved_experts, m.placement.moved_from(&placement));
+                    placement = m.placement;
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn contiguous_policy_never_migrates() {
+        let mut rb = Rebalancer::new(PlacementKind::Contiguous, 16, 4, 2);
+        let placement = Placement::new(16, 4);
+        for step in 0..6 {
+            observe_step(&mut rb, 128, 16, 4, step as u64);
+            assert!(rb.end_step(&placement).is_none(), "contiguous == current map");
+        }
+    }
+}

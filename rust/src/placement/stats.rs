@@ -1,0 +1,163 @@
+//! Routing statistics the placement policies solve against: per-expert
+//! load, per-(expert, source-device) traffic, and expert-pair
+//! co-activation counts, accumulated from observed
+//! [`RoutingTable`]s (DESIGN.md §9).
+
+use crate::moe::{Placement, RoutingTable};
+
+/// Accumulated routing statistics over one or more diffusion steps.
+///
+/// All counters are cumulative; the [`crate::placement::Rebalancer`]
+/// keeps one instance per run so later re-solves see the whole history
+/// (diffusion routing drifts slowly — Figure 4 — so cumulative counts
+/// track the stationary distribution well).
+#[derive(Debug, Clone)]
+pub struct RoutingStats {
+    /// Routed experts.
+    pub n_experts: usize,
+    /// Devices the tokens are sharded over.
+    pub devices: usize,
+    /// [E] total (token, rank) assignments per expert.
+    pub expert_load: Vec<u64>,
+    /// [E × D] assignments to expert e sourced from tokens owned by
+    /// device d (row-major `e * devices + d`).
+    pub src_load: Vec<u64>,
+    /// [E × E] co-activation counts: `coact[lo * E + hi]` (lo < hi) is
+    /// the number of tokens whose top-k contained both experts.
+    pub coact: Vec<u64>,
+    /// Tokens observed (one per routing-table row).
+    pub tokens_seen: u64,
+}
+
+impl RoutingStats {
+    /// Empty statistics for an (experts × devices) grid.
+    pub fn new(n_experts: usize, devices: usize) -> RoutingStats {
+        RoutingStats {
+            n_experts,
+            devices,
+            expert_load: vec![0; n_experts],
+            src_load: vec![0; n_experts * devices],
+            coact: vec![0; n_experts * n_experts],
+            tokens_seen: 0,
+        }
+    }
+
+    /// Whether anything has been observed yet (policies fall back to
+    /// the contiguous layout on empty stats).
+    pub fn is_empty(&self) -> bool {
+        self.tokens_seen == 0
+    }
+
+    /// Fold one routing table into the counters. `tokens_per_device`
+    /// maps global token index → owning device, exactly as
+    /// [`crate::moe::DispatchPlan::build`] does. Allocation-free: the
+    /// per-token expert set is read straight from the table's flat
+    /// expert array (this runs inside the engine's per-layer loop).
+    pub fn observe(&mut self, rt: &RoutingTable, tokens_per_device: usize) {
+        assert_eq!(rt.n_experts, self.n_experts, "routing table shape mismatch");
+        assert!(tokens_per_device > 0, "tokens_per_device must be positive");
+        let e_n = self.n_experts;
+        let k = rt.top_k;
+        for i in 0..rt.n_tokens {
+            let dev = (i / tokens_per_device).min(self.devices - 1);
+            let experts = &rt.experts[i * k..(i + 1) * k];
+            for &e in experts {
+                self.expert_load[e] += 1;
+                self.src_load[e * self.devices + dev] += 1;
+            }
+            for (ai, &ea) in experts.iter().enumerate() {
+                for &eb in &experts[ai + 1..] {
+                    let (lo, hi) = if ea <= eb { (ea, eb) } else { (eb, ea) };
+                    self.coact[lo * e_n + hi] += 1;
+                }
+            }
+            self.tokens_seen += 1;
+        }
+    }
+
+    /// Per-device expert-compute load under a placement (assignments
+    /// each device would execute).
+    pub fn device_loads(&self, placement: &Placement) -> Vec<u64> {
+        let mut dl = vec![0u64; self.devices];
+        for e in 0..self.n_experts {
+            dl[placement.owner(e)] += self.expert_load[e];
+        }
+        dl
+    }
+
+    /// Assignments whose source device differs from the expert's owner
+    /// under a placement — the crossing (token, expert) pairs whose
+    /// activations must travel in each all-to-all direction.
+    pub fn crossing_assignments(&self, placement: &Placement) -> u64 {
+        let mut c = 0u64;
+        for e in 0..self.n_experts {
+            let owner = placement.owner(e);
+            for d in 0..self.devices {
+                if d != owner {
+                    c += self.src_load[e * self.devices + d];
+                }
+            }
+        }
+        c
+    }
+
+    /// Co-activation count of an (unordered) expert pair.
+    pub fn coactivation(&self, a: usize, b: usize) -> u64 {
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        self.coact[lo * self.n_experts + hi]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn table(rows: Vec<Vec<f32>>, k: usize) -> RoutingTable {
+        let n = rows.len();
+        let e = rows[0].len();
+        let probs = Tensor::from_vec(&[n, e], rows.into_iter().flatten().collect());
+        RoutingTable::from_probs(&probs, k)
+    }
+
+    #[test]
+    fn observe_counts_loads_sources_and_pairs() {
+        // 4 tokens on 2 devices; every token picks experts {0, 1}.
+        let rt = table(vec![vec![0.6, 0.3, 0.1]; 4], 2);
+        let mut st = RoutingStats::new(3, 2);
+        st.observe(&rt, 2);
+        assert_eq!(st.tokens_seen, 4);
+        assert_eq!(st.expert_load, vec![4, 4, 0]);
+        // tokens 0,1 on device 0; 2,3 on device 1 (index e * devices + d)
+        assert_eq!(st.src_load[0], 2, "expert 0 from device 0");
+        assert_eq!(st.src_load[1], 2, "expert 0 from device 1");
+        assert_eq!(st.coactivation(0, 1), 4);
+        assert_eq!(st.coactivation(1, 0), 4, "pair lookup is unordered");
+        assert_eq!(st.coactivation(0, 2), 0);
+    }
+
+    #[test]
+    fn crossing_and_device_loads_follow_the_map() {
+        let rt = table(vec![vec![0.9, 0.1]; 4], 1); // all tokens → expert 0
+        let mut st = RoutingStats::new(2, 2);
+        st.observe(&rt, 2);
+        let contig = Placement::new(2, 2); // e0 → device 0
+        assert_eq!(st.device_loads(&contig), vec![4, 0]);
+        assert_eq!(st.crossing_assignments(&contig), 2); // device-1 tokens cross
+        let swapped = Placement::from_owner(2, vec![1, 0]);
+        assert_eq!(st.device_loads(&swapped), vec![0, 4]);
+        assert_eq!(st.crossing_assignments(&swapped), 2);
+    }
+
+    #[test]
+    fn cumulative_observation_adds_up() {
+        let rt = table(vec![vec![0.8, 0.2]; 2], 1);
+        let mut st = RoutingStats::new(2, 2);
+        assert!(st.is_empty());
+        st.observe(&rt, 1);
+        st.observe(&rt, 1);
+        assert!(!st.is_empty());
+        assert_eq!(st.expert_load[0], 4);
+        assert_eq!(st.tokens_seen, 4);
+    }
+}

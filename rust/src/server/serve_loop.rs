@@ -199,10 +199,14 @@ impl BatchExecutor for SimExecutor {
         };
         // two collectives per MoE layer per step on every device; wire
         // bytes shrink under cond-comm throttling AND the residual codec,
-        // and `saved` pools both effects against the dense payload.
+        // and `saved` pools both effects against the dense payload. The
+        // placement policy's measured crossing fraction
+        // (`opts.a2a_cross_scale`, DESIGN.md §9) shrinks the physical
+        // payload itself, so it scales BOTH sides of the accounting.
         let n_a2a = 2.0 * (self.cm.model.n_layers * steps) as f64 * wl.devices as f64;
-        let full = self.cm.a2a_bytes(&wl) * n_a2a;
-        let sent = self.cm.a2a_wire_bytes(&wl, self.opts.compress, fresh_frac) * n_a2a;
+        let scale = self.opts.a2a_cross_scale;
+        let full = self.cm.a2a_bytes(&wl) * n_a2a * scale;
+        let sent = self.cm.a2a_wire_bytes(&wl, self.opts.compress, fresh_frac * scale) * n_a2a;
         Ok(ExecOutcome {
             samples: None,
             fresh_bytes: sent as u64,
@@ -617,6 +621,25 @@ mod tests {
                 "trace {i}"
             );
         }
+    }
+
+    #[test]
+    fn placement_scale_cuts_served_bytes_and_latency() {
+        // a measured affinity crossing fraction (DESIGN.md §9) shrinks
+        // the physical payload: fewer wire bytes AND faster batches.
+        let trace = burst_trace(64, 4, 11);
+        let mut plain = sim_ex(Strategy::Interweaved, DiceOptions::dice());
+        let mut placed = sim_ex(
+            Strategy::Interweaved,
+            DiceOptions::dice().with_cross_scale(0.6),
+        );
+        let rp = serve_with(&mut plain, &trace, cfg(64, 1.0)).unwrap();
+        let rc = serve_with(&mut placed, &trace, cfg(64, 1.0)).unwrap();
+        assert!(
+            rc.metrics.counter("a2a.fresh_bytes") < rp.metrics.counter("a2a.fresh_bytes"),
+            "placement must move fewer bytes"
+        );
+        assert!(rc.latency().mean < rp.latency().mean);
     }
 
     #[test]

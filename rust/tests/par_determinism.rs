@@ -5,12 +5,14 @@
 //! fan-out, and the scenario serving fan-out, at widths 1 / 2 / 4.
 //! Artifact-free: everything here runs on a clean checkout.
 
-use dice::config::{hardware_profile, model_preset, DiceOptions, Strategy};
+use dice::config::{hardware_profile, model_preset, DiceOptions, PlacementKind, Strategy};
 use dice::coordinator::{simulate_sweep_with, SweepCase};
 use dice::linalg;
 use dice::moe::host::{HostMoeConfig, HostMoeLayer};
+use dice::moe::RoutingTable;
 use dice::netsim::{CostModel, Workload};
 use dice::par::ParPool;
+use dice::placement::{build, skewed_probs, RoutingStats};
 use dice::rng::Rng;
 use dice::server::{serve_scenarios, BatchPolicy, ServeConfig, SimExecutor};
 use dice::tensor::Tensor;
@@ -47,6 +49,47 @@ fn host_engine_step_bit_exact_across_threads_1_2_4() {
         let out = layer.step(&ParPool::new(threads), &x);
         assert_eq!(serial, out, "--threads {threads} output differs from serial");
         assert_eq!(cs, checksum(&out), "--threads {threads} checksum differs");
+    }
+}
+
+#[test]
+fn host_engine_step_bit_exact_for_all_placement_policies() {
+    // The determinism contract extends to non-contiguous placements
+    // (DESIGN.md §9): for every policy-solved map, the engine step is
+    // bit-exact across --threads 1/2/4 — and because the combine
+    // scatters to token-owned rows, the OUTPUT is identical across
+    // placements too (only the crossing-bytes accounting moves).
+    let cfg = HostMoeConfig {
+        n_experts: 16,
+        top_k: 2,
+        d_model: 32,
+        d_ff: 64,
+        devices: 4,
+    };
+    let base = HostMoeLayer::synth(cfg, 0xD1CE);
+    let x = normal(&[64, 32], 11);
+
+    // solve policy placements from a skewed observed workload
+    let mut st = RoutingStats::new(cfg.n_experts, cfg.devices);
+    for s in 0..3u64 {
+        let probs = skewed_probs(128, cfg.n_experts, cfg.devices, s);
+        st.observe(&RoutingTable::from_probs(&probs, cfg.top_k), 128 / cfg.devices);
+    }
+    let reference = base.step(&ParPool::new(1), &x);
+    for kind in [
+        PlacementKind::Contiguous,
+        PlacementKind::LoadBalanced,
+        PlacementKind::AffinityAware,
+    ] {
+        let placement = build(kind).place(cfg.n_experts, cfg.devices, &st);
+        let layer = base.clone().with_placement(placement);
+        let serial = layer.step(&ParPool::new(1), &x);
+        assert_eq!(reference, serial, "{kind:?}: placement must not change numerics");
+        for threads in [1usize, 2, 4] {
+            let out = layer.step(&ParPool::new(threads), &x);
+            assert_eq!(serial, out, "{kind:?} --threads {threads} differs from serial");
+            assert_eq!(checksum(&serial), checksum(&out));
+        }
     }
 }
 

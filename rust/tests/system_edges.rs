@@ -108,7 +108,29 @@ fn serve_burst_fills_batches() {
 #[test]
 fn engine_rejects_bad_configs() {
     let Some((rt, bank)) = setup() else { return };
-    // devices must divide experts
+    // every device needs at least one expert (tiny model: 8 experts)
+    assert!(Engine::new(
+        &rt,
+        &bank,
+        EngineConfig {
+            strategy: Strategy::SyncEp,
+            opts: DiceOptions::none(),
+            devices: 9,
+        },
+    )
+    .is_err());
+    assert!(Engine::new(
+        &rt,
+        &bank,
+        EngineConfig {
+            strategy: Strategy::SyncEp,
+            opts: DiceOptions::none(),
+            devices: 0,
+        },
+    )
+    .is_err());
+    // non-dividing device counts are legal now: Placement::new
+    // distributes the remainder (DESIGN.md §9)
     assert!(Engine::new(
         &rt,
         &bank,
@@ -118,7 +140,7 @@ fn engine_rejects_bad_configs() {
             devices: 3,
         },
     )
-    .is_err());
+    .is_ok());
     // non-bucket local batch
     let eng = Engine::new(
         &rt,
