@@ -1,18 +1,21 @@
-//! Perf gate + trajectory recorder (DESIGN.md §8): benches the host
-//! engine step (dispatch → expert FFN → combine over the worker pool)
-//! serial vs parallel, the simulation sweep fan-out, and the
-//! placement-policy sweep (three solves + crossing-bytes pricing on a
-//! skewed plan, DESIGN.md §9), and appends every summary to repo-root
-//! `BENCH_engine.json` (JSON lines) — the perf trajectory across PRs.
-//! Artifact-free.
+//! Perf gate + trajectory recorder (DESIGN.md §8, §10): benches the
+//! host engine step (dispatch → expert FFN → combine over the worker
+//! pool) serial vs parallel, the `pipeline_overlap` quartet (barriered
+//! vs overlapped executor, uniform vs skewed routing), the simulation
+//! sweep fan-out, and the placement-policy sweep (three solves +
+//! crossing-bytes pricing on a skewed plan, DESIGN.md §9), and appends
+//! every summary to repo-root `BENCH_engine.json` (JSON lines) — the
+//! perf trajectory across PRs. Artifact-free.
 //!
 //!     cargo bench --bench perf_gate              # full iterations
 //!     cargo bench --bench perf_gate -- --check   # CI: few iters +
 //!                                                # gate assertions
 //!
-//! `--check` asserts (on ≥ 2 cores) that the parallel engine step is no
-//! slower than serial, that the engine output is bit-exact across pool
-//! widths, and that `BENCH_engine.json` is valid JSON lines.
+//! Always asserts bit-exactness of both executors across pool widths;
+//! `--check` additionally asserts (on ≥ 2 cores) that the parallel
+//! engine step is no slower than serial, that the OVERLAPPED executor
+//! is no slower than the barriered one on the skewed-routing workload,
+//! and that `BENCH_engine.json` is valid JSON lines.
 
 use std::path::PathBuf;
 
@@ -110,6 +113,25 @@ fn main() -> anyhow::Result<()> {
         },
     );
 
+    // --- pipeline overlap: barriered vs overlapped executor ------------
+    // (DESIGN.md §10) — uniform routing from the layer's own router,
+    // and the seeded skewed routing (one hot expert) where dynamic
+    // row-split scheduling must not lose to the static-chunk barriers.
+    let skew_probs = skewed_probs(n_tokens, cfg.n_experts, cfg.devices, 0xBEEF);
+    let skew_rt = RoutingTable::from_probs(&skew_probs, cfg.top_k);
+    let p_uni_bar = benchkit::bench("pipeline_overlap_uniform_barriered", warmup, iters, || {
+        std::hint::black_box(layer.step(&par_pool, &x));
+    });
+    let p_uni_ovl = benchkit::bench("pipeline_overlap_uniform_overlapped", warmup, iters, || {
+        std::hint::black_box(layer.step_overlapped(&par_pool, &x));
+    });
+    let p_skw_bar = benchkit::bench("pipeline_overlap_skewed_barriered", warmup, iters, || {
+        std::hint::black_box(layer.step_routed_timed(&par_pool, &x, &skew_rt).0);
+    });
+    let p_skw_ovl = benchkit::bench("pipeline_overlap_skewed_overlapped", warmup, iters, || {
+        std::hint::black_box(layer.step_overlapped_routed_timed(&par_pool, &x, &skew_rt).0);
+    });
+
     // --- placement sweep: solve all three policies + price the plan ----
     let (pe, pd, pk) = (16usize, 8usize, 2usize);
     let p_tokens = 1024usize;
@@ -138,6 +160,10 @@ fn main() -> anyhow::Result<()> {
         w_serial.clone(),
         w_par.clone(),
         s_place.clone(),
+        p_uni_bar.clone(),
+        p_uni_ovl.clone(),
+        p_skw_bar.clone(),
+        p_skw_ovl.clone(),
     ];
     let mut t = Table::new(
         "Perf gate — engine step + sim sweep, serial vs parallel",
@@ -154,9 +180,12 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
     println!(
-        "\nengine-step speedup {:.2}x, sim-sweep speedup {:.2}x ({} threads, {} cores)",
+        "\nengine-step speedup {:.2}x, sim-sweep speedup {:.2}x, overlapped-vs-barriered \
+         {:.2}x uniform / {:.2}x skewed ({} threads, {} cores)",
         s_serial.mean_s / s_par.mean_s,
         w_serial.mean_s / w_par.mean_s,
+        p_uni_bar.mean_s / p_uni_ovl.mean_s,
+        p_skw_bar.mean_s / p_skw_ovl.mean_s,
         par_threads,
         cores
     );
@@ -172,6 +201,16 @@ fn main() -> anyhow::Result<()> {
     for tn in [2usize, 4] {
         let got = layer.step(&ParPool::new(tn), &x);
         assert!(want == got, "engine step must be bit-exact at {tn} threads");
+    }
+    // the overlapped executor shares those bits exactly (DESIGN.md §10)
+    for tn in [1usize, 2, 4] {
+        let got = layer.step_overlapped(&ParPool::new(tn), &x);
+        assert!(want == got, "overlapped step must be bit-exact at {tn} threads");
+    }
+    {
+        let (want_s, _) = layer.step_routed_timed(&serial_pool, &x, &skew_rt);
+        let (got_s, _) = layer.step_overlapped_routed_timed(&par_pool, &x, &skew_rt);
+        assert!(want_s == got_s, "overlapped skewed step must be bit-exact");
     }
     // placement: the affinity policy must not add crossing bytes on the
     // skewed workload (DESIGN.md §9), always checked
@@ -201,8 +240,19 @@ fn main() -> anyhow::Result<()> {
                 s_par.p50_s,
                 s_serial.p50_s
             );
+            // pipeline overlap gate (DESIGN.md §10): on the skewed
+            // routing workload — the exact case dynamic scheduling
+            // exists for — the overlapped executor must not be slower
+            // than the barriered baseline at >= 2 threads (same small
+            // noise margin as the serial-vs-parallel gate).
+            assert!(
+                p_skw_ovl.p50_s <= 1.05 * p_skw_bar.p50_s,
+                "overlapped executor regressed on skewed routing: p50 {} vs barriered p50 {}",
+                p_skw_ovl.p50_s,
+                p_skw_bar.p50_s
+            );
         } else {
-            println!("single-core host: skipping parallel-vs-serial gate");
+            println!("single-core host: skipping parallel-vs-serial and pipeline-overlap gates");
         }
         println!("perf gate OK ({lines} trajectory records)");
     }

@@ -33,6 +33,15 @@ cargo bench --bench perf_gate -- --check
 echo "==> placement gate (dice exp placement, artifact-free)"
 cargo run --release --quiet -- exp placement --steps 12 --tokens 1024
 
+# Pipeline gate (artifact-free, DESIGN.md §10): runs every strategy on
+# both step executors and FAILS unless the overlapped executor is
+# bit-exact vs barriered, the SyncEp pipeline is bit-exact vs the plain
+# step loop, and the MEASURED staleness ages match the strategy
+# contract (sync 0 / interweaved 1 / displaced 2). The overlapped-not-
+# slower timing gate runs in the perf-gate --check step above.
+echo "==> pipeline gate (dice exp pipeline, artifact-free)"
+cargo run --release --quiet -- exp pipeline --steps 10 --tokens 512
+
 # Docs gates: rustdoc warnings (broken links, bad code-block attrs) are
 # errors, and missing_docs — warn-level in the sources so local builds
 # stay friendly — is escalated to deny here so new public items cannot

@@ -1,20 +1,30 @@
 //! Perf probe for the §Perf log.
 //!
 //! Default mode runs one DICE quality run over the AOT artifacts and
-//! times it. `--sim` needs NO artifacts: it drives the host engine step
-//! (`dice::moe::host`, the same dispatch→expert→combine hot path) for
-//! `--steps` steps and reports per-phase wall time — route / dispatch /
-//! expert / combine — plus the cost model's price for the measured
-//! dispatch plan. `--threads N` pins the worker-pool width in both
-//! modes.
+//! times it. `--sim` needs NO artifacts: it drives the host MoE hot
+//! path through `dice::coordinator::HostPipeline` for `--steps` steps
+//! and reports per-phase BUSY time — route / dispatch / expert /
+//! combine — alongside the run's wall time and their ratio (the
+//! measured overlap), plus the cost model's price for the measured
+//! dispatch plan.
 //!
-//!     cargo run --release --example perfprobe -- --sim --threads 4
+//! Knobs (DESIGN.md §10): `--pipeline {barriered,overlapped}` selects
+//! the step executor, `--strategy {sync,interweaved,displaced}` the
+//! staleness dataflow (the staleness ledger's measured ages are
+//! printed), `--threads N` pins the worker-pool width in both modes.
+//! With the barriered executor phases are sequential, so busy ≈ wall;
+//! with overlap `wall ≤ busy` and the gap is the win.
+//!
+//!     cargo run --release --example perfprobe -- --sim --threads 4 \
+//!         --pipeline overlapped --strategy interweaved
 
 use std::time::Instant;
 
-use dice::benchkit::{fmt_secs, Table};
+use dice::benchkit::{fmt_bytes, fmt_secs, Table};
 use dice::cli::Args;
-use dice::moe::host::{HostMoeConfig, HostMoeLayer, HostPhases};
+use dice::config::{PipelineMode, Strategy};
+use dice::coordinator::HostPipeline;
+use dice::moe::host::{HostMoeConfig, HostMoeLayer};
 use dice::netsim::CostModel;
 use dice::par::ParPool;
 use dice::rng::Rng;
@@ -47,11 +57,23 @@ fn main() -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Artifact-free probe: host engine steps with per-phase timings.
+/// Artifact-free probe: host pipeline steps with per-phase busy + wall
+/// timings and measured staleness.
 fn sim_probe(a: &Args) -> anyhow::Result<()> {
     let pool = ParPool::current();
     let steps = a.usize_or("steps", 50);
     let n_tokens = a.usize_or("tokens", 512);
+    let mode = PipelineMode::parse(&a.str_or("pipeline", "barriered"))?;
+    let strategy = Strategy::parse(&a.str_or("strategy", "sync"))?;
+    if !matches!(
+        strategy,
+        Strategy::SyncEp | Strategy::DisplacedEp | Strategy::Interweaved
+    ) {
+        anyhow::bail!(
+            "--strategy {} has no host-pipeline dataflow (use sync|interweaved|displaced)",
+            strategy.name()
+        );
+    }
     let cfg = HostMoeConfig {
         n_experts: a.usize_or("experts", 8),
         top_k: 2,
@@ -63,30 +85,26 @@ fn sim_probe(a: &Args) -> anyhow::Result<()> {
     let mut x = Tensor::zeros(&[n_tokens, cfg.d_model]);
     Rng::new(1).fill_normal(x.data_mut());
 
+    let mut pipe = HostPipeline::new(layer, strategy, mode, &pool);
     let t0 = Instant::now();
-    let mut phases = HostPhases::default();
-    let mut checksum = 0.0f64;
-    for _ in 0..steps {
-        let (out, ph) = layer.step_timed(&pool, &x);
-        phases.accumulate(&ph);
-        checksum = out.data().iter().map(|v| v.abs() as f64).sum::<f64>() / out.len() as f64;
-        // feed a damped output back in so every step routes fresh data
-        for (xi, oi) in x.data_mut().iter_mut().zip(out.data()) {
-            *xi = 0.7 * *xi + 0.3 * oi;
-        }
-    }
+    let rep = pipe.run(&x, steps);
     let wall = t0.elapsed().as_secs_f64();
+    let checksum =
+        rep.out.data().iter().map(|v| v.abs() as f64).sum::<f64>() / rep.out.len() as f64;
 
+    let phases = rep.phases;
     let mut t = Table::new(
         &format!(
-            "perfprobe --sim — {} steps, {} tokens, {} experts on {} devices, {} threads",
+            "perfprobe --sim — {} / {} — {} steps, {} tokens, {} experts on {} devices, {} threads",
+            strategy.name(),
+            mode.name(),
             steps,
             n_tokens,
             cfg.n_experts,
             cfg.devices,
             pool.threads()
         ),
-        &["phase", "total", "per step", "share"],
+        &["phase", "busy total", "busy/step", "share"],
     );
     let total = phases.total_s().max(1e-12);
     for (name, s) in [
@@ -104,20 +122,38 @@ fn sim_probe(a: &Args) -> anyhow::Result<()> {
     }
     t.print();
 
+    // the HostPhases invariant (DESIGN.md §10): busy no longer sums to
+    // wall once phases overlap — report both and the ratio.
+    println!(
+        "\nwall {:.2}s ({:.1} steps/s) vs busy {:.2}s — overlap {:.2}x; \
+         staleness mean {:.2} / max {} (settled contract: {}); peak buffers {}",
+        wall,
+        steps as f64 / wall,
+        phases.total_s(),
+        phases.total_s() / phases.wall_s.max(1e-12),
+        rep.staleness.mean_age(strategy.step_staleness()),
+        rep.staleness.max_age(0),
+        strategy.step_staleness(),
+        fmt_bytes(rep.peak_buffer_bytes),
+    );
+    println!(
+        "arena: {} hits / {} misses, {} slots parked; checksum {:.4}",
+        pipe.arena().hits,
+        pipe.arena().misses,
+        pipe.arena().free_slots(),
+        checksum
+    );
+
     // price the measured dispatch plan at paper scale (memoized
     // cross-bytes: both collectives priced from one entry scan)
     let cm = CostModel::new(
         dice::config::model_preset("xl")?,
         dice::config::hardware_profile("rtx4090_pcie")?,
     );
-    let (_, plan) = layer.route(&pool, &x);
-    let t_a2a = cm.t_a2a_measured(&plan, layer.placement());
+    let (_, plan) = pipe.layer().route(&pool, &rep.out);
+    let t_a2a = cm.t_a2a_measured(&plan, pipe.layer().placement());
     println!(
-        "\nwall {:.2}s ({:.1} steps/s), checksum {:.4}; modelled a2a per collective \
-         from the measured plan: {}",
-        wall,
-        steps as f64 / wall,
-        checksum,
+        "modelled a2a per collective from the measured plan: {}",
         fmt_secs(t_a2a)
     );
     Ok(())

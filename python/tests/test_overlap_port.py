@@ -1,0 +1,308 @@
+"""Exact-logic ports of the Rust overlapped-executor machinery (DESIGN.md §10).
+
+The container has no Rust toolchain, so the scheduling/staleness logic of
+`rust/src/par/mod.rs::run_graph`, `rust/src/moe/host.rs::run_overlapped`
+(row-split subtask indexing) and `rust/src/coordinator/pipeline.rs`
+(strategy dataflows) is validated here against independent oracles:
+
+* the MPMC ready-queue executor is simulated under many adversarial
+  worker interleavings — every task must run exactly once, after its
+  dependencies, with no deadlock;
+* the row-split subtask layout must cover every (expert, row) exactly
+  once, and the combine's `sub_of` arithmetic must find the owning
+  subtask and local row;
+* the pipeline's pre-assembled displaced/interweaved dataflows must
+  reproduce the textbook staleness recurrences
+  x_{t+1} = 0.7 x_t + 0.3 MoE(x_{t-age}) with age 0 / 1 / 2.
+
+Stdlib only — runs under pytest or as a script.
+"""
+
+import random
+
+
+# ---------------------------------------------------------------------------
+# run_graph port: MPMC bounded ready queue with dependency counters
+# ---------------------------------------------------------------------------
+
+def run_graph_simulated(n, edges, n_workers, rng):
+    """Simulate the Rust run_graph crew under an adversarial scheduler.
+
+    Mirrors rust/src/par/mod.rs: a bounded slot queue (capacity n), a
+    claim counter (head), per-task dependency counters, dependents
+    enqueued by whichever worker finishes the last dependency. The rng
+    picks which worker advances at every micro-step, so many seeds
+    explore many interleavings.
+    Returns the per-worker execution order (task ids).
+    """
+    deps = [0] * n
+    dependents = [[] for _ in range(n)]
+    for before, after in edges:
+        dependents[before].append(after)
+        deps[after] += 1
+
+    slots = [None] * n  # the bounded MPMC queue
+    tail = 0
+    head = 0
+
+    def push(t):
+        nonlocal tail
+        slots[tail] = t
+        tail += 1
+
+    for t in range(n):
+        if deps[t] == 0:
+            push(t)
+
+    # worker state machine: each worker is either 'claim'ing an index,
+    # spinning on an unfilled slot, or done.
+    claims = [None] * n_workers
+    done_workers = [False] * n_workers
+    ran = []
+    per_worker = [[] for _ in range(n_workers)]
+    completed = [False] * n
+
+    steps = 0
+    while not all(done_workers):
+        steps += 1
+        assert steps < 100000, "scheduler livelock — progress argument violated"
+        w = rng.randrange(n_workers)
+        if done_workers[w]:
+            continue
+        if claims[w] is None:
+            nonlocal_head = head
+            if nonlocal_head >= n:
+                done_workers[w] = True
+                continue
+            head += 1
+            claims[w] = nonlocal_head
+        h = claims[w]
+        if slots[h] is None:
+            continue  # spin: the filling task is still in flight elsewhere
+        t = slots[h]
+        claims[w] = None
+        # dependency check: every prerequisite completed before we run
+        for before, after in edges:
+            if after == t:
+                assert completed[before], f"task {t} ran before dep {before}"
+        assert not completed[t], f"task {t} ran twice"
+        completed[t] = True
+        ran.append(t)
+        per_worker[w].append(t)
+        for d in dependents[t]:
+            deps[d] -= 1
+            if deps[d] == 0:
+                push(d)
+    assert len(ran) == n, f"only {len(ran)}/{n} tasks ran"
+    return per_worker
+
+
+def test_run_graph_all_interleavings_respect_deps():
+    rng = random.Random(0xD1CE)
+    for trial in range(200):
+        n_sub = rng.randrange(1, 12)
+        n_dev = rng.randrange(1, 5)
+        n = n_sub + n_dev
+        # bipartite edges like the overlapped executor: subtask -> device
+        edges = []
+        for d in range(n_dev):
+            for s in range(n_sub):
+                if rng.random() < 0.5:
+                    edges.append((s, n_sub + d))
+        run_graph_simulated(n, edges, rng.randrange(1, 6), rng)
+
+
+def test_run_graph_chain_and_diamond():
+    rng = random.Random(7)
+    # chain 0->1->2->3 (worst case for the spin path)
+    for workers in (1, 2, 4):
+        run_graph_simulated(4, [(0, 1), (1, 2), (2, 3)], workers, rng)
+    # diamond
+    run_graph_simulated(4, [(0, 1), (0, 2), (1, 3), (2, 3)], 3, rng)
+
+
+# ---------------------------------------------------------------------------
+# row-split subtask layout port (host.rs run_overlapped)
+# ---------------------------------------------------------------------------
+
+def subtask_layout(loads, threads):
+    """Port of the sub_base/sub_rows/sub_expert/lo/hi construction."""
+    total = sum(loads)
+    target = max(-(-total // (2 * max(threads, 1))), 8)  # div_ceil, floor 8
+    sub_base, sub_rows = [], []
+    subs = []  # (expert, lo, hi)
+    for e, n_e in enumerate(loads):
+        sub_base.append(len(subs))
+        sub_rows.append(min(target, max(n_e, 1)))
+        lo = 0
+        while lo < n_e:
+            hi = min(lo + sub_rows[e], n_e)
+            subs.append((e, lo, hi))
+            lo = hi
+    return subs, sub_base, sub_rows
+
+
+def test_subtask_layout_covers_every_row_once():
+    rng = random.Random(42)
+    for trial in range(300):
+        n_experts = rng.randrange(1, 20)
+        loads = [rng.choice([0, 1, 2, 3, 7, 8, 9, 50, 200]) for _ in range(n_experts)]
+        threads = rng.randrange(1, 9)
+        subs, sub_base, sub_rows = subtask_layout(loads, threads)
+        seen = set()
+        for e, lo, hi in subs:
+            assert lo < hi, "empty subtask emitted"
+            for r in range(lo, hi):
+                assert (e, r) not in seen, "row covered twice"
+                seen.add((e, r))
+        assert len(seen) == sum(loads), "row lost"
+        # the combine's sub_of arithmetic finds the owning slice
+        for e, n_e in enumerate(loads):
+            for r in range(n_e):
+                sub = sub_base[e] + r // sub_rows[e]
+                se, lo, hi = subs[sub]
+                assert se == e and lo <= r < hi, f"sub_of({e},{r}) -> wrong slice"
+                local = r - lo
+                assert 0 <= local < hi - lo
+
+
+def test_device_dedupe_is_valid_because_subs_are_nondecreasing():
+    # the Rust edge-dedupe keeps only the last sub id per device; that is
+    # sound iff, walking entries (expert asc, row asc), the sub id for a
+    # given device never revisits an earlier id.
+    rng = random.Random(9)
+    for trial in range(100):
+        n_experts = rng.randrange(1, 10)
+        devices = rng.randrange(1, 5)
+        loads = [rng.randrange(0, 40) for _ in range(n_experts)]
+        subs, sub_base, sub_rows = subtask_layout(loads, rng.randrange(1, 5))
+        owner = {}  # (e, r) -> device, arbitrary
+        last = [None] * devices
+        for e in range(n_experts):
+            for r in range(loads[e]):
+                dev = rng.randrange(devices)
+                sub = sub_base[e] + r // sub_rows[e]
+                if last[dev] is not None:
+                    assert sub >= last[dev], "sub ids regressed within a device"
+                last[dev] = sub
+
+
+# ---------------------------------------------------------------------------
+# HostPipeline strategy dataflow port vs oracle recurrences
+# ---------------------------------------------------------------------------
+
+def moe(x):
+    # stand-in per-element MoE: nonlinear, order-sensitive
+    return [0.5 * v * v - 0.25 * v + 0.125 for v in x]
+
+
+def feedback(x, y):
+    return [0.7 * a + 0.3 * b for a, b in zip(x, y)]
+
+
+def pipeline_port(strategy, x0, steps):
+    """Line-for-line port of pipeline.rs (payload = captured x here)."""
+    ages = []
+    x = list(x0)
+    pending_payload = None  # (x_snapshot, captured_step)
+    pending_combine = None  # (y, captured_step)
+    if strategy == "sync":
+        for t in range(steps):
+            y = moe(x)
+            ages.append(0)
+            x = feedback(x, y)
+        return x, ages
+    if strategy == "interweaved":
+        for t in range(steps):
+            if pending_combine is None:
+                p0 = (list(x), t)
+                y = moe(p0[0])
+                ages.append(0)
+                pending_combine = (list(y), t)
+                x_next = feedback(x, y)
+                pending_payload = (list(x_next), t + 1)
+                x = x_next
+            else:
+                y, cap = pending_combine
+                ages.append(t - cap)
+                p = pending_payload
+                out = moe(p[0])
+                x_next = feedback(x, y)
+                p_next = (list(x_next), t + 1)
+                pending_combine = (out, p[1])
+                pending_payload = p_next
+                x = x_next
+        return x, ages
+    if strategy == "displaced":
+        for t in range(steps):
+            if t == 0:
+                p0 = (list(x), 0)
+                y = moe(p0[0])
+                ages.append(0)
+                x_next = feedback(x, y)
+                pending_payload = p0
+                x = x_next
+            else:
+                consumed = pending_combine
+                pending_combine = None
+                p_prev = pending_payload
+                out = moe(p_prev[0])
+                p_now = (list(x), t)
+                if consumed is not None:
+                    y, cap = consumed
+                    ages.append(t - cap)
+                    x_next = feedback(x, y)
+                else:
+                    y = moe(p_now[0])
+                    ages.append(0)
+                    x_next = feedback(x, y)
+                pending_combine = (out, p_prev[1])
+                pending_payload = p_now
+                x = x_next
+        return x, ages
+    raise ValueError(strategy)
+
+
+def oracle(strategy, x0, steps):
+    """The textbook recurrence: x_{t+1} = 0.7 x_t + 0.3 MoE(x_{t-age})."""
+    xs = [list(x0)]
+    ages = []
+    for t in range(steps):
+        if strategy == "sync":
+            src = t
+        elif strategy == "interweaved":
+            src = max(t - 1, 0)
+        else:  # displaced: age 2 once two payloads are in flight
+            src = max(t - 2, 0) if t != 1 else 1
+        ages.append(t - src)
+        xs.append(feedback(xs[t], moe(xs[src])))
+    return xs[steps], ages
+
+
+def test_pipeline_port_matches_oracle_recurrences():
+    rng = random.Random(1234)
+    x0 = [rng.uniform(-1, 1) for _ in range(16)]
+    for strategy in ("sync", "interweaved", "displaced"):
+        for steps in (1, 2, 3, 4, 8, 13):
+            got_x, got_ages = pipeline_port(strategy, x0, steps)
+            want_x, want_ages = oracle(strategy, x0, steps)
+            assert got_ages == want_ages, (strategy, steps, got_ages, want_ages)
+            for a, b in zip(got_x, want_x):
+                assert a == b, (strategy, steps, "bitwise divergence")
+
+
+def test_settled_ages_match_strategy_contract():
+    x0 = [0.3, -0.7, 1.1]
+    _, sync_ages = pipeline_port("sync", x0, 8)
+    _, iw_ages = pipeline_port("interweaved", x0, 8)
+    _, dp_ages = pipeline_port("displaced", x0, 8)
+    assert sync_ages == [0] * 8
+    assert iw_ages == [0] + [1] * 7
+    assert dp_ages == [0, 0] + [2] * 6
+
+
+if __name__ == "__main__":
+    for name, fn in sorted(globals().items()):
+        if name.startswith("test_") and callable(fn):
+            fn()
+            print(f"{name} OK")

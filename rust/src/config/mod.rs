@@ -330,6 +330,41 @@ impl PlacementKind {
     }
 }
 
+/// Host-runtime step executor (DESIGN.md §10): how the dispatch→
+/// expert-FFN→combine chain of one MoE step is scheduled onto the
+/// worker pool. Orthogonal to [`Strategy`] (which picks the step/layer
+/// dataflow): every strategy runs on either executor with bit-identical
+/// output — the knob moves wall time only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PipelineMode {
+    /// Three pool-wide phases with a barrier between each; experts
+    /// statically chunked over workers (DESIGN.md §8 baseline).
+    Barriered,
+    /// Dependency-driven task executor: fused per-expert tasks on a
+    /// dynamic queue, row-split hot experts, per-device combines that
+    /// start as soon as their own inputs are ready, and cross-step
+    /// dispatch-assembly overlap in `HostPipeline`.
+    Overlapped,
+}
+
+impl PipelineMode {
+    /// Parse a CLI mode name.
+    pub fn parse(s: &str) -> Result<PipelineMode> {
+        Ok(match s {
+            "barriered" | "barrier" => PipelineMode::Barriered,
+            "overlapped" | "overlap" => PipelineMode::Overlapped,
+            _ => bail!("unknown pipeline mode {s:?} (barriered|overlapped)"),
+        })
+    }
+    /// Canonical mode name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PipelineMode::Barriered => "barriered",
+            PipelineMode::Overlapped => "overlapped",
+        }
+    }
+}
+
 /// The DICE knobs layered on top of a base [`Strategy`].
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DiceOptions {
@@ -528,6 +563,16 @@ mod tests {
         assert_eq!(on.placement, PlacementKind::AffinityAware);
         assert_eq!(on.rebalance_every, 4);
         assert_eq!(on.a2a_cross_scale, 0.5);
+    }
+
+    #[test]
+    fn pipeline_mode_parse_roundtrip() {
+        for m in [PipelineMode::Barriered, PipelineMode::Overlapped] {
+            assert_eq!(PipelineMode::parse(m.name()).unwrap(), m);
+        }
+        assert_eq!(PipelineMode::parse("overlap").unwrap(), PipelineMode::Overlapped);
+        assert_eq!(PipelineMode::parse("barrier").unwrap(), PipelineMode::Barriered);
+        assert!(PipelineMode::parse("async").is_err());
     }
 
     #[test]

@@ -630,6 +630,13 @@ impl<'a> Engine<'a> {
         let mut expert_outs: Vec<Option<Tensor>> = Vec::with_capacity(n_experts);
         let mut dev_entries: Vec<Vec<(usize, usize)>> = vec![Vec::new(); self.cfg.devices];
         let mut tile_in = arena.take(&[self.tile, d]);
+        // per-expert scratch hoisted out of the loop (allocation trim on
+        // the dispatch path, DESIGN.md §10): gather indices and the
+        // remote-row bookkeeping are cleared and refilled per expert
+        // instead of reallocated n_experts times per step.
+        let mut idx: Vec<usize> = Vec::new();
+        let mut remote_rows: Vec<usize> = Vec::new();
+        let mut remote_keys: Vec<(usize, usize)> = Vec::new();
         for (e, entries) in plan.per_expert.iter().enumerate() {
             stats.expert_loads[e] += entries.len();
             let owner = placement.owner(e);
@@ -663,17 +670,18 @@ impl<'a> Engine<'a> {
             }
             // rows of the gathered block that cross devices — the actual
             // all-to-all payload, and the only rows the codec touches.
-            let remote_rows: Vec<usize> = fresh
-                .iter()
-                .enumerate()
-                .filter(|(_, en)| en.src_device != owner)
-                .map(|(r, _)| r)
-                .collect();
-            let remote_keys: Vec<(usize, usize)> = remote_rows
-                .iter()
-                .map(|&r| (fresh[r].token, fresh[r].expert))
-                .collect();
-            let idx: Vec<usize> = fresh.iter().map(|en| en.token).collect();
+            remote_rows.clear();
+            remote_rows.extend(
+                fresh
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, en)| en.src_device != owner)
+                    .map(|(r, _)| r),
+            );
+            remote_keys.clear();
+            remote_keys.extend(remote_rows.iter().map(|&r| (fresh[r].token, fresh[r].expert)));
+            idx.clear();
+            idx.extend(fresh.iter().map(|en| en.token));
             let mut gathered = arena.take(&[idx.len(), d]);
             ops::gather_rows_into(xin_g, &idx, &mut gathered);
             // dispatch-side residual compression: the expert consumes the

@@ -8,14 +8,20 @@
 //!   "interweaved halves the buffer size" claim).
 //! * [`condcomm`] — token-level conditional communication (Sec. 4.3).
 //! * [`staleness`] — the staleness ledger.
+//! * [`pipeline`] — the overlapped multi-step host pipeline: the
+//!   displaced/interweaved schedules executed with live threads over
+//!   the host-numerics MoE layer, with MEASURED staleness ages
+//!   (DESIGN.md §10).
 
 pub mod buffers;
 pub mod condcomm;
 pub mod engine;
+pub mod pipeline;
 pub mod simulate;
 pub mod staleness;
 
 pub use engine::{one_hot, Engine, EngineConfig, RunStats};
+pub use pipeline::{HostPipeline, PipelineReport};
 pub use simulate::{
     memory_report, simulate, simulate_sweep, simulate_sweep_with, MemReport, SimReport, SweepCase,
 };

@@ -272,10 +272,14 @@ pub struct SweepCase {
 
 /// Simulate a sweep of independent cases through an explicit worker
 /// pool (DESIGN.md §8). Each case builds its own `Sim`, so the fan-out
-/// is embarrassingly parallel; reports come back in case order and are
-/// identical for any pool width (virtual time is deterministic).
+/// is embarrassingly parallel; case costs vary wildly with `steps` ×
+/// `local_batch`, so the fan-out is dynamically scheduled
+/// (`ParPool::map_dynamic`, DESIGN.md §10) — a long case no longer
+/// pins its static chunk-mates behind it. Reports come back in case
+/// order and are identical for any pool width (virtual time is
+/// deterministic and every result lands in its case's slot).
 pub fn simulate_sweep_with(pool: &ParPool, cm: &CostModel, cases: &[SweepCase]) -> Vec<SimReport> {
-    pool.map(cases, |_, c| simulate(cm, &c.wl, c.strategy, &c.opts, c.steps))
+    pool.map_dynamic(cases, |_, c| simulate(cm, &c.wl, c.strategy, &c.opts, c.steps))
 }
 
 /// As [`simulate_sweep_with`] on the ambient pool

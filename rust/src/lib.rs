@@ -25,9 +25,12 @@
 //!   schedule simulation of the same strategies at the paper's scales
 //!   ([`coordinator::simulate`](mod@coordinator::simulate)), the
 //!   stale-activation buffer manager
-//!   and allocation arena, the conditional-communication filter, and
-//!   the staleness ledger. Staleness is data, time is accounting
-//!   (DESIGN.md §2).
+//!   and allocation arena, the conditional-communication filter, the
+//!   staleness ledger, and the overlapped multi-step host pipeline
+//!   ([`coordinator::HostPipeline`], DESIGN.md §10) that executes the
+//!   displaced/interweaved overlap schedules with live threads and
+//!   MEASURED staleness ages — the cost model's overlap claim, run for
+//!   real. Staleness is data, time is accounting (DESIGN.md §2).
 //! * [`moe`] — routing bookkeeping shared by every execution path:
 //!   top-k [`moe::RoutingTable`]s, the expert→device [`moe::Placement`]
 //!   map, [`moe::DispatchPlan`] (the all-to-all payload, with memoized
@@ -45,10 +48,13 @@
 //!   top-k) over inter-step activation deltas with error feedback,
 //!   transcoding exactly the rows that cross devices. Selected by
 //!   [`config::CompressionCodec`] (`--compress`).
-//! * [`par`] — the execution runtime (DESIGN.md §8): a scoped worker
-//!   pool ([`par::ParPool`]) with static decomposition and disjoint
-//!   writes, making every pool-driven computation bit-exact for any
-//!   `--threads` width.
+//! * [`par`] — the execution runtime (DESIGN.md §8, §10): a scoped
+//!   worker pool ([`par::ParPool`]) with static decomposition and
+//!   disjoint writes, plus dynamic scheduling
+//!   ([`par::ParPool::map_dynamic`]) and a dependency-driven task
+//!   runner ([`par::ParPool::run_graph`] over [`par::TaskGraph`]) whose
+//!   pre-indexed result slots keep every pool-driven computation
+//!   bit-exact for any `--threads` width.
 //! * [`netsim`] — the analytic cost model of the paper's testbeds:
 //!   α+β collectives under host-bridge contention, FLOP pricing with a
 //!   utilisation ramp, codec and migration overheads, and the

@@ -1,4 +1,7 @@
-//! Dense linear algebra substrate for the quality metrics.
+//! Dense linear algebra substrate: the cache-blocked transposed-B
+//! matmul kernels (with optional fused elementwise epilogue) behind the
+//! host expert-FFN path, plus the eigen/sqrtm machinery behind the
+//! quality metrics.
 //!
 //! The Fréchet distance FID(m1,C1; m2,C2) = |m1-m2|² + tr(C1 + C2 −
 //! 2·(C1·C2)^{1/2}) needs a PSD matrix square root; we compute it via a
@@ -16,14 +19,30 @@ const MB: usize = 16;
 /// resident in L1/L2 across the whole block.
 const NB: usize = 64;
 
-/// C = A · Bᵀ for [m, k] × [n, k] row-major tensors — the cache-blocked
-/// kernel behind both the host expert-FFN path and the FID `sqrtm`
-/// pipeline. Both operands are traversed row-contiguously (that is the
-/// point of the transposed-B layout), the output is tiled MB × NB, and
-/// the row tiles fan out over `pool`. Each C row is produced by exactly
-/// one worker with a fixed accumulation order, so the result is
-/// bit-exact for any pool width (DESIGN.md §8 determinism contract).
-pub fn matmul_bt_with(pool: &ParPool, a: &Tensor, bt: &Tensor) -> Tensor {
+/// tanh-approximation GELU (the same form the Pallas expert kernel
+/// lowers, `python/compile/kernels/expert_ffn.py`) — exposed here so
+/// the fused-epilogue kernel and the host MoE path share one definition
+/// bit-for-bit.
+pub fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (0.797_884_6 * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// C[i,j] = epi(Σ_l A[i,l]·Bᵀ[j,l]) for [m, k] × [n, k] row-major
+/// tensors — the cache-blocked transposed-B kernel with a fused
+/// elementwise epilogue. Both operands are traversed row-contiguously
+/// (that is the point of the transposed-B layout), the output is tiled
+/// MB × NB, and the row tiles fan out over `pool`. Each C row is
+/// produced by exactly one worker with a fixed accumulation order, so
+/// the result is bit-exact for any pool width (DESIGN.md §8 determinism
+/// contract) — and because `epi` is applied to the finished accumulator
+/// of each element, fusing it is bit-identical to a separate full pass
+/// over C while touching the output exactly once (DESIGN.md §10: this
+/// is how the host expert FFN drops its standalone GELU sweep over the
+/// [rows, d_ff] hidden activation).
+pub fn matmul_bt_epi_with<E>(pool: &ParPool, a: &Tensor, bt: &Tensor, epi: E) -> Tensor
+where
+    E: Fn(f32) -> f32 + Sync,
+{
     let (m, k) = (a.shape()[0], a.shape()[1]);
     let (n, k2) = (bt.shape()[0], bt.shape()[1]);
     assert_eq!(k, k2, "matmul_bt {:?} x {:?}ᵀ", a.shape(), bt.shape());
@@ -38,6 +57,7 @@ pub fn matmul_bt_with(pool: &ParPool, a: &Tensor, bt: &Tensor) -> Tensor {
     let pool = if m * n * k < (1 << 18) { &serial } else { pool };
     let ad = a.data();
     let btd = bt.data();
+    let epi = &epi;
     pool.for_chunks_mut(c.data_mut(), MB * n, |blk, cchunk| {
         let i0 = blk * MB;
         let rows = cchunk.len() / n;
@@ -62,7 +82,7 @@ pub fn matmul_bt_with(pool: &ParPool, a: &Tensor, bt: &Tensor) -> Tensor {
                         acc += arow[l] * brow[l];
                         l += 1;
                     }
-                    crow[j] = acc;
+                    crow[j] = epi(acc);
                 }
             }
             j0 = j1;
@@ -71,13 +91,35 @@ pub fn matmul_bt_with(pool: &ParPool, a: &Tensor, bt: &Tensor) -> Tensor {
     c
 }
 
+/// C = A · Bᵀ — the epilogue kernel with the identity epilogue; the
+/// plain workhorse behind the host expert-FFN path and the FID `sqrtm`
+/// pipeline.
+pub fn matmul_bt_with(pool: &ParPool, a: &Tensor, bt: &Tensor) -> Tensor {
+    matmul_bt_epi_with(pool, a, bt, |v| v)
+}
+
+/// C = gelu(A · Bᵀ) — the fused-GELU first FFN projection
+/// ([`matmul_bt_epi_with`] with [`gelu`]); bit-identical to
+/// [`matmul_bt_with`] followed by an elementwise GELU pass.
+pub fn matmul_bt_gelu_with(pool: &ParPool, a: &Tensor, bt: &Tensor) -> Tensor {
+    matmul_bt_epi_with(pool, a, bt, gelu)
+}
+
 /// C = A · Bᵀ on the ambient pool ([`ParPool::current`]).
 pub fn matmul_bt(a: &Tensor, bt: &Tensor) -> Tensor {
     matmul_bt_with(&ParPool::current(), a, bt)
 }
 
-/// C = A · B for [m,k] x [k,n] row-major tensors: transposes B once and
-/// runs the blocked transposed-B kernel on the ambient pool.
+/// C = A · B for [m,k] x [k,n] row-major tensors.
+///
+/// **Cost note:** B is silently RE-TRANSPOSED into a fresh [n, k]
+/// buffer on every call (an O(k·n) copy plus an extra allocation)
+/// before the blocked transposed-B kernel runs. Hot paths that already
+/// hold B in transposed layout — expert FFN weights, Jacobi
+/// eigenvector matrices (`Vᵀ` is just `matmul_bt(_, &v)`), symmetric
+/// operands (`Bᵀ = B` bit-for-bit for covariances and diagonals) —
+/// must call [`matmul_bt`] directly; keep `matmul` for one-off
+/// products where no transposed layout exists.
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     assert_eq!(
         a.shape()[1],
@@ -167,6 +209,11 @@ pub fn jacobi_eigh(a: &Tensor, max_sweeps: usize) -> (Vec<f32>, Tensor) {
 /// PSD matrix square root via Jacobi: A = V diag(λ) Vᵀ ⇒
 /// sqrtm(A) = V diag(√max(λ,0)) Vᵀ. Negative eigenvalues (numerical
 /// noise on near-singular covariances) are clamped to zero.
+///
+/// Both products run through [`matmul_bt`]: the diagonal factor is its
+/// own transpose bit-for-bit, and `· Vᵀ` is exactly the transposed-B
+/// layout — so neither call pays [`matmul`]'s hidden re-transpose, with
+/// bit-identical output to the naive composition.
 pub fn sqrtm_psd(a: &Tensor) -> Tensor {
     let n = a.shape()[0];
     let (eig, v) = jacobi_eigh(a, 30);
@@ -174,14 +221,23 @@ pub fn sqrtm_psd(a: &Tensor) -> Tensor {
     for i in 0..n {
         sd.set(&[i, i], eig[i].max(0.0).sqrt());
     }
-    matmul(&matmul(&v, &sd), &transpose(&v))
+    matmul_bt(&matmul_bt(&v, &sd), &v)
 }
 
 /// Trace of sqrtm(C1·C2) computed stably as Σ √λ_i(C1·C2) where the λ
 /// are obtained from the symmetric form S = √C1 · C2 · √C1.
+///
+/// `c1`/`c2` are covariance matrices, symmetric by contract (and
+/// bit-for-bit when produced by `ops::cov_rows`, whose (a,b)/(b,a)
+/// accumulations are identical products in identical order), so the
+/// inner product takes `c2` as an already-transposed right operand via
+/// [`matmul_bt`]. The OUTER right operand `√C1` is only symmetric up to
+/// Jacobi rounding, so that product keeps the explicit-transpose
+/// [`matmul`] path; the symmetrisation below absorbs the noise either
+/// way.
 pub fn trace_sqrt_product(c1: &Tensor, c2: &Tensor) -> f32 {
     let r1 = sqrtm_psd(c1);
-    let s = matmul(&matmul(&r1, c2), &r1);
+    let s = matmul(&matmul_bt(&r1, c2), &r1);
     // symmetrise against accumulation error
     let st = transpose(&s);
     let mut sym = s.clone();
@@ -292,6 +348,53 @@ mod tests {
             let par = matmul_bt_with(&crate::par::ParPool::new(t), &a, &bt);
             assert_eq!(serial, par, "threads={t} must be bit-exact");
         }
+    }
+
+    #[test]
+    fn fused_epilogue_matches_separate_pass_bit_exact() {
+        // 40·96·80 ≈ 307k MACs: above the inline threshold, so the pool
+        // really fans out — the fused epilogue must equal "matmul, then
+        // a full elementwise pass" bit-for-bit at every width
+        let mut r = Rng::new(5);
+        let mut a = Tensor::zeros(&[40, 96]);
+        let mut bt = Tensor::zeros(&[80, 96]);
+        for v in a.data_mut() {
+            *v = r.normal_f32();
+        }
+        for v in bt.data_mut() {
+            *v = r.normal_f32();
+        }
+        for t in [1usize, 2, 4] {
+            let pool = crate::par::ParPool::new(t);
+            let mut sep = matmul_bt_with(&pool, &a, &bt);
+            for v in sep.data_mut() {
+                *v = gelu(*v);
+            }
+            let fused = matmul_bt_gelu_with(&pool, &a, &bt);
+            assert_eq!(sep, fused, "threads={t}");
+            // and an arbitrary closure epilogue fuses the same way
+            let mut scaled = matmul_bt_with(&pool, &a, &bt);
+            for v in scaled.data_mut() {
+                *v = 2.0 * *v + 1.0;
+            }
+            let fused2 = matmul_bt_epi_with(&pool, &a, &bt, |v| 2.0 * v + 1.0);
+            assert_eq!(scaled, fused2, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn sqrtm_bt_routing_is_bit_exact_vs_naive_composition() {
+        // the diagonal factor and the double transpose make the
+        // matmul_bt routing inside sqrtm_psd EXACTLY the old
+        // matmul/transpose composition, not approximately
+        let p = random_psd(8, 21);
+        let (eig, v) = jacobi_eigh(&p, 30);
+        let mut sd = Tensor::zeros(&[8, 8]);
+        for i in 0..8 {
+            sd.set(&[i, i], eig[i].max(0.0).sqrt());
+        }
+        let naive = matmul(&matmul(&v, &sd), &transpose(&v));
+        assert_eq!(naive, sqrtm_psd(&p));
     }
 
     #[test]

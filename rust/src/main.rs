@@ -11,7 +11,7 @@
 //!   exp <name> [...]           run an experiment driver (table1, table2,
 //!                              table3, table4, table5, fig2, fig4, fig9,
 //!                              fig10, fig14, motivation, compress,
-//!                              placement)
+//!                              placement, pipeline)
 
 use anyhow::{bail, Result};
 
@@ -39,6 +39,8 @@ fn usage() -> String {
          dice exp      table1 --samples 256\n\
          dice exp      compress            residual-codec trade-off (artifact-free)\n\
          dice exp      placement           placement-policy study (artifact-free)\n\
+         dice exp      pipeline            overlapped-vs-barriered step pipeline\n\
+         \x20                              with measured staleness (artifact-free)\n\
          \n\
          global: --threads N      worker-pool width for the execution runtime\n\
          \x20       (default: PAR_THREADS env, else all cores; output is\n\
@@ -294,6 +296,15 @@ fn main() -> Result<()> {
                     )?;
                     t.print();
                     exp::write_results("placement_policies", &t.render(), &j)?;
+                }
+                "pipeline" => {
+                    let (t, j) = exp::pipeline::report(
+                        a.usize_or("tokens", 512),
+                        a.usize_or("steps", 12),
+                        seed,
+                    )?;
+                    t.print();
+                    exp::write_results("pipeline_overlap", &t.render(), &j)?;
                 }
                 "motivation" => {
                     let (t, j) = exp::scaling::motivation()?;

@@ -6,26 +6,38 @@
 //! parallel), what the `par_determinism` integration suite pins
 //! bit-exact across thread counts, and what `examples/perfprobe.rs
 //! --sim` instruments per phase. It reuses the artifact engine's exact
-//! routing types ([`RoutingTable`], [`DispatchPlan`], [`Placement`]),
-//! and its parallel decomposition mirrors `coordinator::Engine::ep_moe`
-//! one-to-one: experts fan out across workers, the combine is a pool
-//! barrier, and each emulated device owns a disjoint block of output
-//! token rows (DESIGN.md §8).
+//! routing types ([`RoutingTable`], [`DispatchPlan`], [`Placement`]).
+//!
+//! Two executors share the same numerics (bit-exact against each other
+//! and across pool widths):
+//!
+//! * **Barriered** ([`HostMoeLayer::step`]) — the DESIGN.md §8 baseline:
+//!   dispatch, expert-FFN and combine run as three pool-wide phases with
+//!   a barrier between each, experts statically chunked over workers.
+//!   One hot expert stalls the whole pool at every barrier.
+//! * **Overlapped** ([`HostMoeLayer::step_overlapped`]) — the DESIGN.md
+//!   §10 executor: the per-expert chain gather→FFN→combine is fused into
+//!   dynamically-scheduled tasks on [`ParPool::run_graph`]; oversized
+//!   experts are row-split across idle workers, and each per-device
+//!   combine starts the moment the experts *it* depends on finish — no
+//!   global barrier anywhere. Determinism survives because results land
+//!   in slots pre-indexed by (expert, row) and each device accumulates
+//!   its disjoint output rows in fixed (expert asc, entry asc) order.
+//!
+//! [`HostMoeLayer::assemble`] splits the dispatch-payload staging out of
+//! the step so `coordinator::pipeline::HostPipeline` can run it on a
+//! comm sub-pool, overlapped with a neighbouring step's expert compute.
 
+use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
+use crate::coordinator::buffers::TensorArena;
 use crate::linalg;
-use crate::par::ParPool;
+use crate::par::{ParPool, TaskGraph};
 use crate::rng::Rng;
 use crate::tensor::{ops, Tensor};
 
-use super::{DispatchPlan, Placement, RoutingTable};
-
-/// tanh-approximation GELU (the same form the Pallas expert kernel
-/// lowers, `python/compile/kernels/expert_ffn.py`).
-fn gelu(x: f32) -> f32 {
-    0.5 * x * (1.0 + (0.797_884_6 * (x + 0.044715 * x * x * x)).tanh())
-}
+use super::{DispatchEntry, DispatchPlan, Placement, RoutingTable};
 
 /// In-place softmax over the last axis.
 fn softmax_rows(t: &mut Tensor) {
@@ -68,12 +80,13 @@ impl ExpertFfn {
         ExpertFfn { w1t, w2t }
     }
 
-    /// y = gelu(x · W1ᵀ) · W2ᵀ over [n, d_model] rows.
+    /// y = gelu(x · W1ᵀ) · W2ᵀ over [n, d_model] rows. The GELU runs as
+    /// a fused epilogue of the first projection
+    /// ([`linalg::matmul_bt_gelu_with`]) — bit-identical to a separate
+    /// elementwise pass, without the extra sweep over the [n, d_ff]
+    /// hidden activation.
     pub fn forward(&self, pool: &ParPool, x: &Tensor) -> Tensor {
-        let mut h = linalg::matmul_bt_with(pool, x, &self.w1t);
-        for v in h.data_mut() {
-            *v = gelu(*v);
-        }
+        let h = linalg::matmul_bt_gelu_with(pool, x, &self.w1t);
         linalg::matmul_bt_with(pool, &h, &self.w2t)
     }
 }
@@ -105,32 +118,102 @@ pub struct HostMoeLayer {
     placement: Placement,
 }
 
-/// Wall-clock seconds per phase of one host engine step.
+/// Per-phase BUSY seconds plus wall-clock seconds of one host engine
+/// step.
+///
+/// For the barriered executor the phases are sequential, so
+/// `total_s() ≈ wall_s`. Under the overlapped executor the phases run
+/// concurrently on the task crew: each phase field then accumulates the
+/// busy time of every task of that kind, and the step obeys
+/// `wall_s ≤ total_s()` (up to scheduling overhead) — the gap IS the
+/// measured overlap. Phase times no longer sum to wall time by design;
+/// report both (`perfprobe --sim` does).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct HostPhases {
-    /// Router probs + top-k table + dispatch plan.
+    /// Router probs + top-k table + dispatch plan (busy).
     pub route_s: f64,
-    /// Per-expert token gather (the dispatch payload assembly).
+    /// Per-expert token gather — the dispatch payload assembly (busy).
     pub dispatch_s: f64,
-    /// Expert FFN execution.
+    /// Expert FFN execution (busy).
     pub expert_s: f64,
-    /// Score-scaled scatter back to per-device token rows (pool barrier).
+    /// Score-scaled scatter back to per-device token rows (busy).
     pub combine_s: f64,
+    /// Wall-clock of the whole step (elapsed, not busy).
+    pub wall_s: f64,
 }
 
 impl HostPhases {
-    /// Sum of all four phases.
+    /// Sum of the four phase BUSY times. Equals elapsed time for the
+    /// barriered executor only; compare against [`HostPhases::wall_s`]
+    /// to see the overlap (`total_s / wall_s` > 1 means phases ran
+    /// concurrently).
     pub fn total_s(&self) -> f64 {
         self.route_s + self.dispatch_s + self.expert_s + self.combine_s
     }
 
-    /// Accumulate another step's phase times into this one.
+    /// Accumulate another step's phase + wall times into this one.
     pub fn accumulate(&mut self, o: &HostPhases) {
         self.route_s += o.route_s;
         self.dispatch_s += o.dispatch_s;
         self.expert_s += o.expert_s;
         self.combine_s += o.combine_s;
+        self.wall_s += o.wall_s;
     }
+}
+
+/// A staged dispatch payload: every expert's token block already
+/// gathered, with the routing entries that produced it. This is the
+/// unit the staleness buffers hold — `HostPipeline` assembles it on the
+/// comm sub-pool (possibly one step ahead) and feeds it to
+/// [`HostMoeLayer::ffn_combine_overlapped`] on the compute sub-pool.
+#[derive(Debug)]
+pub struct HostDispatch {
+    /// Entries grouped by destination expert; the append order (expert
+    /// asc, entry asc) fixes the combine accumulation order.
+    pub per_expert: Vec<Vec<DispatchEntry>>,
+    /// Per-expert gathered token blocks [load_e, d_model] (arena slots).
+    pub gathered: Vec<Tensor>,
+    /// Diffusion step the payload was captured at (staleness age =
+    /// consume step − this).
+    pub captured_step: usize,
+    /// Token count of the step the payload was gathered from.
+    pub n_tokens: usize,
+}
+
+impl HostDispatch {
+    /// Bytes held live by this payload (gathered activations + entry
+    /// metadata) — the displaced-vs-interweaved buffer accounting unit.
+    pub fn byte_size(&self) -> usize {
+        let entries: usize = self.per_expert.iter().map(Vec::len).sum();
+        self.gathered.iter().map(Tensor::byte_size).sum::<usize>()
+            + entries * std::mem::size_of::<DispatchEntry>()
+    }
+
+    /// Return the gathered blocks to `arena` for the next assembly.
+    pub fn recycle_into(self, arena: &mut TensorArena) {
+        for t in self.gathered {
+            arena.recycle(t);
+        }
+    }
+}
+
+/// Which memory the overlapped executor's fused gather stage reads
+/// from: the raw step input (gather fused into the expert task), or a
+/// pre-assembled payload's per-expert blocks.
+#[derive(Clone, Copy)]
+enum BlockSource<'a> {
+    /// Gather straight from the [n_tokens, d_model] step input.
+    Tokens(&'a Tensor),
+    /// Stage from pre-gathered per-expert blocks ([`HostDispatch`]).
+    Gathered(&'a [Tensor]),
+}
+
+/// One FFN subtask's result: the expert output rows it owns plus its
+/// busy-time split.
+struct SubOut {
+    y: Tensor,
+    gather_s: f64,
+    ffn_s: f64,
 }
 
 impl HostMoeLayer {
@@ -173,43 +256,102 @@ impl HostMoeLayer {
         self
     }
 
+    /// The shared routing front end (router matmul → softmax → top-k):
+    /// ONE definition used by [`HostMoeLayer::route`] (and through it
+    /// every `step*` variant) and [`HostMoeLayer::assemble`], so the
+    /// barriered, overlapped and pipeline paths cannot drift apart.
+    fn route_table(&self, pool: &ParPool, x: &Tensor) -> RoutingTable {
+        let mut logits = linalg::matmul_bt_with(pool, x, &self.router_t);
+        softmax_rows(&mut logits);
+        RoutingTable::from_probs(&logits, self.cfg.top_k)
+    }
+
     /// Route `x` ([n_tokens, d_model]) and build the dispatch plan.
     pub fn route(&self, pool: &ParPool, x: &Tensor) -> (RoutingTable, DispatchPlan) {
         let (n_tokens, _) = x.rows();
-        let mut logits = linalg::matmul_bt_with(pool, x, &self.router_t);
-        softmax_rows(&mut logits);
-        let routing = RoutingTable::from_probs(&logits, self.cfg.top_k);
+        let routing = self.route_table(pool, x);
         let plan = DispatchPlan::build(&routing, n_tokens / self.cfg.devices);
         (routing, plan)
     }
 
     /// One dispatch→expert→combine engine step over [n_tokens, d_model]
-    /// tokens. `n_tokens` must split evenly over the devices. Bit-exact
-    /// for any pool width: every output row is accumulated by exactly
-    /// one worker in a fixed (expert, entry) order.
+    /// tokens (BARRIERED executor). `n_tokens` must split evenly over
+    /// the devices. Bit-exact for any pool width: every output row is
+    /// accumulated by exactly one worker in a fixed (expert, entry)
+    /// order.
     pub fn step(&self, pool: &ParPool, x: &Tensor) -> Tensor {
         self.step_timed(pool, x).0
     }
 
     /// As [`HostMoeLayer::step`], also returning per-phase timings.
     pub fn step_timed(&self, pool: &ParPool, x: &Tensor) -> (Tensor, HostPhases) {
+        self.step_inner(pool, x, None, false)
+    }
+
+    /// Barriered step with an INJECTED routing table (skewed-workload
+    /// benches drive this with `placement::skewed_probs` routing instead
+    /// of the layer's own router).
+    pub fn step_routed_timed(
+        &self,
+        pool: &ParPool,
+        x: &Tensor,
+        routing: &RoutingTable,
+    ) -> (Tensor, HostPhases) {
+        self.step_inner(pool, x, Some(routing), false)
+    }
+
+    /// The one body behind all four public step entry points: shape
+    /// check, route (or plan-build from an injected table) timed as
+    /// `route_s`, then the chosen executor, with `wall_s` stamped over
+    /// the whole step.
+    fn step_inner(
+        &self,
+        pool: &ParPool,
+        x: &Tensor,
+        routing: Option<&RoutingTable>,
+        overlapped: bool,
+    ) -> (Tensor, HostPhases) {
+        let t_all = Instant::now();
+        self.check_step_shape(x);
+        let (n_tokens, _) = x.rows();
+        let t0 = Instant::now();
+        let plan = match routing {
+            Some(rt) => DispatchPlan::build(rt, n_tokens / self.cfg.devices),
+            None => self.route(pool, x).1,
+        };
+        let route_s = t0.elapsed().as_secs_f64();
+        let (out, mut ph) = if overlapped {
+            self.run_overlapped(pool, &plan.per_expert, BlockSource::Tokens(x), n_tokens)
+        } else {
+            self.step_barriered_from_plan(pool, x, &plan.per_expert)
+        };
+        ph.route_s = route_s;
+        ph.wall_s = t_all.elapsed().as_secs_f64();
+        (out, ph)
+    }
+
+    fn check_step_shape(&self, x: &Tensor) {
         let (n_tokens, d) = x.rows();
         assert_eq!(d, self.cfg.d_model, "token width {d} != d_model");
-        assert_eq!(
-            n_tokens % self.cfg.devices,
-            0,
-            "tokens {n_tokens} % devices {} != 0",
+        assert!(
+            n_tokens % self.cfg.devices == 0 && n_tokens >= self.cfg.devices,
+            "tokens {n_tokens} must split evenly over {} devices",
             self.cfg.devices
         );
-        let tokens_per_dev = n_tokens / self.cfg.devices;
-        let mut ph = HostPhases::default();
+    }
 
-        let t0 = Instant::now();
-        let (_routing, plan) = self.route(pool, x);
-        ph.route_s = t0.elapsed().as_secs_f64();
-        // Only the Sync field escapes into pool closures: &DispatchPlan
-        // itself is !Sync (the cross-bytes memo cell).
-        let per_expert = &plan.per_expert;
+    /// The three barriered phases (dispatch gather / expert FFN /
+    /// combine) over an already-built plan. Static chunking, one
+    /// barrier between each phase — the baseline the overlapped
+    /// executor is gated against.
+    fn step_barriered_from_plan(
+        &self,
+        pool: &ParPool,
+        x: &Tensor,
+        per_expert: &[Vec<DispatchEntry>],
+    ) -> (Tensor, HostPhases) {
+        let (n_tokens, _) = x.rows();
+        let mut ph = HostPhases::default();
 
         // dispatch: assemble each expert's token block (parallel fan-out
         // over experts — the all-to-all send side).
@@ -229,12 +371,26 @@ impl HostMoeLayer {
             pool.map(&gathered, |e, g| self.experts[e].forward(&serial, g));
         ph.expert_s = t0.elapsed().as_secs_f64();
 
-        // combine: pool barrier; device `dev` owns output rows
-        // [dev·tpd, (dev+1)·tpd) and walks only ITS bucket of (expert,
-        // row) pairs, whose append order (expert asc, entry asc) fixes
-        // the per-row accumulation order — disjoint writes,
-        // deterministic sums, each entry touched exactly once.
         let t0 = Instant::now();
+        let out = self.combine_barriered(pool, per_expert, &outputs, n_tokens);
+        ph.combine_s = t0.elapsed().as_secs_f64();
+        (out, ph)
+    }
+
+    /// The barriered combine: pool barrier; device `dev` owns output
+    /// rows [dev·tpd, (dev+1)·tpd) and walks only ITS bucket of
+    /// (expert, row) pairs, whose append order (expert asc, entry asc)
+    /// fixes the per-row accumulation order — disjoint writes,
+    /// deterministic sums, each entry touched exactly once.
+    fn combine_barriered(
+        &self,
+        pool: &ParPool,
+        per_expert: &[Vec<DispatchEntry>],
+        outputs: &[Tensor],
+        n_tokens: usize,
+    ) -> Tensor {
+        let d = self.cfg.d_model;
+        let tokens_per_dev = n_tokens / self.cfg.devices;
         let mut dev_entries: Vec<Vec<(usize, usize)>> = vec![Vec::new(); self.cfg.devices];
         for (e, entries) in per_expert.iter().enumerate() {
             for (r, en) in entries.iter().enumerate() {
@@ -242,7 +398,6 @@ impl HostMoeLayer {
             }
         }
         let mut out = Tensor::zeros(&[n_tokens, d]);
-        let outs = &outputs;
         let de = &dev_entries;
         pool.for_chunks_mut(out.data_mut(), tokens_per_dev * d, |dev, chunk| {
             let t_lo = dev * tokens_per_dev;
@@ -250,12 +405,299 @@ impl HostMoeLayer {
                 let en = &per_expert[e][r];
                 let at = (en.token - t_lo) * d;
                 let dst = &mut chunk[at..at + d];
-                for (o, s) in dst.iter_mut().zip(outs[e].row(r)) {
+                for (o, s) in dst.iter_mut().zip(outputs[e].row(r)) {
                     *o += en.score * s;
                 }
             }
         });
+        out
+    }
+
+    // ------------------------------------------------------------------
+    // Overlapped executor (DESIGN.md §10)
+    // ------------------------------------------------------------------
+
+    /// One engine step on the OVERLAPPED executor: gather→FFN→combine
+    /// fused into dynamically-scheduled tasks, oversized experts
+    /// row-split, per-device combines dependency-chained — no global
+    /// phase barrier. Bit-exact against [`HostMoeLayer::step`] for any
+    /// pool width.
+    pub fn step_overlapped(&self, pool: &ParPool, x: &Tensor) -> Tensor {
+        self.step_overlapped_timed(pool, x).0
+    }
+
+    /// As [`HostMoeLayer::step_overlapped`], also returning per-phase
+    /// BUSY timings plus the step's wall time (see [`HostPhases`]).
+    pub fn step_overlapped_timed(&self, pool: &ParPool, x: &Tensor) -> (Tensor, HostPhases) {
+        self.step_inner(pool, x, None, true)
+    }
+
+    /// Overlapped step with an INJECTED routing table (the skewed
+    /// workload of the `pipeline_overlap` perf gate).
+    pub fn step_overlapped_routed_timed(
+        &self,
+        pool: &ParPool,
+        x: &Tensor,
+        routing: &RoutingTable,
+    ) -> (Tensor, HostPhases) {
+        self.step_inner(pool, x, Some(routing), true)
+    }
+
+    /// Stage a dispatch payload from `x`: route on `pool` (the shared
+    /// front end of [`HostMoeLayer::route`]), then gather every
+    /// expert's token block into recycled `arena` slots. Slot pre-take
+    /// is single-threaded (the arena is `&mut`), the row memcpys fan
+    /// out over `pool` — and the path needs no per-step index buffers
+    /// at all (rows are copied straight from the plan entries), so a
+    /// warm steady-state assembly allocates nothing.
+    pub fn assemble(
+        &self,
+        pool: &ParPool,
+        x: &Tensor,
+        step: usize,
+        arena: &mut TensorArena,
+    ) -> (HostDispatch, HostPhases) {
+        self.check_step_shape(x);
+        let t0 = Instant::now();
+        let routing = self.route_table(pool, x);
+        let route_s = t0.elapsed().as_secs_f64();
+        let (disp, mut ph) = self.assemble_routed(pool, x, &routing, step, arena);
+        ph.route_s += route_s;
+        (disp, ph)
+    }
+
+    /// As [`HostMoeLayer::assemble`] with an injected routing table.
+    pub fn assemble_routed(
+        &self,
+        pool: &ParPool,
+        x: &Tensor,
+        routing: &RoutingTable,
+        step: usize,
+        arena: &mut TensorArena,
+    ) -> (HostDispatch, HostPhases) {
+        self.check_step_shape(x);
+        let (n_tokens, d) = x.rows();
+        let mut ph = HostPhases::default();
+        let t0 = Instant::now();
+        let mut plan = DispatchPlan::build(routing, n_tokens / self.cfg.devices);
+        ph.route_s = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let per_expert = std::mem::take(&mut plan.per_expert);
+        let mut gathered: Vec<Tensor> = per_expert
+            .iter()
+            .map(|entries| arena.take(&[entries.len(), d]))
+            .collect();
+        // fill the disjoint slots over the pool, one task per expert
+        // block; row order is the entry order, so the result is
+        // bit-identical for any pool width.
+        let pe = &per_expert;
+        pool.for_chunks_mut(&mut gathered, 1, |e, slot| {
+            let g = &mut slot[0];
+            for (o, en) in pe[e].iter().enumerate() {
+                g.row_mut(o).copy_from_slice(x.row(en.token));
+            }
+        });
+        ph.dispatch_s = t0.elapsed().as_secs_f64();
+        (
+            HostDispatch {
+                per_expert,
+                gathered,
+                captured_step: step,
+                n_tokens,
+            },
+            ph,
+        )
+    }
+
+    /// Expert-FFN + combine of a staged payload on the OVERLAPPED
+    /// executor (the pipeline's compute side; the gather already
+    /// happened at assembly).
+    pub fn ffn_combine_overlapped(
+        &self,
+        pool: &ParPool,
+        disp: &HostDispatch,
+    ) -> (Tensor, HostPhases) {
+        let t_all = Instant::now();
+        let (out, mut ph) = self.run_overlapped(
+            pool,
+            &disp.per_expert,
+            BlockSource::Gathered(&disp.gathered),
+            disp.n_tokens,
+        );
+        ph.wall_s = t_all.elapsed().as_secs_f64();
+        (out, ph)
+    }
+
+    /// Expert-FFN + combine of a staged payload on the BARRIERED
+    /// executor (static chunking + phase barriers) — the pipeline's
+    /// `--pipeline barriered` reference path.
+    pub fn ffn_combine_barriered(
+        &self,
+        pool: &ParPool,
+        disp: &HostDispatch,
+    ) -> (Tensor, HostPhases) {
+        let t_all = Instant::now();
+        let mut ph = HostPhases::default();
+        let t0 = Instant::now();
+        let serial = ParPool::new(1);
+        let outputs: Vec<Tensor> =
+            pool.map(&disp.gathered, |e, g| self.experts[e].forward(&serial, g));
+        ph.expert_s = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let out = self.combine_barriered(pool, &disp.per_expert, &outputs, disp.n_tokens);
         ph.combine_s = t0.elapsed().as_secs_f64();
+        ph.wall_s = t_all.elapsed().as_secs_f64();
+        (out, ph)
+    }
+
+    /// The overlapped task crew: one fused gather→FFN task per expert
+    /// row-slice, one combine task per device, dependency edges from
+    /// each slice to exactly the devices its rows scatter into, all
+    /// executed by [`ParPool::run_graph`]'s dynamic queue.
+    ///
+    /// Determinism (DESIGN.md §10): FFN results land in slots
+    /// pre-indexed by subtask id; each device accumulates its DISJOINT
+    /// block of output rows walking its entry bucket in (expert asc,
+    /// entry asc) order — identical to the barriered combine order —
+    /// so the output is bit-exact vs [`HostMoeLayer::step`] for any
+    /// pool width and any completion order. Row-splitting cannot change
+    /// bits either: each output row of the blocked matmul kernel
+    /// depends only on its own input row.
+    fn run_overlapped(
+        &self,
+        pool: &ParPool,
+        per_expert: &[Vec<DispatchEntry>],
+        source: BlockSource<'_>,
+        n_tokens: usize,
+    ) -> (Tensor, HostPhases) {
+        let d = self.cfg.d_model;
+        let devices = self.cfg.devices;
+        assert!(n_tokens % devices == 0 && n_tokens >= devices, "token shard shape");
+        let tpd = n_tokens / devices;
+
+        // row-split layout: aim for ~2 slices per worker so a hot
+        // expert spreads over idle workers; the floor keeps tiny blocks
+        // whole. The split factor may depend on the pool width — bits
+        // cannot (per-row independence above).
+        let total: usize = per_expert.iter().map(Vec::len).sum();
+        let target = total.div_ceil(2 * pool.threads().max(1)).max(8);
+        let n_experts = per_expert.len();
+        let mut sub_base = vec![0usize; n_experts];
+        let mut sub_rows = vec![0usize; n_experts];
+        let mut sub_expert: Vec<usize> = Vec::new();
+        let mut sub_lo: Vec<usize> = Vec::new();
+        let mut sub_hi: Vec<usize> = Vec::new();
+        for (e, entries) in per_expert.iter().enumerate() {
+            sub_base[e] = sub_expert.len();
+            let n_e = entries.len();
+            sub_rows[e] = target.min(n_e.max(1));
+            let mut lo = 0usize;
+            while lo < n_e {
+                let hi = (lo + sub_rows[e]).min(n_e);
+                sub_expert.push(e);
+                sub_lo.push(lo);
+                sub_hi.push(hi);
+                lo = hi;
+            }
+        }
+        let n_subs = sub_expert.len();
+
+        // task graph: subtasks 0..n_subs, then one combine per device.
+        // A device depends on exactly the slices whose rows it scatters;
+        // per device the slice sequence is nondecreasing (entries walk
+        // expert asc, row asc), so dedupe needs only the last id.
+        let mut graph = TaskGraph::new(n_subs + devices);
+        let mut dev_entries: Vec<Vec<(usize, usize)>> = vec![Vec::new(); devices];
+        let mut last_sub: Vec<usize> = vec![usize::MAX; devices];
+        for (e, entries) in per_expert.iter().enumerate() {
+            for (r, en) in entries.iter().enumerate() {
+                let dev = en.token / tpd;
+                let sub = sub_base[e] + r / sub_rows[e];
+                if last_sub[dev] != sub {
+                    graph.edge(sub, n_subs + dev);
+                    last_sub[dev] = sub;
+                }
+                dev_entries[dev].push((e, r));
+            }
+        }
+
+        let outs: Vec<OnceLock<SubOut>> = (0..n_subs).map(|_| OnceLock::new()).collect();
+        let dev_s: Vec<OnceLock<f64>> = (0..devices).map(|_| OnceLock::new()).collect();
+        let mut out = Tensor::zeros(&[n_tokens, d]);
+        let serial = ParPool::new(1);
+        {
+            // each device task locks exactly its own chunk, exactly
+            // once — the Mutex is an ownership handover, not contention
+            let chunks: Vec<Mutex<&mut [f32]>> =
+                out.data_mut().chunks_mut(tpd * d).map(Mutex::new).collect();
+            let run = |task: usize| {
+                if task < n_subs {
+                    let e = sub_expert[task];
+                    let (lo, hi) = (sub_lo[task], sub_hi[task]);
+                    let t0 = Instant::now();
+                    // a pre-gathered block consumed whole (the common,
+                    // un-split case) is borrowed directly — the payload
+                    // is NOT copied a second time; only row-split slices
+                    // and fused-gather tasks stage into a local block.
+                    let staged: Option<Tensor> = match source {
+                        BlockSource::Gathered(_) if lo == 0 && hi == per_expert[e].len() => None,
+                        BlockSource::Gathered(g) => {
+                            let mut b = Tensor::zeros(&[hi - lo, d]);
+                            b.data_mut().copy_from_slice(&g[e].data()[lo * d..hi * d]);
+                            Some(b)
+                        }
+                        BlockSource::Tokens(x) => {
+                            let mut b = Tensor::zeros(&[hi - lo, d]);
+                            for (o, en) in per_expert[e][lo..hi].iter().enumerate() {
+                                b.row_mut(o).copy_from_slice(x.row(en.token));
+                            }
+                            Some(b)
+                        }
+                    };
+                    let block: &Tensor = match (&staged, source) {
+                        (Some(b), _) => b,
+                        (None, BlockSource::Gathered(g)) => &g[e],
+                        (None, BlockSource::Tokens(_)) => {
+                            unreachable!("fused gather always stages")
+                        }
+                    };
+                    let gather_s = t0.elapsed().as_secs_f64();
+                    let t1 = Instant::now();
+                    let h = linalg::matmul_bt_gelu_with(&serial, block, &self.experts[e].w1t);
+                    let y = linalg::matmul_bt_with(&serial, &h, &self.experts[e].w2t);
+                    let ffn_s = t1.elapsed().as_secs_f64();
+                    let _ = outs[task].set(SubOut { y, gather_s, ffn_s });
+                } else {
+                    let dev = task - n_subs;
+                    let t0 = Instant::now();
+                    let mut guard = chunks[dev].lock().expect("combine chunk lock");
+                    let chunk: &mut [f32] = &mut guard;
+                    let t_lo = dev * tpd;
+                    for &(e, r) in &dev_entries[dev] {
+                        let en = &per_expert[e][r];
+                        let sub = sub_base[e] + r / sub_rows[e];
+                        let so = outs[sub].get().expect("dependency completed");
+                        let local = r - sub_lo[sub];
+                        let at = (en.token - t_lo) * d;
+                        for (o, s) in chunk[at..at + d].iter_mut().zip(so.y.row(local)) {
+                            *o += en.score * s;
+                        }
+                    }
+                    let _ = dev_s[dev].set(t0.elapsed().as_secs_f64());
+                }
+            };
+            pool.run_graph(&graph, run);
+        }
+
+        let mut ph = HostPhases::default();
+        for o in &outs {
+            let so = o.get().expect("all subtasks ran");
+            ph.dispatch_s += so.gather_s;
+            ph.expert_s += so.ffn_s;
+        }
+        for s in &dev_s {
+            ph.combine_s += s.get().copied().unwrap_or(0.0);
+        }
         (out, ph)
     }
 }
@@ -348,6 +790,78 @@ mod tests {
         let scrambled = Placement::from_owner(4, vec![3, 2, 1, 0, 0, 1]);
         let l2 = l.clone().with_placement(scrambled);
         assert_eq!(out, l2.step(&ParPool::new(2), &x), "numerics are placement-invariant");
+    }
+
+    #[test]
+    fn overlapped_step_is_bit_exact_vs_barriered() {
+        let l = layer();
+        let x = tokens(64, 16, 9);
+        let want = l.step(&ParPool::new(1), &x);
+        for t in [1usize, 2, 4, 8] {
+            let (got, ph) = l.step_overlapped_timed(&ParPool::new(t), &x);
+            assert_eq!(want, got, "threads={t}");
+            assert!(ph.wall_s > 0.0 && ph.total_s() > 0.0);
+        }
+    }
+
+    #[test]
+    fn overlapped_step_matches_barriered_on_skewed_routing() {
+        // injected skewed routing: one hot expert, exactly the case the
+        // dynamic row-split exists for
+        let l = layer();
+        let x = tokens(64, 16, 31);
+        let probs = crate::placement::skewed_probs(64, l.cfg.n_experts, l.cfg.devices, 0xBEEF);
+        let routing = RoutingTable::from_probs(&probs, l.cfg.top_k);
+        let (want, _) = l.step_routed_timed(&ParPool::new(1), &x, &routing);
+        for t in [1usize, 2, 4] {
+            let (got, _) = l.step_overlapped_routed_timed(&ParPool::new(t), &x, &routing);
+            assert_eq!(want, got, "threads={t}");
+            let (got_b, _) = l.step_routed_timed(&ParPool::new(t), &x, &routing);
+            assert_eq!(want, got_b, "barriered threads={t}");
+        }
+    }
+
+    #[test]
+    fn assembled_payload_reproduces_the_fused_step() {
+        let l = layer();
+        let x = tokens(32, 16, 13);
+        let want = l.step(&ParPool::new(1), &x);
+        let pool = ParPool::new(3);
+        let mut arena = TensorArena::new();
+        let (disp, ph_a) = l.assemble(&pool, &x, 7, &mut arena);
+        assert_eq!(disp.captured_step, 7);
+        assert!(disp.byte_size() > 0);
+        assert!(ph_a.route_s >= 0.0 && ph_a.dispatch_s >= 0.0);
+        // the staged payload's routing is EXACTLY what route() builds —
+        // the two paths share one routing front end and cannot drift
+        let (_rt, plan) = l.route(&ParPool::new(1), &x);
+        assert_eq!(disp.per_expert, plan.per_expert);
+        let (via_overlap, _) = l.ffn_combine_overlapped(&pool, &disp);
+        assert_eq!(want, via_overlap, "pre-assembled overlapped");
+        let (via_barrier, _) = l.ffn_combine_barriered(&pool, &disp);
+        assert_eq!(want, via_barrier, "pre-assembled barriered");
+        // recycling hands every gathered block back to the arena
+        let blocks = disp.gathered.len();
+        disp.recycle_into(&mut arena);
+        assert_eq!(arena.free_slots(), blocks);
+        // a second assembly round reuses those slots (warm free list)
+        let (disp2, _) = l.assemble(&pool, &x, 8, &mut arena);
+        assert!(arena.hits > 0, "warm assembly must hit the free list");
+        disp2.recycle_into(&mut arena);
+    }
+
+    #[test]
+    fn phase_accounting_includes_wall() {
+        let l = layer();
+        let x = tokens(32, 16, 2);
+        let (_, ph) = l.step_timed(&ParPool::new(2), &x);
+        // barriered: phases are sequential, wall covers their sum
+        assert!(ph.wall_s >= ph.total_s() * 0.5, "wall {} vs busy {}", ph.wall_s, ph.total_s());
+        let mut acc = HostPhases::default();
+        acc.accumulate(&ph);
+        acc.accumulate(&ph);
+        assert!((acc.wall_s - 2.0 * ph.wall_s).abs() < 1e-12);
+        assert!((acc.total_s() - 2.0 * ph.total_s()).abs() < 1e-9);
     }
 
     #[test]

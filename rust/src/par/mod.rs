@@ -3,26 +3,38 @@
 //!
 //! Design contract (the determinism rules every caller relies on):
 //!
-//! * **Static decomposition** — work is split into contiguous index
+//! * **Static decomposition** — [`ParPool::map`] /
+//!   [`ParPool::for_chunks_mut`] split work into contiguous index
 //!   ranges (or caller-chosen chunk boundaries) that depend only on the
 //!   item count, never on the thread count's scheduling. Results are
 //!   returned in index order.
+//! * **Dynamic decomposition with pre-indexed slots** —
+//!   [`ParPool::map_dynamic`] and [`ParPool::run_graph`] let idle
+//!   workers claim work from an atomic-counter queue (so one oversized
+//!   item no longer serializes a static chunk), but every result is
+//!   written into the slot pre-assigned by its *index*, and every
+//!   reduction over those slots happens in caller-fixed order — which
+//!   item ran on which worker, and in which order, never reaches the
+//!   output.
 //! * **Disjoint writes** — [`ParPool::for_chunks_mut`] hands each task a
 //!   chunk of a mutable slice; chunk boundaries are fixed by the caller,
 //!   so every element is written by exactly one task.
 //! * **Bit-exact reductions** — combined with fixed per-task iteration
-//!   order, the two rules above make every pool-driven computation in
+//!   order, the rules above make every pool-driven computation in
 //!   this crate produce identical bits for any `--threads` value (the
 //!   `par_determinism` integration suite pins this).
 //! * **Panic propagation** — a panicking task panics the caller (first
-//!   panic wins, remaining tasks are joined first).
+//!   panic wins, remaining tasks are joined first; in [`ParPool::run_graph`]
+//!   a panic also poisons the queue so peers stop instead of spinning on
+//!   dependents that will never be enqueued).
 //!
 //! Thread count resolution: [`set_threads`] (the `--threads` CLI knob) >
 //! `PAR_THREADS` env var > `std::thread::available_parallelism`. Pools
 //! are cheap value objects — no persistent threads; each parallel region
 //! is a `std::thread::scope` so borrows of caller state need no `Arc`.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::OnceLock;
 
 /// Process-wide thread-count override (0 = unset). Set by `--threads`.
 static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(0);
@@ -182,6 +194,241 @@ impl ParPool {
             }
         });
     }
+
+    /// Map `f(index, item)` over `items` with DYNAMIC scheduling: idle
+    /// workers claim the next unclaimed index from an atomic counter, so
+    /// one oversized item (a hot expert) no longer serializes the whole
+    /// contiguous chunk a static split would have put around it.
+    ///
+    /// Determinism contract: every result is written into the slot
+    /// pre-assigned by its index and returned in index order — the
+    /// worker→item mapping (which IS schedule-dependent) never reaches
+    /// the output, so `map_dynamic` is bit-exact for any pool width
+    /// whenever `f` itself is deterministic per index.
+    pub fn map_dynamic<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let workers = self.threads.min(n);
+        if workers == 1 {
+            return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        }
+        let slots: Vec<OnceLock<R>> = (0..n).map(|_| OnceLock::new()).collect();
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(workers);
+            for _ in 0..workers {
+                let (f, slots, next) = (&f, &slots, &next);
+                handles.push(s.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = f(i, &items[i]);
+                    // each index is claimed exactly once, so the slot is
+                    // always vacant; set() cannot fail
+                    let _ = slots[i].set(r);
+                }));
+            }
+            for h in handles {
+                if let Err(p) = h.join() {
+                    std::panic::resume_unwind(p);
+                }
+            }
+        });
+        slots
+            .into_iter()
+            .map(|s| s.into_inner().expect("every slot filled"))
+            .collect()
+    }
+
+    /// Execute a dependency-driven [`TaskGraph`]: `run(task)` is called
+    /// exactly once per task, never before all of the task's
+    /// dependencies have completed. Ready tasks are claimed dynamically
+    /// from an atomic-counter queue (same stealing behaviour as
+    /// [`ParPool::map_dynamic`]), and a task's dependents are enqueued
+    /// the moment their last dependency finishes — there is no phase
+    /// barrier anywhere, which is what lets a per-device combine start
+    /// while unrelated experts are still computing (DESIGN.md §10).
+    ///
+    /// Determinism is the CALLER's job under this API: `run` must write
+    /// only to slots pre-assigned by task index (or to disjoint regions
+    /// guarded by per-task locks) and reduce in an order fixed by the
+    /// graph, never by completion time. The graph must be acyclic; a
+    /// cycle panics in debug builds and is a caller bug.
+    ///
+    /// A panicking task poisons the queue (peers drain and stop instead
+    /// of spinning on dependents that will never arrive) and the first
+    /// panic is re-raised on the caller.
+    pub fn run_graph<F>(&self, graph: &TaskGraph, run: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        let n = graph.len();
+        if n == 0 {
+            return;
+        }
+        #[cfg(debug_assertions)]
+        graph.assert_acyclic();
+        let workers = self.threads.min(n);
+        if workers == 1 {
+            // serial: FIFO over the same ready queue a 1-wide crew
+            // would claim — no atomics, no spawning.
+            let mut deps = graph.deps.clone();
+            let mut queue: std::collections::VecDeque<usize> =
+                (0..n).filter(|&t| deps[t] == 0).collect();
+            let mut done = 0usize;
+            while let Some(t) = queue.pop_front() {
+                run(t);
+                done += 1;
+                for &d in &graph.dependents[t] {
+                    deps[d] -= 1;
+                    if deps[d] == 0 {
+                        queue.push_back(d);
+                    }
+                }
+            }
+            assert_eq!(done, n, "task graph has a cycle");
+            return;
+        }
+        // MPMC bounded ready queue: every task is pushed exactly once
+        // (when its dep count hits zero), so capacity n suffices and a
+        // claimed index < n is guaranteed to eventually be filled.
+        const EMPTY: usize = usize::MAX;
+        let slots: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(EMPTY)).collect();
+        let tail = AtomicUsize::new(0);
+        let head = AtomicUsize::new(0);
+        let poisoned = AtomicBool::new(false);
+        let deps: Vec<AtomicUsize> = graph.deps.iter().map(|&d| AtomicUsize::new(d)).collect();
+        let push = |t: usize| {
+            let at = tail.fetch_add(1, Ordering::Relaxed);
+            slots[at].store(t, Ordering::Release);
+        };
+        for t in 0..n {
+            if graph.deps[t] == 0 {
+                push(t);
+            }
+        }
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(workers);
+            for _ in 0..workers {
+                let (run, slots, head, deps, poisoned, push) =
+                    (&run, &slots, &head, &deps, &poisoned, &push);
+                handles.push(s.spawn(move || loop {
+                    if poisoned.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let h = head.fetch_add(1, Ordering::Relaxed);
+                    if h >= n {
+                        break;
+                    }
+                    // the task filling slot h may still be in flight on
+                    // a peer; spin briefly, then yield
+                    let mut spins = 0u32;
+                    let t = loop {
+                        let v = slots[h].load(Ordering::Acquire);
+                        if v != EMPTY {
+                            break v;
+                        }
+                        if poisoned.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        spins += 1;
+                        if spins > 128 {
+                            std::thread::yield_now();
+                        } else {
+                            std::hint::spin_loop();
+                        }
+                    };
+                    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run(t)));
+                    if let Err(p) = res {
+                        poisoned.store(true, Ordering::Release);
+                        std::panic::resume_unwind(p);
+                    }
+                    for &d in &graph.dependents[t] {
+                        if deps[d].fetch_sub(1, Ordering::AcqRel) == 1 {
+                            push(d);
+                        }
+                    }
+                }));
+            }
+            for h in handles {
+                if let Err(p) = h.join() {
+                    std::panic::resume_unwind(p);
+                }
+            }
+        });
+        assert!(
+            poisoned.load(Ordering::Relaxed) || head.load(Ordering::Relaxed) >= n,
+            "run_graph exited with unclaimed tasks"
+        );
+    }
+}
+
+/// A directed acyclic dependency graph over `0..len` tasks, executed by
+/// [`ParPool::run_graph`]. Build it once per parallel region: add every
+/// task up front, then [`TaskGraph::edge`] each `before → after`
+/// ordering constraint. Tasks with no incoming edges are immediately
+/// ready.
+#[derive(Debug, Clone, Default)]
+pub struct TaskGraph {
+    /// dependents[t] — tasks unblocked (one dep each) when `t` finishes.
+    dependents: Vec<Vec<usize>>,
+    /// Incoming-edge count per task.
+    deps: Vec<usize>,
+}
+
+impl TaskGraph {
+    /// A graph of `n` tasks and no edges (all immediately ready).
+    pub fn new(n: usize) -> TaskGraph {
+        TaskGraph {
+            dependents: vec![Vec::new(); n],
+            deps: vec![0; n],
+        }
+    }
+
+    /// Require task `before` to complete before task `after` may start.
+    pub fn edge(&mut self, before: usize, after: usize) {
+        assert!(before < self.deps.len() && after < self.deps.len(), "edge out of range");
+        assert_ne!(before, after, "self-edge");
+        self.dependents[before].push(after);
+        self.deps[after] += 1;
+    }
+
+    /// Number of tasks in the graph.
+    pub fn len(&self) -> usize {
+        self.deps.len()
+    }
+
+    /// Whether the graph has no tasks.
+    pub fn is_empty(&self) -> bool {
+        self.deps.is_empty()
+    }
+
+    /// Panic unless every task is reachable from the ready set — i.e.
+    /// the graph is acyclic. O(V+E); run in debug builds by
+    /// [`ParPool::run_graph`] (a cyclic graph would deadlock the crew).
+    pub fn assert_acyclic(&self) {
+        let mut deps = self.deps.clone();
+        let mut stack: Vec<usize> = (0..deps.len()).filter(|&t| deps[t] == 0).collect();
+        let mut seen = 0usize;
+        while let Some(t) = stack.pop() {
+            seen += 1;
+            for &d in &self.dependents[t] {
+                deps[d] -= 1;
+                if deps[d] == 0 {
+                    stack.push(d);
+                }
+            }
+        }
+        assert_eq!(seen, self.deps.len(), "task graph contains a cycle");
+    }
 }
 
 #[cfg(test)]
@@ -272,6 +519,106 @@ mod tests {
                 panic!("chunk panic");
             }
         });
+    }
+
+    #[test]
+    fn map_dynamic_matches_static_map_any_width() {
+        // deliberately skewed per-item cost: item 0 is "hot"
+        let items: Vec<usize> = (0..23).collect();
+        let cost = |i: usize, &x: &usize| {
+            let reps = if i == 0 { 1000 } else { 10 };
+            let mut acc = 0usize;
+            for r in 0..reps {
+                acc = acc.wrapping_add(x.wrapping_mul(r + 1));
+            }
+            acc
+        };
+        let want = ParPool::new(1).map(&items, cost);
+        for t in [1usize, 2, 3, 4, 8] {
+            assert_eq!(ParPool::new(t).map_dynamic(&items, cost), want, "t={t}");
+        }
+    }
+
+    #[test]
+    fn map_dynamic_empty_and_singleton() {
+        let none: Vec<u8> = Vec::new();
+        assert!(ParPool::new(4).map_dynamic(&none, |_, &x| x).is_empty());
+        assert_eq!(ParPool::new(4).map_dynamic(&[7u8], |i, &x| (i, x)), vec![(0, 7)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "dynamic task 5 exploded")]
+    fn map_dynamic_panics_propagate() {
+        let items: Vec<usize> = (0..16).collect();
+        ParPool::new(4).map_dynamic(&items, |_, &x| {
+            if x == 5 {
+                panic!("dynamic task 5 exploded");
+            }
+            x
+        });
+    }
+
+    #[test]
+    fn run_graph_respects_dependencies_any_width() {
+        // diamond fan: 4 sources -> 2 mids -> 1 sink, checked via slots
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let mut g = TaskGraph::new(7);
+        for src in 0..4 {
+            g.edge(src, 4 + src / 2);
+        }
+        g.edge(4, 6);
+        g.edge(5, 6);
+        for t in [1usize, 2, 4, 8] {
+            let done: Vec<AtomicUsize> = (0..7).map(|_| AtomicUsize::new(0)).collect();
+            ParPool::new(t).run_graph(&g, |task| {
+                if task >= 4 && task < 6 {
+                    // both feeding sources must have completed
+                    let base = (task - 4) * 2;
+                    assert_eq!(done[base].load(Ordering::SeqCst), 1, "t={t}");
+                    assert_eq!(done[base + 1].load(Ordering::SeqCst), 1, "t={t}");
+                }
+                if task == 6 {
+                    assert_eq!(done[4].load(Ordering::SeqCst), 1, "t={t}");
+                    assert_eq!(done[5].load(Ordering::SeqCst), 1, "t={t}");
+                }
+                done[task].fetch_add(1, Ordering::SeqCst);
+            });
+            // every task ran exactly once
+            for (i, d) in done.iter().enumerate() {
+                assert_eq!(d.load(Ordering::SeqCst), 1, "task {i} at t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_graph_empty_is_noop() {
+        ParPool::new(4).run_graph(&TaskGraph::new(0), |_| panic!("no tasks"));
+    }
+
+    #[test]
+    #[should_panic(expected = "graph task exploded")]
+    fn run_graph_panics_propagate_without_hanging() {
+        // the panicking task has dependents that will never run; the
+        // poison flag must stop the peers instead of deadlocking them
+        let mut g = TaskGraph::new(8);
+        for t in 1..8 {
+            g.edge(0, t);
+        }
+        ParPool::new(4).run_graph(&g, |task| {
+            if task == 0 {
+                panic!("graph task exploded");
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "cycle")]
+    fn cyclic_graph_is_rejected() {
+        let mut g = TaskGraph::new(3);
+        g.edge(0, 1);
+        g.edge(1, 2);
+        g.edge(2, 0);
+        g.assert_acyclic();
     }
 
     #[test]

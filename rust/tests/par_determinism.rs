@@ -1,12 +1,17 @@
 //! Integration: the execution runtime's determinism contract
-//! (DESIGN.md §8). Parallel engine output must be BIT-EXACT equal to
-//! serial for every `--threads` width — these tests pin that for the
-//! host engine step, the blocked matmul kernels, the simulation sweep
-//! fan-out, and the scenario serving fan-out, at widths 1 / 2 / 4.
-//! Artifact-free: everything here runs on a clean checkout.
+//! (DESIGN.md §8, §10). Parallel engine output must be BIT-EXACT equal
+//! to serial for every `--threads` width — these tests pin that for the
+//! host engine step (barriered AND overlapped executors), the blocked
+//! matmul kernels (fused epilogue included), dynamic scheduling, the
+//! multi-step `HostPipeline` under all three strategies (with MEASURED
+//! staleness ages), the simulation sweep fan-out, and the scenario
+//! serving fan-out, at widths 1 / 2 / 4. Artifact-free: everything here
+//! runs on a clean checkout.
 
-use dice::config::{hardware_profile, model_preset, DiceOptions, PlacementKind, Strategy};
-use dice::coordinator::{simulate_sweep_with, SweepCase};
+use dice::config::{
+    hardware_profile, model_preset, DiceOptions, PipelineMode, PlacementKind, Strategy,
+};
+use dice::coordinator::{simulate_sweep_with, HostPipeline, SweepCase};
 use dice::linalg;
 use dice::moe::host::{HostMoeConfig, HostMoeLayer};
 use dice::moe::RoutingTable;
@@ -121,6 +126,156 @@ fn multi_step_trajectory_bit_exact_across_threads() {
     for threads in [2usize, 4] {
         assert_eq!(serial, run(threads), "trajectory diverged at {threads} threads");
     }
+}
+
+#[test]
+fn map_dynamic_bit_exact_across_threads_1_2_4() {
+    // skewed per-item cost (item 0 dominates): dynamic claiming must
+    // never leak the schedule into the results
+    let items: Vec<u64> = (0..31).collect();
+    let work = |i: usize, &x: &u64| {
+        let reps = if i == 0 { 4096 } else { 64 };
+        let mut acc = x;
+        for r in 0..reps {
+            acc = acc.wrapping_mul(6364136223846793005).wrapping_add(r);
+        }
+        acc
+    };
+    let want = ParPool::new(1).map_dynamic(&items, work);
+    assert_eq!(want, ParPool::new(1).map(&items, work), "dynamic == static serially");
+    for threads in [2usize, 4] {
+        assert_eq!(
+            want,
+            ParPool::new(threads).map_dynamic(&items, work),
+            "--threads {threads}"
+        );
+    }
+}
+
+#[test]
+fn fused_epilogue_kernel_bit_exact_across_threads_1_2_4() {
+    // above the kernel's inline-work threshold so the pool fans out
+    let a = normal(&[70, 90], 3);
+    let bt = normal(&[80, 90], 4);
+    let mut want = linalg::matmul_bt_with(&ParPool::new(1), &a, &bt);
+    for v in want.data_mut() {
+        *v = linalg::gelu(*v);
+    }
+    for threads in [1usize, 2, 4] {
+        let fused = linalg::matmul_bt_gelu_with(&ParPool::new(threads), &a, &bt);
+        assert_eq!(want, fused, "--threads {threads}");
+    }
+}
+
+#[test]
+fn overlapped_step_bit_exact_vs_barriered_across_threads_1_2_4() {
+    let layer = HostMoeLayer::synth(
+        HostMoeConfig {
+            n_experts: 8,
+            top_k: 2,
+            d_model: 32,
+            d_ff: 64,
+            devices: 4,
+        },
+        0xD1CE,
+    );
+    let x = normal(&[128, 32], 11);
+    let serial = layer.step(&ParPool::new(1), &x);
+    // uniform routing (the layer's own router)
+    for threads in [1usize, 2, 4] {
+        let got = layer.step_overlapped(&ParPool::new(threads), &x);
+        assert_eq!(serial, got, "--threads {threads} overlapped differs");
+    }
+    // skewed routing: one hot expert — the row-split path
+    let probs = skewed_probs(128, 8, 4, 0xBEEF);
+    let rt = RoutingTable::from_probs(&probs, 2);
+    let (want, _) = layer.step_routed_timed(&ParPool::new(1), &x, &rt);
+    for threads in [1usize, 2, 4] {
+        let (got, _) = layer.step_overlapped_routed_timed(&ParPool::new(threads), &x, &rt);
+        assert_eq!(want, got, "--threads {threads} skewed overlapped differs");
+    }
+}
+
+#[test]
+fn host_pipeline_bit_exact_across_threads_1_2_4_all_strategies() {
+    let layer = HostMoeLayer::synth(
+        HostMoeConfig {
+            n_experts: 8,
+            top_k: 2,
+            d_model: 16,
+            d_ff: 32,
+            devices: 4,
+        },
+        7,
+    );
+    let x0 = normal(&[32, 16], 13);
+    let steps = 7;
+    // SyncEp pipeline must equal the plain barriered step loop
+    let reference = HostPipeline::reference_run(&layer, &ParPool::new(1), &x0, steps);
+    for strategy in [Strategy::SyncEp, Strategy::Interweaved, Strategy::DisplacedEp] {
+        for mode in [PipelineMode::Barriered, PipelineMode::Overlapped] {
+            let serial = {
+                let mut p = HostPipeline::new(layer.clone(), strategy, mode, &ParPool::new(1));
+                p.run(&x0, steps)
+            };
+            if strategy == Strategy::SyncEp {
+                assert_eq!(
+                    reference, serial.out,
+                    "{strategy:?}/{mode:?} must match the barriered step loop"
+                );
+            }
+            for threads in [2usize, 4] {
+                let mut p =
+                    HostPipeline::new(layer.clone(), strategy, mode, &ParPool::new(threads));
+                let rep = p.run(&x0, steps);
+                assert_eq!(
+                    serial.out, rep.out,
+                    "{strategy:?}/{mode:?} --threads {threads} diverged"
+                );
+                assert_eq!(
+                    serial.staleness.records, rep.staleness.records,
+                    "{strategy:?}/{mode:?} --threads {threads} ledger diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn host_pipeline_measures_contractual_staleness_ages() {
+    let layer = HostMoeLayer::synth(
+        HostMoeConfig {
+            n_experts: 8,
+            top_k: 2,
+            d_model: 16,
+            d_ff: 32,
+            devices: 2,
+        },
+        21,
+    );
+    let x0 = normal(&[16, 16], 5);
+    let steps = 8;
+    let ages = |strategy: Strategy| -> Vec<usize> {
+        let mut p =
+            HostPipeline::new(layer.clone(), strategy, PipelineMode::Overlapped, &ParPool::new(2));
+        p.run(&x0, steps)
+            .staleness
+            .records
+            .iter()
+            .map(|&(_, _, a)| a)
+            .collect()
+    };
+    // sync = 0 everywhere; interweaved settles at 1 after one cold
+    // step; displaced settles at 2 after two cold steps — the exact
+    // contract of config::Strategy::step_staleness and netsim's
+    // double-buffer model.
+    assert_eq!(ages(Strategy::SyncEp), vec![0; steps]);
+    let iw = ages(Strategy::Interweaved);
+    assert_eq!(iw[0], 0, "{iw:?}");
+    assert!(iw[1..].iter().all(|&a| a == 1), "{iw:?}");
+    let dp = ages(Strategy::DisplacedEp);
+    assert_eq!(&dp[..2], &[0, 0], "{dp:?}");
+    assert!(dp[2..].iter().all(|&a| a == 2), "{dp:?}");
 }
 
 #[test]
