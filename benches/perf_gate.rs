@@ -1,11 +1,12 @@
-//! Perf gate + trajectory recorder (DESIGN.md §8, §10): benches the
+//! Perf gate + trajectory recorder (DESIGN.md §8, §10–§11): benches the
 //! host engine step (dispatch → expert FFN → combine over the worker
 //! pool) serial vs parallel, the `pipeline_overlap` quartet (barriered
-//! vs overlapped executor, uniform vs skewed routing), the simulation
-//! sweep fan-out, and the placement-policy sweep (three solves +
-//! crossing-bytes pricing on a skewed plan, DESIGN.md §9), and appends
-//! every summary to repo-root `BENCH_engine.json` (JSON lines) — the
-//! perf trajectory across PRs. Artifact-free.
+//! vs overlapped executor, uniform vs skewed routing), the
+//! `multilayer_overlap` pair (the §11 cross-layer window on a 4-layer
+//! stack), the simulation sweep fan-out, and the placement-policy sweep
+//! (three solves + crossing-bytes pricing on a skewed plan, DESIGN.md
+//! §9), and appends every summary to repo-root `BENCH_engine.json`
+//! (JSON lines) — the perf trajectory across PRs. Artifact-free.
 //!
 //!     cargo bench --bench perf_gate              # full iterations
 //!     cargo bench --bench perf_gate -- --check   # CI: few iters +
@@ -21,9 +22,12 @@ use std::path::PathBuf;
 
 use dice::benchkit::{self, fmt_secs, Summary, Table};
 use dice::cli::Args;
-use dice::config::{hardware_profile, model_preset, DiceOptions, Json, PlacementKind, Strategy};
-use dice::coordinator::{simulate_sweep_with, SweepCase};
-use dice::moe::host::{HostMoeConfig, HostMoeLayer};
+use dice::config::{
+    hardware_profile, model_preset, DiceOptions, Json, PipelineMode, PlacementKind, SelectiveSync,
+    Strategy,
+};
+use dice::coordinator::{simulate_sweep_with, HostPipeline, SweepCase};
+use dice::moe::host::{HostMoeConfig, HostMoeLayer, HostMoeStack};
 use dice::moe::{DispatchPlan, RoutingTable};
 use dice::netsim::{CostModel, Workload};
 use dice::par::ParPool;
@@ -132,6 +136,48 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(layer.step_overlapped_routed_timed(&par_pool, &x, &skew_rt).0);
     });
 
+    // --- multi-layer pipeline: barriered vs overlapped executor --------
+    // (DESIGN.md §11) — the cross-layer dispatch/FFN overlap window on a
+    // 4-layer stack under the interweaved dataflow.
+    let ml_cfg = HostMoeConfig {
+        n_experts: 8,
+        top_k: 2,
+        d_model: 64,
+        d_ff: 256,
+        devices: 4,
+    };
+    let ml_stack = HostMoeStack::synth(ml_cfg, 4, 0xD1CE);
+    let mut ml_x0 = Tensor::zeros(&[128, ml_cfg.d_model]);
+    Rng::new(9).fill_normal(ml_x0.data_mut());
+    let ml_steps = 6usize;
+    let ml_bench = |mode: PipelineMode| {
+        let stack = ml_stack.clone();
+        let x0 = ml_x0.clone();
+        let pool = par_pool;
+        move || {
+            let mut p = HostPipeline::new_stack(
+                stack.clone(),
+                Strategy::Interweaved,
+                SelectiveSync::None,
+                mode,
+                &pool,
+            );
+            std::hint::black_box(p.run(&x0, ml_steps));
+        }
+    };
+    let ml_bar = benchkit::bench(
+        "multilayer_overlap_barriered",
+        warmup,
+        iters,
+        ml_bench(PipelineMode::Barriered),
+    );
+    let ml_ovl = benchkit::bench(
+        "multilayer_overlap_overlapped",
+        warmup,
+        iters,
+        ml_bench(PipelineMode::Overlapped),
+    );
+
     // --- placement sweep: solve all three policies + price the plan ----
     let (pe, pd, pk) = (16usize, 8usize, 2usize);
     let p_tokens = 1024usize;
@@ -164,6 +210,8 @@ fn main() -> anyhow::Result<()> {
         p_uni_ovl.clone(),
         p_skw_bar.clone(),
         p_skw_ovl.clone(),
+        ml_bar.clone(),
+        ml_ovl.clone(),
     ];
     let mut t = Table::new(
         "Perf gate — engine step + sim sweep, serial vs parallel",
@@ -211,6 +259,34 @@ fn main() -> anyhow::Result<()> {
         let (want_s, _) = layer.step_routed_timed(&serial_pool, &x, &skew_rt);
         let (got_s, _) = layer.step_overlapped_routed_timed(&par_pool, &x, &skew_rt);
         assert!(want_s == got_s, "overlapped skewed step must be bit-exact");
+    }
+    // multi-layer pipeline (DESIGN.md §11): overlapped executor bit-exact
+    // vs barriered across widths, always checked
+    {
+        let want_ml = {
+            let mut p = HostPipeline::new_stack(
+                ml_stack.clone(),
+                Strategy::Interweaved,
+                SelectiveSync::None,
+                PipelineMode::Barriered,
+                &serial_pool,
+            );
+            p.run(&ml_x0, ml_steps).out
+        };
+        for tn in [1usize, 2, 4] {
+            let mut p = HostPipeline::new_stack(
+                ml_stack.clone(),
+                Strategy::Interweaved,
+                SelectiveSync::None,
+                PipelineMode::Overlapped,
+                &ParPool::new(tn),
+            );
+            let got = p.run(&ml_x0, ml_steps).out;
+            assert!(
+                want_ml == got,
+                "multilayer overlapped pipeline must be bit-exact at {tn} threads"
+            );
+        }
     }
     // placement: the affinity policy must not add crossing bytes on the
     // skewed workload (DESIGN.md §9), always checked

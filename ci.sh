@@ -20,11 +20,28 @@ echo "==> cargo test --doc"
 cargo test -q --doc
 
 # Perf gate: few-iteration run of the serial-vs-parallel engine-step
-# bench. Asserts bit-exact parallel output, valid JSON-lines in
-# BENCH_engine.json, (on >= 2 cores) parallel <= serial mean, and that
-# the affinity placement never adds crossing bytes.
+# bench. Asserts bit-exact parallel output (single- and multi-layer
+# pipelines included), valid JSON-lines in BENCH_engine.json,
+# (on >= 2 cores) parallel <= serial mean, and that the affinity
+# placement never adds crossing bytes.
 echo "==> perf gate (cargo bench --bench perf_gate -- --check)"
 cargo bench --bench perf_gate -- --check
+
+# The bench must have left a non-empty, parseable JSON-lines trajectory
+# (one object per line, each with a name and a mean) — the cross-PR
+# perf record the perf gate appends to.
+echo "==> BENCH_engine.json present + parseable"
+test -s BENCH_engine.json
+python3 - <<'EOF'
+import json
+with open("BENCH_engine.json") as f:
+    lines = [l for l in f if l.strip()]
+assert lines, "BENCH_engine.json has no records"
+for i, line in enumerate(lines, 1):
+    rec = json.loads(line)
+    assert "name" in rec and "mean_s" in rec, f"line {i} missing fields: {rec}"
+print(f"BENCH_engine.json OK ({len(lines)} records)")
+EOF
 
 # Placement gate (artifact-free): the experiment driver FAILS unless
 # LoadBalanced reduces max per-device load and AffinityAware reduces
@@ -40,7 +57,15 @@ cargo run --release --quiet -- exp placement --steps 12 --tokens 1024
 # contract (sync 0 / interweaved 1 / displaced 2). The overlapped-not-
 # slower timing gate runs in the perf-gate --check step above.
 echo "==> pipeline gate (dice exp pipeline, artifact-free)"
-cargo run --release --quiet -- exp pipeline --steps 10 --tokens 512
+cargo run --release --quiet -- exp pipeline --steps 10 --tokens 512 --layers 2
+
+# Selective-sync tuning gate (artifact-free, DESIGN.md §11): FAILS
+# unless the measured per-layer schedule degrades no more than the
+# better of the Deep/Shallow heuristics at equal-or-fewer protected
+# layers, the tuned multi-layer run is bit-exact overlapped-vs-barriered
+# at 1/2/4 threads, and protected layers measure ledger age 0.
+echo "==> synctune gate (dice exp synctune, artifact-free)"
+cargo run --release --quiet -- exp synctune --layers 6 --steps 8
 
 # Docs gates: rustdoc warnings (broken links, bad code-block attrs) are
 # errors, and missing_docs — warn-level in the sources so local builds

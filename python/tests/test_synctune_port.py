@@ -1,0 +1,316 @@
+"""Exact-logic ports of the measured selective-sync machinery (DESIGN.md §11).
+
+The container has no Rust toolchain, so the multi-layer staleness chain of
+`rust/src/coordinator/pipeline.rs::chain_step` and the tuner logic of
+`rust/src/coordinator/synctune.rs` are validated here against independent
+oracles:
+
+* the per-layer slot machinery (cross-step combine/payload carrying) must
+  reproduce the brute-force grid recurrence
+  in[t][0] = x_t,  in[t][l+1] = 0.7 in[t][l] + 0.3 moe_l(in[src(t,l)][l])
+  with src = t on protected layers, max(t-1,0) interweaved and
+  (t if t <= 1 else t-2) displaced — bitwise, for every mix of protected
+  layers;
+* `schedule_from_sensitivity` must rank by sensitivity descending with
+  ascending-index tie-breaks (pinned vectors mirrored by the Rust unit
+  tests);
+* the tuner's emitted schedule must measure a drift no worse than the
+  better of the Deep/Shallow heuristics at equal-or-fewer protected
+  layers, on a fixed seed.
+
+Stdlib only — runs under pytest or as a script.
+"""
+
+import math
+import random
+
+
+# ---------------------------------------------------------------------------
+# schedule_from_sensitivity / heuristic_mask ports (synctune.rs)
+# ---------------------------------------------------------------------------
+
+def schedule_from_sensitivity(sens, budget):
+    """Port: rank sensitivity descending, ties to the shallower layer."""
+    order = sorted(range(len(sens)), key=lambda i: (-sens[i], i))
+    mask = 0
+    for l in order[:budget]:
+        mask |= 1 << l
+    return mask
+
+
+def is_sync_layer(policy, layer, n_layers):
+    """Port of config::SelectiveSync::is_sync_layer."""
+    kind, arg = policy
+    if kind == "none":
+        return False
+    if kind == "deep":
+        return layer >= n_layers // 2
+    if kind == "shallow":
+        return layer < n_layers // 2
+    if kind == "staggered":
+        return layer % 2 == 1
+    if kind == "schedule":
+        return layer < 64 and (arg >> layer) & 1 == 1
+    raise ValueError(kind)
+
+
+def heuristic_mask(policy, n_layers):
+    mask = 0
+    for l in range(min(n_layers, 64)):
+        if is_sync_layer(policy, l, n_layers):
+            mask |= 1 << l
+    return mask
+
+
+def test_schedule_ranking_pinned_vectors():
+    # pinned — mirrored by synctune.rs schedule_ranks_by_sensitivity...
+    sens = [0.3, 0.1, 0.5, 0.5, 0.2, 0.0]
+    assert schedule_from_sensitivity(sens, 3) == 0b001101 == 13
+    assert schedule_from_sensitivity(sens, 1) == 0b000100
+    assert schedule_from_sensitivity(sens, 6) == 0b111111
+    assert schedule_from_sensitivity([1.0] * 4, 2) == 0b0011
+
+
+def test_heuristic_masks_pinned():
+    # pinned — mirrored by synctune.rs heuristic_masks_match_is_sync_layer
+    assert heuristic_mask(("deep", None), 6) == 0b111000 == 56
+    assert heuristic_mask(("shallow", None), 6) == 0b000111 == 7
+    assert heuristic_mask(("staggered", None), 6) == 0b101010 == 42
+    assert heuristic_mask(("none", None), 6) == 0
+    assert heuristic_mask(("schedule", 0b10110), 6) == 0b10110
+
+
+def test_schedule_ranking_properties():
+    rng = random.Random(0xD1CE)
+    for _ in range(200):
+        n = rng.randrange(1, 12)
+        sens = [rng.uniform(0, 1) for _ in range(n)]
+        budget = rng.randrange(1, n + 1)
+        mask = schedule_from_sensitivity(sens, budget)
+        picked = [l for l in range(n) if (mask >> l) & 1]
+        assert len(picked) == min(budget, n)
+        # no unpicked layer is strictly more sensitive than a picked one
+        worst_picked = min(sens[l] for l in picked)
+        for l in range(n):
+            if (mask >> l) & 1 == 0:
+                assert sens[l] <= worst_picked + 1e-15
+
+
+# ---------------------------------------------------------------------------
+# multi-layer chain port (pipeline.rs chain_step) vs grid oracle
+# ---------------------------------------------------------------------------
+
+def moe_factory(n_layers, seed):
+    """Distinct nonlinear per-layer stand-in MoEs (order-sensitive)."""
+    rng = random.Random(seed)
+    coefs = [(rng.uniform(0.2, 0.8), rng.uniform(-0.4, 0.4), rng.uniform(-0.2, 0.2))
+             for _ in range(n_layers)]
+
+    def moe(l, x):
+        a, b, c = coefs[l]
+        return [a * v * v + b * v + c for v in x]
+
+    return moe
+
+
+def feedback(x, y):
+    return [0.7 * a + 0.3 * b for a, b in zip(x, y)]
+
+
+def chain_run(moe, n_layers, protected, strategy, x0, steps):
+    """Port of chain_step's per-layer slot machinery.
+
+    slots[l] carries (combine, payload) across steps exactly like
+    LayerSlots; stale FFN results are installed AFTER the step, like the
+    executor draining its done queue.
+    """
+    combine = [None] * n_layers  # (y, captured_step)
+    payload = [None] * n_layers  # (x_snapshot, captured_step)
+    ages = []
+    x = list(x0)
+    for t in range(steps):
+        done = []  # (layer, y, captured_step) installed after the step
+        cur = x
+        for l in range(n_layers):
+            if protected[l]:
+                y = moe(l, cur)
+                ages.append((t, l, 0))
+            elif strategy == "interweaved":
+                disp = (list(cur), t)
+                taken = combine[l]
+                combine[l] = None
+                if taken is not None:
+                    yc, cap = taken
+                    ages.append((t, l, t - cap))
+                    y = yc
+                    done.append((l, moe(l, disp[0]), disp[1]))
+                else:
+                    y = moe(l, cur)
+                    ages.append((t, l, 0))
+                    done.append((l, list(y), t))
+            elif strategy == "displaced":
+                if payload[l] is None:  # t == 0
+                    disp = (list(cur), t)
+                    y = moe(l, cur)
+                    ages.append((t, l, 0))
+                    payload[l] = disp
+                else:
+                    p_prev = payload[l]
+                    payload[l] = None
+                    done.append((l, moe(l, p_prev[0]), p_prev[1]))
+                    disp = (list(cur), t)
+                    taken = combine[l]
+                    combine[l] = None
+                    if taken is not None:
+                        yc, cap = taken
+                        ages.append((t, l, t - cap))
+                        y = yc
+                    else:  # t == 1: fresh recompute on this step's payload
+                        y = moe(l, cur)
+                        ages.append((t, l, 0))
+                    payload[l] = disp
+            else:
+                raise ValueError(strategy)
+            cur = feedback(cur, y)
+        for l, y, cap in done:
+            combine[l] = (y, cap)
+        x = cur
+    return x, ages
+
+
+def grid_oracle(moe, n_layers, protected, strategy, x0, steps):
+    """Brute-force recurrence over the full (step, layer) input grid."""
+    def src(t, l):
+        if protected[l]:
+            return t
+        if strategy == "interweaved":
+            return max(t - 1, 0)
+        if strategy == "displaced":
+            return t if t <= 1 else t - 2
+        raise ValueError(strategy)
+
+    # inputs[t][l] = layer l's input at step t; built step-major so every
+    # src(t, l) <= t row is already complete when needed.
+    inputs = []
+    x = list(x0)
+    ages = []
+    for t in range(steps):
+        inputs.append([None] * n_layers)
+        cur = x
+        for l in range(n_layers):
+            inputs[t][l] = list(cur)
+            s = src(t, l)
+            ages.append((t, l, t - s))
+            y = moe(l, inputs[s][l])
+            cur = feedback(cur, y)
+        x = cur
+    return x, ages
+
+
+def test_chain_port_matches_grid_oracle_bitwise():
+    rng = random.Random(1234)
+    for trial in range(60):
+        n_layers = rng.randrange(1, 6)
+        steps = rng.randrange(1, 9)
+        moe = moe_factory(n_layers, trial)
+        x0 = [rng.uniform(-1, 1) for _ in range(8)]
+        mask = rng.randrange(0, 1 << n_layers)
+        protected = [(mask >> l) & 1 == 1 for l in range(n_layers)]
+        for strategy in ("interweaved", "displaced"):
+            got_x, got_ages = chain_run(moe, n_layers, protected, strategy, x0, steps)
+            want_x, want_ages = grid_oracle(moe, n_layers, protected, strategy, x0, steps)
+            assert got_ages == want_ages, (strategy, n_layers, steps, mask)
+            assert got_x == want_x, (strategy, n_layers, steps, mask, "bitwise divergence")
+
+
+def test_chain_settled_ages_per_layer():
+    n_layers, steps = 4, 8
+    moe = moe_factory(n_layers, 7)
+    x0 = [0.3, -0.7, 1.1]
+    protected = [True, False, True, False]  # Schedule(0b0101)
+    for strategy, settled in (("interweaved", 1), ("displaced", 2)):
+        _, ages = chain_run(moe, n_layers, protected, strategy, x0, steps)
+        assert len(ages) == steps * n_layers
+        for t, l, a in ages:
+            if protected[l]:
+                assert a == 0, (strategy, t, l, a)
+            elif t >= settled:
+                assert a == settled, (strategy, t, l, a)
+            else:
+                assert a <= settled
+
+
+# ---------------------------------------------------------------------------
+# tuner port: sensitivity probes + measured candidate selection
+# ---------------------------------------------------------------------------
+
+def rel_l2(a, b):
+    num = math.sqrt(sum((x - y) ** 2 for x, y in zip(a, b)))
+    den = math.sqrt(sum(y * y for y in b)) + 1e-12
+    return num / den
+
+
+def tune(moe, n_layers, strategy, x0, steps):
+    """Port of SyncTuner::tune on the scalar chain."""
+    all_protected = [True] * n_layers
+    reference, _ = chain_run(moe, n_layers, all_protected, strategy, x0, steps)
+
+    def drift_of(mask):
+        protected = [(mask >> l) & 1 == 1 for l in range(n_layers)]
+        out, _ = chain_run(moe, n_layers, protected, strategy, x0, steps)
+        return rel_l2(out, reference)
+
+    full = (1 << n_layers) - 1
+    sens = [drift_of(full & ~(1 << l)) for l in range(n_layers)]
+    budget = max(1, n_layers // 2)
+    probe = schedule_from_sensitivity(sens, budget)
+    deep = heuristic_mask(("deep", None), n_layers)
+    shallow = heuristic_mask(("shallow", None), n_layers)
+    candidates = [("probe", probe, drift_of(probe)),
+                  ("shallow", shallow, drift_of(shallow)),
+                  ("deep", deep, drift_of(deep))]
+    picked = min(candidates, key=lambda c: (c[2], bin(c[1]).count("1")))
+    return {"sensitivity": sens, "probe": probe,
+            "deep": dict(zip(("mask", "drift"), (deep, candidates[2][2]))),
+            "shallow": dict(zip(("mask", "drift"), (shallow, candidates[1][2]))),
+            "picked": picked[0], "mask": picked[1], "drift": picked[2]}
+
+
+def test_tuner_beats_or_matches_heuristics_on_fixed_seed():
+    rng = random.Random(0xD1CE)
+    n_layers, steps = 6, 8
+    moe = moe_factory(n_layers, 0xD1CE)
+    x0 = [rng.uniform(-1, 1) for _ in range(8)]
+    for strategy in ("interweaved", "displaced"):
+        rep = tune(moe, n_layers, strategy, x0, steps)
+        assert all(s >= 0 for s in rep["sensitivity"])
+        # the gate of `dice exp synctune`: no worse than the better
+        # heuristic, at equal-or-fewer protected layers
+        best = min(rep["deep"], rep["shallow"], key=lambda h: h["drift"])
+        assert rep["drift"] <= best["drift"] + 1e-15, (strategy, rep)
+        assert bin(rep["mask"]).count("1") <= bin(best["mask"]).count("1"), (strategy, rep)
+
+
+def test_tuner_probe_protects_most_sensitive_layers():
+    # make layer sensitivity explicit: amplify one layer's nonlinearity
+    # and the tuner must rank it first.
+    n_layers, steps = 4, 6
+    rng = random.Random(3)
+    x0 = [rng.uniform(-1, 1) for _ in range(8)]
+
+    def moe(l, x):
+        gain = 3.0 if l == 2 else 0.3
+        return [gain * (0.5 * v * v - 0.25 * v) for v in x]
+
+    for strategy in ("interweaved", "displaced"):
+        rep = tune(moe, n_layers, strategy, x0, steps)
+        sens = rep["sensitivity"]
+        assert max(range(n_layers), key=lambda l: sens[l]) == 2, (strategy, sens)
+        assert (rep["probe"] >> 2) & 1 == 1, "most sensitive layer must be protected"
+
+
+if __name__ == "__main__":
+    for name, fn in sorted(globals().items()):
+        if name.startswith("test_") and callable(fn):
+            fn()
+            print(f"{name} OK")

@@ -172,6 +172,12 @@ impl Strategy {
 }
 
 /// Layer-level synchronization policy (Sec. 4.2 + Table 4 ablations).
+///
+/// The heuristic variants (`Deep` / `Shallow` / `Staggered`) are the
+/// paper's hand-picked protected sets; [`SelectiveSync::Schedule`] is a
+/// MEASURED per-layer bitmask, typically emitted by
+/// `coordinator::synctune::SyncTuner` from per-layer staleness
+/// sensitivity probes (`--sync-layers auto`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum SelectiveSync {
     /// All layers follow the base strategy.
@@ -182,17 +188,54 @@ pub enum SelectiveSync {
     Shallow,
     /// Ablation: synchronize every other layer.
     Staggered,
+    /// Explicit per-layer schedule: bit `l` set ⇒ layer `l` runs
+    /// synchronously (fresh activations, age 0). Layers ≥ 64 are never
+    /// protected by a mask.
+    Schedule(u64),
 }
 
 impl SelectiveSync {
-    /// Parse a CLI policy name.
+    /// Parse a CLI policy: a named heuristic or an explicit layer
+    /// bitmask (`0x…` hex, `0b…` binary, or decimal). Round-trips
+    /// through [`SelectiveSync`]'s `Display`:
+    ///
+    /// ```
+    /// use dice::config::SelectiveSync;
+    /// for s in ["none", "deep", "shallow", "staggered", "0x2a", "0b110", "9"] {
+    ///     let p = SelectiveSync::parse(s).unwrap();
+    ///     assert_eq!(SelectiveSync::parse(&p.to_string()).unwrap(), p);
+    /// }
+    /// assert_eq!(SelectiveSync::parse("0x2a").unwrap(), SelectiveSync::Schedule(42));
+    /// // the error names every accepted form
+    /// let e = SelectiveSync::parse("bogus").unwrap_err().to_string();
+    /// for accepted in ["none", "deep", "shallow", "staggered", "0x"] {
+    ///     assert!(e.contains(accepted), "{e}");
+    /// }
+    /// ```
     pub fn parse(s: &str) -> Result<SelectiveSync> {
         Ok(match s {
             "none" => SelectiveSync::None,
             "deep" => SelectiveSync::Deep,
             "shallow" => SelectiveSync::Shallow,
             "staggered" => SelectiveSync::Staggered,
-            _ => bail!("unknown selective-sync policy {s:?}"),
+            _ => {
+                let mask = if let Some(hex) = s.strip_prefix("0x") {
+                    u64::from_str_radix(hex, 16).ok()
+                } else if let Some(bin) = s.strip_prefix("0b") {
+                    u64::from_str_radix(bin, 2).ok()
+                } else {
+                    s.parse::<u64>().ok()
+                };
+                match mask {
+                    Some(m) => SelectiveSync::Schedule(m),
+                    None => bail!(
+                        "unknown selective-sync policy {s:?}: expected one of \
+                         none|deep|shallow|staggered or a layer bitmask \
+                         (0x2a hex, 0b101010 binary, or 42 decimal; \
+                         `auto` is resolved by the CLI via `dice exp synctune`)"
+                    ),
+                }
+            }
         })
     }
     /// Should `layer` (of `n_layers`) run synchronously?
@@ -202,15 +245,31 @@ impl SelectiveSync {
             SelectiveSync::Deep => layer >= n_layers / 2,
             SelectiveSync::Shallow => layer < n_layers / 2,
             SelectiveSync::Staggered => layer % 2 == 1,
+            SelectiveSync::Schedule(mask) => layer < 64 && (mask >> layer) & 1 == 1,
         }
     }
-    /// Canonical policy name.
+    /// How many of `n_layers` the policy protects (runs synchronously).
+    pub fn sync_layer_count(&self, n_layers: usize) -> usize {
+        (0..n_layers).filter(|&l| self.is_sync_layer(l, n_layers)).count()
+    }
+    /// Canonical policy name (the variant, not the mask value).
     pub fn name(&self) -> &'static str {
         match self {
             SelectiveSync::None => "none",
             SelectiveSync::Deep => "deep",
             SelectiveSync::Shallow => "shallow",
             SelectiveSync::Staggered => "staggered",
+            SelectiveSync::Schedule(_) => "schedule",
+        }
+    }
+}
+
+impl std::fmt::Display for SelectiveSync {
+    /// The parseable form: the policy name, or `0x…` for a mask.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SelectiveSync::Schedule(mask) => write!(f, "{mask:#x}"),
+            other => f.write_str(other.name()),
         }
     }
 }

@@ -8,10 +8,14 @@
 //!   "interweaved halves the buffer size" claim).
 //! * [`condcomm`] — token-level conditional communication (Sec. 4.3).
 //! * [`staleness`] — the staleness ledger.
-//! * [`pipeline`] — the overlapped multi-step host pipeline: the
-//!   displaced/interweaved schedules executed with live threads over
-//!   the host-numerics MoE layer, with MEASURED staleness ages
-//!   (DESIGN.md §10).
+//! * [`pipeline`] — the overlapped multi-layer, multi-step host
+//!   pipeline: the displaced/interweaved schedules executed with live
+//!   threads over a host-numerics MoE layer stack, with MEASURED
+//!   per-(layer, step) staleness ages (DESIGN.md §10–§11).
+//! * [`synctune`] — measured selective synchronization: per-layer
+//!   staleness-sensitivity probes emitting a
+//!   [`SelectiveSync::Schedule`](crate::config::SelectiveSync) bitmask
+//!   (`--sync-layers auto`, DESIGN.md §11).
 
 pub mod buffers;
 pub mod condcomm;
@@ -19,9 +23,11 @@ pub mod engine;
 pub mod pipeline;
 pub mod simulate;
 pub mod staleness;
+pub mod synctune;
 
 pub use engine::{one_hot, Engine, EngineConfig, RunStats};
 pub use pipeline::{HostPipeline, PipelineReport};
+pub use synctune::{SyncTuner, TuneReport};
 pub use simulate::{
     memory_report, simulate, simulate_sweep, simulate_sweep_with, MemReport, SimReport, SweepCase,
 };

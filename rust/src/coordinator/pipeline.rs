@@ -1,49 +1,63 @@
-//! Multi-step host pipeline: the paper's overlap schedules executed for
-//! REAL in the host runtime (DESIGN.md §10).
+//! Multi-step, multi-LAYER host pipeline: the paper's overlap schedules
+//! executed for REAL in the host runtime (DESIGN.md §10–§11).
 //!
 //! `netsim` *prices* displaced/interweaved overlap in virtual time; this
 //! module actually runs it. A [`HostPipeline`] drives a
-//! [`HostMoeLayer`] over a feedback loop of diffusion-style steps and
-//! implements the three expert-parallel strategies' staleness dataflows
-//! with live threads:
+//! [`HostMoeStack`] of `n_layers` MoE layers over a feedback loop of
+//! diffusion-style steps: within a step the latent chains through the
+//! layers (`u_{l+1} = 0.7·u_l + 0.3·y_l`, the next step starts from
+//! `u_L`), and each UNPROTECTED layer keeps its own cross-step
+//! staleness slots implementing the strategy's dataflow:
 //!
-//! * **SyncEp** — assemble→experts→combine inside every step; age 0.
-//! * **Interweaved** — step *t* consumes the combine captured at *t−1*
-//!   (age 1). While the compute sub-pool runs step *t*'s experts, the
-//!   comm sub-pool applies the feedback update and assembles step
-//!   *t+1*'s dispatch payload.
-//! * **DisplacedEp** — experts run on the payload captured at *t−1*,
-//!   and the combine consumed at *t* was produced from *t−2* inputs
-//!   (age 2). The comm sub-pool assembles step *t*'s payload while the
-//!   compute sub-pool chews the previous one.
+//! * **SyncEp** — every layer assembles→computes→combines fresh inside
+//!   the step; age 0 everywhere.
+//! * **Interweaved** — layer *l* at step *t* consumes the combine its
+//!   own payload produced at *t−1* (age 1) and queues this step's
+//!   payload for the compute side.
+//! * **DisplacedEp** — layer *l*'s experts run on the payload captured
+//!   at *t−1*, and the combine consumed at *t* was produced from *t−2*
+//!   inputs (age 2).
 //!
-//! Staleness is DATA here exactly as in the artifact engine: the
-//! [`StalenessLedger`] records the *measured* age of every consumed
-//! combine, and the integration suite pins sync=0 / interweaved=1 /
-//! displaced=2 — the same contract `config::Strategy::step_staleness`
-//! documents and netsim's buffer model prices.
+//! **Selective synchronization is honored by the executor** (the
+//! paper's Sec. 4.2, not just the cost model): a layer protected by
+//! [`SelectiveSync::is_sync_layer`] blocks on a fresh pass (measured
+//! age 0) while unprotected layers keep their displaced/interweaved
+//! slots — so a `Schedule` bitmask emitted by the
+//! [`SyncTuner`](super::synctune::SyncTuner) changes the actual
+//! numerics, and the [`StalenessLedger`] records the MEASURED age of
+//! every (step, layer) consume in chain order.
 //!
-//! Buffering: the cross-step payload/combine slots are double-buffered
-//! through a [`TensorArena`] — a steady-state step allocates nothing
-//! on the dispatch path once the free list is warm (gathers land in
-//! recycled slots with rows copied straight from the plan entries — no
-//! per-step index buffers at all — and retired payloads/combines go
-//! straight back to the arena).
+//! The §11 overlap window: because an unprotected layer's consumable
+//! combine is already buffered when the step begins, the comm side
+//! walks the whole layer chain — feedback update plus layer *l+1*'s
+//! dispatch assembly — without waiting for layer *l*'s expert FFN,
+//! which the compute side executes concurrently from a FIFO of staged
+//! payloads (ScMoE's cross-layer window, arXiv:2404.05019). Protected
+//! layers are true synchronization points: the comm chain blocks until
+//! the compute side returns that layer's fresh combine. Inside each
+//! payload the FFN still runs on the dependency-driven
+//! [`TaskGraph`](crate::par::TaskGraph) crew
+//! ([`HostMoeLayer::ffn_combine_overlapped`]) — no new barriers beyond
+//! the per-step join the PR-5 pipeline already had.
 //!
-//! [`config::PipelineMode`] selects the step executor:
-//! `Overlapped` uses the dependency-driven task crew
-//! ([`HostMoeLayer::step_overlapped`]) plus the cross-step comm/compute
-//! split above; `Barriered` runs the identical dataflow sequentially on
-//! the full pool — the reference the perf gate compares against.
-//! Output is bit-exact across modes, strategies aside, and across
-//! `--threads` widths.
+//! Buffering: per-layer payload/combine slots are double-buffered
+//! through a [`TensorArena`]; a steady-state step allocates nothing on
+//! the dispatch path once the free list is warm.
+//!
+//! [`config::PipelineMode`] selects the step executor: `Overlapped`
+//! uses the task crew plus the comm/compute split above; `Barriered`
+//! runs the identical dataflow sequentially on the full pool — the
+//! reference the perf gate compares against. Output is bit-exact
+//! across modes and `--threads` widths for every strategy and every
+//! [`SelectiveSync`] variant.
 //!
 //! [`config::PipelineMode`]: crate::config::PipelineMode
 
+use std::sync::mpsc;
 use std::time::Instant;
 
-use crate::config::{PipelineMode, Strategy};
-use crate::moe::host::{HostDispatch, HostMoeLayer, HostPhases};
+use crate::config::{PipelineMode, SelectiveSync, Strategy};
+use crate::moe::host::{HostDispatch, HostMoeLayer, HostMoeStack, HostPhases};
 use crate::par::ParPool;
 use crate::tensor::Tensor;
 
@@ -58,20 +72,25 @@ pub struct PipelineReport {
     /// Accumulated per-phase BUSY seconds + wall seconds over the run
     /// (`wall_s ≤ total_s()` once phases overlap — see [`HostPhases`]).
     pub phases: HostPhases,
-    /// Measured age of every consumed combine, per (step, layer=0).
+    /// Measured age of every consumed combine, one record per
+    /// (step, layer) in execution order: step-major, layer ascending.
     pub staleness: StalenessLedger,
     /// Peak bytes held live by the cross-step staleness slots
-    /// (payloads + combines) at the most-loaded point of a step.
+    /// (payloads + combines across all layers) at a step boundary.
     pub peak_buffer_bytes: usize,
     /// Steps executed.
     pub steps: usize,
+    /// Layers in the stack (the ledger holds `steps × n_layers`
+    /// records).
+    pub n_layers: usize,
 }
 
-/// Multi-step host pipeline over one [`HostMoeLayer`] (module docs).
+/// Multi-step host pipeline over a [`HostMoeStack`] (module docs).
 #[derive(Debug)]
 pub struct HostPipeline {
-    layer: HostMoeLayer,
+    stack: HostMoeStack,
     strategy: Strategy,
+    sync: SelectiveSync,
     mode: PipelineMode,
     threads: usize,
     comm_threads: usize,
@@ -92,19 +111,227 @@ fn ffn(
     }
 }
 
+/// One layer's cross-step staleness state. Protected (sync) layers
+/// never populate theirs.
+#[derive(Default)]
+struct LayerSlots {
+    /// The consumable combine and the step its payload was captured at.
+    combine: Option<(Tensor, usize)>,
+    /// Displaced only: the in-flight dispatch payload.
+    payload: Option<HostDispatch>,
+}
+
+/// A payload handed to the compute side.
+struct FfnJob {
+    layer: usize,
+    disp: HostDispatch,
+    /// Sync jobs return on the blocking channel; stale jobs are
+    /// collected at the end of the step.
+    sync: bool,
+}
+
+/// A finished FFN: the combine, the payload it consumed (for slot
+/// bookkeeping + arena recycling), and its busy-time split.
+struct FfnDone {
+    layer: usize,
+    out: Tensor,
+    disp: HostDispatch,
+    ph: HostPhases,
+}
+
+/// Where the comm chain sends expert work: inline on a pool
+/// (barriered / fully-protected runs) or queued to the compute thread
+/// (the overlapped comm/compute split).
+enum FfnSink<'a> {
+    Inline {
+        pool: &'a ParPool,
+        mode: PipelineMode,
+        done: Vec<FfnDone>,
+    },
+    Queued {
+        job_tx: &'a mpsc::Sender<FfnJob>,
+        sync_rx: &'a mpsc::Receiver<FfnDone>,
+    },
+}
+
+impl FfnSink<'_> {
+    /// Hand over a stale payload; its result is installed at step end.
+    fn submit_stale(&mut self, stack: &HostMoeStack, l: usize, disp: HostDispatch) {
+        match self {
+            FfnSink::Inline { pool, mode, done } => {
+                let (out, ph) = ffn(stack.layer(l), *mode, *pool, &disp);
+                done.push(FfnDone { layer: l, out, disp, ph });
+            }
+            FfnSink::Queued { job_tx, .. } => job_tx
+                .send(FfnJob { layer: l, disp, sync: false })
+                .expect("compute crew receiving"),
+        }
+    }
+
+    /// Blocking fresh pass (protected layers + cold starts). The queue
+    /// is FIFO, so earlier stale jobs finish first and the compute
+    /// sub-pool — not the small comm pool — runs the heavy FFN.
+    fn run_sync(&mut self, stack: &HostMoeStack, l: usize, disp: HostDispatch) -> FfnDone {
+        match self {
+            FfnSink::Inline { pool, mode, .. } => {
+                let (out, ph) = ffn(stack.layer(l), *mode, *pool, &disp);
+                FfnDone { layer: l, out, disp, ph }
+            }
+            FfnSink::Queued { job_tx, sync_rx } => {
+                job_tx
+                    .send(FfnJob { layer: l, disp, sync: true })
+                    .expect("compute crew receiving");
+                sync_rx.recv().expect("compute crew alive")
+            }
+        }
+    }
+
+    /// Inline-collected stale results (queued results drain from the
+    /// result channel instead).
+    fn take_done(self) -> Vec<FfnDone> {
+        match self {
+            FfnSink::Inline { done, .. } => done,
+            FfnSink::Queued { .. } => Vec::new(),
+        }
+    }
+}
+
+/// The comm-side layer chain of one step: walk the stack in order,
+/// consume each layer's buffered combine (or block on a fresh pass for
+/// protected layers / cold starts), apply the feedback update, and
+/// stage the next payloads. Returns the step's output latent. Runs
+/// identically under both sinks — determinism never depends on where
+/// the FFNs execute.
+#[allow(clippy::too_many_arguments)]
+fn chain_step(
+    stack: &HostMoeStack,
+    strategy: Strategy,
+    sync_mask: &[bool],
+    t: usize,
+    x: &Tensor,
+    slots: &mut [LayerSlots],
+    arena: &mut TensorArena,
+    ledger: &mut StalenessLedger,
+    assemble_pool: &ParPool,
+    sink: &mut FfnSink<'_>,
+    ph: &mut HostPhases,
+) -> Tensor {
+    let mut cur = arena.copy_of(x);
+    for l in 0..stack.n_layers() {
+        let layer = stack.layer(l);
+        let (y, age) = if sync_mask[l] {
+            // protected layer: fresh activations, no cross-step slots
+            let (disp, ph_a) = layer.assemble(assemble_pool, &cur, t, arena);
+            ph.accumulate(&ph_a);
+            let done = sink.run_sync(stack, l, disp);
+            ph.accumulate(&done.ph);
+            done.disp.recycle_into(arena);
+            (done.out, 0)
+        } else if strategy == Strategy::Interweaved {
+            let (disp, ph_a) = layer.assemble(assemble_pool, &cur, t, arena);
+            ph.accumulate(&ph_a);
+            match slots[l].combine.take() {
+                Some((y, cap)) => {
+                    // steady state: consume the combine produced from
+                    // the t−1 payload, queue THIS step's payload; its
+                    // result lands in the slot at step end (age 1 when
+                    // consumed at t+1)
+                    sink.submit_stale(stack, l, disp);
+                    (y, t - cap)
+                }
+                None => {
+                    // cold start (t == 0): blocking fresh pass; a copy
+                    // seeds the slot so t+1 consumes age 1
+                    let done = sink.run_sync(stack, l, disp);
+                    ph.accumulate(&done.ph);
+                    done.disp.recycle_into(arena);
+                    slots[l].combine = Some((arena.copy_of(&done.out), t));
+                    (done.out, 0)
+                }
+            }
+        } else {
+            debug_assert_eq!(strategy, Strategy::DisplacedEp, "rejected in new()");
+            match slots[l].payload.take() {
+                Some(p_prev) => {
+                    // queue the PREVIOUS step's payload before
+                    // assembling this one — the compute side starts
+                    // while the comm side gathers
+                    sink.submit_stale(stack, l, p_prev);
+                    let (disp, ph_a) = layer.assemble(assemble_pool, &cur, t, arena);
+                    ph.accumulate(&ph_a);
+                    match slots[l].combine.take() {
+                        Some((y, cap)) => {
+                            slots[l].payload = Some(disp);
+                            (y, t - cap)
+                        }
+                        None => {
+                            // t == 1 cold start: blocking fresh pass on
+                            // THIS step's payload, exactly like the
+                            // engine's displaced path
+                            let done = sink.run_sync(stack, l, disp);
+                            ph.accumulate(&done.ph);
+                            slots[l].payload = Some(done.disp);
+                            (done.out, 0)
+                        }
+                    }
+                }
+                None => {
+                    // t == 0 cold start: fresh pass; the payload stays
+                    // buffered for step 1's expert pass
+                    let (disp, ph_a) = layer.assemble(assemble_pool, &cur, t, arena);
+                    ph.accumulate(&ph_a);
+                    let done = sink.run_sync(stack, l, disp);
+                    ph.accumulate(&done.ph);
+                    slots[l].payload = Some(done.disp);
+                    (done.out, 0)
+                }
+            }
+        };
+        ledger.record(t, l, age);
+        let mut nxt = arena.take(cur.shape());
+        HostPipeline::feedback_into(&mut nxt, &cur, &y);
+        arena.recycle(cur);
+        // y is a step-internal allocation (or a consumed slot about to
+        // be replaced by one): DROPPED, not recycled, so per-step arena
+        // takes and recycles stay balanced
+        drop(y);
+        cur = nxt;
+    }
+    cur
+}
+
 impl HostPipeline {
-    /// Build a pipeline over `layer`. `pool` fixes the TOTAL worker
-    /// budget; in overlapped mode it is split into a compute sub-pool
-    /// (expert FFN + combine) and a comm sub-pool (dispatch assembly of
-    /// the neighbouring step), roughly 3:1 with both at least 1 — at
-    /// `--threads 1` the two sub-pools oversubscribe one core, which
-    /// changes wall time only, never bits.
-    ///
-    /// Supports `SyncEp`, `DisplacedEp` and `Interweaved`; the other
-    /// strategies have no host-numerics dataflow and panic.
+    /// Single-layer convenience: wrap `layer` in a one-layer stack with
+    /// no selective synchronization. See [`HostPipeline::new_stack`].
     pub fn new(
         layer: HostMoeLayer,
         strategy: Strategy,
+        mode: PipelineMode,
+        pool: &ParPool,
+    ) -> HostPipeline {
+        Self::new_stack(
+            HostMoeStack::from_layers(vec![layer]),
+            strategy,
+            SelectiveSync::None,
+            mode,
+            pool,
+        )
+    }
+
+    /// Build a pipeline over `stack` with the layer-level `sync` policy
+    /// (module docs). `pool` fixes the TOTAL worker budget; in
+    /// overlapped mode it is split into a compute sub-pool (expert FFN
+    /// + combine) and a comm sub-pool (dispatch assembly of the layer
+    /// chain), roughly 3:1 with both at least 1 — at `--threads 1` the
+    /// two sub-pools oversubscribe one core, which changes wall time
+    /// only, never bits.
+    ///
+    /// Supports `SyncEp`, `DisplacedEp` and `Interweaved`; the other
+    /// strategies have no host-numerics dataflow and panic.
+    pub fn new_stack(
+        stack: HostMoeStack,
+        strategy: Strategy,
+        sync: SelectiveSync,
         mode: PipelineMode,
         pool: &ParPool,
     ) -> HostPipeline {
@@ -120,8 +347,9 @@ impl HostPipeline {
         let comm_threads = (threads / 4).max(1);
         let compute_threads = threads.saturating_sub(comm_threads).max(1);
         HostPipeline {
-            layer,
+            stack,
             strategy,
+            sync,
             mode,
             threads,
             comm_threads,
@@ -130,9 +358,19 @@ impl HostPipeline {
         }
     }
 
-    /// The layer this pipeline drives.
+    /// The stack this pipeline drives.
+    pub fn stack(&self) -> &HostMoeStack {
+        &self.stack
+    }
+
+    /// The first layer (single-layer callers' back-compat accessor).
     pub fn layer(&self) -> &HostMoeLayer {
-        &self.layer
+        self.stack.layer(0)
+    }
+
+    /// Layers in the stack.
+    pub fn n_layers(&self) -> usize {
+        self.stack.n_layers()
     }
 
     /// The arena backing the staleness slots (hit/miss telemetry).
@@ -140,7 +378,7 @@ impl HostPipeline {
         &self.arena
     }
 
-    /// The per-step feedback update `x_next = 0.7·x + 0.3·y` (the
+    /// The per-layer feedback update `u_next = 0.7·u + 0.3·y` (the
     /// damped recurrence `perfprobe --sim` uses, so every step routes
     /// fresh data). Elementwise and serial: bit-exact trivially.
     pub fn feedback_into(x_next: &mut Tensor, x: &Tensor, y: &Tensor) {
@@ -156,8 +394,8 @@ impl HostPipeline {
         }
     }
 
-    /// The acceptance baseline: the same feedback loop over the plain
-    /// BARRIERED single-step path ([`HostMoeLayer::step`]), no
+    /// The single-layer acceptance baseline: the feedback loop over the
+    /// plain BARRIERED step path ([`HostMoeLayer::step`]), no
     /// cross-step state at all. `HostPipeline` with `SyncEp` must match
     /// this bit-for-bit on any pool width.
     pub fn reference_run(
@@ -176,290 +414,164 @@ impl HostPipeline {
         x
     }
 
+    /// The multi-layer acceptance baseline: chain every layer's plain
+    /// barriered step through the feedback update, all fresh. `SyncEp`
+    /// (or a fully-protected schedule) must match this bit-for-bit on
+    /// any pool width and either executor.
+    pub fn reference_run_stack(
+        stack: &HostMoeStack,
+        pool: &ParPool,
+        x0: &Tensor,
+        steps: usize,
+    ) -> Tensor {
+        let mut x = x0.clone();
+        for _ in 0..steps {
+            for l in 0..stack.n_layers() {
+                let y = stack.layer(l).step(pool, &x);
+                let mut nxt = Tensor::zeros(x.shape());
+                Self::feedback_into(&mut nxt, &x, &y);
+                x = nxt;
+            }
+        }
+        x
+    }
+
     /// Run `steps` feedback steps from `x0` under the configured
-    /// strategy and executor. Deterministic: output bits depend only on
-    /// (layer, strategy, x0, steps) — never on the pool width, the
-    /// comm/compute split, or the executor mode.
+    /// strategy, selective-sync policy and executor. Deterministic:
+    /// output bits depend only on (stack, strategy, sync, x0, steps) —
+    /// never on the pool width, the comm/compute split, or the
+    /// executor mode.
     pub fn run(&mut self, x0: &Tensor, steps: usize) -> PipelineReport {
-        match self.strategy {
-            Strategy::SyncEp => self.run_sync(x0, steps),
-            Strategy::Interweaved => self.run_interweaved(x0, steps),
-            Strategy::DisplacedEp => self.run_displaced(x0, steps),
-            _ => unreachable!("rejected in new()"),
-        }
-    }
-
-    fn run_sync(&mut self, x0: &Tensor, steps: usize) -> PipelineReport {
-        let pool = ParPool::new(self.threads);
-        let mut phases = HostPhases::default();
-        let mut ledger = StalenessLedger::default();
-        let mut x = x0.clone();
-        let mut x_next = self.arena.take(x0.shape());
-        for t in 0..steps {
-            let t_wall = Instant::now();
-            let (y, mut ph) = match self.mode {
-                PipelineMode::Overlapped => self.layer.step_overlapped_timed(&pool, &x),
-                PipelineMode::Barriered => self.layer.step_timed(&pool, &x),
-            };
-            ledger.record(t, 0, 0);
-            Self::feedback_into(&mut x_next, &x, &y);
-            std::mem::swap(&mut x, &mut x_next);
-            // y (a fresh step-internal allocation) is DROPPED, not
-            // recycled: sync has no cross-step slots to feed, and
-            // recycling it would grow the free list by one buffer per
-            // step with nothing ever taking them back out.
-            drop(y);
-            ph.wall_s = t_wall.elapsed().as_secs_f64();
-            phases.accumulate(&ph);
-        }
-        self.arena.recycle(x_next);
-        PipelineReport {
-            out: x,
-            phases,
-            staleness: ledger,
-            peak_buffer_bytes: 0,
-            steps,
-        }
-    }
-
-    fn run_interweaved(&mut self, x0: &Tensor, steps: usize) -> PipelineReport {
+        let n_layers = self.stack.n_layers();
+        let sync_mask: Vec<bool> = (0..n_layers)
+            .map(|l| {
+                self.strategy == Strategy::SyncEp || self.sync.is_sync_layer(l, n_layers)
+            })
+            .collect();
+        let all_sync = sync_mask.iter().all(|&b| b);
+        // a fully-protected run has no stale window to hide work in:
+        // run the chain inline on the full pool (the executor mode
+        // still selects the per-payload task crew)
+        let overlap = self.mode == PipelineMode::Overlapped && !all_sync;
         let full = ParPool::new(self.threads);
         let comm = ParPool::new(self.comm_threads);
         let compute = ParPool::new(self.compute_threads);
-        let overlap = self.mode == PipelineMode::Overlapped;
         let mode = self.mode;
-        let layer = &self.layer;
+        let strategy = self.strategy;
+        let stack = &self.stack;
         let arena = &mut self.arena;
 
         let mut phases = HostPhases::default();
         let mut ledger = StalenessLedger::default();
         let mut peak = 0usize;
+        let mut slots: Vec<LayerSlots> =
+            (0..n_layers).map(|_| LayerSlots::default()).collect();
         let mut x = x0.clone();
-        let mut pending_payload: Option<HostDispatch> = None;
-        let mut pending_combine: Option<(Tensor, usize)> = None;
 
         for t in 0..steps {
             let t_wall = Instant::now();
             let mut ph_step = HostPhases::default();
-            match pending_combine.take() {
-                None => {
-                    // cold start (t == 0): fully serial — assemble,
-                    // fresh compute (age 0), stash the combine for t+1,
-                    // then stage t+1's payload.
-                    let (p0, ph_a) = layer.assemble(&full, &x, t, arena);
-                    let (y, ph_c) = ffn(layer, mode, &full, &p0);
-                    ledger.record(t, 0, 0);
-                    pending_combine = Some((arena.copy_of(&y), t));
-                    let mut x_next = arena.take(x.shape());
-                    Self::feedback_into(&mut x_next, &x, &y);
-                    let (p1, ph_n) = layer.assemble(&full, &x_next, t + 1, arena);
-                    peak = peak.max(
-                        p0.byte_size() + p1.byte_size() + 2 * y.byte_size(),
-                    );
-                    pending_payload = Some(p1);
-                    p0.recycle_into(arena);
-                    arena.recycle(y);
-                    // the retired latent is dropped (not recycled) so
-                    // per-step arena takes and recycles stay balanced
-                    x = x_next;
-                    ph_step.accumulate(&ph_a);
-                    ph_step.accumulate(&ph_c);
-                    ph_step.accumulate(&ph_n);
-                }
-                Some((y, cap)) => {
-                    ledger.record(t, 0, t - cap);
-                    let p = pending_payload.take().expect("interweaved payload staged");
-                    // compute: experts+combine of THIS step's payload.
-                    // comm: feedback update + stage t+1's payload from
-                    // the fresh latent — the §10 overlap window.
-                    let ((out, ph_c), (x_next, p_next, ph_a)) = if overlap {
-                        let (x_ref, y_ref, p_ref) = (&x, &y, &p);
-                        // reborrow scoped to this window, so the outer
-                        // &mut binding survives into the next iteration
-                        let arena_w: &mut TensorArena = &mut *arena;
-                        std::thread::scope(|s| {
-                            let hc = s.spawn(move || ffn(layer, mode, &compute, p_ref));
-                            let ha = s.spawn(move || {
-                                let mut x_next = arena_w.take(x_ref.shape());
-                                Self::feedback_into(&mut x_next, x_ref, y_ref);
-                                let staged =
-                                    layer.assemble(&comm, &x_next, t + 1, arena_w);
-                                (x_next, staged.0, staged.1)
-                            });
-                            let c = match hc.join() {
-                                Ok(v) => v,
-                                Err(e) => std::panic::resume_unwind(e),
+            let (x_next, dones) = if overlap {
+                let compute_pool = &compute;
+                std::thread::scope(|s| {
+                    let (job_tx, job_rx) = mpsc::channel::<FfnJob>();
+                    let (res_tx, res_rx) = mpsc::channel::<FfnDone>();
+                    let (sync_tx, sync_rx) = mpsc::channel::<FfnDone>();
+                    let hc = s.spawn(move || {
+                        // compute crew: FIFO over staged payloads; sync
+                        // results return on their own channel so the
+                        // comm chain blocks on exactly the one it needs
+                        for job in job_rx {
+                            let (out, ph) =
+                                ffn(stack.layer(job.layer), mode, compute_pool, &job.disp);
+                            let done = FfnDone {
+                                layer: job.layer,
+                                out,
+                                disp: job.disp,
+                                ph,
                             };
-                            let a = match ha.join() {
-                                Ok(v) => v,
-                                Err(e) => std::panic::resume_unwind(e),
-                            };
-                            (c, a)
-                        })
-                    } else {
-                        let c = ffn(layer, mode, &full, &p);
-                        let mut x_next = arena.take(x.shape());
-                        Self::feedback_into(&mut x_next, &x, &y);
-                        let (p_next, ph_a) = layer.assemble(&full, &x_next, t + 1, arena);
-                        (c, (x_next, p_next, ph_a))
-                    };
-                    peak = peak.max(
-                        p.byte_size() + p_next.byte_size() + out.byte_size() + y.byte_size(),
-                    );
-                    pending_combine = Some((out, p.captured_step));
-                    pending_payload = Some(p_next);
-                    p.recycle_into(arena);
-                    arena.recycle(y);
-                    // the retired latent is dropped (not recycled) so
-                    // per-step arena takes and recycles stay balanced
-                    x = x_next;
-                    ph_step.accumulate(&ph_c);
-                    ph_step.accumulate(&ph_a);
-                }
-            }
-            ph_step.wall_s = t_wall.elapsed().as_secs_f64();
-            phases.accumulate(&ph_step);
-        }
-        if let Some(p) = pending_payload.take() {
-            p.recycle_into(arena);
-        }
-        if let Some((y, _)) = pending_combine.take() {
-            arena.recycle(y);
-        }
-        PipelineReport {
-            out: x,
-            phases,
-            staleness: ledger,
-            peak_buffer_bytes: peak,
-            steps,
-        }
-    }
-
-    fn run_displaced(&mut self, x0: &Tensor, steps: usize) -> PipelineReport {
-        let full = ParPool::new(self.threads);
-        let comm = ParPool::new(self.comm_threads);
-        let compute = ParPool::new(self.compute_threads);
-        let overlap = self.mode == PipelineMode::Overlapped;
-        let mode = self.mode;
-        let layer = &self.layer;
-        let arena = &mut self.arena;
-
-        let mut phases = HostPhases::default();
-        let mut ledger = StalenessLedger::default();
-        let mut peak = 0usize;
-        let mut x = x0.clone();
-        // displaced double-buffering: the in-flight dispatch payload AND
-        // the in-flight combine live across the step boundary.
-        let mut pending_payload: Option<HostDispatch> = None;
-        let mut pending_combine: Option<(Tensor, usize)> = None;
-
-        for t in 0..steps {
-            let t_wall = Instant::now();
-            let mut ph_step = HostPhases::default();
-            if t == 0 {
-                // cold start: assemble + blocking fresh compute (age 0);
-                // the payload stays buffered for step 1's expert pass.
-                let (p0, ph_a) = layer.assemble(&full, &x, 0, arena);
-                let (y, ph_c) = ffn(layer, mode, &full, &p0);
-                ledger.record(0, 0, 0);
-                let mut x_next = arena.take(x.shape());
-                Self::feedback_into(&mut x_next, &x, &y);
-                peak = peak.max(p0.byte_size() + y.byte_size());
-                pending_payload = Some(p0);
-                arena.recycle(y);
-                // retired latent dropped: per-step takes/recycles balance
-                x = x_next;
-                ph_step.accumulate(&ph_a);
-                ph_step.accumulate(&ph_c);
-            } else {
-                let consumed = pending_combine.take();
-                let p_prev = pending_payload.take().expect("displaced payload buffered");
-                // compute: experts on the PREVIOUS step's payload.
-                // comm: stage THIS step's payload; apply the feedback
-                // too once the consumable combine is in hand (t ≥ 2).
-                let ((out, ph_c), (x_next_opt, p_now, ph_a)) = if overlap {
-                    let (x_ref, p_ref, c_ref) = (&x, &p_prev, &consumed);
-                    // reborrow scoped to this window (the next iteration
-                    // needs the outer &mut binding back)
-                    let arena_w: &mut TensorArena = &mut *arena;
-                    std::thread::scope(|s| {
-                        let hc = s.spawn(move || ffn(layer, mode, &compute, p_ref));
-                        let ha = s.spawn(move || {
-                            let staged = layer.assemble(&comm, x_ref, t, arena_w);
-                            let x_next = c_ref.as_ref().map(|(y, _)| {
-                                let mut xn = arena_w.take(x_ref.shape());
-                                Self::feedback_into(&mut xn, x_ref, y);
-                                xn
-                            });
-                            (x_next, staged.0, staged.1)
-                        });
-                        let c = match hc.join() {
-                            Ok(v) => v,
-                            Err(e) => std::panic::resume_unwind(e),
-                        };
-                        let a = match ha.join() {
-                            Ok(v) => v,
-                            Err(e) => std::panic::resume_unwind(e),
-                        };
-                        (c, a)
-                    })
-                } else {
-                    let c = ffn(layer, mode, &full, &p_prev);
-                    let (p_now, ph_a) = layer.assemble(&full, &x, t, arena);
-                    let x_next = consumed.as_ref().map(|(y, _)| {
-                        let mut xn = arena.take(x.shape());
-                        Self::feedback_into(&mut xn, &x, y);
-                        xn
+                            let tx = if job.sync { &sync_tx } else { &res_tx };
+                            if tx.send(done).is_err() {
+                                break; // comm side unwinding
+                            }
+                        }
                     });
-                    (c, (x_next, p_now, ph_a))
+                    let mut sink = FfnSink::Queued {
+                        job_tx: &job_tx,
+                        sync_rx: &sync_rx,
+                    };
+                    let xn = chain_step(
+                        stack,
+                        strategy,
+                        &sync_mask,
+                        t,
+                        &x,
+                        &mut slots,
+                        &mut *arena,
+                        &mut ledger,
+                        &comm,
+                        &mut sink,
+                        &mut ph_step,
+                    );
+                    // closing the job queue ends the compute crew; its
+                    // stale results are buffered in the result channel
+                    drop(sink);
+                    drop(job_tx);
+                    if let Err(e) = hc.join() {
+                        std::panic::resume_unwind(e);
+                    }
+                    (xn, res_rx.try_iter().collect::<Vec<_>>())
+                })
+            } else {
+                let mut sink = FfnSink::Inline {
+                    pool: &full,
+                    mode,
+                    done: Vec::new(),
                 };
-                ph_step.accumulate(&ph_c);
-                ph_step.accumulate(&ph_a);
-                peak = peak.max(
-                    p_prev.byte_size()
-                        + p_now.byte_size()
-                        + out.byte_size()
-                        + consumed.as_ref().map(|(y, _)| y.byte_size()).unwrap_or(0),
+                let xn = chain_step(
+                    stack,
+                    strategy,
+                    &sync_mask,
+                    t,
+                    &x,
+                    &mut slots,
+                    &mut *arena,
+                    &mut ledger,
+                    &full,
+                    &mut sink,
+                    &mut ph_step,
                 );
-                let x_next = match (consumed, x_next_opt) {
-                    (Some((y, cap)), Some(xn)) => {
-                        ledger.record(t, 0, t - cap);
-                        arena.recycle(y);
-                        xn
-                    }
-                    (None, _) => {
-                        // true cold start at t == 1: block on a fresh
-                        // pass over the payload just staged (age 0),
-                        // exactly like the engine's displaced path.
-                        // Deliberately recomputed, not cached from t=0:
-                        // the two cold-start passes are bit-identical to
-                        // stashed copies but keep this loop's state
-                        // machine uniform with the engine's — a one-time
-                        // cost that never touches steady-state timing.
-                        let (y, ph_f) = ffn(layer, mode, &full, &p_now);
-                        ledger.record(t, 0, 0);
-                        ph_step.accumulate(&ph_f);
-                        let mut xn = arena.take(x.shape());
-                        Self::feedback_into(&mut xn, &x, &y);
-                        arena.recycle(y);
-                        xn
-                    }
-                    (Some(_), None) => unreachable!("feedback staged whenever a combine was"),
-                };
-                pending_combine = Some((out, p_prev.captured_step));
-                pending_payload = Some(p_now);
-                p_prev.recycle_into(arena);
-                // retired latent dropped: per-step takes/recycles balance
-                x = x_next;
+                (xn, sink.take_done())
+            };
+            // install the stale results: each layer's combine slot for
+            // step t+1, keyed by layer id — install order cannot matter
+            for done in dones {
+                ph_step.accumulate(&done.ph);
+                let cap = done.disp.captured_step;
+                done.disp.recycle_into(arena);
+                slots[done.layer].combine = Some((done.out, cap));
             }
+            // retire the previous latent (the chain worked on a copy)
+            arena.recycle(std::mem::replace(&mut x, x_next));
+            let live: usize = slots
+                .iter()
+                .map(|sl| {
+                    sl.combine.as_ref().map(|(y, _)| y.byte_size()).unwrap_or(0)
+                        + sl.payload.as_ref().map(HostDispatch::byte_size).unwrap_or(0)
+                })
+                .sum();
+            peak = peak.max(live);
             ph_step.wall_s = t_wall.elapsed().as_secs_f64();
             phases.accumulate(&ph_step);
         }
-        if let Some(p) = pending_payload.take() {
-            p.recycle_into(arena);
-        }
-        if let Some((y, _)) = pending_combine.take() {
-            arena.recycle(y);
+        // drain the per-layer slots back to the arena
+        for sl in slots.iter_mut() {
+            if let Some((y, _)) = sl.combine.take() {
+                arena.recycle(y);
+            }
+            if let Some(p) = sl.payload.take() {
+                p.recycle_into(arena);
+            }
         }
         PipelineReport {
             out: x,
@@ -467,6 +579,7 @@ impl HostPipeline {
             staleness: ledger,
             peak_buffer_bytes: peak,
             steps,
+            n_layers,
         }
     }
 }
@@ -477,17 +590,18 @@ mod tests {
     use crate::moe::host::HostMoeConfig;
     use crate::rng::Rng;
 
+    fn cfg() -> HostMoeConfig {
+        HostMoeConfig {
+            n_experts: 8,
+            top_k: 2,
+            d_model: 16,
+            d_ff: 32,
+            devices: 4,
+        }
+    }
+
     fn layer() -> HostMoeLayer {
-        HostMoeLayer::synth(
-            HostMoeConfig {
-                n_experts: 8,
-                top_k: 2,
-                d_model: 16,
-                d_ff: 32,
-                devices: 4,
-            },
-            0xD1CE,
-        )
+        HostMoeLayer::synth(cfg(), 0xD1CE)
     }
 
     fn latent(seed: u64) -> Tensor {
@@ -498,6 +612,19 @@ mod tests {
 
     fn run(strategy: Strategy, mode: PipelineMode, threads: usize, steps: usize) -> PipelineReport {
         let mut p = HostPipeline::new(layer(), strategy, mode, &ParPool::new(threads));
+        p.run(&latent(3), steps)
+    }
+
+    fn run_stack(
+        n_layers: usize,
+        strategy: Strategy,
+        sync: SelectiveSync,
+        mode: PipelineMode,
+        threads: usize,
+        steps: usize,
+    ) -> PipelineReport {
+        let stack = HostMoeStack::synth(cfg(), n_layers, 0xD1CE);
+        let mut p = HostPipeline::new_stack(stack, strategy, sync, mode, &ParPool::new(threads));
         p.run(&latent(3), steps)
     }
 
@@ -549,11 +676,7 @@ mod tests {
         let iw = ages(Strategy::Interweaved);
         assert_eq!(iw[0], 0);
         assert!(iw[1..].iter().all(|&a| a == 1), "{iw:?}");
-        assert_eq!(
-            iw.len(),
-            steps,
-            "one combine consumed per step"
-        );
+        assert_eq!(iw.len(), steps, "one combine consumed per step");
         let dp = ages(Strategy::DisplacedEp);
         assert_eq!(&dp[..2], &[0, 0]);
         assert!(dp[2..].iter().all(|&a| a == 2), "{dp:?}");
@@ -585,6 +708,74 @@ mod tests {
     }
 
     #[test]
+    fn multilayer_sync_matches_stack_reference_bit_exact() {
+        let stack = HostMoeStack::synth(cfg(), 3, 0xD1CE);
+        let want = HostPipeline::reference_run_stack(&stack, &ParPool::new(1), &latent(3), 5);
+        for mode in [PipelineMode::Barriered, PipelineMode::Overlapped] {
+            for threads in [1usize, 2, 4] {
+                let rep = run_stack(3, Strategy::SyncEp, SelectiveSync::None, mode, threads, 5);
+                assert_eq!(want, rep.out, "{mode:?} threads={threads}");
+            }
+        }
+        // a fully-protected schedule is the same computation
+        let rep = run_stack(
+            3,
+            Strategy::Interweaved,
+            SelectiveSync::Schedule(0b111),
+            PipelineMode::Overlapped,
+            2,
+            5,
+        );
+        assert_eq!(want, rep.out, "fully-protected interweaved == all-sync");
+        assert!(rep.staleness.records.iter().all(|&(_, _, a)| a == 0));
+    }
+
+    #[test]
+    fn per_layer_ledger_follows_the_schedule() {
+        // layers 0 and 2 protected, 1 and 3 stale
+        let sync = SelectiveSync::Schedule(0b0101);
+        let steps = 6;
+        for (strategy, settle) in [(Strategy::Interweaved, 1usize), (Strategy::DisplacedEp, 2)] {
+            let rep = run_stack(4, strategy, sync, PipelineMode::Overlapped, 2, steps);
+            assert_eq!(rep.staleness.records.len(), steps * 4);
+            for &(s, l, a) in &rep.staleness.records {
+                if l % 2 == 0 {
+                    assert_eq!(a, 0, "protected layer {l} step {s} must be fresh");
+                } else if s >= settle {
+                    assert_eq!(a, settle, "{strategy:?} layer {l} step {s}");
+                } else {
+                    assert_eq!(a, 0, "cold start {strategy:?} layer {l} step {s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn schedules_change_the_numerics() {
+        // selective sync is EXECUTED, not just priced: protecting layers
+        // moves the trajectory toward the all-fresh reference
+        let none = run_stack(
+            4,
+            Strategy::DisplacedEp,
+            SelectiveSync::None,
+            PipelineMode::Overlapped,
+            2,
+            6,
+        )
+        .out;
+        let deep = run_stack(
+            4,
+            Strategy::DisplacedEp,
+            SelectiveSync::Deep,
+            PipelineMode::Overlapped,
+            2,
+            6,
+        )
+        .out;
+        assert_ne!(none, deep, "protected layers must change the output");
+    }
+
+    #[test]
     fn buffers_and_arena_account() {
         let mut p = HostPipeline::new(
             layer(),
@@ -600,6 +791,7 @@ mod tests {
         assert!(rep.phases.wall_s > 0.0);
         assert!(rep.phases.expert_s > 0.0 && rep.phases.dispatch_s > 0.0);
         assert_eq!(rep.steps, 6);
+        assert_eq!(rep.n_layers, 1);
     }
 
     #[test]

@@ -420,6 +420,27 @@ mod tests {
     }
 
     #[test]
+    fn schedule_mask_prices_between_none_and_full_sync() {
+        // a measured Schedule bitmask (e.g. from SyncTuner) is priced
+        // per protected layer exactly like the named heuristics: more
+        // protected layers => strictly more latency, and any partial
+        // mask sits between the all-async and all-sync endpoints.
+        use crate::config::SelectiveSync;
+        let none = run(Strategy::Interweaved, DiceOptions::none());
+        let sync = run(Strategy::SyncEp, DiceOptions::none());
+        let mut prev = none.step_time;
+        for mask in [0b1u64, 0b101, 0b10111] {
+            let mut o = DiceOptions::none();
+            o.selective_sync = SelectiveSync::Schedule(mask);
+            let t = run(Strategy::Interweaved, o).step_time;
+            assert!(t > none.step_time, "mask {mask:#b} must cost over no sync");
+            assert!(t < sync.step_time, "mask {mask:#b} must undercut full sync");
+            assert!(t >= prev - 1e-12, "more protected layers must not get cheaper");
+            prev = t;
+        }
+    }
+
+    #[test]
     fn int8_compression_cuts_step_time_identity_does_not() {
         // bytes dominate at XL scale, so int8's halved payload must beat
         // the dense schedule even after the α+β codec overhead — while

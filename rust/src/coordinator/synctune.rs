@@ -1,0 +1,294 @@
+//! Measured selective synchronization (DESIGN.md §11): turn the
+//! paper's hand-picked protected-layer heuristics
+//! ([`SelectiveSync::Deep`] / [`SelectiveSync::Shallow`]) into a
+//! per-layer schedule derived from MEASURED staleness sensitivity.
+//!
+//! The paper protects "layers vulnerable to staled activations" but
+//! picks them by depth; ExFlow (arXiv:2401.08383) shows per-layer
+//! routing structure is measurable. The [`SyncTuner`] measures it
+//! directly on the host pipeline:
+//!
+//! 1. **Reference** — the all-fresh trajectory
+//!    ([`HostPipeline::reference_run_stack`]).
+//! 2. **Probe** — for each layer `l`, run the stack with ONLY layer
+//!    `l` stale (every other layer protected — the executable analogue
+//!    of `DiceOptions::only_async_layer`) and record the trajectory
+//!    drift ([`quality::trajectory_drift`]): the layer's staleness
+//!    *sensitivity*.
+//! 3. **Schedule** — protect the `budget` most-sensitive layers
+//!    ([`schedule_from_sensitivity`]), then MEASURE the end-to-end
+//!    drift of that schedule against the Deep/Shallow heuristics and
+//!    emit the best of the three as a [`SelectiveSync::Schedule`]
+//!    bitmask — so the tuned schedule's degradation is ≤ the best
+//!    hand-picked heuristic by construction, at equal-or-fewer sync
+//!    layers.
+//!
+//! Every probe runs the real executor, so the tuner's output is
+//! deterministic for any `--threads` width (the pipeline's bit-exact
+//! contract). Wired to the CLI as `--sync-layers auto` and gated by
+//! `dice exp synctune`.
+//!
+//! [`quality::trajectory_drift`]: crate::quality::trajectory_drift
+
+use crate::config::{PipelineMode, SelectiveSync, Strategy};
+use crate::moe::host::{HostMoeConfig, HostMoeStack};
+use crate::par::ParPool;
+use crate::quality::trajectory_drift;
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+use super::pipeline::HostPipeline;
+
+/// The bitmask form of any [`SelectiveSync`] policy over `n_layers`
+/// (bit `l` set ⇔ layer `l` protected).
+pub fn heuristic_mask(sync: SelectiveSync, n_layers: usize) -> u64 {
+    (0..n_layers.min(64))
+        .filter(|&l| sync.is_sync_layer(l, n_layers))
+        .fold(0u64, |m, l| m | (1u64 << l))
+}
+
+/// Protect the `budget` most staleness-sensitive layers: rank by
+/// sensitivity descending with ties broken toward the SHALLOWER layer
+/// (deterministic, and the cheaper layer to keep fresh under the §11
+/// overlap window — an early sync point stalls less of the chain).
+pub fn schedule_from_sensitivity(sens: &[f64], budget: usize) -> u64 {
+    assert!(sens.len() <= 64, "schedule masks cover at most 64 layers");
+    let mut idx: Vec<usize> = (0..sens.len()).collect();
+    idx.sort_by(|&a, &b| {
+        sens[b]
+            .partial_cmp(&sens[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut mask = 0u64;
+    for &l in idx.iter().take(budget) {
+        mask |= 1u64 << l;
+    }
+    mask
+}
+
+/// What one tuning pass measured and decided.
+#[derive(Debug, Clone)]
+pub struct TuneReport {
+    /// Layers probed.
+    pub n_layers: usize,
+    /// The staleness dataflow the probes ran under.
+    pub strategy: Strategy,
+    /// Per-layer trajectory drift with ONLY that layer stale.
+    pub sensitivity: Vec<f64>,
+    /// The sensitivity-ranked candidate mask (before the measured
+    /// comparison against the heuristics).
+    pub probe_mask: u64,
+    /// The emitted policy: always a [`SelectiveSync::Schedule`].
+    pub schedule: SelectiveSync,
+    /// Measured end-to-end drift of the emitted schedule.
+    pub drift_auto: f64,
+    /// Measured drift of the sensitivity-ranked candidate.
+    pub drift_probe: f64,
+    /// Measured drift of [`SelectiveSync::Deep`].
+    pub drift_deep: f64,
+    /// Measured drift of [`SelectiveSync::Shallow`].
+    pub drift_shallow: f64,
+    /// Which candidate won (`"probe"` / `"deep"` / `"shallow"`).
+    pub picked: &'static str,
+    /// Sync layers in the emitted schedule.
+    pub sync_layers: usize,
+}
+
+/// Per-layer staleness-sensitivity tuner (module docs).
+#[derive(Debug, Clone, Copy)]
+pub struct SyncTuner {
+    /// Staleness dataflow to probe under (must be host-supported;
+    /// see [`SyncTuner::probe_strategy`]).
+    pub strategy: Strategy,
+    /// Feedback steps per probe run.
+    pub steps: usize,
+    /// Step executor for the probe runs (bits are mode-independent;
+    /// this only affects probe wall time).
+    pub mode: PipelineMode,
+    /// Protected-layer budget for the ranked candidate; `None` means
+    /// `n_layers / 2` — the same count as the Shallow heuristic and
+    /// never more than Deep's.
+    pub budget: Option<usize>,
+}
+
+impl SyncTuner {
+    /// Tuner with the default budget (`n_layers / 2`) and overlapped
+    /// probe executor.
+    pub fn new(strategy: Strategy, steps: usize) -> SyncTuner {
+        SyncTuner {
+            strategy,
+            steps,
+            mode: PipelineMode::Overlapped,
+            budget: None,
+        }
+    }
+
+    /// The staleness dataflow used to probe sensitivity for `s`:
+    /// host-supported stale strategies probe as themselves; everything
+    /// else (SyncEp has no staleness, DistriFusion/StaggeredBatch have
+    /// no host dataflow) probes under the age-1 interweaved proxy.
+    pub fn probe_strategy(s: Strategy) -> Strategy {
+        match s {
+            Strategy::DisplacedEp => Strategy::DisplacedEp,
+            Strategy::Interweaved => Strategy::Interweaved,
+            _ => Strategy::Interweaved,
+        }
+    }
+
+    fn run_drift(
+        &self,
+        stack: &HostMoeStack,
+        sync: SelectiveSync,
+        x0: &Tensor,
+        pool: &ParPool,
+        reference: &Tensor,
+    ) -> f64 {
+        let mut p = HostPipeline::new_stack(stack.clone(), self.strategy, sync, self.mode, pool);
+        let rep = p.run(x0, self.steps);
+        trajectory_drift(&rep.out, reference).expect("probe shapes match")
+    }
+
+    /// Probe every layer's staleness sensitivity on `stack` from `x0`
+    /// and emit the measured schedule (module docs).
+    pub fn tune(&self, stack: &HostMoeStack, x0: &Tensor, pool: &ParPool) -> TuneReport {
+        let n = stack.n_layers();
+        assert!(n <= 64, "schedule masks cover at most 64 layers");
+        assert!(
+            matches!(self.strategy, Strategy::DisplacedEp | Strategy::Interweaved),
+            "probe strategy must carry staleness; map via SyncTuner::probe_strategy"
+        );
+        let budget = self.budget.unwrap_or(n / 2).clamp(1, n);
+        let full_mask = if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
+
+        let reference = HostPipeline::reference_run_stack(stack, pool, x0, self.steps);
+
+        // sensitivity: only layer l stale, all others protected
+        let sensitivity: Vec<f64> = (0..n)
+            .map(|l| {
+                let only_l_stale = SelectiveSync::Schedule(full_mask & !(1u64 << l));
+                self.run_drift(stack, only_l_stale, x0, pool, &reference)
+            })
+            .collect();
+
+        let probe_mask = schedule_from_sensitivity(&sensitivity, budget);
+        let deep_mask = heuristic_mask(SelectiveSync::Deep, n);
+        let shallow_mask = heuristic_mask(SelectiveSync::Shallow, n);
+
+        // measure the candidates end-to-end; emit the argmin (ties go
+        // to the fewest sync layers, then to the probe schedule)
+        let drift_probe =
+            self.run_drift(stack, SelectiveSync::Schedule(probe_mask), x0, pool, &reference);
+        let drift_deep = self.run_drift(stack, SelectiveSync::Deep, x0, pool, &reference);
+        let drift_shallow = self.run_drift(stack, SelectiveSync::Shallow, x0, pool, &reference);
+
+        let candidates: [(&'static str, u64, f64); 3] = [
+            ("probe", probe_mask, drift_probe),
+            ("shallow", shallow_mask, drift_shallow),
+            ("deep", deep_mask, drift_deep),
+        ];
+        let (picked, mask, drift_auto) = candidates
+            .into_iter()
+            .min_by(|a, b| {
+                a.2.partial_cmp(&b.2)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.1.count_ones().cmp(&b.1.count_ones()))
+            })
+            .expect("three candidates");
+
+        TuneReport {
+            n_layers: n,
+            strategy: self.strategy,
+            sensitivity,
+            probe_mask,
+            schedule: SelectiveSync::Schedule(mask),
+            drift_auto,
+            drift_probe,
+            drift_deep,
+            drift_shallow,
+            picked,
+            sync_layers: mask.count_ones() as usize,
+        }
+    }
+
+    /// One-call tuning on a synthetic probe stack — what
+    /// `--sync-layers auto` resolves through: `n_layers` layers of a
+    /// small host shape, seeded from `seed`, probed for `steps`
+    /// feedback steps. `n_layers` above 64 is capped (mask width).
+    pub fn auto(
+        strategy: Strategy,
+        n_layers: usize,
+        steps: usize,
+        seed: u64,
+        pool: &ParPool,
+    ) -> TuneReport {
+        let cfg = HostMoeConfig {
+            n_experts: 8,
+            top_k: 2,
+            d_model: 32,
+            d_ff: 64,
+            devices: 4,
+        };
+        let n_layers = n_layers.clamp(1, 64);
+        let stack = HostMoeStack::synth(cfg, n_layers, seed);
+        let mut x0 = Tensor::zeros(&[64, cfg.d_model]);
+        Rng::new(seed ^ 0x51EED).fill_normal(x0.data_mut());
+        SyncTuner::new(Self::probe_strategy(strategy), steps).tune(&stack, &x0, pool)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_ranks_by_sensitivity_with_index_tiebreak() {
+        // pinned vector — mirrored by python/tests/test_synctune_port.py
+        let sens = [0.3, 0.1, 0.5, 0.5, 0.2, 0.0];
+        assert_eq!(schedule_from_sensitivity(&sens, 3), 0b001101);
+        assert_eq!(schedule_from_sensitivity(&sens, 1), 0b000100);
+        assert_eq!(schedule_from_sensitivity(&sens, 6), 0b111111);
+        // all-equal sensitivities: budget lowest layers win
+        assert_eq!(schedule_from_sensitivity(&[1.0; 4], 2), 0b0011);
+    }
+
+    #[test]
+    fn heuristic_masks_match_is_sync_layer() {
+        assert_eq!(heuristic_mask(SelectiveSync::Deep, 6), 0b111000);
+        assert_eq!(heuristic_mask(SelectiveSync::Shallow, 6), 0b000111);
+        assert_eq!(heuristic_mask(SelectiveSync::Staggered, 6), 0b101010);
+        assert_eq!(heuristic_mask(SelectiveSync::None, 6), 0);
+        assert_eq!(heuristic_mask(SelectiveSync::Schedule(0b10110), 6), 0b10110);
+    }
+
+    #[test]
+    fn tuner_beats_or_matches_both_heuristics() {
+        let pool = ParPool::new(2);
+        for strategy in [Strategy::Interweaved, Strategy::DisplacedEp] {
+            let rep = SyncTuner::auto(strategy, 4, 6, 0xD1CE, &pool);
+            assert_eq!(rep.n_layers, 4);
+            assert_eq!(rep.sensitivity.len(), 4);
+            assert!(rep.sensitivity.iter().all(|&s| s.is_finite() && s >= 0.0));
+            assert!(
+                rep.drift_auto <= rep.drift_deep + 1e-12
+                    && rep.drift_auto <= rep.drift_shallow + 1e-12,
+                "{strategy:?}: auto {} vs deep {} shallow {}",
+                rep.drift_auto,
+                rep.drift_deep,
+                rep.drift_shallow
+            );
+            // equal-or-fewer sync layers than the heuristics it beat
+            assert!(rep.sync_layers <= 2, "{strategy:?}: {} sync layers", rep.sync_layers);
+            assert!(matches!(rep.schedule, SelectiveSync::Schedule(_)));
+        }
+    }
+
+    #[test]
+    fn tuner_output_is_width_independent() {
+        let a = SyncTuner::auto(Strategy::Interweaved, 3, 5, 7, &ParPool::new(1));
+        let b = SyncTuner::auto(Strategy::Interweaved, 3, 5, 7, &ParPool::new(4));
+        assert_eq!(a.sensitivity, b.sensitivity);
+        assert_eq!(a.schedule, b.schedule);
+        assert_eq!(a.picked, b.picked);
+    }
+}

@@ -10,6 +10,7 @@ pub mod quality;
 pub mod scaling;
 pub mod schedules;
 pub mod similarity;
+pub mod synctune;
 pub mod tradeoff;
 
 use std::path::{Path, PathBuf};

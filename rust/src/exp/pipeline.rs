@@ -1,17 +1,18 @@
-//! Overlapped-pipeline experiment (DESIGN.md §10): the three
+//! Overlapped-pipeline experiment (DESIGN.md §10–§11): the three
 //! expert-parallel strategies executed for real by
-//! `coordinator::pipeline::HostPipeline`, barriered vs overlapped, on
-//! the host-numerics MoE layer. Artifact-free.
+//! `coordinator::pipeline::HostPipeline` over an `n_layers` MoE stack,
+//! barriered vs overlapped, on the host numerics. Artifact-free.
 //!
 //! This is the subsystem's acceptance harness — it FAILS (rather than
 //! silently reporting) unless:
 //!
 //! * `SyncEp` pipeline output is BIT-EXACT against the plain barriered
-//!   step loop (both executors);
+//!   per-layer step loop (both executors);
 //! * for every strategy the overlapped executor's output is bit-exact
 //!   against the barriered one;
-//! * the MEASURED staleness ages match the strategy contract — sync 0,
-//!   interweaved 1, displaced 2 after cold start
+//! * the ledger holds exactly one record per (step, layer), and the
+//!   MEASURED staleness ages match the strategy contract on EVERY
+//!   layer — sync 0, interweaved 1, displaced 2 after cold start
 //!   (`config::Strategy::step_staleness`).
 //!
 //! `ci.sh` runs it on every build; timing comparisons are reported here
@@ -22,14 +23,15 @@ use anyhow::{ensure, Result};
 use crate::benchkit::{fmt_bytes, fmt_secs, Table};
 use crate::config::{obj, Json, PipelineMode, Strategy};
 use crate::coordinator::HostPipeline;
-use crate::moe::host::{HostMoeConfig, HostMoeLayer};
+use crate::moe::host::{HostMoeConfig, HostMoeStack};
 use crate::par::ParPool;
 use crate::rng::Rng;
 use crate::tensor::Tensor;
 
 /// Run the pipeline study: every strategy × executor over a shared
-/// feedback workload, with the correctness gates of the module docs.
-pub fn report(n_tokens: usize, steps: usize, seed: u64) -> Result<(Table, Json)> {
+/// `n_layers`-deep feedback workload, with the correctness gates of the
+/// module docs.
+pub fn report(n_tokens: usize, steps: usize, n_layers: usize, seed: u64) -> Result<(Table, Json)> {
     let pool = ParPool::current();
     let cfg = HostMoeConfig {
         n_experts: 16,
@@ -39,19 +41,20 @@ pub fn report(n_tokens: usize, steps: usize, seed: u64) -> Result<(Table, Json)>
         devices: 4,
     };
     ensure!(steps >= 4, "need >= 4 steps to observe steady-state staleness");
+    ensure!(n_layers >= 1, "need at least one layer");
     let n_tokens = n_tokens.div_ceil(cfg.devices) * cfg.devices;
-    let layer = HostMoeLayer::synth(cfg, seed);
+    let stack = HostMoeStack::synth(cfg, n_layers, seed);
     let mut x0 = Tensor::zeros(&[n_tokens, cfg.d_model]);
     Rng::new(seed ^ 0x51EED).fill_normal(x0.data_mut());
 
-    let reference = HostPipeline::reference_run(&layer, &pool, &x0, steps);
+    let reference = HostPipeline::reference_run_stack(&stack, &pool, &x0, steps);
 
     let strategies = [Strategy::SyncEp, Strategy::Interweaved, Strategy::DisplacedEp];
     let modes = [PipelineMode::Barriered, PipelineMode::Overlapped];
     let mut table = Table::new(
         &format!(
             "Overlapped step pipeline — {n_tokens} tokens, {steps} steps, \
-             {} experts on {} devices, {} threads",
+             {n_layers} layers, {} experts on {} devices, {} threads",
             cfg.n_experts,
             cfg.devices,
             pool.threads()
@@ -62,16 +65,24 @@ pub fn report(n_tokens: usize, steps: usize, seed: u64) -> Result<(Table, Json)>
     for strategy in strategies {
         let mut outs: Vec<Tensor> = Vec::new();
         for mode in modes {
-            let mut p = HostPipeline::new(layer.clone(), strategy, mode, &pool);
+            let mut p = HostPipeline::new_stack(
+                stack.clone(),
+                strategy,
+                crate::config::SelectiveSync::None,
+                mode,
+                &pool,
+            );
             let rep = p.run(&x0, steps);
             ensure!(
-                rep.staleness.records.len() == steps,
-                "one consumed combine per step"
+                rep.staleness.records.len() == steps * n_layers,
+                "one consumed combine per (step, layer): expected {}, got {}",
+                steps * n_layers,
+                rep.staleness.records.len()
             );
-            // staleness contract: measured, not assumed. Cold-start
-            // steps before `from` are fresh (age 0) by construction;
-            // from then on every consumed combine must carry EXACTLY
-            // the strategy's contractual age.
+            // staleness contract: measured, not assumed — on EVERY
+            // layer. Cold-start steps before `from` are fresh (age 0)
+            // by construction; from then on every consumed combine must
+            // carry EXACTLY the strategy's contractual age.
             let settled = strategy.step_staleness(); // 0 / 1 / 2
             let from = settled; // sync settles at 0, iw at 1, disp at 2
             ensure!(
@@ -82,7 +93,7 @@ pub fn report(n_tokens: usize, steps: usize, seed: u64) -> Result<(Table, Json)>
                         .iter()
                         .filter(|(s, _, _)| *s >= from)
                         .all(|&(_, _, a)| a == settled),
-                "{} must settle at age {settled}, got {:?}",
+                "{} must settle at age {settled} on every layer, got {:?}",
                 strategy.name(),
                 rep.staleness.records
             );
@@ -124,6 +135,7 @@ pub fn report(n_tokens: usize, steps: usize, seed: u64) -> Result<(Table, Json)>
     let json = obj(vec![
         ("n_tokens", Json::Num(n_tokens as f64)),
         ("steps", Json::Num(steps as f64)),
+        ("n_layers", Json::Num(n_layers as f64)),
         ("threads", Json::Num(pool.threads() as f64)),
         ("rows", Json::Arr(rows)),
     ]);
@@ -136,7 +148,7 @@ mod tests {
 
     #[test]
     fn gates_hold_on_the_default_workload() {
-        let (_, json) = report(128, 5, 0xD1CE).unwrap();
+        let (_, json) = report(128, 5, 1, 0xD1CE).unwrap();
         let rows = json.get("rows").unwrap().as_arr().unwrap();
         assert_eq!(rows.len(), 6, "3 strategies x 2 executors");
         // settled ages in the payload follow the strategy contract
@@ -153,7 +165,14 @@ mod tests {
     }
 
     #[test]
+    fn gates_hold_on_a_multilayer_stack() {
+        let (_, json) = report(64, 5, 3, 0xD1CE).unwrap();
+        assert_eq!(json.get("n_layers").and_then(Json::as_f64), Some(3.0));
+    }
+
+    #[test]
     fn degenerate_step_count_is_rejected() {
-        assert!(report(128, 2, 1).is_err());
+        assert!(report(128, 2, 1, 1).is_err());
+        assert!(report(128, 5, 0, 1).is_err());
     }
 }

@@ -26,11 +26,15 @@
 //!   ([`coordinator::simulate`](mod@coordinator::simulate)), the
 //!   stale-activation buffer manager
 //!   and allocation arena, the conditional-communication filter, the
-//!   staleness ledger, and the overlapped multi-step host pipeline
-//!   ([`coordinator::HostPipeline`], DESIGN.md §10) that executes the
-//!   displaced/interweaved overlap schedules with live threads and
-//!   MEASURED staleness ages — the cost model's overlap claim, run for
-//!   real. Staleness is data, time is accounting (DESIGN.md §2).
+//!   staleness ledger, the overlapped multi-layer multi-step host
+//!   pipeline ([`coordinator::HostPipeline`], DESIGN.md §10–§11) that
+//!   executes the displaced/interweaved overlap schedules with live
+//!   threads and MEASURED per-(step, layer) staleness ages — the cost
+//!   model's overlap claim, run for real — and the selective-sync
+//!   tuner ([`coordinator::SyncTuner`], `--sync-layers auto`) that
+//!   turns per-layer sensitivity probes into a measured
+//!   [`config::SelectiveSync::Schedule`] bitmask. Staleness is data,
+//!   time is accounting (DESIGN.md §2).
 //! * [`moe`] — routing bookkeeping shared by every execution path:
 //!   top-k [`moe::RoutingTable`]s, the expert→device [`moe::Placement`]
 //!   map, [`moe::DispatchPlan`] (the all-to-all payload, with memoized

@@ -11,14 +11,14 @@
 //!   exp <name> [...]           run an experiment driver (table1, table2,
 //!                              table3, table4, table5, fig2, fig4, fig9,
 //!                              fig10, fig14, motivation, compress,
-//!                              placement, pipeline)
+//!                              placement, pipeline, synctune)
 
 use anyhow::{bail, Result};
 
 use dice::cli::Args;
 use dice::config::{CompressionCodec, CondCommSelector, PlacementKind};
 use dice::config::{hardware_profile, model_preset, DiceOptions, SelectiveSync, Strategy};
-use dice::coordinator::{simulate, Engine, EngineConfig};
+use dice::coordinator::{simulate, Engine, EngineConfig, SyncTuner};
 use dice::exp::{self, Ctx};
 use dice::netsim::{CostModel, Workload};
 use dice::server::{serve_sim, serve_with, AdmissionPolicy, BatchPolicy, EngineExecutor, ServeConfig};
@@ -29,7 +29,7 @@ fn usage() -> String {
         "usage: dice <info|generate|serve|sim|exp> [--help]\n\
          \n\
          dice generate --strategy interweaved --samples 32 --steps 50 \\\n\
-         \x20             --selective deep --condcomm low --warmup 4 [--compress int8]\n\
+         \x20             --sync-layers deep --condcomm low --warmup 4 [--compress int8]\n\
          \x20             [--placement contiguous|load|affinity] [--rebalance-every K]\n\
          dice serve    --requests 64 --rate 2.0 --strategy interweaved \\\n\
          \x20             --scenario steady [--sim] [--queue-cap N] [--slo SECONDS]\n\
@@ -39,19 +39,51 @@ fn usage() -> String {
          dice exp      table1 --samples 256\n\
          dice exp      compress            residual-codec trade-off (artifact-free)\n\
          dice exp      placement           placement-policy study (artifact-free)\n\
-         dice exp      pipeline            overlapped-vs-barriered step pipeline\n\
-         \x20                              with measured staleness (artifact-free)\n\
+         dice exp      pipeline            overlapped-vs-barriered multi-layer step\n\
+         \x20                              pipeline with measured staleness\n\
+         \x20                              (artifact-free; --layers N)\n\
+         dice exp      synctune            measured selective-sync tuner vs the\n\
+         \x20                              deep/shallow heuristics (artifact-free)\n\
          \n\
          global: --threads N      worker-pool width for the execution runtime\n\
          \x20       (default: PAR_THREADS env, else all cores; output is\n\
          \x20       bit-exact for any value)\n\
+         \x20       --sync-layers {{none|deep|shallow|staggered|auto|<mask>}}\n\
+         \x20       layer-sync policy (alias: --selective); masks are 0x2a hex,\n\
+         \x20       0b101010 binary or decimal; `auto` runs the synctune probes\n\
          \n\
          serve scenarios:\n{}",
         scenarios::catalog()
     )
 }
 
-fn opts_from(a: &Args) -> Result<DiceOptions> {
+/// Resolve the layer-sync policy from `--sync-layers` (falling back to
+/// the older `--selective` spelling): a named heuristic, an explicit
+/// bitmask, or `auto` — which runs the [`SyncTuner`] sensitivity probes
+/// on a synthetic `n_layers` host stack and emits the measured
+/// [`SelectiveSync::Schedule`].
+fn resolve_selective(a: &Args, strategy: Strategy, n_layers: usize) -> Result<SelectiveSync> {
+    let s = a.str_or("sync-layers", &a.str_or("selective", "none"));
+    if s != "auto" {
+        return SelectiveSync::parse(&s);
+    }
+    let pool = dice::par::ParPool::current();
+    let rep = SyncTuner::auto(
+        strategy,
+        n_layers,
+        a.usize_or("tune-steps", 8),
+        a.u64_or("seed", 42),
+        &pool,
+    );
+    eprintln!(
+        "[synctune] {} layers -> {} ({} sync, drift {:.3e} vs deep {:.3e} / shallow {:.3e}, picked {})",
+        n_layers, rep.schedule, rep.sync_layers, rep.drift_auto, rep.drift_deep,
+        rep.drift_shallow, rep.picked
+    );
+    Ok(rep.schedule)
+}
+
+fn opts_from(a: &Args, selective_sync: SelectiveSync) -> Result<DiceOptions> {
     let placement = PlacementKind::parse(&a.str_or("placement", "contiguous"))?;
     // a non-contiguous policy defaults to rebalancing every 4 steps so
     // `--placement load|affinity` alone actually engages it in the
@@ -60,7 +92,7 @@ fn opts_from(a: &Args) -> Result<DiceOptions> {
     // `--rebalance-every 0` pins the static contiguous start.
     let rebalance_default = if placement == PlacementKind::Contiguous { 0 } else { 4 };
     Ok(DiceOptions {
-        selective_sync: SelectiveSync::parse(&a.str_or("selective", "none"))?,
+        selective_sync,
         cond_comm: CondCommSelector::parse(&a.str_or("condcomm", "off"))?,
         cond_comm_stride: a.usize_or("stride", 2),
         warmup_sync_steps: a.usize_or("warmup", 4),
@@ -128,12 +160,13 @@ fn main() -> Result<()> {
             let strategy = Strategy::parse(&a.str_or("strategy", "interweaved"))?;
             let n = a.usize_or("samples", 32);
             let steps = a.usize_or("steps", 50);
+            let sync = resolve_selective(&a, strategy, ctx.rt.model.n_layers)?;
             let eng = Engine::new(
                 &ctx.rt,
                 &ctx.bank,
                 EngineConfig {
                     strategy,
-                    opts: opts_from(&a)?,
+                    opts: opts_from(&a, sync)?,
                     devices: a.usize_or("devices", 4),
                 },
             )?;
@@ -175,14 +208,16 @@ fn main() -> Result<()> {
                 // Cost-model-only serving: no artifacts required.
                 let devices = a.usize_or("devices", 8);
                 let seed = a.u64_or("seed", 42);
-                let opts = with_measured_placement(opts_from(&a)?, &cm.model, devices, seed);
+                let sync = resolve_selective(&a, strategy, cm.model.n_layers)?;
+                let opts = with_measured_placement(opts_from(&a, sync)?, &cm.model, devices, seed);
                 let trace = scenario.trace(n_requests, cm.model.n_classes, seed);
                 serve_sim(&cm, strategy, opts, devices, &trace, cfg)?
             } else {
                 let ctx = Ctx::open()?;
                 let devices = a.usize_or("devices", 4);
                 let seed = a.u64_or("seed", 42);
-                let opts = with_measured_placement(opts_from(&a)?, &cm.model, devices, seed);
+                let sync = resolve_selective(&a, strategy, ctx.rt.model.n_layers)?;
+                let opts = with_measured_placement(opts_from(&a, sync)?, &cm.model, devices, seed);
                 let eng = Engine::new(
                     &ctx.rt,
                     &ctx.bank,
@@ -214,8 +249,13 @@ fn main() -> Result<()> {
                 tokens: model.tokens(),
             };
             let strategy = Strategy::parse(&a.str_or("strategy", "interweaved"))?;
-            let opts =
-                with_measured_placement(opts_from(&a)?, &model, wl.devices, a.u64_or("seed", 42));
+            let sync = resolve_selective(&a, strategy, model.n_layers)?;
+            let opts = with_measured_placement(
+                opts_from(&a, sync)?,
+                &model,
+                wl.devices,
+                a.u64_or("seed", 42),
+            );
             let r = simulate(&cm, &wl, strategy, &opts, a.usize_or("steps", 50));
             println!(
                 "{}: total {:.3}s, step {:.4}s, a2a share {:.1}%, mem {:.2} GB{}",
@@ -301,10 +341,20 @@ fn main() -> Result<()> {
                     let (t, j) = exp::pipeline::report(
                         a.usize_or("tokens", 512),
                         a.usize_or("steps", 12),
+                        a.usize_or("layers", 2),
                         seed,
                     )?;
                     t.print();
                     exp::write_results("pipeline_overlap", &t.render(), &j)?;
+                }
+                "synctune" => {
+                    let (t, j) = exp::synctune::report(
+                        a.usize_or("layers", 6),
+                        a.usize_or("steps", 8),
+                        seed,
+                    )?;
+                    t.print();
+                    exp::write_results("synctune_schedule", &t.render(), &j)?;
                 }
                 "motivation" => {
                     let (t, j) = exp::scaling::motivation()?;

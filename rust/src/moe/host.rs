@@ -702,6 +702,61 @@ impl HostMoeLayer {
     }
 }
 
+/// An `n_layers` stack of host MoE layers — the unit the multi-layer
+/// [`HostPipeline`] drives (DESIGN.md §11). All layers share one shape
+/// (`d_model` / `devices`) so a step's latent flows through the whole
+/// chain; router and expert weights differ per layer.
+///
+/// [`HostPipeline`]: crate::coordinator::HostPipeline
+#[derive(Debug, Clone)]
+pub struct HostMoeStack {
+    layers: Vec<HostMoeLayer>,
+}
+
+impl HostMoeStack {
+    /// Synthesize `n_layers` layers of shape `cfg` with per-layer
+    /// derived seeds (each layer routes and computes differently).
+    pub fn synth(cfg: HostMoeConfig, n_layers: usize, seed: u64) -> HostMoeStack {
+        assert!(n_layers >= 1, "a stack needs at least one layer");
+        let layers = (0..n_layers as u64)
+            .map(|l| HostMoeLayer::synth(cfg, seed.wrapping_add(l.wrapping_mul(0x9E37_79B9))))
+            .collect();
+        HostMoeStack { layers }
+    }
+
+    /// Wrap existing layers (all must share `d_model` and `devices`).
+    pub fn from_layers(layers: Vec<HostMoeLayer>) -> HostMoeStack {
+        assert!(!layers.is_empty(), "a stack needs at least one layer");
+        let (d, dev) = (layers[0].cfg.d_model, layers[0].cfg.devices);
+        assert!(
+            layers.iter().all(|l| l.cfg.d_model == d && l.cfg.devices == dev),
+            "stack layers must agree on d_model and devices"
+        );
+        HostMoeStack { layers }
+    }
+
+    /// Number of layers.
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Layer `l`.
+    pub fn layer(&self, l: usize) -> &HostMoeLayer {
+        &self.layers[l]
+    }
+
+    /// All layers, in execution order.
+    pub fn layers(&self) -> &[HostMoeLayer] {
+        &self.layers
+    }
+
+    /// The shared shape (of layer 0; all layers agree on
+    /// `d_model`/`devices` by construction).
+    pub fn cfg(&self) -> &HostMoeConfig {
+        &self.layers[0].cfg
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -723,6 +778,46 @@ mod tests {
         let mut x = Tensor::zeros(&[n, d]);
         Rng::new(seed).fill_normal(x.data_mut());
         x
+    }
+
+    #[test]
+    fn stack_layers_are_distinct_but_share_shape() {
+        let cfg = HostMoeConfig {
+            n_experts: 8,
+            top_k: 2,
+            d_model: 16,
+            d_ff: 32,
+            devices: 4,
+        };
+        let stack = HostMoeStack::synth(cfg, 3, 0xD1CE);
+        assert_eq!(stack.n_layers(), 3);
+        let x = tokens(16, 16, 3);
+        let pool = ParPool::new(2);
+        let y0 = stack.layer(0).step(&pool, &x);
+        let y1 = stack.layer(1).step(&pool, &x);
+        assert_eq!(y0.shape(), y1.shape());
+        assert_ne!(y0, y1, "per-layer seeds must differ");
+        // single-layer wrap preserves the layer
+        let one = HostMoeStack::from_layers(vec![layer()]);
+        assert_eq!(one.n_layers(), 1);
+        assert_eq!(one.layer(0).step(&pool, &x), layer().step(&pool, &x));
+    }
+
+    #[test]
+    #[should_panic(expected = "agree on d_model")]
+    fn stack_rejects_mismatched_shapes() {
+        let a = layer();
+        let b = HostMoeLayer::synth(
+            HostMoeConfig {
+                n_experts: 8,
+                top_k: 2,
+                d_model: 32,
+                d_ff: 32,
+                devices: 4,
+            },
+            1,
+        );
+        HostMoeStack::from_layers(vec![a, b]);
     }
 
     #[test]

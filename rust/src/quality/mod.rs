@@ -195,6 +195,18 @@ pub fn evaluate(
     })
 }
 
+/// Artifact-free quality-degradation proxy for host-pipeline runs: the
+/// relative L2 distance between a run's final latent and the all-fresh
+/// reference trajectory. This is the metric the
+/// [`SyncTuner`](crate::coordinator::synctune::SyncTuner) minimizes
+/// when probing per-layer staleness sensitivity — on the host-numerics
+/// stack there is no feature net, so trajectory drift stands in for the
+/// FID delta the artifact engine would report (the two are monotone in
+/// staleness by the `staleness_relations` suite).
+pub fn trajectory_drift(out: &Tensor, reference: &Tensor) -> Result<f64> {
+    Ok(out.rel_l2(reference)? as f64)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

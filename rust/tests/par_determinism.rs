@@ -9,11 +9,12 @@
 //! runs on a clean checkout.
 
 use dice::config::{
-    hardware_profile, model_preset, DiceOptions, PipelineMode, PlacementKind, Strategy,
+    hardware_profile, model_preset, DiceOptions, PipelineMode, PlacementKind, SelectiveSync,
+    Strategy,
 };
 use dice::coordinator::{simulate_sweep_with, HostPipeline, SweepCase};
 use dice::linalg;
-use dice::moe::host::{HostMoeConfig, HostMoeLayer};
+use dice::moe::host::{HostMoeConfig, HostMoeLayer, HostMoeStack};
 use dice::moe::RoutingTable;
 use dice::netsim::{CostModel, Workload};
 use dice::par::ParPool;
@@ -237,6 +238,101 @@ fn host_pipeline_bit_exact_across_threads_1_2_4_all_strategies() {
                     "{strategy:?}/{mode:?} --threads {threads} ledger diverged"
                 );
             }
+        }
+    }
+}
+
+#[test]
+fn multilayer_pipeline_bit_exact_across_threads_for_every_sync_policy() {
+    // The multi-layer overlapped executor (DESIGN.md §11) must stay
+    // bit-exact vs barriered AND across --threads 1/2/4 for EVERY
+    // layer-sync policy, including a mixed Schedule bitmask — the
+    // cross-layer dispatch/FFN overlap and the per-layer protected
+    // short-circuit may move work between pools, never change bits.
+    let stack = HostMoeStack::synth(
+        HostMoeConfig {
+            n_experts: 8,
+            top_k: 2,
+            d_model: 16,
+            d_ff: 32,
+            devices: 4,
+        },
+        4,
+        0xD1CE,
+    );
+    let x0 = normal(&[32, 16], 13);
+    let steps = 6;
+    let policies = [
+        SelectiveSync::None,
+        SelectiveSync::Deep,
+        SelectiveSync::Shallow,
+        SelectiveSync::Staggered,
+        SelectiveSync::Schedule(0b0110),
+        SelectiveSync::Schedule(0b1111),
+    ];
+    for strategy in [Strategy::Interweaved, Strategy::DisplacedEp] {
+        for sync in policies {
+            let serial = {
+                let mut p = HostPipeline::new_stack(
+                    stack.clone(),
+                    strategy,
+                    sync,
+                    PipelineMode::Barriered,
+                    &ParPool::new(1),
+                );
+                p.run(&x0, steps)
+            };
+            for mode in [PipelineMode::Barriered, PipelineMode::Overlapped] {
+                for threads in [1usize, 2, 4] {
+                    let mut p = HostPipeline::new_stack(
+                        stack.clone(),
+                        strategy,
+                        sync,
+                        mode,
+                        &ParPool::new(threads),
+                    );
+                    let rep = p.run(&x0, steps);
+                    assert_eq!(
+                        serial.out, rep.out,
+                        "{strategy:?}/{sync:?}/{mode:?} --threads {threads} diverged"
+                    );
+                    assert_eq!(
+                        serial.staleness.records, rep.staleness.records,
+                        "{strategy:?}/{sync:?}/{mode:?} --threads {threads} ledger diverged"
+                    );
+                }
+            }
+        }
+    }
+    // SyncEp over a stack equals the plain per-layer step loop, and a
+    // fully-protected Schedule equals SyncEp bit-for-bit.
+    let reference = HostPipeline::reference_run_stack(&stack, &ParPool::new(1), &x0, steps);
+    for mode in [PipelineMode::Barriered, PipelineMode::Overlapped] {
+        for threads in [1usize, 2, 4] {
+            let mut p = HostPipeline::new_stack(
+                stack.clone(),
+                Strategy::SyncEp,
+                SelectiveSync::None,
+                mode,
+                &ParPool::new(threads),
+            );
+            assert_eq!(
+                reference,
+                p.run(&x0, steps).out,
+                "SyncEp/{mode:?} --threads {threads} differs from the step loop"
+            );
+            let mut q = HostPipeline::new_stack(
+                stack.clone(),
+                Strategy::Interweaved,
+                SelectiveSync::Schedule(0b1111),
+                mode,
+                &ParPool::new(threads),
+            );
+            assert_eq!(
+                reference,
+                q.run(&x0, steps).out,
+                "fully-protected schedule/{mode:?} --threads {threads} must be fresh"
+            );
         }
     }
 }

@@ -6,8 +6,11 @@
 
 use std::path::Path;
 
-use dice::config::{CondCommSelector, DiceOptions, Strategy};
-use dice::coordinator::{Engine, EngineConfig};
+use dice::config::{CondCommSelector, DiceOptions, PipelineMode, SelectiveSync, Strategy};
+use dice::coordinator::{Engine, EngineConfig, HostPipeline};
+use dice::moe::host::{HostMoeConfig, HostMoeStack};
+use dice::par::ParPool;
+use dice::rng::Rng;
 use dice::runtime::{Runtime, WeightBank};
 use dice::tensor::Tensor;
 
@@ -188,4 +191,88 @@ fn stale_scores_travel_with_displaced_dispatch() {
     );
     assert!(x.data().iter().all(|v| v.is_finite()));
     assert_eq!(stats.staleness.max_age(3), 2);
+}
+
+// ---- per-layer ledger invariants (artifact-free: host pipeline) ----
+
+fn host_records(
+    strategy: Strategy,
+    sync: SelectiveSync,
+    threads: usize,
+    steps: usize,
+    n_layers: usize,
+) -> Vec<(usize, usize, usize)> {
+    let cfg = HostMoeConfig {
+        n_experts: 8,
+        top_k: 2,
+        d_model: 16,
+        d_ff: 32,
+        devices: 4,
+    };
+    let stack = HostMoeStack::synth(cfg, n_layers, 0xD1CE);
+    let mut x0 = Tensor::zeros(&[32, cfg.d_model]);
+    Rng::new(5).fill_normal(x0.data_mut());
+    let mut p = HostPipeline::new_stack(
+        stack,
+        strategy,
+        sync,
+        PipelineMode::Overlapped,
+        &ParPool::new(threads),
+    );
+    p.run(&x0, steps).staleness.records
+}
+
+#[test]
+fn per_layer_ledger_protected_layers_measure_age_zero() {
+    // SelectiveSync is MEASURED, not assumed: whatever the base
+    // strategy, every record on a protected layer carries age 0, and
+    // unprotected layers settle at the strategy's contractual age
+    // (1 interweaved, 2 displaced) after cold start.
+    let steps = 7;
+    let n_layers = 4;
+    for (strategy, settled) in [(Strategy::Interweaved, 1usize), (Strategy::DisplacedEp, 2)] {
+        let recs = host_records(strategy, SelectiveSync::Schedule(0b0101), 2, steps, n_layers);
+        assert_eq!(recs.len(), steps * n_layers, "one record per (step, layer)");
+        for &(s, l, a) in &recs {
+            if l % 2 == 0 {
+                assert_eq!(a, 0, "protected layer {l} stale at step {s}");
+            } else if s >= settled {
+                assert_eq!(a, settled, "{strategy:?}: layer {l} step {s} age {a}");
+            } else {
+                assert!(a <= settled, "{strategy:?}: cold-start age {a} at step {s}");
+            }
+        }
+    }
+}
+
+#[test]
+fn per_layer_ledger_is_step_major_and_layer_ascending() {
+    // records arrive in execution order: step-major, layers ascending
+    // within a step — the order the chain actually consumed combines.
+    let steps = 6;
+    let n_layers = 3;
+    for strategy in [Strategy::Interweaved, Strategy::DisplacedEp] {
+        let recs = host_records(strategy, SelectiveSync::None, 4, steps, n_layers);
+        let want_order: Vec<(usize, usize)> = (0..steps)
+            .flat_map(|s| (0..n_layers).map(move |l| (s, l)))
+            .collect();
+        let got_order: Vec<(usize, usize)> = recs.iter().map(|&(s, l, _)| (s, l)).collect();
+        assert_eq!(got_order, want_order, "{strategy:?}");
+    }
+}
+
+#[test]
+fn per_layer_ledger_identical_across_runs_and_widths() {
+    // the measured ledger is part of the determinism contract: same
+    // run twice => identical records; any pool width => identical
+    // records (ages are dataflow facts, not timing accidents).
+    for strategy in [Strategy::Interweaved, Strategy::DisplacedEp] {
+        let base = host_records(strategy, SelectiveSync::Staggered, 1, 6, 4);
+        let again = host_records(strategy, SelectiveSync::Staggered, 1, 6, 4);
+        assert_eq!(base, again, "{strategy:?}: ledger must be reproducible");
+        for threads in [2usize, 4] {
+            let wide = host_records(strategy, SelectiveSync::Staggered, threads, 6, 4);
+            assert_eq!(base, wide, "{strategy:?}: ledger diverged at {threads} threads");
+        }
+    }
 }
