@@ -3,20 +3,25 @@
 //! pool) serial vs parallel, the `pipeline_overlap` quartet (barriered
 //! vs overlapped executor, uniform vs skewed routing), the
 //! `multilayer_overlap` pair (the §11 cross-layer window on a 4-layer
-//! stack), the simulation sweep fan-out, and the placement-policy sweep
+//! stack), the simulation sweep fan-out, the placement-policy sweep
 //! (three solves + crossing-bytes pricing on a skewed plan, DESIGN.md
-//! §9), and appends every summary to repo-root `BENCH_engine.json`
-//! (JSON lines) — the perf trajectory across PRs. Artifact-free.
+//! §9), and the `simd_kernels` pair (scalar oracle vs the detected
+//! kernel backend on the expert-FFN GEMM, DESIGN.md §12), and appends
+//! every summary to repo-root `BENCH_engine.json` (JSON lines) — the
+//! perf trajectory across PRs. Artifact-free.
 //!
 //!     cargo bench --bench perf_gate              # full iterations
 //!     cargo bench --bench perf_gate -- --check   # CI: few iters +
 //!                                                # gate assertions
 //!
-//! Always asserts bit-exactness of both executors across pool widths;
+//! Always asserts bit-exactness of both executors across pool widths
+//! and of the detected SIMD backend against the scalar oracle;
 //! `--check` additionally asserts (on ≥ 2 cores) that the parallel
 //! engine step is no slower than serial, that the OVERLAPPED executor
 //! is no slower than the barriered one on the skewed-routing workload,
-//! and that `BENCH_engine.json` is valid JSON lines.
+//! that the detected SIMD backend is no slower than the scalar oracle
+//! (thread-independent, so it gates even on one core), and that
+//! `BENCH_engine.json` is valid JSON lines.
 
 use std::path::PathBuf;
 
@@ -24,9 +29,10 @@ use dice::benchkit::{self, fmt_secs, Summary, Table};
 use dice::cli::Args;
 use dice::config::{
     hardware_profile, model_preset, DiceOptions, Json, PipelineMode, PlacementKind, SelectiveSync,
-    Strategy,
+    SimdKind, Strategy,
 };
 use dice::coordinator::{simulate_sweep_with, HostPipeline, SweepCase};
+use dice::linalg::{self, simd};
 use dice::moe::host::{HostMoeConfig, HostMoeLayer, HostMoeStack};
 use dice::moe::{DispatchPlan, RoutingTable};
 use dice::netsim::{CostModel, Workload};
@@ -200,6 +206,38 @@ fn main() -> anyhow::Result<()> {
         }
     });
 
+    // --- SIMD kernels: scalar oracle vs best detected backend ----------
+    // (DESIGN.md §12) — the expert-FFN GEMM at the multi-layer
+    // pipeline's shapes (128 tokens, d_model 64 → d_ff 256, fused GELU
+    // epilogue), on the serial pool so the kernel itself is what's
+    // timed. The bit-exactness contract makes the backend a pure
+    // wall-time knob, so the pair gates speed-only.
+    let simd_prev = simd::forced_kind();
+    let simd_best = simd::detected_kind();
+    let mut g_a = Tensor::zeros(&[128, ml_cfg.d_model]);
+    Rng::new(21).fill_normal(g_a.data_mut());
+    let mut g_bt = Tensor::zeros(&[ml_cfg.d_ff, ml_cfg.d_model]);
+    Rng::new(22).fill_normal(g_bt.data_mut());
+    simd::set_kind(SimdKind::Scalar);
+    let k_scalar = benchkit::bench("simd_kernels_scalar", warmup, iters, || {
+        std::hint::black_box(linalg::matmul_bt_gelu_with(&serial_pool, &g_a, &g_bt));
+    });
+    let k_want = linalg::matmul_bt_gelu_with(&serial_pool, &g_a, &g_bt);
+    simd::set_kind(simd_best);
+    let k_best = benchkit::bench(
+        &format!("simd_kernels_{}", simd_best.name()),
+        warmup,
+        iters,
+        || {
+            std::hint::black_box(linalg::matmul_bt_gelu_with(&serial_pool, &g_a, &g_bt));
+        },
+    );
+    let k_got = linalg::matmul_bt_gelu_with(&serial_pool, &g_a, &g_bt);
+    match simd_prev {
+        Some(k) => simd::set_kind(k),
+        None => simd::clear_kind(),
+    }
+
     let summaries: Vec<Summary> = vec![
         s_serial.clone(),
         s_par.clone(),
@@ -212,6 +250,8 @@ fn main() -> anyhow::Result<()> {
         p_skw_ovl.clone(),
         ml_bar.clone(),
         ml_ovl.clone(),
+        k_scalar.clone(),
+        k_best.clone(),
     ];
     let mut t = Table::new(
         "Perf gate — engine step + sim sweep, serial vs parallel",
@@ -236,6 +276,17 @@ fn main() -> anyhow::Result<()> {
         p_skw_bar.mean_s / p_skw_ovl.mean_s,
         par_threads,
         cores
+    );
+    let g_flops = 2.0 * 128.0 * ml_cfg.d_ff as f64 * ml_cfg.d_model as f64;
+    println!(
+        "simd kernels (expert-FFN GEMM 128x{}x{}): scalar {:.2} GFLOP/s, {} {:.2} GFLOP/s \
+         — {:.2}x",
+        ml_cfg.d_model,
+        ml_cfg.d_ff,
+        g_flops / k_scalar.mean_s / 1e9,
+        simd_best.name(),
+        g_flops / k_best.mean_s / 1e9,
+        k_scalar.mean_s / k_best.mean_s
     );
 
     // --- trajectory ----------------------------------------------------
@@ -288,6 +339,13 @@ fn main() -> anyhow::Result<()> {
             );
         }
     }
+    // SIMD (DESIGN.md §12): the detected backend's bits must equal the
+    // scalar oracle's on the gated GEMM, always checked
+    assert!(
+        k_want == k_got,
+        "simd backend {} diverged from the scalar oracle on the perf-gate GEMM",
+        simd_best.name()
+    );
     // placement: the affinity policy must not add crossing bytes on the
     // skewed workload (DESIGN.md §9), always checked
     let p_contig = build(PlacementKind::Contiguous).place(pe, pd, &p_stats);
@@ -330,6 +388,16 @@ fn main() -> anyhow::Result<()> {
         } else {
             println!("single-core host: skipping parallel-vs-serial and pipeline-overlap gates");
         }
+        // SIMD gate (DESIGN.md §12): the detected backend must not lose
+        // to the scalar oracle on the expert-FFN GEMM. Single-threaded
+        // timing, so unlike the pool gates this runs on any core count.
+        assert!(
+            k_best.p50_s <= 1.05 * k_scalar.p50_s,
+            "simd backend {} regressed vs the scalar oracle: p50 {} vs scalar p50 {}",
+            simd_best.name(),
+            k_best.p50_s,
+            k_scalar.p50_s
+        );
         println!("perf gate OK ({lines} trajectory records)");
     }
     Ok(())

@@ -19,11 +19,24 @@ cargo test -q --lib --bins --tests
 echo "==> cargo test --doc"
 cargo test -q --doc
 
+# SIMD gate (DESIGN.md §12): the kernel conformance suite under both a
+# forced-scalar and an auto-detected backend — a host without AVX2
+# still exercises every selection path — then the full test battery
+# once more pinned to the scalar oracle, so any test that silently
+# depended on a vectorized backend's behaviour fails loudly here.
+echo "==> simd conformance (DICE_SIMD=scalar)"
+DICE_SIMD=scalar cargo test -q --test simd_conformance
+echo "==> simd conformance (DICE_SIMD=auto)"
+DICE_SIMD=auto cargo test -q --test simd_conformance
+echo "==> full test battery under the scalar oracle (DICE_SIMD=scalar)"
+DICE_SIMD=scalar cargo test -q --lib --bins --tests
+
 # Perf gate: few-iteration run of the serial-vs-parallel engine-step
 # bench. Asserts bit-exact parallel output (single- and multi-layer
 # pipelines included), valid JSON-lines in BENCH_engine.json,
-# (on >= 2 cores) parallel <= serial mean, and that the affinity
-# placement never adds crossing bytes.
+# (on >= 2 cores) parallel <= serial mean, that the affinity
+# placement never adds crossing bytes, and that the detected SIMD
+# backend is bit-exact vs and no slower than the scalar oracle.
 echo "==> perf gate (cargo bench --bench perf_gate -- --check)"
 cargo bench --bench perf_gate -- --check
 

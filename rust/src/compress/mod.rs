@@ -77,11 +77,10 @@ impl Encoded {
         match &self.payload {
             Payload::Dense(v) => out.data_mut().copy_from_slice(v),
             Payload::Int8 { scales, q } => {
+                let kern = crate::linalg::simd::active();
+                let d = scales.len();
                 for r in 0..self.rows {
-                    let row = out.row_mut(r);
-                    for c in 0..row.len() {
-                        row[c] = q[r * scales.len() + c] as f32 * scales[c];
-                    }
+                    kern.dequantize_row(&q[r * d..(r + 1) * d], scales, out.row_mut(r));
                 }
             }
             Payload::TopK { kept, idx, vals } => {
@@ -167,25 +166,20 @@ impl ResidualCodec for Int8Codec {
 
     fn encode(&self, residual: &Tensor) -> Encoded {
         let (rows, d) = residual.rows();
+        // both sweeps run on the runtime-dispatched SIMD kernel
+        // (DESIGN.md §12); every backend reproduces the scalar
+        // max/round/clamp semantics bit-exactly, wire bytes included
+        let kern = crate::linalg::simd::active();
         let mut scales = vec![0.0f32; d];
         for r in 0..rows {
-            for (c, v) in residual.row(r).iter().enumerate() {
-                scales[c] = scales[c].max(v.abs());
-            }
+            kern.max_abs_fold(&mut scales, residual.row(r));
         }
         for s in scales.iter_mut() {
             *s /= 127.0;
         }
-        let mut q = Vec::with_capacity(rows * d);
+        let mut q = vec![0i8; rows * d];
         for r in 0..rows {
-            for (c, v) in residual.row(r).iter().enumerate() {
-                let code = if scales[c] > 0.0 {
-                    (v / scales[c]).round().clamp(-127.0, 127.0) as i8
-                } else {
-                    0
-                };
-                q.push(code);
-            }
+            kern.quantize_row(residual.row(r), &scales, &mut q[r * d..(r + 1) * d]);
         }
         Encoded {
             wire_bytes: rows * d + d * 4,

@@ -424,6 +424,51 @@ impl PipelineMode {
     }
 }
 
+/// SIMD kernel backend selection (DESIGN.md §12): which
+/// [`crate::linalg::simd::MicroKernel`] implementation services the hot
+/// loops (expert-FFN GEMMs, combine axpy, int8 codec sweeps). Orthogonal
+/// to [`Strategy`], [`PipelineMode`] and `--threads`: every backend is
+/// bit-exact against the scalar oracle under the strict-order lane
+/// contract, so this knob moves wall time only. Set via `--simd` or the
+/// `DICE_SIMD` env var; resolved by [`crate::linalg::simd::active`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SimdKind {
+    /// Runtime feature detection: AVX2 where the CPU supports it,
+    /// otherwise the portable kernel. The default.
+    Auto,
+    /// The generic scalar reference kernel — the correctness oracle
+    /// every other backend is pinned against.
+    Scalar,
+    /// Portable 8-wide unrolled kernel (no target features; the
+    /// compiler may auto-vectorize the fixed-width lane loop).
+    Portable,
+    /// AVX2 intrinsics kernel; requires CPU support (forcing it on an
+    /// unsupported host is a startup panic, not silent fallback).
+    Avx2,
+}
+
+impl SimdKind {
+    /// Parse a CLI/env backend name.
+    pub fn parse(s: &str) -> Result<SimdKind> {
+        Ok(match s {
+            "auto" => SimdKind::Auto,
+            "scalar" => SimdKind::Scalar,
+            "portable" => SimdKind::Portable,
+            "avx2" => SimdKind::Avx2,
+            _ => bail!("unknown simd backend {s:?} (auto|scalar|portable|avx2)"),
+        })
+    }
+    /// Canonical backend name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdKind::Auto => "auto",
+            SimdKind::Scalar => "scalar",
+            SimdKind::Portable => "portable",
+            SimdKind::Avx2 => "avx2",
+        }
+    }
+}
+
 /// The DICE knobs layered on top of a base [`Strategy`].
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DiceOptions {
@@ -632,6 +677,20 @@ mod tests {
         assert_eq!(PipelineMode::parse("overlap").unwrap(), PipelineMode::Overlapped);
         assert_eq!(PipelineMode::parse("barrier").unwrap(), PipelineMode::Barriered);
         assert!(PipelineMode::parse("async").is_err());
+    }
+
+    #[test]
+    fn simd_kind_parse_roundtrip() {
+        for k in [
+            SimdKind::Auto,
+            SimdKind::Scalar,
+            SimdKind::Portable,
+            SimdKind::Avx2,
+        ] {
+            assert_eq!(SimdKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(SimdKind::parse("sse9").is_err());
+        assert!(SimdKind::parse("AVX2").is_err(), "names are lowercase");
     }
 
     #[test]

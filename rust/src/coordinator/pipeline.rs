@@ -83,6 +83,10 @@ pub struct PipelineReport {
     /// Layers in the stack (the ledger holds `steps × n_layers`
     /// records).
     pub n_layers: usize,
+    /// Name of the SIMD kernel backend that serviced the run's inner
+    /// loops (DESIGN.md §12). Informational: every backend is bit-exact
+    /// against the scalar oracle, so `out` never depends on it.
+    pub simd_backend: &'static str,
 }
 
 /// Multi-step host pipeline over a [`HostMoeStack`] (module docs).
@@ -580,6 +584,7 @@ impl HostPipeline {
             peak_buffer_bytes: peak,
             steps,
             n_layers,
+            simd_backend: crate::linalg::simd::active().name(),
         }
     }
 }

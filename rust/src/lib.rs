@@ -74,7 +74,11 @@
 //!
 //! Substrates: [`cli`] (argument parsing), [`config`] (model/hardware
 //! presets, strategy + knob enums, JSON), [`tensor`] / [`linalg`] /
-//! [`rng`] (numerics), [`desim`] (virtual-time DES), [`metrics`],
+//! [`rng`] (numerics — the hot inner loops run on the
+//! runtime-dispatched SIMD micro-kernels of [`linalg::simd`], scalar /
+//! portable / AVX2, all bit-exact under the strict-order lane contract
+//! of DESIGN.md §12, selected by `--simd` / `DICE_SIMD`),
+//! [`desim`] (virtual-time DES), [`metrics`],
 //! [`workload`] (arrival processes + scenario presets), [`quality`]
 //! (FID/sFID/IS), [`sampler`], [`runtime`] (PJRT artifact runtime),
 //! [`benchkit`] and [`testkit`] (bench/property harnesses).

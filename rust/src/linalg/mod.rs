@@ -3,12 +3,21 @@
 //! host expert-FFN path, plus the eigen/sqrtm machinery behind the
 //! quality metrics.
 //!
+//! The inner loops live in [`simd`] (DESIGN.md §12): the blocked kernel
+//! here owns the tiling and pool fan-out, and hands each MB×NB output
+//! tile to the runtime-dispatched [`simd::MicroKernel`] — scalar
+//! oracle, portable 8-wide, or AVX2 — all bit-exact against each other
+//! under the strict-order lane contract, so the `DICE_SIMD` knob moves
+//! wall time only.
+//!
 //! The Fréchet distance FID(m1,C1; m2,C2) = |m1-m2|² + tr(C1 + C2 −
 //! 2·(C1·C2)^{1/2}) needs a PSD matrix square root; we compute it via a
 //! cyclic Jacobi eigendecomposition of the *symmetrised product* trick:
 //! sqrtm(C1·C2) has the same trace as sqrtm(S) where
 //! S = C1^{1/2}·C2·C1^{1/2} is symmetric PSD — so only symmetric
 //! eigenproblems are needed (two sqrtm calls, both Jacobi).
+
+pub mod simd;
 
 use crate::par::ParPool;
 use crate::tensor::Tensor;
@@ -31,14 +40,21 @@ pub fn gelu(x: f32) -> f32 {
 /// tensors — the cache-blocked transposed-B kernel with a fused
 /// elementwise epilogue. Both operands are traversed row-contiguously
 /// (that is the point of the transposed-B layout), the output is tiled
-/// MB × NB, and the row tiles fan out over `pool`. Each C row is
-/// produced by exactly one worker with a fixed accumulation order, so
-/// the result is bit-exact for any pool width (DESIGN.md §8 determinism
-/// contract) — and because `epi` is applied to the finished accumulator
-/// of each element, fusing it is bit-identical to a separate full pass
-/// over C while touching the output exactly once (DESIGN.md §10: this
-/// is how the host expert FFN drops its standalone GELU sweep over the
-/// [rows, d_ff] hidden activation).
+/// MB × NB, and the row tiles fan out over `pool`; each tile's dot
+/// products run on the runtime-selected [`simd::MicroKernel`] (one
+/// virtual call per NB-wide tile row, DESIGN.md §12). Each C row is
+/// produced by exactly one worker with the strict-order lane
+/// accumulation fixed by the kernel contract, so the result is
+/// bit-exact for any pool width × any SIMD backend (DESIGN.md §8
+/// determinism contract) — and because `epi` is applied to the
+/// finished accumulator of each element, fusing it is bit-identical to
+/// a separate full pass over C while touching the output exactly once
+/// (DESIGN.md §10: this is how the host expert FFN drops its
+/// standalone GELU sweep over the [rows, d_ff] hidden activation).
+///
+/// Degenerate shapes are defined, not UB: if any of `m`, `n`, `k` is
+/// zero the result is the all-zeros `[m, n]` tensor (an empty
+/// contraction sums nothing) — no index is ever formed.
 pub fn matmul_bt_epi_with<E>(pool: &ParPool, a: &Tensor, bt: &Tensor, epi: E) -> Tensor
 where
     E: Fn(f32) -> f32 + Sync,
@@ -58,6 +74,7 @@ where
     let ad = a.data();
     let btd = bt.data();
     let epi = &epi;
+    let kern = simd::active();
     pool.for_chunks_mut(c.data_mut(), MB * n, |blk, cchunk| {
         let i0 = blk * MB;
         let rows = cchunk.len() / n;
@@ -67,22 +84,9 @@ where
             for i in 0..rows {
                 let arow = &ad[(i0 + i) * k..(i0 + i + 1) * k];
                 let crow = &mut cchunk[i * n..(i + 1) * n];
-                for j in j0..j1 {
-                    let brow = &btd[j * k..(j + 1) * k];
-                    let mut acc = 0.0f32;
-                    let mut l = 0usize;
-                    while l + 4 <= k {
-                        acc += arow[l] * brow[l]
-                            + arow[l + 1] * brow[l + 1]
-                            + arow[l + 2] * brow[l + 2]
-                            + arow[l + 3] * brow[l + 3];
-                        l += 4;
-                    }
-                    while l < k {
-                        acc += arow[l] * brow[l];
-                        l += 1;
-                    }
-                    crow[j] = epi(acc);
+                kern.dot_rows(arow, &btd[j0 * k..j1 * k], k, &mut crow[j0..j1]);
+                for v in crow[j0..j1].iter_mut() {
+                    *v = epi(*v);
                 }
             }
             j0 = j1;
@@ -402,6 +406,58 @@ mod tests {
         let a = Tensor::zeros(&[0, 4]);
         let bt = Tensor::zeros(&[3, 4]);
         assert_eq!(matmul_bt(&a, &bt).shape(), &[0, 3]);
+    }
+
+    #[test]
+    fn matmul_bt_degenerate_shape_contract() {
+        // k == 0: an empty contraction is all zeros of shape [m, n] —
+        // never an index into the empty operands
+        let mut a = Tensor::zeros(&[3, 0]);
+        let bt = Tensor::zeros(&[2, 0]);
+        assert!(a.data_mut().is_empty());
+        let c = matmul_bt(&a, &bt);
+        assert_eq!(c.shape(), &[3, 2]);
+        assert!(c.data().iter().all(|&v| v == 0.0));
+        // n == 0: zero output columns
+        let a = Tensor::zeros(&[4, 3]);
+        let bt = Tensor::zeros(&[0, 3]);
+        assert_eq!(matmul_bt(&a, &bt).shape(), &[4, 0]);
+        // the epilogue is NOT applied to cells that were never
+        // contracted (zeros stay zeros even under an affine epilogue)
+        let a = Tensor::zeros(&[2, 0]);
+        let bt = Tensor::zeros(&[2, 0]);
+        let c = matmul_bt_epi_with(&ParPool::new(1), &a, &bt, |v| 2.0 * v + 1.0);
+        assert!(c.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn blocked_kernel_bit_exact_across_simd_backends() {
+        // the DESIGN.md §12 contract at the matmul level: every
+        // runnable backend reproduces the scalar oracle's bits, fused
+        // epilogue included (67×96·95ᵀ clears the inline threshold)
+        use crate::config::SimdKind;
+        let mut r = Rng::new(1234);
+        let mut a = Tensor::zeros(&[67, 96]);
+        let mut bt = Tensor::zeros(&[95, 96]);
+        for v in a.data_mut() {
+            *v = r.normal_f32();
+        }
+        for v in bt.data_mut() {
+            *v = r.normal_f32();
+        }
+        let pool = crate::par::ParPool::new(2);
+        let prev = simd::forced_kind();
+        simd::set_kind(SimdKind::Scalar);
+        let want = matmul_bt_gelu_with(&pool, &a, &bt);
+        for kind in simd::available_kinds() {
+            simd::set_kind(kind);
+            let got = matmul_bt_gelu_with(&pool, &a, &bt);
+            assert_eq!(want, got, "backend {} must match the oracle", kind.name());
+        }
+        match prev {
+            Some(k) => simd::set_kind(k),
+            None => simd::clear_kind(),
+        }
     }
 
     #[test]

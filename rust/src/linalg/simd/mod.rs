@@ -1,0 +1,929 @@
+//! SIMD micro-kernels with runtime ISA dispatch (DESIGN.md §12).
+//!
+//! Every hot inner loop of the host runtime — the expert-FFN GEMM tiles
+//! behind [`crate::linalg::matmul_bt_epi_with`], the combine-phase
+//! score-weighted accumulations in [`crate::moe::host`], the int8
+//! residual-codec sweeps in [`crate::compress`], and the dispatch
+//! row-copy fan-out — funnels through one [`MicroKernel`] object
+//! resolved at runtime by [`active`]. Three implementations exist:
+//!
+//! * [`ScalarKernel`] — the generic scalar reference and **correctness
+//!   oracle**. Plain indexed loops, no unsafe, no target features.
+//! * [`PortableKernel`] — the same strict-order contract written as
+//!   8-wide unrolled chunk loops the compiler can auto-vectorize on any
+//!   target (baseline SSE2 on x86_64 covers two 4-lane registers).
+//! * [`Avx2Kernel`] — hand-written AVX2 intrinsics (x86_64 only),
+//!   selected when `is_x86_feature_detected!` reports AVX2+FMA.
+//!
+//! # The strict-order lane contract
+//!
+//! All three backends are **bit-exact against each other** on every
+//! operation, for every shape, including non-multiple-of-[`LANES`]
+//! tails. That is only possible because the accumulation order is part
+//! of the contract, not an implementation detail:
+//!
+//! * A dot product over `k` elements is accumulated into [`LANES`] = 8
+//!   independent lane accumulators: element `i` folds into lane
+//!   `i % LANES` (full 8-blocks in the main loop, the `k % 8` tail
+//!   elements into lanes `0..k%8`). Every lane update is a separate
+//!   IEEE-754 multiply then add — **never a fused multiply-add**, whose
+//!   single rounding would fork bits between backends — and vector
+//!   `mul`/`add`/`div` are exactly-rounded lane-wise, so the scalar and
+//!   vector versions of the same schedule produce identical bits.
+//! * The 8 lanes are reduced by the fixed tree in [`reduce8`], which
+//!   matches the natural AVX2 horizontal reduction (fold high 128 onto
+//!   low 128, then pairwise) so the intrinsics backend pays nothing for
+//!   conformance.
+//! * Elementwise transcendentals (the GELU epilogue) stay on the shared
+//!   scalar `libm` path ([`MicroKernel::gelu_rows`] is a provided
+//!   method all backends inherit): `tanh` has no bit-exact vector
+//!   equivalent, and the epilogue is O(m·n) against the GEMM's
+//!   O(m·n·k), so vectorizing it cannot pay for breaking the oracle.
+//! * The int8 quantize path assumes **finite inputs** (codec operands
+//!   are activations/residuals, finite by construction); under that
+//!   contract the AVX2 round/clamp emulation reproduces
+//!   `f32::round`'s half-away-from-zero ties exactly.
+//!
+//! Backend selection is an orthogonal knob: any `--threads` width ×
+//! any backend produces the same bits, which
+//! `rust/tests/simd_conformance.rs` and `par_determinism.rs` pin.
+//!
+//! # Selection
+//!
+//! Priority: [`set_kind`] (CLI `--simd`, tests) > the `DICE_SIMD` env
+//! var (`auto|scalar|portable|avx2`) > auto-detection. Forcing `avx2`
+//! on a host without it is a loud panic, never a silent fallback.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::config::SimdKind;
+
+/// Lane width of the strict-order accumulation contract: dot products
+/// are accumulated into this many independent per-lane partials before
+/// the fixed [`reduce8`] tree. 8 × f32 = one AVX2 `ymm` register.
+pub const LANES: usize = 8;
+
+/// The fixed lane-reduction tree every backend ends a dot product
+/// with: `((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))`. This is the shape of
+/// the natural AVX2 horizontal reduce (high 128-bit half folded onto
+/// the low half, then pairwise), promoted to the cross-backend
+/// contract so the scalar oracle and the intrinsics kernel agree
+/// bit-for-bit.
+#[inline]
+pub fn reduce8(l: &[f32; LANES]) -> f32 {
+    ((l[0] + l[4]) + (l[2] + l[6])) + ((l[1] + l[5]) + (l[3] + l[7]))
+}
+
+/// One ISA backend of the hot inner loops. Implementations MUST follow
+/// the strict-order lane contract (module docs): for identical inputs,
+/// every method returns bits identical to [`ScalarKernel`]'s.
+///
+/// Granularity is a row or a tile of rows — coarse enough that the
+/// single virtual call per invocation is invisible next to the O(k)
+/// work inside, fine enough that callers keep ownership of all loop
+/// structure above it (tiling, pool fan-out, accumulation policy).
+///
+/// ```
+/// use dice::config::SimdKind;
+/// use dice::linalg::simd;
+///
+/// let oracle = simd::kernel_for(SimdKind::Scalar);
+/// let kern = simd::active(); // auto-detected best backend
+/// let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0];
+/// let b = [9.0f32, 8.0, 7.0, 6.0, 5.0, 4.0, 3.0, 2.0, 1.0];
+/// // bit-exact across backends, tails included (k = 9 here)
+/// assert_eq!(kern.dot(&a, &b), oracle.dot(&a, &b));
+/// // degenerate shapes are defined, not UB: k == 0 dots to 0.0
+/// assert_eq!(kern.dot(&[], &[]), 0.0);
+/// ```
+pub trait MicroKernel: Sync {
+    /// Canonical backend name (`"scalar"` / `"portable"` / `"avx2"`).
+    fn name(&self) -> &'static str;
+
+    /// Strict-order dot product of two equal-length rows. `k == 0`
+    /// returns `0.0` (the degenerate-shape contract of
+    /// [`crate::linalg::matmul_bt_epi_with`]).
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32;
+
+    /// One GEMM output tile: `out[j] = dot(a, bt[j*k..][..k])` for each
+    /// of the `out.len()` rows of the packed transposed-B block `bt`.
+    /// The provided body loops over [`MicroKernel::dot`]; backends may
+    /// register-block across rows as long as each output keeps the
+    /// per-output lane order (the AVX2 kernel shares each `a` load
+    /// across 4 `bt` rows).
+    fn dot_rows(&self, a: &[f32], bt: &[f32], k: usize, out: &mut [f32]) {
+        debug_assert_eq!(bt.len(), out.len() * k);
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = self.dot(a, &bt[j * k..(j + 1) * k]);
+        }
+    }
+
+    /// `y[i] += a * x[i]` — the combine-phase score-weighted
+    /// accumulation. Unfused multiply-then-add per element, in index
+    /// order (each element's update is independent, so vector width
+    /// cannot reorder anything).
+    fn axpy(&self, y: &mut [f32], a: f32, x: &[f32]);
+
+    /// Row copy for the dispatch/assembly fan-out. Bitwise move — every
+    /// backend inherits plain `copy_from_slice` (memcpy already
+    /// saturates the memory system; the routing exists so the fan-out
+    /// shares the kernel call graph and stays instrumentable).
+    fn copy(&self, dst: &mut [f32], src: &[f32]) {
+        dst.copy_from_slice(src);
+    }
+
+    /// In-place tanh-GELU over a finished accumulator slice — the fused
+    /// epilogue of the first FFN projection. Provided and **shared**:
+    /// `tanh` is a scalar `libm` call with no bit-exact vector
+    /// equivalent, and the epilogue is O(m·n) against the GEMM's
+    /// O(m·n·k), so all backends keep this body (module docs).
+    fn gelu_rows(&self, c: &mut [f32]) {
+        for v in c.iter_mut() {
+            *v = crate::linalg::gelu(*v);
+        }
+    }
+
+    /// `acc[i] = max(acc[i], |row[i]|)` — the per-channel max-abs sweep
+    /// of the int8 codec's scale pass. Finite-input contract (module
+    /// docs).
+    fn max_abs_fold(&self, acc: &mut [f32], row: &[f32]);
+
+    /// Per-channel int8 quantization of one row:
+    /// `out[i] = round(row[i] / scales[i]).clamp(-127, 127) as i8`,
+    /// with `f32::round` half-away-from-zero ties, and `0` wherever
+    /// `scales[i] <= 0` (an all-zero channel). Finite-input contract.
+    fn quantize_row(&self, row: &[f32], scales: &[f32], out: &mut [i8]);
+
+    /// Per-channel int8 dequantization of one row:
+    /// `out[i] = q[i] as f32 * scales[i]` (i8→f32 is exact and a single
+    /// multiply is exactly rounded, so this is trivially bit-exact at
+    /// any width).
+    fn dequantize_row(&self, q: &[i8], scales: &[f32], out: &mut [f32]);
+}
+
+// ---------------------------------------------------------------------
+// Scalar reference — the oracle
+// ---------------------------------------------------------------------
+
+/// The generic scalar reference backend: the correctness oracle every
+/// other [`MicroKernel`] is pinned against (no unsafe, no target
+/// features, plain indexed loops in the contract order).
+pub struct ScalarKernel;
+
+impl MicroKernel for ScalarKernel {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let k = a.len();
+        let mut lanes = [0.0f32; LANES];
+        let mut l = 0usize;
+        while l + LANES <= k {
+            let mut t = 0usize;
+            while t < LANES {
+                lanes[t] += a[l + t] * b[l + t];
+                t += 1;
+            }
+            l += LANES;
+        }
+        let mut t = 0usize;
+        while l < k {
+            lanes[t] += a[l] * b[l];
+            l += 1;
+            t += 1;
+        }
+        reduce8(&lanes)
+    }
+
+    fn axpy(&self, y: &mut [f32], a: f32, x: &[f32]) {
+        debug_assert_eq!(y.len(), x.len());
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += a * *xi;
+        }
+    }
+
+    fn max_abs_fold(&self, acc: &mut [f32], row: &[f32]) {
+        debug_assert_eq!(acc.len(), row.len());
+        for (s, v) in acc.iter_mut().zip(row) {
+            *s = s.max(v.abs());
+        }
+    }
+
+    fn quantize_row(&self, row: &[f32], scales: &[f32], out: &mut [i8]) {
+        debug_assert_eq!(row.len(), scales.len());
+        debug_assert_eq!(row.len(), out.len());
+        for (o, (&v, &s)) in out.iter_mut().zip(row.iter().zip(scales)) {
+            *o = if s > 0.0 {
+                (v / s).round().clamp(-127.0, 127.0) as i8
+            } else {
+                0
+            };
+        }
+    }
+
+    fn dequantize_row(&self, q: &[i8], scales: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(q.len(), scales.len());
+        debug_assert_eq!(q.len(), out.len());
+        for (o, (&c, &s)) in out.iter_mut().zip(q.iter().zip(scales)) {
+            *o = c as f32 * s;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Portable 8-wide unrolled kernel
+// ---------------------------------------------------------------------
+
+/// Portable 8-wide backend: the contract schedule written as
+/// `chunks_exact(8)` loops over fixed-width lane arrays — the shape
+/// LLVM auto-vectorizes on any baseline target (two SSE2 registers on
+/// default x86_64) without target-feature gates or unsafe.
+pub struct PortableKernel;
+
+impl MicroKernel for PortableKernel {
+    fn name(&self) -> &'static str {
+        "portable"
+    }
+
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let k = a.len();
+        let full = k / LANES * LANES;
+        let mut lanes = [0.0f32; LANES];
+        for (ca, cb) in a[..full]
+            .chunks_exact(LANES)
+            .zip(b[..full].chunks_exact(LANES))
+        {
+            for t in 0..LANES {
+                lanes[t] += ca[t] * cb[t];
+            }
+        }
+        for (t, (x, y)) in a[full..].iter().zip(&b[full..]).enumerate() {
+            lanes[t] += x * y;
+        }
+        reduce8(&lanes)
+    }
+
+    fn axpy(&self, y: &mut [f32], a: f32, x: &[f32]) {
+        debug_assert_eq!(y.len(), x.len());
+        let n = y.len();
+        let full = n / LANES * LANES;
+        for (cy, cx) in y[..full]
+            .chunks_exact_mut(LANES)
+            .zip(x[..full].chunks_exact(LANES))
+        {
+            for t in 0..LANES {
+                cy[t] += a * cx[t];
+            }
+        }
+        for (yi, xi) in y[full..].iter_mut().zip(&x[full..]) {
+            *yi += a * *xi;
+        }
+    }
+
+    fn max_abs_fold(&self, acc: &mut [f32], row: &[f32]) {
+        debug_assert_eq!(acc.len(), row.len());
+        let n = acc.len();
+        let full = n / LANES * LANES;
+        for (ca, cr) in acc[..full]
+            .chunks_exact_mut(LANES)
+            .zip(row[..full].chunks_exact(LANES))
+        {
+            for t in 0..LANES {
+                ca[t] = ca[t].max(cr[t].abs());
+            }
+        }
+        for (s, v) in acc[full..].iter_mut().zip(&row[full..]) {
+            *s = s.max(v.abs());
+        }
+    }
+
+    fn quantize_row(&self, row: &[f32], scales: &[f32], out: &mut [i8]) {
+        debug_assert_eq!(row.len(), scales.len());
+        debug_assert_eq!(row.len(), out.len());
+        let n = row.len();
+        let full = n / LANES * LANES;
+        let (head, tail) = out.split_at_mut(full);
+        for ((co, cr), cs) in head
+            .chunks_exact_mut(LANES)
+            .zip(row[..full].chunks_exact(LANES))
+            .zip(scales[..full].chunks_exact(LANES))
+        {
+            for t in 0..LANES {
+                co[t] = if cs[t] > 0.0 {
+                    (cr[t] / cs[t]).round().clamp(-127.0, 127.0) as i8
+                } else {
+                    0
+                };
+            }
+        }
+        for (o, (&v, &s)) in tail.iter_mut().zip(row[full..].iter().zip(&scales[full..])) {
+            *o = if s > 0.0 {
+                (v / s).round().clamp(-127.0, 127.0) as i8
+            } else {
+                0
+            };
+        }
+    }
+
+    fn dequantize_row(&self, q: &[i8], scales: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(q.len(), scales.len());
+        debug_assert_eq!(q.len(), out.len());
+        let n = q.len();
+        let full = n / LANES * LANES;
+        let (head, tail) = out.split_at_mut(full);
+        for ((co, cq), cs) in head
+            .chunks_exact_mut(LANES)
+            .zip(q[..full].chunks_exact(LANES))
+            .zip(scales[..full].chunks_exact(LANES))
+        {
+            for t in 0..LANES {
+                co[t] = cq[t] as f32 * cs[t];
+            }
+        }
+        for (o, (&c, &s)) in tail.iter_mut().zip(q[full..].iter().zip(&scales[full..])) {
+            *o = c as f32 * s;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// AVX2 intrinsics kernel (x86_64 only)
+// ---------------------------------------------------------------------
+
+/// AVX2 intrinsics backend (x86_64 only; requires runtime-detected
+/// AVX2+FMA). FMA presence is required as the detection proxy for a
+/// modern core, but the kernels deliberately issue **unfused**
+/// `vmulps`+`vaddps` — a fused multiply-add's single rounding would
+/// break bit-exactness against the scalar oracle (module docs).
+#[cfg(target_arch = "x86_64")]
+pub struct Avx2Kernel;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! The `#[target_feature(enable = "avx2")]` bodies behind
+    //! [`super::Avx2Kernel`]. Safety: every function in here is only
+    //! reachable through [`super::kernel_for`], which verifies
+    //! `is_x86_feature_detected!("avx2")` before handing out the
+    //! kernel; slices are processed in full 8-lane blocks with scalar
+    //! tails, so no out-of-bounds lane is ever touched.
+    use std::arch::x86_64::*;
+
+    use super::{reduce8, LANES};
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let k = a.len();
+        let mut acc = _mm256_setzero_ps();
+        let mut l = 0usize;
+        while l + LANES <= k {
+            let va = _mm256_loadu_ps(a.as_ptr().add(l));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(l));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+            l += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut t = 0usize;
+        while l < k {
+            lanes[t] += a.get_unchecked(l) * b.get_unchecked(l);
+            l += 1;
+            t += 1;
+        }
+        reduce8(&lanes)
+    }
+
+    /// 4-row register-blocked GEMM tile: each `a` load is shared across
+    /// four `bt` rows, quadrupling arithmetic intensity; every output
+    /// is still an independent dot in the contract lane order.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_rows(a: &[f32], bt: &[f32], k: usize, out: &mut [f32]) {
+        debug_assert_eq!(bt.len(), out.len() * k);
+        let n = out.len();
+        let bp = bt.as_ptr();
+        let mut j = 0usize;
+        while j + 4 <= n {
+            let b0 = bp.add(j * k);
+            let b1 = bp.add((j + 1) * k);
+            let b2 = bp.add((j + 2) * k);
+            let b3 = bp.add((j + 3) * k);
+            let mut acc0 = _mm256_setzero_ps();
+            let mut acc1 = _mm256_setzero_ps();
+            let mut acc2 = _mm256_setzero_ps();
+            let mut acc3 = _mm256_setzero_ps();
+            let mut l = 0usize;
+            while l + LANES <= k {
+                let va = _mm256_loadu_ps(a.as_ptr().add(l));
+                acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(va, _mm256_loadu_ps(b0.add(l))));
+                acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(va, _mm256_loadu_ps(b1.add(l))));
+                acc2 = _mm256_add_ps(acc2, _mm256_mul_ps(va, _mm256_loadu_ps(b2.add(l))));
+                acc3 = _mm256_add_ps(acc3, _mm256_mul_ps(va, _mm256_loadu_ps(b3.add(l))));
+                l += LANES;
+            }
+            let mut lanes = [[0.0f32; LANES]; 4];
+            _mm256_storeu_ps(lanes[0].as_mut_ptr(), acc0);
+            _mm256_storeu_ps(lanes[1].as_mut_ptr(), acc1);
+            _mm256_storeu_ps(lanes[2].as_mut_ptr(), acc2);
+            _mm256_storeu_ps(lanes[3].as_mut_ptr(), acc3);
+            let rows = [b0, b1, b2, b3];
+            for (r, lr) in lanes.iter_mut().enumerate() {
+                let br = rows[r];
+                let mut ll = l;
+                let mut t = 0usize;
+                while ll < k {
+                    lr[t] += a.get_unchecked(ll) * *br.add(ll);
+                    ll += 1;
+                    t += 1;
+                }
+                *out.get_unchecked_mut(j + r) = reduce8(lr);
+            }
+            j += 4;
+        }
+        while j < n {
+            *out.get_unchecked_mut(j) = dot(a, std::slice::from_raw_parts(bp.add(j * k), k));
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+        debug_assert_eq!(y.len(), x.len());
+        let n = y.len();
+        let va = _mm256_set1_ps(a);
+        let mut l = 0usize;
+        while l + LANES <= n {
+            let vx = _mm256_loadu_ps(x.as_ptr().add(l));
+            let vy = _mm256_loadu_ps(y.as_ptr().add(l));
+            _mm256_storeu_ps(
+                y.as_mut_ptr().add(l),
+                _mm256_add_ps(vy, _mm256_mul_ps(va, vx)),
+            );
+            l += LANES;
+        }
+        while l < n {
+            *y.get_unchecked_mut(l) += a * x.get_unchecked(l);
+            l += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn max_abs_fold(acc: &mut [f32], row: &[f32]) {
+        debug_assert_eq!(acc.len(), row.len());
+        let n = acc.len();
+        let signm = _mm256_set1_ps(-0.0);
+        let mut l = 0usize;
+        while l + LANES <= n {
+            let v = _mm256_loadu_ps(row.as_ptr().add(l));
+            let a = _mm256_loadu_ps(acc.as_ptr().add(l));
+            // maxps(acc, |row|) matches f32::max on the finite-input
+            // contract (both pick the larger; signs agree at +0)
+            let m = _mm256_max_ps(a, _mm256_andnot_ps(signm, v));
+            _mm256_storeu_ps(acc.as_mut_ptr().add(l), m);
+            l += LANES;
+        }
+        while l < n {
+            let s = acc.get_unchecked_mut(l);
+            *s = s.max(row.get_unchecked(l).abs());
+            l += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn quantize_row(row: &[f32], scales: &[f32], out: &mut [i8]) {
+        debug_assert_eq!(row.len(), scales.len());
+        debug_assert_eq!(row.len(), out.len());
+        let n = row.len();
+        let half = _mm256_set1_ps(0.5);
+        let one = _mm256_set1_ps(1.0);
+        let signm = _mm256_set1_ps(-0.0);
+        let lo = _mm256_set1_ps(-127.0);
+        let hi = _mm256_set1_ps(127.0);
+        let zero = _mm256_setzero_ps();
+        let mut l = 0usize;
+        while l + LANES <= n {
+            let v = _mm256_loadu_ps(row.as_ptr().add(l));
+            let s = _mm256_loadu_ps(scales.as_ptr().add(l));
+            // IEEE division is exactly rounded: vdivps == scalar `/`
+            let q = _mm256_div_ps(v, s);
+            // f32::round = half-away-from-zero; vroundps only does
+            // half-to-even, so emulate: t = trunc(q), f = q - t (exact:
+            // both are multiples of ulp(q) and |f| < 1), round away
+            // when |f| >= 0.5. NB `trunc(q + 0.5)` would be WRONG:
+            // q = 0.49999997 has q + 0.5 round UP to 1.0 in f32.
+            let t = _mm256_round_ps::<{ _MM_FROUND_TO_ZERO | _MM_FROUND_NO_EXC }>(q);
+            let f = _mm256_sub_ps(q, t);
+            let absf = _mm256_andnot_ps(signm, f);
+            let away = _mm256_add_ps(t, _mm256_or_ps(_mm256_and_ps(signm, q), one));
+            let ties = _mm256_cmp_ps::<_CMP_GE_OQ>(absf, half);
+            let r = _mm256_blendv_ps(t, away, ties);
+            let r = _mm256_min_ps(_mm256_max_ps(r, lo), hi);
+            // scales <= 0 ⇒ code 0; the mask also flushes any inf/NaN
+            // the division produced for those channels
+            let pos = _mm256_cmp_ps::<_CMP_GT_OQ>(s, zero);
+            let r = _mm256_and_ps(r, pos);
+            let mut buf = [0.0f32; LANES];
+            _mm256_storeu_ps(buf.as_mut_ptr(), r);
+            for (t, &b) in buf.iter().enumerate() {
+                *out.get_unchecked_mut(l + t) = b as i8;
+            }
+            l += LANES;
+        }
+        while l < n {
+            let s = *scales.get_unchecked(l);
+            *out.get_unchecked_mut(l) = if s > 0.0 {
+                (row.get_unchecked(l) / s).round().clamp(-127.0, 127.0) as i8
+            } else {
+                0
+            };
+            l += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dequantize_row(q: &[i8], scales: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(q.len(), scales.len());
+        debug_assert_eq!(q.len(), out.len());
+        let n = q.len();
+        let mut l = 0usize;
+        while l + LANES <= n {
+            let qi = _mm_loadl_epi64(q.as_ptr().add(l) as *const __m128i);
+            let e = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(qi));
+            let s = _mm256_loadu_ps(scales.as_ptr().add(l));
+            _mm256_storeu_ps(out.as_mut_ptr().add(l), _mm256_mul_ps(e, s));
+            l += LANES;
+        }
+        while l < n {
+            *out.get_unchecked_mut(l) = *q.get_unchecked(l) as f32 * scales.get_unchecked(l);
+            l += 1;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+impl MicroKernel for Avx2Kernel {
+    fn name(&self) -> &'static str {
+        "avx2"
+    }
+
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        // SAFETY: this kernel is only handed out by `kernel_for` after
+        // `is_x86_feature_detected!("avx2")` returned true.
+        unsafe { avx2::dot(a, b) }
+    }
+
+    fn dot_rows(&self, a: &[f32], bt: &[f32], k: usize, out: &mut [f32]) {
+        // SAFETY: as above; bounds are checked by the debug asserts and
+        // the 8-lane/tail split inside.
+        unsafe { avx2::dot_rows(a, bt, k, out) }
+    }
+
+    fn axpy(&self, y: &mut [f32], a: f32, x: &[f32]) {
+        // SAFETY: as above.
+        unsafe { avx2::axpy(y, a, x) }
+    }
+
+    fn max_abs_fold(&self, acc: &mut [f32], row: &[f32]) {
+        // SAFETY: as above.
+        unsafe { avx2::max_abs_fold(acc, row) }
+    }
+
+    fn quantize_row(&self, row: &[f32], scales: &[f32], out: &mut [i8]) {
+        // SAFETY: as above.
+        unsafe { avx2::quantize_row(row, scales, out) }
+    }
+
+    fn dequantize_row(&self, q: &[i8], scales: &[f32], out: &mut [f32]) {
+        // SAFETY: as above.
+        unsafe { avx2::dequantize_row(q, scales, out) }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Runtime dispatch
+// ---------------------------------------------------------------------
+
+static SCALAR: ScalarKernel = ScalarKernel;
+static PORTABLE: PortableKernel = PortableKernel;
+#[cfg(target_arch = "x86_64")]
+static AVX2: Avx2Kernel = Avx2Kernel;
+
+/// Sentinel: no programmatic override installed.
+const KIND_UNSET: u8 = u8::MAX;
+
+/// Programmatic backend override (priority over `DICE_SIMD`); mirrors
+/// `par::GLOBAL_THREADS`.
+static FORCED: AtomicU8 = AtomicU8::new(KIND_UNSET);
+
+fn encode(k: SimdKind) -> u8 {
+    match k {
+        SimdKind::Auto => 0,
+        SimdKind::Scalar => 1,
+        SimdKind::Portable => 2,
+        SimdKind::Avx2 => 3,
+    }
+}
+
+fn decode(v: u8) -> SimdKind {
+    match v {
+        0 => SimdKind::Auto,
+        1 => SimdKind::Scalar,
+        2 => SimdKind::Portable,
+        3 => SimdKind::Avx2,
+        _ => unreachable!("corrupt simd-kind encoding {v}"),
+    }
+}
+
+/// Install a process-wide backend override (the `--simd` CLI flag and
+/// the test suites use this). Takes priority over the `DICE_SIMD` env
+/// var; `SimdKind::Auto` forces re-detection. Undo with [`clear_kind`].
+pub fn set_kind(kind: SimdKind) {
+    FORCED.store(encode(kind), Ordering::Relaxed);
+}
+
+/// Remove the [`set_kind`] override so `DICE_SIMD` / auto-detection
+/// apply again.
+pub fn clear_kind() {
+    FORCED.store(KIND_UNSET, Ordering::Relaxed);
+}
+
+/// The current [`set_kind`] override, if one is installed.
+pub fn forced_kind() -> Option<SimdKind> {
+    match FORCED.load(Ordering::Relaxed) {
+        KIND_UNSET => None,
+        v => Some(decode(v)),
+    }
+}
+
+/// True when the running CPU supports the [`Avx2Kernel`]
+/// (runtime-detected AVX2 and FMA on x86_64; always false elsewhere).
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// What `SimdKind::Auto` resolves to on this host: [`SimdKind::Avx2`]
+/// when available, else [`SimdKind::Portable`]. Never `Auto` or
+/// `Scalar` — the oracle is only selected explicitly.
+pub fn detected_kind() -> SimdKind {
+    if avx2_available() {
+        SimdKind::Avx2
+    } else {
+        SimdKind::Portable
+    }
+}
+
+/// Every backend runnable on this host, oracle first — what the
+/// conformance suite and the perf gate iterate over.
+pub fn available_kinds() -> Vec<SimdKind> {
+    let mut v = vec![SimdKind::Scalar, SimdKind::Portable];
+    if avx2_available() {
+        v.push(SimdKind::Avx2);
+    }
+    v
+}
+
+/// The backend selection currently in force, before resolution (may be
+/// `Auto`): [`set_kind`] override > `DICE_SIMD` env var > `Auto`.
+/// Panics on an unparseable `DICE_SIMD` value — a configuration error
+/// should be loud, not silently scalar.
+pub fn configured_kind() -> SimdKind {
+    if let Some(k) = forced_kind() {
+        return k;
+    }
+    match std::env::var("DICE_SIMD") {
+        Ok(s) => match SimdKind::parse(&s) {
+            Ok(k) => k,
+            Err(e) => panic!("invalid DICE_SIMD: {e}"),
+        },
+        Err(_) => SimdKind::Auto,
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_kernel() -> &'static dyn MicroKernel {
+    assert!(
+        avx2_available(),
+        "simd backend avx2 forced (--simd/DICE_SIMD) but this CPU lacks AVX2+FMA"
+    );
+    &AVX2
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_kernel() -> &'static dyn MicroKernel {
+    panic!("simd backend avx2 forced (--simd/DICE_SIMD) but this build is not x86_64")
+}
+
+/// Resolve a [`SimdKind`] to its kernel. `Auto` applies
+/// [`detected_kind`]; forcing `Avx2` on a host without it panics
+/// (never a silent fallback).
+pub fn kernel_for(kind: SimdKind) -> &'static dyn MicroKernel {
+    match kind {
+        SimdKind::Auto => kernel_for(detected_kind()),
+        SimdKind::Scalar => &SCALAR,
+        SimdKind::Portable => &PORTABLE,
+        SimdKind::Avx2 => avx2_kernel(),
+    }
+}
+
+/// The kernel servicing the hot loops right now:
+/// `kernel_for(configured_kind())`. Call sites grab this once per
+/// operation (per GEMM / per codec row sweep), not per element.
+pub fn active() -> &'static dyn MicroKernel {
+    kernel_for(configured_kind())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn kernels() -> Vec<&'static dyn MicroKernel> {
+        available_kinds().into_iter().map(kernel_for).collect()
+    }
+
+    #[test]
+    fn dot_bit_exact_across_backends_at_tail_shapes() {
+        let oracle = kernel_for(SimdKind::Scalar);
+        let mut r = Rng::new(0x51D);
+        for k in [0usize, 1, 2, 7, 8, 9, 15, 16, 17, 31, 63, 64, 65, 100] {
+            let mut a = vec![0.0f32; k];
+            let mut b = vec![0.0f32; k];
+            r.fill_normal(&mut a);
+            r.fill_normal(&mut b);
+            let want = oracle.dot(&a, &b);
+            for kern in kernels() {
+                assert_eq!(kern.dot(&a, &b), want, "{} k={k}", kern.name());
+            }
+        }
+    }
+
+    #[test]
+    fn dot_rows_matches_per_row_dot() {
+        // the register-blocked tile path must equal row-at-a-time dots
+        let mut r = Rng::new(7);
+        for (nrows, k) in [(1usize, 9usize), (3, 16), (4, 17), (5, 64), (11, 33)] {
+            let mut a = vec![0.0f32; k];
+            let mut bt = vec![0.0f32; nrows * k];
+            r.fill_normal(&mut a);
+            r.fill_normal(&mut bt);
+            for kern in kernels() {
+                let mut tile = vec![0.0f32; nrows];
+                kern.dot_rows(&a, &bt, k, &mut tile);
+                for j in 0..nrows {
+                    assert_eq!(
+                        tile[j],
+                        kern.dot(&a, &bt[j * k..(j + 1) * k]),
+                        "{} rows={nrows} k={k} j={j}",
+                        kern.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_ties_round_away_from_zero_on_every_backend() {
+        // the values that fork half-to-even from half-away rounding,
+        // plus the q+0.5 trap (0.49999997 + 0.5 rounds UP in f32)
+        let row = [0.5f32, -0.5, 1.5, 2.5, -2.5, 0.499_999_97, -0.499_999_97, 126.5, 1.0];
+        let scales = [1.0f32; 9];
+        let want: [i8; 9] = [1, -1, 2, 3, -3, 0, 0, 127, 1];
+        for kern in kernels() {
+            let mut out = [0i8; 9];
+            kern.quantize_row(&row, &scales, &mut out);
+            assert_eq!(out, want, "{}", kern.name());
+        }
+    }
+
+    #[test]
+    fn quantize_zero_scale_channels_code_to_zero() {
+        let row = [3.0f32, -2.0, 0.0, 9.0, 1.0, -1.0, 4.0, 5.0, 6.0];
+        let mut scales = [0.25f32; 9];
+        scales[0] = 0.0;
+        scales[3] = 0.0;
+        scales[8] = 0.0; // tail channel
+        for kern in kernels() {
+            let mut out = [99i8; 9];
+            kern.quantize_row(&row, &scales, &mut out);
+            assert_eq!(out[0], 0, "{}", kern.name());
+            assert_eq!(out[3], 0, "{}", kern.name());
+            assert_eq!(out[8], 0, "{}", kern.name());
+            assert_eq!(out[1], -8, "{}", kern.name());
+        }
+    }
+
+    #[test]
+    fn axpy_and_sweeps_bit_exact_across_backends() {
+        let oracle = kernel_for(SimdKind::Scalar);
+        let mut r = Rng::new(0xA2B);
+        for n in [0usize, 1, 7, 8, 9, 65] {
+            let mut x = vec![0.0f32; n];
+            let mut y0 = vec![0.0f32; n];
+            r.fill_normal(&mut x);
+            r.fill_normal(&mut y0);
+            let mut want = y0.clone();
+            oracle.axpy(&mut want, 0.37, &x);
+            let mut wacc = vec![0.0f32; n];
+            oracle.max_abs_fold(&mut wacc, &x);
+            for kern in kernels() {
+                let mut y = y0.clone();
+                kern.axpy(&mut y, 0.37, &x);
+                assert_eq!(y, want, "axpy {} n={n}", kern.name());
+                let mut acc = vec![0.0f32; n];
+                kern.max_abs_fold(&mut acc, &x);
+                assert_eq!(acc, wacc, "max_abs_fold {} n={n}", kern.name());
+            }
+        }
+    }
+
+    #[test]
+    fn int8_round_trip_bit_exact_across_backends() {
+        let oracle = kernel_for(SimdKind::Scalar);
+        let mut r = Rng::new(0x1E8);
+        for n in [1usize, 8, 9, 63, 64, 65] {
+            let mut row = vec![0.0f32; n];
+            let mut scales = vec![0.0f32; n];
+            r.fill_normal(&mut row);
+            for s in scales.iter_mut() {
+                *s = r.uniform_f32() * 0.1;
+            }
+            let mut wq = vec![0i8; n];
+            oracle.quantize_row(&row, &scales, &mut wq);
+            let mut wd = vec![0.0f32; n];
+            oracle.dequantize_row(&wq, &scales, &mut wd);
+            for kern in kernels() {
+                let mut q = vec![0i8; n];
+                kern.quantize_row(&row, &scales, &mut q);
+                assert_eq!(q, wq, "quantize {} n={n}", kern.name());
+                let mut d = vec![0.0f32; n];
+                kern.dequantize_row(&q, &scales, &mut d);
+                assert_eq!(d, wd, "dequantize {} n={n}", kern.name());
+            }
+        }
+    }
+
+    #[test]
+    fn dispatch_override_and_names() {
+        // all name/selection assertions live in ONE test: set_kind is
+        // process-global, and splitting these across tests would race
+        // under the parallel test runner
+        let prev = forced_kind();
+        set_kind(SimdKind::Scalar);
+        assert_eq!(active().name(), "scalar");
+        assert_eq!(configured_kind(), SimdKind::Scalar);
+        set_kind(SimdKind::Portable);
+        assert_eq!(active().name(), "portable");
+        set_kind(SimdKind::Auto);
+        assert_eq!(active().name(), kernel_for(detected_kind()).name());
+        match prev {
+            Some(k) => set_kind(k),
+            None => clear_kind(),
+        }
+        assert_eq!(kernel_for(SimdKind::Scalar).name(), "scalar");
+        assert_eq!(kernel_for(SimdKind::Portable).name(), "portable");
+        if avx2_available() {
+            assert_eq!(kernel_for(SimdKind::Avx2).name(), "avx2");
+            assert_eq!(detected_kind(), SimdKind::Avx2);
+        } else {
+            assert_eq!(detected_kind(), SimdKind::Portable);
+        }
+        let kinds = available_kinds();
+        assert_eq!(kinds[0], SimdKind::Scalar, "oracle always first");
+        assert!(kinds.len() >= 2);
+    }
+
+    #[test]
+    fn gelu_rows_is_the_shared_scalar_epilogue() {
+        let mut r = Rng::new(42);
+        let mut base = vec![0.0f32; 37];
+        r.fill_normal(&mut base);
+        let mut want = base.clone();
+        for v in want.iter_mut() {
+            *v = crate::linalg::gelu(*v);
+        }
+        for kern in kernels() {
+            let mut c = base.clone();
+            kern.gelu_rows(&mut c);
+            assert_eq!(c, want, "{}", kern.name());
+        }
+    }
+
+    #[test]
+    fn copy_is_bitwise() {
+        let src: Vec<f32> = (0..17).map(|i| i as f32 * 0.3).collect();
+        for kern in kernels() {
+            let mut dst = vec![0.0f32; 17];
+            kern.copy(&mut dst, &src);
+            assert_eq!(dst, src, "{}", kern.name());
+        }
+    }
+}

@@ -48,6 +48,9 @@ fn usage() -> String {
          global: --threads N      worker-pool width for the execution runtime\n\
          \x20       (default: PAR_THREADS env, else all cores; output is\n\
          \x20       bit-exact for any value)\n\
+         \x20       --simd {{auto|scalar|portable|avx2}}\n\
+         \x20       SIMD kernel backend (default: DICE_SIMD env, else runtime\n\
+         \x20       detection; output is bit-exact for any backend)\n\
          \x20       --sync-layers {{none|deep|shallow|staggered|auto|<mask>}}\n\
          \x20       layer-sync policy (alias: --selective); masks are 0x2a hex,\n\
          \x20       0b101010 binary or decimal; `auto` runs the synctune probes\n\
@@ -135,6 +138,12 @@ fn main() -> Result<()> {
     let threads = a.usize_or("threads", 0);
     if threads > 0 {
         dice::par::set_threads(threads);
+    }
+    // SIMD kernel backend (DESIGN.md §12); DICE_SIMD env also works.
+    // Bit-exact across backends — this knob moves wall time only.
+    let simd = a.str_or("simd", "");
+    if !simd.is_empty() {
+        dice::linalg::simd::set_kind(dice::config::SimdKind::parse(&simd)?);
     }
     let cmd = a.positional.first().map(String::as_str).unwrap_or("help");
     match cmd {

@@ -399,15 +399,13 @@ impl HostMoeLayer {
         }
         let mut out = Tensor::zeros(&[n_tokens, d]);
         let de = &dev_entries;
+        let kern = linalg::simd::active();
         pool.for_chunks_mut(out.data_mut(), tokens_per_dev * d, |dev, chunk| {
             let t_lo = dev * tokens_per_dev;
             for &(e, r) in &de[dev] {
                 let en = &per_expert[e][r];
                 let at = (en.token - t_lo) * d;
-                let dst = &mut chunk[at..at + d];
-                for (o, s) in dst.iter_mut().zip(outputs[e].row(r)) {
-                    *o += en.score * s;
-                }
+                kern.axpy(&mut chunk[at..at + d], en.score, outputs[e].row(r));
             }
         });
         out
@@ -491,10 +489,11 @@ impl HostMoeLayer {
         // block; row order is the entry order, so the result is
         // bit-identical for any pool width.
         let pe = &per_expert;
+        let kern = linalg::simd::active();
         pool.for_chunks_mut(&mut gathered, 1, |e, slot| {
             let g = &mut slot[0];
             for (o, en) in pe[e].iter().enumerate() {
-                g.row_mut(o).copy_from_slice(x.row(en.token));
+                kern.copy(g.row_mut(o), x.row(en.token));
             }
         });
         ph.dispatch_s = t0.elapsed().as_secs_f64();
@@ -625,6 +624,7 @@ impl HostMoeLayer {
         let dev_s: Vec<OnceLock<f64>> = (0..devices).map(|_| OnceLock::new()).collect();
         let mut out = Tensor::zeros(&[n_tokens, d]);
         let serial = ParPool::new(1);
+        let kern = linalg::simd::active();
         {
             // each device task locks exactly its own chunk, exactly
             // once — the Mutex is an ownership handover, not contention
@@ -643,13 +643,13 @@ impl HostMoeLayer {
                         BlockSource::Gathered(_) if lo == 0 && hi == per_expert[e].len() => None,
                         BlockSource::Gathered(g) => {
                             let mut b = Tensor::zeros(&[hi - lo, d]);
-                            b.data_mut().copy_from_slice(&g[e].data()[lo * d..hi * d]);
+                            kern.copy(b.data_mut(), &g[e].data()[lo * d..hi * d]);
                             Some(b)
                         }
                         BlockSource::Tokens(x) => {
                             let mut b = Tensor::zeros(&[hi - lo, d]);
                             for (o, en) in per_expert[e][lo..hi].iter().enumerate() {
-                                b.row_mut(o).copy_from_slice(x.row(en.token));
+                                kern.copy(b.row_mut(o), x.row(en.token));
                             }
                             Some(b)
                         }
@@ -679,9 +679,7 @@ impl HostMoeLayer {
                         let so = outs[sub].get().expect("dependency completed");
                         let local = r - sub_lo[sub];
                         let at = (en.token - t_lo) * d;
-                        for (o, s) in chunk[at..at + d].iter_mut().zip(so.y.row(local)) {
-                            *o += en.score * s;
-                        }
+                        kern.axpy(&mut chunk[at..at + d], en.score, so.y.row(local));
                     }
                     let _ = dev_s[dev].set(t0.elapsed().as_secs_f64());
                 }

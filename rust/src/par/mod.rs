@@ -22,7 +22,11 @@
 //! * **Bit-exact reductions** — combined with fixed per-task iteration
 //!   order, the rules above make every pool-driven computation in
 //!   this crate produce identical bits for any `--threads` value (the
-//!   `par_determinism` integration suite pins this).
+//!   `par_determinism` integration suite pins this). The SIMD backend
+//!   under the inner loops ([`crate::linalg::simd`], `--simd` /
+//!   `DICE_SIMD`) is an orthogonal axis of the same contract: every
+//!   backend is bit-exact against the scalar oracle, so any thread
+//!   width × any backend produces one answer (DESIGN.md §12).
 //! * **Panic propagation** — a panicking task panics the caller (first
 //!   panic wins, remaining tasks are joined first; in [`ParPool::run_graph`]
 //!   a panic also poisons the queue so peers stop instead of spinning on

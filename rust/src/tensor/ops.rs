@@ -19,25 +19,25 @@ pub fn gather_rows(t: &Tensor, idx: &[usize]) -> Tensor {
 pub fn gather_rows_into(t: &Tensor, idx: &[usize], out: &mut Tensor) {
     let (_, d) = t.rows();
     debug_assert_eq!(out.rows(), (idx.len(), d), "gather_rows_into shape");
+    let kern = crate::linalg::simd::active();
     for (o, &i) in idx.iter().enumerate() {
-        out.row_mut(o).copy_from_slice(t.row(i));
+        kern.copy(out.row_mut(o), t.row(i));
     }
 }
 
 /// Scatter-add rows of `src` into `dst` at `idx`, scaling row r by `w[r]`.
 /// This is the combine-side "scale by router score and accumulate"
-/// (y_i = Σ_e s_i^e · h_i^e).
+/// (y_i = Σ_e s_i^e · h_i^e), routed through the runtime-dispatched
+/// SIMD axpy (DESIGN.md §12; every backend is bit-exact, so the row
+/// accumulation order below stays the whole determinism story).
 pub fn scatter_add_rows(dst: &mut Tensor, src: &Tensor, idx: &[usize], w: &[f32]) {
     let (_, d) = dst.rows();
     debug_assert_eq!(src.rows().1, d);
     debug_assert_eq!(src.rows().0, idx.len());
     debug_assert_eq!(idx.len(), w.len());
+    let kern = crate::linalg::simd::active();
     for (r, &i) in idx.iter().enumerate() {
-        let s = w[r];
-        let dst_row = dst.row_mut(i);
-        for (a, b) in dst_row.iter_mut().zip(src.row(r)) {
-            *a += s * b;
-        }
+        kern.axpy(dst.row_mut(i), w[r], src.row(r));
     }
 }
 

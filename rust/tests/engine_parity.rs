@@ -129,6 +129,37 @@ fn dispatch_combine_equals_moe_dense_artifact() {
 }
 
 #[test]
+fn engine_samples_invariant_across_simd_backends() {
+    // engine-level corollary of the SIMD conformance suite: the full
+    // three-layer generate path (artifacts + runtime + coordinator,
+    // host-side gather/scatter and codec sweeps included) produces
+    // bit-identical samples whichever kernel backend (DESIGN.md §12)
+    // services the hot loops.
+    use dice::config::SimdKind;
+    use dice::linalg::simd;
+    let Some((rt, bank)) = setup() else { return };
+    let prev = simd::forced_kind();
+    let labels = vec![0usize, 1, 2, 3];
+    let eng = Engine::new(
+        &rt,
+        &bank,
+        engine_cfg(Strategy::Interweaved, DiceOptions::dice().with_warmup(1)),
+    )
+    .unwrap();
+    simd::set_kind(SimdKind::Scalar);
+    let (want, _) = eng.generate(&labels, 4, 7, None).unwrap();
+    for kind in simd::available_kinds() {
+        simd::set_kind(kind);
+        let (got, _) = eng.generate(&labels, 4, 7, None).unwrap();
+        assert_eq!(want, got, "samples diverged under simd={}", kind.name());
+    }
+    match prev {
+        Some(k) => simd::set_kind(k),
+        None => simd::clear_kind(),
+    }
+}
+
+#[test]
 fn displaced_equals_sync_when_inputs_constant() {
     // With zero diffusion steps of change (steps=1 there is no history),
     // verify instead: displaced with warmup covering ALL steps == sync.

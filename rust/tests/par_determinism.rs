@@ -5,8 +5,10 @@
 //! matmul kernels (fused epilogue included), dynamic scheduling, the
 //! multi-step `HostPipeline` under all three strategies (with MEASURED
 //! staleness ages), the simulation sweep fan-out, and the scenario
-//! serving fan-out, at widths 1 / 2 / 4. Artifact-free: everything here
-//! runs on a clean checkout.
+//! serving fan-out, at widths 1 / 2 / 4 — and across the orthogonal
+//! `DICE_SIMD` kernel-backend axis (DESIGN.md §12), so overlap ×
+//! vectorization compose without numeric drift. Artifact-free:
+//! everything here runs on a clean checkout.
 
 use dice::config::{
     hardware_profile, model_preset, DiceOptions, PipelineMode, PlacementKind, SelectiveSync,
@@ -334,6 +336,74 @@ fn multilayer_pipeline_bit_exact_across_threads_for_every_sync_policy() {
                 "fully-protected schedule/{mode:?} --threads {threads} must be fresh"
             );
         }
+    }
+}
+
+#[test]
+fn multilayer_pipeline_bit_exact_across_threads_and_simd_backends() {
+    // Overlap × vectorization must compose with zero numeric drift
+    // (DESIGN.md §12): the 4-layer overlapped HostPipeline produces ONE
+    // answer over the whole --threads {1,2,4} × DICE_SIMD backend grid,
+    // pinned against the scalar-oracle serial run. Backends are
+    // bit-exact by the conformance contract, so even a concurrent test
+    // flipping the process-global backend cannot change these bits.
+    use dice::config::SimdKind;
+    use dice::linalg::simd;
+    let stack = HostMoeStack::synth(
+        HostMoeConfig {
+            n_experts: 8,
+            top_k: 2,
+            d_model: 16,
+            d_ff: 32,
+            devices: 4,
+        },
+        4,
+        0xD1CE,
+    );
+    let x0 = normal(&[32, 16], 13);
+    let steps = 6;
+    let prev = simd::forced_kind();
+    simd::set_kind(SimdKind::Scalar);
+    let want = {
+        let mut p = HostPipeline::new_stack(
+            stack.clone(),
+            Strategy::Interweaved,
+            SelectiveSync::Staggered,
+            PipelineMode::Overlapped,
+            &ParPool::new(1),
+        );
+        p.run(&x0, steps)
+    };
+    assert_eq!(want.simd_backend, "scalar");
+    for kind in simd::available_kinds() {
+        simd::set_kind(kind);
+        for threads in [1usize, 2, 4] {
+            let mut p = HostPipeline::new_stack(
+                stack.clone(),
+                Strategy::Interweaved,
+                SelectiveSync::Staggered,
+                PipelineMode::Overlapped,
+                &ParPool::new(threads),
+            );
+            let rep = p.run(&x0, steps);
+            assert_eq!(
+                want.out,
+                rep.out,
+                "simd={} --threads {threads} diverged",
+                kind.name()
+            );
+            assert_eq!(
+                want.staleness.records,
+                rep.staleness.records,
+                "simd={} --threads {threads} ledger diverged",
+                kind.name()
+            );
+            assert_eq!(rep.simd_backend, kind.name());
+        }
+    }
+    match prev {
+        Some(k) => simd::set_kind(k),
+        None => simd::clear_kind(),
     }
 }
 

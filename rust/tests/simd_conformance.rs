@@ -1,0 +1,237 @@
+//! Integration: the SIMD micro-kernel conformance suite (DESIGN.md
+//! §12). Every backend runnable on this host must be BIT-EXACT against
+//! the scalar oracle on every operation the hot paths route through —
+//! GEMM tiles (with and without the fused GELU epilogue), combine
+//! axpy, dispatch row copies, and the int8 codec sweeps — across a
+//! randomized shape sweep that hammers the non-multiple-of-lane tails.
+//!
+//! ci.sh runs this suite twice, under `DICE_SIMD=scalar` and
+//! `DICE_SIMD=auto`, so a machine without AVX2 still exercises every
+//! selection path.
+
+use std::sync::Mutex;
+
+use dice::config::SimdKind;
+use dice::linalg::{self, simd};
+use dice::par::ParPool;
+use dice::rng::Rng;
+use dice::tensor::Tensor;
+
+/// Serializes the tests that touch the process-global backend override
+/// (`set_kind`) or assert on `configured_kind`; the kernel-level sweeps
+/// go through `kernel_for` and need no lock.
+static KIND_LOCK: Mutex<()> = Mutex::new(());
+
+fn normal(shape: &[usize], seed: u64) -> Tensor {
+    let mut t = Tensor::zeros(shape);
+    Rng::new(seed).fill_normal(t.data_mut());
+    t
+}
+
+fn restore(prev: Option<SimdKind>) {
+    match prev {
+        Some(k) => simd::set_kind(k),
+        None => simd::clear_kind(),
+    }
+}
+
+#[test]
+fn edge_dims_matmul_grid_bit_exact_across_backends() {
+    // the full m/n/k ∈ {0,1,7,8,9,63,64,65} grid through the REAL
+    // matmul entry points (tiling + pool fan-out included), each
+    // runnable backend forced in turn against the scalar oracle
+    let _g = KIND_LOCK.lock().unwrap();
+    let prev = simd::forced_kind();
+    const E: [usize; 8] = [0, 1, 7, 8, 9, 63, 64, 65];
+    let pool = ParPool::new(2);
+    let mut seed = 0x51D0u64;
+    for m in E {
+        for n in E {
+            for k in E {
+                seed += 1;
+                let a = normal(&[m, k], seed);
+                let bt = normal(&[n, k], seed ^ 0xABCD);
+                simd::set_kind(SimdKind::Scalar);
+                let want = linalg::matmul_bt_with(&pool, &a, &bt);
+                let want_gelu = linalg::matmul_bt_gelu_with(&pool, &a, &bt);
+                if m == 0 || n == 0 || k == 0 {
+                    // degenerate-shape contract: all zeros, right shape
+                    assert_eq!(want.shape(), &[m, n]);
+                    assert!(want.data().iter().all(|&v| v == 0.0), "({m},{n},{k})");
+                }
+                for kind in simd::available_kinds() {
+                    simd::set_kind(kind);
+                    let got = linalg::matmul_bt_with(&pool, &a, &bt);
+                    assert_eq!(want, got, "{} ({m},{n},{k})", kind.name());
+                    let got_gelu = linalg::matmul_bt_gelu_with(&pool, &a, &bt);
+                    assert_eq!(want_gelu, got_gelu, "{} gelu ({m},{n},{k})", kind.name());
+                }
+            }
+        }
+    }
+    restore(prev);
+}
+
+#[test]
+fn randomized_shape_sweep_all_ops_bit_exact() {
+    // ~200 seeded random shapes biased to non-multiple-of-8 tails,
+    // verified at the kernel level (`kernel_for`, no global state):
+    // GEMM tile (dot_rows == per-element scalar dots), fused GELU
+    // epilogue, axpy, row copy, max-abs fold, int8 round trip.
+    let oracle = simd::kernel_for(SimdKind::Scalar);
+    let mut r = Rng::new(0xD1CE_51D0);
+    for case in 0..200u64 {
+        // tails: ~3/4 of draws land off the 8-lane boundary
+        let k = r.below(80);
+        let rows = 1 + r.below(12);
+        let mut a = vec![0.0f32; k];
+        let mut bt = vec![0.0f32; rows * k];
+        r.fill_normal(&mut a);
+        r.fill_normal(&mut bt);
+
+        // oracle tile = independent scalar dots in the contract order
+        let mut want = vec![0.0f32; rows];
+        for j in 0..rows {
+            want[j] = oracle.dot(&a, &bt[j * k..(j + 1) * k]);
+        }
+        let mut want_gelu = want.clone();
+        oracle.gelu_rows(&mut want_gelu);
+
+        let n = k; // vector ops stress the same tail lengths
+        let mut x = vec![0.0f32; n];
+        let mut x2 = vec![0.0f32; n];
+        let mut y0 = vec![0.0f32; n];
+        let mut scales = vec![0.0f32; n];
+        r.fill_normal(&mut x);
+        r.fill_normal(&mut x2);
+        r.fill_normal(&mut y0);
+        let s = r.uniform_f32() * 2.0 - 1.0;
+        let mut want_y = y0.clone();
+        oracle.axpy(&mut want_y, s, &x);
+        // fold two rows so the per-channel max usually comes from the
+        // OTHER row and quantized codes span the whole int8 range
+        // (scales from x alone would make every code ±127)
+        oracle.max_abs_fold(&mut scales, &x);
+        oracle.max_abs_fold(&mut scales, &x2);
+        for sc in scales.iter_mut() {
+            *sc /= 127.0;
+        }
+        let mut want_q = vec![0i8; n];
+        oracle.quantize_row(&x, &scales, &mut want_q);
+        let mut want_d = vec![0.0f32; n];
+        oracle.dequantize_row(&want_q, &scales, &mut want_d);
+
+        for kind in simd::available_kinds() {
+            let kern = simd::kernel_for(kind);
+            let mut tile = vec![0.0f32; rows];
+            kern.dot_rows(&a, &bt, k, &mut tile);
+            assert_eq!(tile, want, "case {case} {} dot_rows k={k}", kern.name());
+            kern.gelu_rows(&mut tile);
+            assert_eq!(tile, want_gelu, "case {case} {} gelu", kern.name());
+
+            let mut y = y0.clone();
+            kern.axpy(&mut y, s, &x);
+            assert_eq!(y, want_y, "case {case} {} axpy n={n}", kern.name());
+
+            let mut dst = vec![0.0f32; n];
+            kern.copy(&mut dst, &x);
+            assert_eq!(dst, x, "case {case} {} copy", kern.name());
+
+            let mut acc = vec![0.0f32; n];
+            kern.max_abs_fold(&mut acc, &x);
+            kern.max_abs_fold(&mut acc, &x2);
+            for sc in acc.iter_mut() {
+                *sc /= 127.0;
+            }
+            assert_eq!(acc, scales, "case {case} {} max_abs_fold", kern.name());
+
+            let mut q = vec![0i8; n];
+            kern.quantize_row(&x, &scales, &mut q);
+            assert_eq!(q, want_q, "case {case} {} quantize n={n}", kern.name());
+            let mut d = vec![0.0f32; n];
+            kern.dequantize_row(&q, &scales, &mut d);
+            assert_eq!(d, want_d, "case {case} {} dequantize", kern.name());
+        }
+    }
+}
+
+#[test]
+fn int8_codec_bit_exact_across_backends_end_to_end() {
+    // the codec path as compress/ actually runs it: whole-tensor
+    // encode/decode under each forced backend, wire bytes included
+    use dice::compress::{Int8Codec, ResidualCodec};
+    let _g = KIND_LOCK.lock().unwrap();
+    let prev = simd::forced_kind();
+    for (rows, d) in [(1usize, 7usize), (5, 16), (9, 65), (32, 64)] {
+        let block = normal(&[rows, d], 7_000 + (rows * d) as u64);
+        simd::set_kind(SimdKind::Scalar);
+        let want_enc = Int8Codec.encode(&block);
+        let want = want_enc.decode();
+        for kind in simd::available_kinds() {
+            simd::set_kind(kind);
+            let enc = Int8Codec.encode(&block);
+            assert_eq!(enc.wire_bytes, want_enc.wire_bytes, "{}", kind.name());
+            assert_eq!(enc.decode(), want, "{} ({rows},{d})", kind.name());
+        }
+    }
+    restore(prev);
+}
+
+#[test]
+fn dice_simd_env_selects_backend() {
+    // ci.sh runs this suite under DICE_SIMD=scalar and DICE_SIMD=auto;
+    // with no programmatic override the env var must win, and `auto`
+    // must resolve to the detected kind (never silently scalar)
+    let _g = KIND_LOCK.lock().unwrap();
+    let prev = simd::forced_kind();
+    simd::clear_kind();
+    let want = match std::env::var("DICE_SIMD") {
+        Ok(s) => SimdKind::parse(&s).expect("ci sets only valid DICE_SIMD values"),
+        Err(_) => SimdKind::Auto,
+    };
+    assert_eq!(simd::configured_kind(), want);
+    let resolved = match want {
+        SimdKind::Auto => simd::detected_kind(),
+        k => k,
+    };
+    assert_eq!(simd::active().name(), resolved.name());
+    if simd::avx2_available() {
+        assert_eq!(simd::detected_kind(), SimdKind::Avx2);
+    } else {
+        assert_eq!(simd::detected_kind(), SimdKind::Portable);
+    }
+    restore(prev);
+}
+
+#[test]
+fn host_moe_step_bit_exact_across_backends() {
+    // one full dispatch→FFN→combine engine step (both executors) under
+    // every backend: the call-site routing in moe/host.rs preserves
+    // bits end to end, not just kernel by kernel
+    use dice::moe::host::{HostMoeConfig, HostMoeLayer};
+    let _g = KIND_LOCK.lock().unwrap();
+    let prev = simd::forced_kind();
+    let cfg = HostMoeConfig {
+        n_experts: 8,
+        top_k: 2,
+        d_model: 16,
+        d_ff: 32,
+        devices: 4,
+    };
+    let layer = HostMoeLayer::synth(cfg, 0xD1CE);
+    let x = normal(&[32, cfg.d_model], 11);
+    let pool = ParPool::new(2);
+    simd::set_kind(SimdKind::Scalar);
+    let want = layer.step(&pool, &x);
+    for kind in simd::available_kinds() {
+        simd::set_kind(kind);
+        assert_eq!(want, layer.step(&pool, &x), "{} barriered", kind.name());
+        assert_eq!(
+            want,
+            layer.step_overlapped(&pool, &x),
+            "{} overlapped",
+            kind.name()
+        );
+    }
+    restore(prev);
+}

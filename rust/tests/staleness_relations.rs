@@ -262,6 +262,27 @@ fn per_layer_ledger_is_step_major_and_layer_ascending() {
 }
 
 #[test]
+fn per_layer_ledger_identical_across_simd_backends() {
+    // staleness ages are dataflow facts; the SIMD backend under the
+    // FFN/combine arithmetic (DESIGN.md §12) must not perturb a single
+    // record — the ledger is pinned across the whole backend axis.
+    use dice::config::SimdKind;
+    use dice::linalg::simd;
+    let prev = simd::forced_kind();
+    simd::set_kind(SimdKind::Scalar);
+    let base = host_records(Strategy::DisplacedEp, SelectiveSync::Staggered, 2, 6, 4);
+    for kind in simd::available_kinds() {
+        simd::set_kind(kind);
+        let got = host_records(Strategy::DisplacedEp, SelectiveSync::Staggered, 2, 6, 4);
+        assert_eq!(base, got, "ledger diverged under simd={}", kind.name());
+    }
+    match prev {
+        Some(k) => simd::set_kind(k),
+        None => simd::clear_kind(),
+    }
+}
+
+#[test]
 fn per_layer_ledger_identical_across_runs_and_widths() {
     // the measured ledger is part of the determinism contract: same
     // run twice => identical records; any pool width => identical

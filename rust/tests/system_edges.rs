@@ -174,6 +174,33 @@ fn missing_artifact_dir_is_clean_error() {
 }
 
 #[test]
+fn simd_misconfiguration_fails_loud_never_silent() {
+    // failure injection on the kernel-backend axis (DESIGN.md §12):
+    // a bad backend name is a parse error at the CLI/env boundary, and
+    // forcing an ISA the CPU lacks is a panic — never a silent fallback
+    // to a different kernel than the one the operator asked for.
+    use dice::config::SimdKind;
+    use dice::linalg::simd;
+    for bad in ["neon", "sse2", "avx512", "AVX2 ", "scalar,portable", ""] {
+        assert!(SimdKind::parse(bad).is_err(), "{bad:?} must be rejected");
+    }
+    // the host's runnable set always leads with the scalar oracle and
+    // advertises avx2 exactly when the CPU can actually run it
+    let kinds = simd::available_kinds();
+    assert_eq!(kinds[0], SimdKind::Scalar);
+    assert!(kinds.contains(&SimdKind::Portable));
+    assert_eq!(kinds.contains(&SimdKind::Avx2), simd::avx2_available());
+    if simd::avx2_available() {
+        assert_eq!(simd::kernel_for(SimdKind::Avx2).name(), "avx2");
+    } else {
+        let forced = std::panic::catch_unwind(|| {
+            let _ = simd::kernel_for(SimdKind::Avx2);
+        });
+        assert!(forced.is_err(), "unsupported forced avx2 must panic");
+    }
+}
+
+#[test]
 fn engine_deterministic_across_runs() {
     let Some((rt, bank)) = setup() else { return };
     let eng = Engine::new(
