@@ -5,10 +5,13 @@
 //! `multilayer_overlap` pair (the §11 cross-layer window on a 4-layer
 //! stack), the simulation sweep fan-out, the placement-policy sweep
 //! (three solves + crossing-bytes pricing on a skewed plan, DESIGN.md
-//! §9), and the `simd_kernels` pair (scalar oracle vs the detected
-//! kernel backend on the expert-FFN GEMM, DESIGN.md §12), and appends
-//! every summary to repo-root `BENCH_engine.json` (JSON lines) — the
-//! perf trajectory across PRs. Artifact-free.
+//! §9), the `topology_placement` solve (node-aware affinity on a
+//! 4-node hierarchy, with a custom trajectory record carrying the
+//! flat-vs-multinode inter-node byte split and modeled a2a times,
+//! DESIGN.md §13), and the `simd_kernels` pair (scalar oracle vs the
+//! detected kernel backend on the expert-FFN GEMM, DESIGN.md §12), and
+//! appends every summary to repo-root `BENCH_engine.json` (JSON lines)
+//! — the perf trajectory across PRs. Artifact-free.
 //!
 //!     cargo bench --bench perf_gate              # full iterations
 //!     cargo bench --bench perf_gate -- --check   # CI: few iters +
@@ -20,7 +23,9 @@
 //! engine step is no slower than serial, that the OVERLAPPED executor
 //! is no slower than the barriered one on the skewed-routing workload,
 //! that the detected SIMD backend is no slower than the scalar oracle
-//! (thread-independent, so it gates even on one core), and that
+//! (thread-independent, so it gates even on one core), that the
+//! node-aware placement ships no more inter-node bytes (and no more
+//! modeled a2a time) than the node-blind solve, and that
 //! `BENCH_engine.json` is valid JSON lines.
 
 use std::path::PathBuf;
@@ -35,11 +40,12 @@ use dice::coordinator::{simulate_sweep_with, HostPipeline, SweepCase};
 use dice::linalg::{self, simd};
 use dice::moe::host::{HostMoeConfig, HostMoeLayer, HostMoeStack};
 use dice::moe::{DispatchPlan, RoutingTable};
-use dice::netsim::{CostModel, Workload};
+use dice::netsim::{CostModel, Topology, Workload};
 use dice::par::ParPool;
 use dice::placement::{build, skewed_probs, RoutingStats};
 use dice::rng::Rng;
 use dice::tensor::Tensor;
+use dice::workload::node_skewed_probs;
 
 /// Repo root (the bench runs with the package dir `rust/` as cwd).
 fn repo_root() -> PathBuf {
@@ -206,6 +212,41 @@ fn main() -> anyhow::Result<()> {
         }
     });
 
+    // --- topology placement: node-blind vs node-aware on a cluster -----
+    // (DESIGN.md §13) — solve the affinity placement flat and on a
+    // 4-node hierarchy against the seeded node-skewed workload, split
+    // the plan's crossing bytes per fabric, and model the all-to-all
+    // step time on the hierarchical cost model. The custom record below
+    // carries the byte/time facts into the trajectory.
+    let topo = Topology::multinode(4);
+    let (te, td, tk) = (32usize, 16usize, 2usize);
+    let t_tokens = 1024usize;
+    let mut t_stats = RoutingStats::new(te, td);
+    for step in 0..3u64 {
+        let probs = node_skewed_probs(t_tokens, te, td, topo, 0xD1CE_u64.wrapping_add(step));
+        t_stats.observe(&RoutingTable::from_probs(&probs, tk), t_tokens / td);
+    }
+    let t_probs = node_skewed_probs(t_tokens, te, td, topo, 0xD1CE);
+    let t_plan = DispatchPlan::build(&RoutingTable::from_probs(&t_probs, tk), t_tokens / td);
+    let s_topo = benchkit::bench("topology_placement_solve", warmup, iters, || {
+        let p = build(PlacementKind::AffinityAware).place_on(te, td, topo, &t_stats);
+        std::hint::black_box(t_plan.cross_bytes_split(&p, topo, 64, 2));
+    });
+    let tp_flat = build(PlacementKind::AffinityAware).place(te, td, &t_stats);
+    let tp_topo = build(PlacementKind::AffinityAware).place_on(te, td, topo, &t_stats);
+    let (fl_intra, fl_inter) = t_plan.cross_bytes_split(&tp_flat, topo, 64, 2);
+    let (tp_intra, tp_inter) = t_plan.cross_bytes_split(&tp_topo, topo, 64, 2);
+    let tcm = CostModel::new(model_preset("g")?, hardware_profile("rtx4090_pcie")?)
+        .with_topology(topo);
+    let tt_flat = tcm.t_a2a_split(fl_intra as f64, fl_inter as f64, td);
+    let tt_topo = tcm.t_a2a_split(tp_intra as f64, tp_inter as f64, td);
+    println!(
+        "topology placement (multinode:4, {te} experts / {td} devices): inter-node bytes \
+         {fl_inter} flat -> {tp_inter} node-aware, modeled a2a {} -> {}",
+        fmt_secs(tt_flat),
+        fmt_secs(tt_topo)
+    );
+
     // --- SIMD kernels: scalar oracle vs best detected backend ----------
     // (DESIGN.md §12) — the expert-FFN GEMM at the multi-layer
     // pipeline's shapes (128 tokens, d_model 64 → d_ff 256, fused GELU
@@ -244,6 +285,7 @@ fn main() -> anyhow::Result<()> {
         w_serial.clone(),
         w_par.clone(),
         s_place.clone(),
+        s_topo.clone(),
         p_uni_bar.clone(),
         p_uni_ovl.clone(),
         p_skw_bar.clone(),
@@ -292,7 +334,29 @@ fn main() -> anyhow::Result<()> {
     // --- trajectory ----------------------------------------------------
     let bench_path = repo_root().join("BENCH_engine.json");
     benchkit::append_jsonl(&bench_path, &summaries)?;
-    println!("appended {} records to {}", summaries.len(), bench_path.display());
+    // the topology record carries the flat-vs-multinode inter-node byte
+    // split and modeled a2a step times alongside the solve timing
+    // (mean_s), so the trajectory tracks the §13 placement win per PR
+    {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&bench_path)?;
+        writeln!(
+            f,
+            "{{\"name\":\"topology_placement\",\"mean_s\":{:.9},\
+             \"inter_bytes_flat\":{fl_inter},\"inter_bytes_topo\":{tp_inter},\
+             \"intra_bytes_flat\":{fl_intra},\"intra_bytes_topo\":{tp_intra},\
+             \"a2a_s_flat\":{tt_flat:.9},\"a2a_s_topo\":{tt_topo:.9}}}",
+            tt_topo
+        )?;
+    }
+    println!(
+        "appended {} records to {}",
+        summaries.len() + 1,
+        bench_path.display()
+    );
 
     // --- gates ---------------------------------------------------------
     // determinism: parallel output bit-exact vs serial, always checked
@@ -362,8 +426,20 @@ fn main() -> anyhow::Result<()> {
             .map_err(|e| anyhow::anyhow!("BENCH_engine.json line {}: {e}", lines + 1))?;
         lines += 1;
     }
-    assert!(lines >= summaries.len(), "trajectory must retain records");
+    assert!(lines > summaries.len(), "trajectory must retain records");
     if check {
+        // topology gate (DESIGN.md §13): the node-aware affinity solve
+        // must not ship more bytes over the NIC than the node-blind one
+        // on the seeded node-skewed workload — deterministic, but
+        // gated here with the other --check assertions
+        assert!(
+            tp_inter <= fl_inter,
+            "node-aware placement regressed inter-node bytes: {tp_inter} vs flat {fl_inter}"
+        );
+        assert!(
+            tt_topo <= tt_flat,
+            "node-aware placement regressed modeled a2a time: {tt_topo} vs flat {tt_flat}"
+        );
         if cores >= 2 {
             // median with a small noise margin: a real speedup has huge
             // headroom under this, while a broken pool (par == serial)

@@ -80,6 +80,15 @@ cargo run --release --quiet -- exp pipeline --steps 10 --tokens 512 --layers 2
 echo "==> synctune gate (dice exp synctune, artifact-free)"
 cargo run --release --quiet -- exp synctune --layers 6 --steps 8
 
+# Topology gate (artifact-free, DESIGN.md §13): FAILS unless the
+# node-aware AffinityAware placement ships strictly fewer inter-node
+# bytes AND a strictly lower modeled step time than both the node-blind
+# solve and the contiguous baseline on the seeded multi-node skewed
+# workload, and the 1-node topology reproduces the flat all-to-all
+# prices bit-exactly.
+echo "==> topology gate (dice exp topology, artifact-free)"
+cargo run --release --quiet -- exp topology
+
 # Docs gates: rustdoc warnings (broken links, bad code-block attrs) are
 # errors, and missing_docs — warn-level in the sources so local builds
 # stay friendly — is escalated to deny here so new public items cannot

@@ -1,13 +1,17 @@
 //! Paper-scale what-if explorer: simulate any (model, hardware, batch,
 //! devices, strategy) point and print latency / a2a share / memory.
+//! `--topology multinode:4` (or `rail`, `fattree:<o>`) prices a
+//! hierarchical cluster — hundreds of devices across dozens of nodes —
+//! with inter-node bytes charged at the NIC (DESIGN.md §13).
 //!
 //!     cargo run --release --example scale_sim -- --model g --hw nvlink --batch 8
+//!     cargo run --release --example scale_sim -- --devices 256 --topology multinode:32
 
 use dice::cli::Args;
 use dice::config::{hardware_profile, model_preset, DiceOptions, Strategy};
 use dice::coordinator::{simulate_sweep, SweepCase};
 use dice::benchkit::{fmt_bytes, fmt_secs, Table};
-use dice::netsim::{CostModel, Workload};
+use dice::netsim::{CostModel, Topology, Workload};
 
 fn main() -> anyhow::Result<()> {
     let a = Args::parse();
@@ -19,7 +23,8 @@ fn main() -> anyhow::Result<()> {
     let batch = a.usize_or("batch", 16);
     let devices = a.usize_or("devices", 8);
     let steps = a.usize_or("steps", 50);
-    let cm = CostModel::new(model.clone(), hw.clone());
+    let topo = Topology::parse(&a.str_or("topology", "flat"))?;
+    let cm = CostModel::new(model.clone(), hw.clone()).with_topology(topo);
     let wl = Workload {
         local_batch: batch,
         devices,
@@ -27,8 +32,12 @@ fn main() -> anyhow::Result<()> {
     };
     let mut t = Table::new(
         &format!(
-            "{} on {}x {} — local batch {batch}, {steps} steps",
-            model.name, devices, hw.name
+            "{} on {}x {} ({} topology, {} nodes) — local batch {batch}, {steps} steps",
+            model.name,
+            devices,
+            hw.name,
+            topo.name(),
+            topo.nodes_for(devices)
         ),
         &["Strategy", "Total", "Step", "a2a share", "Memory", "OOM"],
     );

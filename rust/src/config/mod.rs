@@ -9,6 +9,7 @@ pub mod presets;
 pub use json::{obj, Json};
 pub use presets::{hardware_profile, model_preset, HardwareProfile, ModelPreset};
 
+use crate::netsim::Topology;
 use anyhow::{bail, Context, Result};
 
 /// Model architecture (mirrors `python/compile/configs.py`).
@@ -501,6 +502,19 @@ pub struct DiceOptions {
     /// balancing trading locality for balance) carries its > 1 ratio
     /// honestly rather than being clamped.
     pub a2a_cross_scale: f64,
+    /// Interconnect topology the run prices communication against
+    /// (DESIGN.md §13). Flat (single node) by default — the degenerate
+    /// case where every price is bit-identical to the non-hierarchical
+    /// model. Must match the [`crate::netsim::CostModel`]'s topology
+    /// (`main.rs` sets both from one `--topology` parse).
+    pub topology: Topology,
+    /// Analytic inter-node traffic scale for the placement policy
+    /// (`placement::measured_topo_scales`): the fraction of the
+    /// balanced-routing inter-node byte share that still crosses a node
+    /// boundary under the solved map. 1.0 = the contiguous baseline;
+    /// `CostModel::t_a2a_with` multiplies the modeled inter-node byte
+    /// split by this before pricing the NIC path.
+    pub a2a_inter_scale: f64,
 }
 
 impl DiceOptions {
@@ -516,6 +530,8 @@ impl DiceOptions {
             placement: PlacementKind::Contiguous,
             rebalance_every: 0,
             a2a_cross_scale: 1.0,
+            topology: Topology::flat(),
+            a2a_inter_scale: 1.0,
         }
     }
     /// The full DICE configuration used in the paper's main results.
@@ -533,6 +549,8 @@ impl DiceOptions {
             placement: PlacementKind::Contiguous,
             rebalance_every: 0,
             a2a_cross_scale: 1.0,
+            topology: Topology::flat(),
+            a2a_inter_scale: 1.0,
         }
     }
     /// Select a residual compression codec for the all-to-all payloads.
@@ -554,6 +572,19 @@ impl DiceOptions {
     pub fn with_cross_scale(mut self, scale: f64) -> Self {
         assert!(scale.is_finite() && scale > 0.0, "scale must be finite and positive");
         self.a2a_cross_scale = scale;
+        self
+    }
+    /// Select the interconnect topology the schedules price against.
+    pub fn with_topology(mut self, topo: Topology) -> Self {
+        self.topology = topo;
+        self
+    }
+    /// Install the measured inter-node traffic scale (see
+    /// `placement::measured_topo_scales`). Must be finite and positive;
+    /// values above 1.0 mean the policy added cross-node traffic.
+    pub fn with_inter_scale(mut self, scale: f64) -> Self {
+        assert!(scale.is_finite() && scale > 0.0, "scale must be finite and positive");
+        self.a2a_inter_scale = scale;
         self
     }
     /// Set the synchronous warmup step count.
@@ -660,6 +691,15 @@ mod tests {
         assert_eq!(none.placement, PlacementKind::Contiguous);
         assert_eq!(none.rebalance_every, 0);
         assert_eq!(none.a2a_cross_scale, 1.0);
+        // topology defaults flat (single node) with unit inter scale
+        assert_eq!(none.topology, Topology::flat());
+        assert_eq!(none.a2a_inter_scale, 1.0);
+        assert_eq!(DiceOptions::dice().topology, Topology::flat());
+        let topo = DiceOptions::dice()
+            .with_topology(Topology::multinode(4))
+            .with_inter_scale(0.25);
+        assert_eq!(topo.topology, Topology::multinode(4));
+        assert_eq!(topo.a2a_inter_scale, 0.25);
         assert_eq!(DiceOptions::dice().placement, PlacementKind::Contiguous);
         let on = DiceOptions::dice()
             .with_placement(PlacementKind::AffinityAware, 4)

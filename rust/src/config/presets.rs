@@ -84,6 +84,14 @@ pub struct HardwareProfile {
     pub a2a_bw: f64,
     /// Per-message latency, seconds (PCIe + NCCL launch overhead).
     pub msg_latency: f64,
+    /// Per-node inter-node NIC bandwidth, bytes/s — what cross-node
+    /// expert-parallel traffic streams through on a hierarchical
+    /// topology (`netsim::Topology`, DESIGN.md §13). Strictly below the
+    /// intra-node `a2a_bw` on every shipped profile.
+    pub nic_bw: f64,
+    /// Per-message latency across the inter-node path, seconds
+    /// (NIC + switch hop; strictly above `msg_latency`).
+    pub nic_latency: f64,
     /// Device memory, bytes (the OOM model).
     pub mem_bytes: usize,
     /// Per-collective fixed software overhead, seconds.
@@ -112,6 +120,10 @@ pub fn hardware_profile(name: &str) -> Result<HardwareProfile> {
             // bridge (~7.3 GB/s usable, calibrated to Table 5 shares).
             a2a_bw: 7.3e9,
             msg_latency: 30e-6,
+            // 25GbE-class NIC per node (consumer cluster): ~2.5 GB/s
+            // effective, well under the host bridge.
+            nic_bw: 2.5e9,
+            nic_latency: 120e-6,
             mem_bytes: 24 * (1 << 30),
             coll_overhead: 60e-6,
             sat_tokens: 256.0,
@@ -128,6 +140,9 @@ pub fn hardware_profile(name: &str) -> Result<HardwareProfile> {
             link_bw: 12.0e9,
             a2a_bw: 3.4e9,
             msg_latency: 35e-6,
+            // 10GbE-class NIC on the PCIe 3.0 platform.
+            nic_bw: 1.5e9,
+            nic_latency: 150e-6,
             mem_bytes: 20 * (1 << 30),
             coll_overhead: 70e-6,
             sat_tokens: 300.0,
@@ -140,6 +155,10 @@ pub fn hardware_profile(name: &str) -> Result<HardwareProfile> {
             link_bw: 200.0e9,
             a2a_bw: 500.0e9,
             msg_latency: 8e-6,
+            // 400Gb InfiniBand per node: fast, but still an order under
+            // NVLink — hierarchy matters even on the big boxes.
+            nic_bw: 50.0e9,
+            nic_latency: 15e-6,
             mem_bytes: 80 * (1 << 30),
             coll_overhead: 20e-6,
             sat_tokens: 256.0,
@@ -173,6 +192,18 @@ mod tests {
         assert!(a.mem_bytes > b.mem_bytes);
         let nv = hardware_profile("nvlink").unwrap();
         assert!(nv.a2a_bw > 10.0 * a.a2a_bw);
+    }
+
+    #[test]
+    fn nic_is_strictly_slower_than_intra_fabric() {
+        // the hierarchical cost model's monotonicity (more inter-node
+        // bytes never cheaper) rests on the NIC being the worse path
+        for n in ["rtx4090_pcie", "rtx3080_pcie", "nvlink"] {
+            let p = hardware_profile(n).unwrap();
+            assert!(p.nic_bw < p.a2a_bw, "{n}: nic {} vs a2a {}", p.nic_bw, p.a2a_bw);
+            assert!(p.nic_bw < p.link_bw, "{n}: nic {} vs link {}", p.nic_bw, p.link_bw);
+            assert!(p.nic_latency > p.msg_latency, "{n}");
+        }
     }
 
     #[test]

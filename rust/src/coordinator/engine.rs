@@ -106,6 +106,10 @@ pub struct RunStats {
     /// `netsim::CostModel::t_migrate` prices the f16 serving-scale
     /// equivalent in virtual time).
     pub migration_bytes: usize,
+    /// of `migrated_experts`, how many crossed a node boundary under
+    /// the run's topology (NIC-priced via
+    /// `netsim::CostModel::t_migrate_split`; zero on the flat default).
+    pub migrated_inter_node: usize,
 }
 
 impl RunStats {
@@ -263,7 +267,8 @@ impl<'a> Engine<'a> {
             m.n_experts,
             dvs,
             self.cfg.opts.rebalance_every,
-        );
+        )
+        .with_topology(self.cfg.opts.topology);
 
         let mut stats = RunStats {
             expert_loads: vec![0; m.n_experts],
@@ -548,6 +553,7 @@ impl<'a> Engine<'a> {
             if let Some(mig) = rebalancer.end_step(&placement) {
                 stats.rebalances += 1;
                 stats.migrated_experts += mig.moved_experts;
+                stats.migrated_inter_node += mig.moved_inter_node;
                 stats.migration_bytes += mig.moved_experts * m.expert_param_count() * 4;
                 placement = mig.placement;
             }

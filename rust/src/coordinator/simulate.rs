@@ -71,10 +71,19 @@ pub fn simulate(
     // cond-comm fresh fraction and the codec. DistriFusion's shard
     // exchange is placement-independent (sequence, not expert, sharding)
     // and is not scaled.
+    // Topology (DESIGN.md §13): the cost model splits each payload into
+    // intra-/inter-node components itself (`CostModel::t_a2a_with`);
+    // `opts.a2a_inter_scale` carries the placement's MEASURED node-
+    // crossing fraction into that split the same way `a2a_cross_scale`
+    // carries the device-crossing fraction. Both are 1.0 (exact
+    // identities) unless a measured placement installed them.
     let a2a_op = |frac: f64| {
         let frac = frac * opts.a2a_cross_scale;
-        cm.t_a2a(cm.a2a_wire_bytes(wl, opts.compress, frac), wl.devices)
-            + cm.t_codec(wl, opts.compress, frac)
+        cm.t_a2a_with(
+            cm.a2a_wire_bytes(wl, opts.compress, frac),
+            wl.devices,
+            opts.a2a_inter_scale,
+        ) + cm.t_codec(wl, opts.compress, frac)
     };
     let t_a2a_full = a2a_op(1.0);
     let t_a2a_cc = a2a_op(fresh_frac);
@@ -213,8 +222,11 @@ pub fn simulate(
                 let ch = cm.layer_costs(&half);
                 // same codec + placement pricing at the half-batch payload
                 let hs = opts.a2a_cross_scale;
-                let t_a2a_half = cm.t_a2a(cm.a2a_wire_bytes(&half, opts.compress, hs), wl.devices)
-                    + cm.t_codec(&half, opts.compress, hs);
+                let t_a2a_half = cm.t_a2a_with(
+                    cm.a2a_wire_bytes(&half, opts.compress, hs),
+                    wl.devices,
+                    opts.a2a_inter_scale,
+                ) + cm.t_codec(&half, opts.compress, hs);
                 for _ in 0..l {
                     let mut last_post = None;
                     for _half in 0..2 {
@@ -512,6 +524,43 @@ mod tests {
         let dfu = run(Strategy::DistriFusion, DiceOptions::none());
         let dfu_s = run(Strategy::DistriFusion, DiceOptions::none().with_cross_scale(0.5));
         assert_eq!(dfu.step_time, dfu_s.step_time);
+    }
+
+    #[test]
+    fn hierarchical_topology_slows_steps_and_inter_scale_recovers() {
+        use crate::netsim::Topology;
+        let (cm, wl) = setup();
+        let hier = cm.clone().with_topology(Topology::multinode(2));
+        for strategy in [Strategy::SyncEp, Strategy::Interweaved, Strategy::DistriFusion] {
+            let flat = simulate(&cm, &wl, strategy, &DiceOptions::none(), 6);
+            let multi = simulate(&hier, &wl, strategy, &DiceOptions::none(), 6);
+            assert!(
+                multi.step_time > flat.step_time,
+                "{strategy:?}: NIC hop must cost over the flat fabric"
+            );
+        }
+        // a measured node-crossing fraction < 1 claws time back...
+        let o = DiceOptions::none().with_topology(Topology::multinode(2));
+        let unit = simulate(&hier, &wl, Strategy::Interweaved, &o, 6);
+        let placed = simulate(
+            &hier,
+            &wl,
+            Strategy::Interweaved,
+            &o.with_inter_scale(0.25),
+            6,
+        );
+        assert!(placed.step_time < unit.step_time, "inter traffic cut must pay");
+        // ...and on the flat topology the knob is inert (bit-exact)
+        let base = simulate(&cm, &wl, Strategy::Interweaved, &DiceOptions::none(), 6);
+        let noop = simulate(
+            &cm,
+            &wl,
+            Strategy::Interweaved,
+            &DiceOptions::none().with_inter_scale(0.25),
+            6,
+        );
+        assert_eq!(base.step_time, noop.step_time);
+        assert_eq!(base.total_time, noop.total_time);
     }
 
     #[test]

@@ -11,6 +11,7 @@ pub mod scaling;
 pub mod schedules;
 pub mod similarity;
 pub mod synctune;
+pub mod topology;
 pub mod tradeoff;
 
 use std::path::{Path, PathBuf};

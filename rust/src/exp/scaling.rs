@@ -1,6 +1,8 @@
 //! Simulation-mode scaling experiments: Table 5 (a2a share), Figure 9
-//! (batch & image-size scaling on 8×4090), Figures 14/15 (8×3080) and
-//! the §3 motivation numbers (a2a seconds at 50 steps).
+//! (batch & image-size scaling on 8×4090), Figures 14/15 (8×3080), the
+//! §3 motivation numbers (a2a seconds at 50 steps), and the cross-node
+//! EP scale-out sweep (DESIGN.md §13) from one 8-GPU node to hundreds
+//! of devices across dozens of nodes per topology variant.
 
 use anyhow::Result;
 
@@ -9,7 +11,7 @@ use crate::config::{
     hardware_profile, model_preset, obj, CompressionCodec, DiceOptions, Json, Strategy,
 };
 use crate::coordinator::{memory_report, simulate, simulate_sweep, SweepCase};
-use crate::netsim::{CostModel, Workload};
+use crate::netsim::{CostModel, Topology, Workload};
 
 /// Table 5: all-to-all share of synchronous EP step time across
 /// {XL, G} × {4, 8} GPUs × batch {4, 8, 16, 32}.
@@ -235,7 +237,71 @@ pub fn scaling(model: &str, profile: &str, steps: usize) -> Result<(Vec<Table>, 
     }
     tables.push(t3);
 
+    // --- cross-node EP scale-out (DESIGN.md §13) ---
+    let (t4, xrows) = cross_node(model, profile, steps)?;
+    tables.push(t4);
+    if let Some(rows) = xrows.get("rows").and_then(Json::as_arr) {
+        json_rows.extend(rows.iter().cloned());
+    }
+
     Ok((tables, obj(vec![("rows", Json::Arr(json_rows))])))
+}
+
+/// Cross-node EP scale-out sweep: DICE per-step latency and a2a share
+/// from one 8-GPU node up to 256 devices across 32 nodes (auto node
+/// grouping packs 8 devices per node), for each topology variant. The
+/// flat row prices the (unrealistic) single host bridge at every scale
+/// — the gap to the multinode row is what the NIC hierarchy costs, the
+/// gap between multinode and rail/fattree rows is what the fabric
+/// variant buys or charges.
+pub fn cross_node(model: &str, profile: &str, steps: usize) -> Result<(Table, Json)> {
+    let hw = hardware_profile(profile)?;
+    let m = model_preset(model)?;
+    let device_counts = [8usize, 32, 128, 256];
+    let topos = [
+        Topology::flat(),
+        Topology::multinode(0), // auto: ceil(d/8) nodes
+        Topology::rail(0),
+        Topology::fattree(4.0, 0),
+    ];
+    let mut table = Table::new(
+        &format!(
+            "Cross-node EP scale-out — DICE on DiT-MoE-{} x {} ({} steps, step time / a2a share)",
+            model.to_uppercase(),
+            hw.name,
+            steps
+        ),
+        &["Topology", "d=8", "d=32 (4 nodes)", "d=128 (16)", "d=256 (32)"],
+    );
+    let mut rows = Vec::new();
+    for topo in topos {
+        let mut cells = vec![topo.name()];
+        for devices in device_counts {
+            let cm = CostModel::new(m.clone(), hw.clone()).with_topology(topo);
+            let wl = Workload {
+                local_batch: 1,
+                devices,
+                tokens: m.tokens(),
+            };
+            let opts = DiceOptions::dice().with_topology(topo);
+            let rep = simulate(&cm, &wl, Strategy::Interweaved, &opts, steps);
+            cells.push(format!(
+                "{} / {:.0}%",
+                fmt_secs(rep.step_time),
+                rep.a2a_share * 100.0
+            ));
+            rows.push(obj(vec![
+                ("kind", Json::Str("xnode".into())),
+                ("topology", Json::Str(topo.name())),
+                ("devices", Json::Num(devices as f64)),
+                ("nodes", Json::Num(topo.nodes_for(devices) as f64)),
+                ("step_s", Json::Num(rep.step_time)),
+                ("a2a_share", Json::Num(rep.a2a_share)),
+            ]));
+        }
+        table.row(cells);
+    }
+    Ok((table, obj(vec![("rows", Json::Arr(rows))])))
 }
 
 #[cfg(test)]
@@ -311,6 +377,42 @@ mod tests {
             lat("DICE + int8 residual") < lat("DICE"),
             "the bytes-on-the-wire axis must compound with DICE's staleness axis"
         );
+    }
+
+    #[test]
+    fn cross_node_sweep_orders_topologies() {
+        let (_, json) = cross_node("xl", "rtx4090_pcie", 2).unwrap();
+        let rows = json.get("rows").unwrap().as_arr().unwrap();
+        let step = |topo: &str, devices: f64| {
+            rows.iter()
+                .find(|r| {
+                    r.get("topology").map(|t| t.as_str()) == Some(Some(topo))
+                        && r.get("devices").and_then(|d| d.as_f64()) == Some(devices)
+                })
+                .unwrap()
+                .get("step_s")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        for d in [32.0, 128.0, 256.0] {
+            // a real NIC hierarchy costs over the idealized flat bridge
+            assert!(step("multinode", d) > step("flat", d), "d={d}");
+            // 4x oversubscription costs over the non-blocking fabric
+            assert!(step("fattree:4", d) >= step("multinode", d), "d={d}");
+            // rail striping never loses to the single-NIC funnel
+            assert!(step("rail", d) <= step("multinode", d), "d={d}");
+        }
+        // at 8 devices every hierarchy collapses to one node == flat
+        for topo in ["multinode", "rail", "fattree:4"] {
+            assert_eq!(step(topo, 8.0), step("flat", 8.0), "{topo}");
+        }
+        // the sweep really reaches dozens of nodes
+        let max_nodes = rows
+            .iter()
+            .map(|r| r.get("nodes").unwrap().as_f64().unwrap())
+            .fold(0.0f64, f64::max);
+        assert!(max_nodes >= 32.0, "{max_nodes}");
     }
 
     #[test]

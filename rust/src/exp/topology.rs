@@ -1,0 +1,292 @@
+//! Cross-node topology experiment (DESIGN.md §13): inter-node bytes,
+//! load imbalance and end-to-end step time of contiguous, node-blind
+//! affinity and node-aware affinity placement on the seeded multi-node
+//! skewed workload (`workload::node_skewed_probs` — hot experts
+//! concentrated on one node, with a decoy device that baits per-device
+//! placement). Artifact-free: routing is synthesized, byte splits come
+//! from real [`DispatchPlan`] accounting, prices from the G-scale
+//! analytic cost model on a 16-device / 4-node hierarchy.
+//!
+//! This is the topology subsystem's acceptance harness: it FAILS
+//! (rather than silently reporting) unless node-aware `AffinityAware`
+//! moves strictly fewer inter-node bytes AND models a strictly lower
+//! step time than both the contiguous baseline and the node-blind
+//! (flat-solved) affinity placement — and unless a 1-node topology
+//! reproduces the flat collective prices bit-exactly. `ci.sh` runs it
+//! on every build (`dice exp topology`).
+
+use anyhow::{ensure, Result};
+
+use crate::benchkit::{fmt_bytes, Table};
+use crate::config::{hardware_profile, model_preset, obj, Json, PlacementKind};
+use crate::moe::{DispatchPlan, Placement, RoutingTable};
+use crate::netsim::{CostModel, Topology, Workload, ELEM_BYTES};
+use crate::placement::Rebalancer;
+use crate::workload::node_skewed_probs;
+
+/// Aggregates of one placement mode's run over the shared workload.
+#[derive(Debug, Clone, Copy)]
+struct TopoRun {
+    /// intra-node crossing bytes per step (one all-to-all direction).
+    intra_bytes_per_step: f64,
+    /// inter-node (NIC-priced) crossing bytes per step.
+    inter_bytes_per_step: f64,
+    /// max / mean per-device expert-compute load over the run.
+    imbalance: f64,
+    /// mean a2a latency per collective (seconds, split-priced).
+    a2a_s: f64,
+    /// total migrated weight bytes (f16 serving precision).
+    migration_bytes: usize,
+    /// rebalances that changed the map.
+    rebalances: usize,
+    /// mean end-to-end step latency (seconds), migrations included.
+    step_s: f64,
+}
+
+/// Run one placement mode: the map is solved on `solve_topo` (flat for
+/// the node-blind row) but ALWAYS priced on the cost model's real
+/// topology — the experiment's whole point is what node-blindness
+/// costs when the bytes are priced on the hierarchy they travel.
+fn run_mode(
+    kind: PlacementKind,
+    solve_topo: Topology,
+    cm: &CostModel,
+    wl: &Workload,
+    n_tokens: usize,
+    steps: usize,
+    rebalance_every: usize,
+    seed: u64,
+) -> TopoRun {
+    let m = &cm.model;
+    let topo = cm.topo;
+    let devices = wl.devices;
+    let c = cm.layer_costs(wl);
+    let mut placement = Placement::new(m.n_experts, devices);
+    let mut rebalancer =
+        Rebalancer::new(kind, m.n_experts, devices, rebalance_every).with_topology(solve_topo);
+    let (mut sum_max, mut sum_mean) = (0.0f64, 0.0f64);
+    let (mut intra_total, mut inter_total) = (0usize, 0usize);
+    let mut a2a_total = 0.0f64;
+    let mut migration_bytes = 0usize;
+    let mut step_total = 0.0f64;
+    for step in 0..steps {
+        // the SAME trace for every mode: seeds depend only on the step
+        let probs =
+            node_skewed_probs(n_tokens, m.n_experts, devices, topo, seed.wrapping_add(step as u64));
+        let rt = RoutingTable::from_probs(&probs, m.top_k);
+        let plan = DispatchPlan::build(&rt, n_tokens / devices);
+
+        let (intra, inter) =
+            plan.cross_bytes_split(&placement, topo, m.d_model, ELEM_BYTES as usize);
+        intra_total += intra;
+        inter_total += inter;
+        let dl = plan.device_loads(&placement);
+        let max = *dl.iter().max().unwrap() as f64;
+        let mean = dl.iter().sum::<usize>() as f64 / devices as f64;
+        sum_max += max;
+        sum_mean += mean;
+
+        // end-to-end step price: every layer pays its compute (expert
+        // time stretched by the realized imbalance) and two split-priced
+        // all-to-alls; migrations pay their own fabric split below.
+        let t_a2a = cm.t_a2a_split(intra as f64, inter as f64, devices);
+        a2a_total += t_a2a;
+        let imb = if mean > 0.0 { max / mean } else { 1.0 };
+        let mut t_step = m.n_layers as f64 * (c.t_pre + c.t_expert * imb + c.t_post + 2.0 * t_a2a);
+
+        rebalancer.observe(&rt, n_tokens / devices);
+        if let Some(mig) = rebalancer.end_step(&placement) {
+            // price the move on the REAL topology even when the map was
+            // solved node-blind (the weights still cross real NICs)
+            let (mv_intra, mv_inter) = mig.placement.moved_split(&placement, topo);
+            migration_bytes += mig.moved_experts * m.expert_param_bytes();
+            t_step += cm.t_migrate_split(mv_intra, mv_inter);
+            placement = mig.placement;
+        }
+        step_total += t_step;
+    }
+    TopoRun {
+        intra_bytes_per_step: intra_total as f64 / steps as f64,
+        inter_bytes_per_step: inter_total as f64 / steps as f64,
+        imbalance: sum_max / sum_mean,
+        a2a_s: a2a_total / steps as f64,
+        migration_bytes,
+        rebalances: rebalancer.rebalances(),
+        step_s: step_total / steps as f64,
+    }
+}
+
+/// The topology experiment: contiguous vs node-blind affinity vs
+/// node-aware affinity on a 16-device / 4-node hierarchy (DiT-MoE-G
+/// widened to 32 experts so every device owns two and a map has real
+/// freedom). Fails unless node-awareness pays on both inter-node bytes
+/// and step time, and unless the 1-node degenerate case is bit-exact.
+pub fn report(
+    n_tokens: usize,
+    steps: usize,
+    rebalance_every: usize,
+    seed: u64,
+) -> Result<(Table, Json)> {
+    let devices = 16usize;
+    let topo = Topology::multinode(4);
+    let mut model = model_preset("g")?;
+    model.n_experts = 32; // two experts per device on 16 devices
+    let cm = CostModel::new(model, hardware_profile("rtx4090_pcie")?).with_topology(topo);
+    ensure!(
+        rebalance_every >= 1 && steps >= 2 * rebalance_every,
+        "need at least two rebalance intervals (steps {steps}, every {rebalance_every})"
+    );
+    let n_tokens = n_tokens.div_ceil(devices) * devices;
+    ensure!(n_tokens >= 64 * devices, "need a statistically meaningful token count");
+    let wl = Workload {
+        local_batch: 1,
+        devices,
+        tokens: n_tokens / devices,
+    };
+
+    let modes: [(&str, PlacementKind, Topology); 3] = [
+        ("contiguous", PlacementKind::Contiguous, topo),
+        ("affinity_flat", PlacementKind::AffinityAware, Topology::flat()),
+        ("affinity_topo", PlacementKind::AffinityAware, topo),
+    ];
+    let runs: Vec<TopoRun> = modes
+        .iter()
+        .map(|&(_, kind, solve)| {
+            run_mode(kind, solve, &cm, &wl, n_tokens, steps, rebalance_every, seed)
+        })
+        .collect();
+
+    let nodes = topo.nodes_for(devices);
+    let mut table = Table::new(
+        &format!(
+            "Topology-aware placement — node-skewed routing, DiT-MoE-G/32e on \
+             16×4090 over {nodes} nodes ({n_tokens} tokens, {steps} steps, \
+             rebalance every {rebalance_every})"
+        ),
+        &["Mode", "inter bytes/step", "intra bytes/step", "load max/mean", "a2a/step", "migrated", "step time"],
+    );
+    let mut rows = Vec::new();
+    for ((name, _, _), r) in modes.iter().zip(&runs) {
+        table.row(vec![
+            name.to_string(),
+            fmt_bytes(r.inter_bytes_per_step as usize),
+            fmt_bytes(r.intra_bytes_per_step as usize),
+            format!("{:.2}", r.imbalance),
+            format!("{:.2} ms", r.a2a_s * 1e3),
+            format!("{} ({}x)", fmt_bytes(r.migration_bytes), r.rebalances),
+            format!("{:.1} ms", r.step_s * 1e3),
+        ]);
+        rows.push(obj(vec![
+            ("mode", Json::Str((*name).into())),
+            ("inter_bytes_per_step", Json::Num(r.inter_bytes_per_step)),
+            ("intra_bytes_per_step", Json::Num(r.intra_bytes_per_step)),
+            ("imbalance", Json::Num(r.imbalance)),
+            ("a2a_s", Json::Num(r.a2a_s)),
+            ("migration_bytes", Json::Num(r.migration_bytes as f64)),
+            ("rebalances", Json::Num(r.rebalances as f64)),
+            ("step_s", Json::Num(r.step_s)),
+        ]));
+    }
+
+    // acceptance properties (the ci.sh topology gate)
+    let (contig, blind, aware) = (runs[0], runs[1], runs[2]);
+    ensure!(
+        aware.inter_bytes_per_step < blind.inter_bytes_per_step,
+        "node-aware affinity must move strictly fewer inter-node bytes than \
+         node-blind affinity ({} vs {})",
+        aware.inter_bytes_per_step,
+        blind.inter_bytes_per_step
+    );
+    ensure!(
+        aware.inter_bytes_per_step < contig.inter_bytes_per_step,
+        "node-aware affinity must move strictly fewer inter-node bytes than \
+         contiguous ({} vs {})",
+        aware.inter_bytes_per_step,
+        contig.inter_bytes_per_step
+    );
+    ensure!(
+        aware.step_s < blind.step_s && aware.step_s < contig.step_s,
+        "node-aware affinity must model a strictly lower step time \
+         (aware {} vs blind {} / contiguous {})",
+        aware.step_s,
+        blind.step_s,
+        contig.step_s
+    );
+    ensure!(
+        aware.rebalances > 0 && aware.migration_bytes > 0,
+        "the node-aware run must actually rebalance (and pay for it)"
+    );
+    // the degenerate case: one node reproduces flat prices bit-exactly
+    let flat_cm = CostModel::new(cm.model.clone(), cm.hw.clone());
+    let one_node = flat_cm.clone().with_topology(Topology::multinode(1));
+    let probe_bytes = contig.inter_bytes_per_step + contig.intra_bytes_per_step;
+    for d in [1usize, devices] {
+        ensure!(
+            one_node.t_a2a(probe_bytes, d) == flat_cm.t_a2a(probe_bytes, d),
+            "1-node topology must reproduce flat a2a prices bit-exactly at {d} devices"
+        );
+    }
+
+    let json = obj(vec![
+        ("n_tokens", Json::Num(n_tokens as f64)),
+        ("steps", Json::Num(steps as f64)),
+        ("rebalance_every", Json::Num(rebalance_every as f64)),
+        ("devices", Json::Num(devices as f64)),
+        ("nodes", Json::Num(nodes as f64)),
+        ("topology", Json::Str(topo.name())),
+        ("one_node_bit_exact", Json::Bool(true)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    Ok((table, json))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row<'a>(json: &'a Json, mode: &str) -> &'a Json {
+        json.get("rows")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .find(|r| r.get("mode").map(|p| p.as_str()) == Some(Some(mode)))
+            .unwrap()
+    }
+
+    fn num(j: &Json, k: &str) -> f64 {
+        j.get(k).unwrap().as_f64().unwrap()
+    }
+
+    #[test]
+    fn topology_gate_holds() {
+        let (_, json) = report(1024, 8, 2, 0xD1CE).unwrap();
+        let (c, b, a) = (
+            row(&json, "contiguous"),
+            row(&json, "affinity_flat"),
+            row(&json, "affinity_topo"),
+        );
+        // the acceptance criteria, re-checked on the JSON payload
+        assert!(num(a, "inter_bytes_per_step") < num(b, "inter_bytes_per_step"));
+        assert!(num(a, "inter_bytes_per_step") < num(c, "inter_bytes_per_step"));
+        assert!(num(a, "step_s") < num(c, "step_s"));
+        assert!(num(a, "step_s") < num(b, "step_s"));
+        // migration is priced on every adaptive row; contiguous never moves
+        assert_eq!(num(c, "migration_bytes"), 0.0);
+        assert!(num(a, "migration_bytes") > 0.0);
+    }
+
+    #[test]
+    fn report_is_deterministic() {
+        let (ta, a) = report(1024, 8, 2, 7).unwrap();
+        let (tb, b) = report(1024, 8, 2, 7).unwrap();
+        assert_eq!(a.to_string(), b.to_string());
+        assert_eq!(ta.render(), tb.render());
+    }
+
+    #[test]
+    fn report_rejects_degenerate_input() {
+        assert!(report(1024, 2, 4, 1).is_err(), "fewer than two intervals");
+        assert!(report(8, 8, 2, 1).is_err(), "too few tokens");
+    }
+}

@@ -11,7 +11,7 @@
 //!   exp <name> [...]           run an experiment driver (table1, table2,
 //!                              table3, table4, table5, fig2, fig4, fig9,
 //!                              fig10, fig14, motivation, compress,
-//!                              placement, pipeline, synctune)
+//!                              placement, pipeline, synctune, topology)
 
 use anyhow::{bail, Result};
 
@@ -20,7 +20,7 @@ use dice::config::{CompressionCodec, CondCommSelector, PlacementKind};
 use dice::config::{hardware_profile, model_preset, DiceOptions, SelectiveSync, Strategy};
 use dice::coordinator::{simulate, Engine, EngineConfig, SyncTuner};
 use dice::exp::{self, Ctx};
-use dice::netsim::{CostModel, Workload};
+use dice::netsim::{CostModel, Topology, Workload};
 use dice::server::{serve_sim, serve_with, AdmissionPolicy, BatchPolicy, EngineExecutor, ServeConfig};
 use dice::workload::{scenarios, Scenario};
 
@@ -44,6 +44,8 @@ fn usage() -> String {
          \x20                              (artifact-free; --layers N)\n\
          dice exp      synctune            measured selective-sync tuner vs the\n\
          \x20                              deep/shallow heuristics (artifact-free)\n\
+         dice exp      topology            hierarchical multi-node placement\n\
+         \x20                              acceptance harness (artifact-free)\n\
          \n\
          global: --threads N      worker-pool width for the execution runtime\n\
          \x20       (default: PAR_THREADS env, else all cores; output is\n\
@@ -54,6 +56,10 @@ fn usage() -> String {
          \x20       --sync-layers {{none|deep|shallow|staggered|auto|<mask>}}\n\
          \x20       layer-sync policy (alias: --selective); masks are 0x2a hex,\n\
          \x20       0b101010 binary or decimal; `auto` runs the synctune probes\n\
+         \x20       --topology {{flat|multinode[:<nodes>]|rail[:<nodes>]|fattree:<o>[:<nodes>]}}\n\
+         \x20       device interconnect hierarchy (DESIGN.md \u{a7}13): nodes of\n\
+         \x20       NVLink/PCIe-class devices joined by NIC-class links; prices\n\
+         \x20       inter-node bytes separately and makes placement node-aware\n\
          \n\
          serve scenarios:\n{}",
         scenarios::catalog()
@@ -104,15 +110,19 @@ fn opts_from(a: &Args, selective_sync: SelectiveSync) -> Result<DiceOptions> {
         placement,
         rebalance_every: a.usize_or("rebalance-every", rebalance_default),
         a2a_cross_scale: 1.0,
+        topology: Topology::parse(&a.str_or("topology", "flat"))?,
+        a2a_inter_scale: 1.0,
     })
 }
 
-/// Fill in the analytic crossing-traffic scale for the chosen placement
-/// policy (DESIGN.md §9): virtual-time paths (`sim`, `serve`) price the
-/// policy's measured crossing fraction on the seeded skewed workload.
-/// A policy that never engages (`--rebalance-every 0` forces a static
-/// contiguous start) is priced as contiguous — the pricing must not
-/// claim savings the engine would not realize.
+/// Fill in the analytic crossing-traffic scales for the chosen
+/// placement policy (DESIGN.md §9/§13): virtual-time paths (`sim`,
+/// `serve`) price the policy's measured crossing fraction on the seeded
+/// skewed workload — and, on a hierarchical `--topology`, its measured
+/// node-crossing fraction on the multi-node sibling. A policy that
+/// never engages (`--rebalance-every 0` forces a static contiguous
+/// start) is priced as contiguous — the pricing must not claim savings
+/// the engine would not realize.
 fn with_measured_placement(
     opts: DiceOptions,
     model: &dice::config::ModelConfig,
@@ -122,14 +132,15 @@ fn with_measured_placement(
     if opts.placement == PlacementKind::Contiguous || opts.rebalance_every == 0 {
         return opts;
     }
-    let scale = dice::placement::measured_cross_scale(
+    let (cross, inter) = dice::placement::measured_topo_scales(
         opts.placement,
         model.n_experts,
         devices,
+        opts.topology,
         model.top_k,
         seed,
     );
-    opts.with_cross_scale(scale.max(1e-3))
+    opts.with_cross_scale(cross.max(1e-3)).with_inter_scale(inter.max(1e-3))
 }
 
 fn main() -> Result<()> {
@@ -202,7 +213,8 @@ fn main() -> Result<()> {
             let cm = CostModel::new(
                 model_preset(&a.str_or("model", "xl"))?,
                 hardware_profile(&a.str_or("hw", "rtx4090_pcie"))?,
-            );
+            )
+            .with_topology(Topology::parse(&a.str_or("topology", "flat"))?);
             let policy = BatchPolicy {
                 max_global: a.usize_or("max-batch", 32),
                 max_wait: a.f64_or("max-wait", 3.0),
@@ -251,7 +263,8 @@ fn main() -> Result<()> {
         "sim" => {
             let model = model_preset(&a.str_or("model", "xl"))?;
             let hw = hardware_profile(&a.str_or("hw", "rtx4090_pcie"))?;
-            let cm = CostModel::new(model.clone(), hw);
+            let cm = CostModel::new(model.clone(), hw)
+                .with_topology(Topology::parse(&a.str_or("topology", "flat"))?);
             let wl = Workload {
                 local_batch: a.usize_or("batch", 16),
                 devices: a.usize_or("devices", 8),
@@ -355,6 +368,16 @@ fn main() -> Result<()> {
                     )?;
                     t.print();
                     exp::write_results("pipeline_overlap", &t.render(), &j)?;
+                }
+                "topology" => {
+                    let (t, j) = exp::topology::report(
+                        a.usize_or("tokens", 1024),
+                        a.usize_or("steps", 8),
+                        a.usize_or("rebalance-every", 2),
+                        a.u64_or("seed", 0xD1CE),
+                    )?;
+                    t.print();
+                    exp::write_results("topology_placement", &t.render(), &j)?;
                 }
                 "synctune" => {
                     let (t, j) = exp::synctune::report(

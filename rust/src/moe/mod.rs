@@ -7,6 +7,7 @@ pub mod host;
 
 use std::cell::Cell;
 
+use crate::netsim::Topology;
 use crate::tensor::{ops, Tensor};
 
 /// Expert→device placement: an arbitrary owner map over the routed
@@ -132,6 +133,27 @@ impl Placement {
             .filter(|(a, b)| a != b)
             .count()
     }
+
+    /// [`Placement::moved_from`] split by node boundary under `topo`:
+    /// `(intra_node_moves, inter_node_moves)`. Cross-node moves travel
+    /// the NIC path (`netsim::CostModel::t_migrate_split` prices them
+    /// strictly above intra-node moves on every shipped profile).
+    pub fn moved_split(&self, other: &Placement, topo: Topology) -> (usize, usize) {
+        assert_eq!(self.n_experts, other.n_experts, "placement shape mismatch");
+        assert_eq!(self.devices, other.devices, "placement device mismatch");
+        let (mut intra, mut inter) = (0usize, 0usize);
+        for (&a, &b) in self.owner.iter().zip(&other.owner) {
+            if a == b {
+                continue;
+            }
+            if topo.node_of(a, self.devices) == topo.node_of(b, self.devices) {
+                intra += 1;
+            } else {
+                inter += 1;
+            }
+        }
+        (intra, inter)
+    }
 }
 
 /// Top-k routing decisions for a flat token range.
@@ -226,6 +248,11 @@ pub struct DispatchEntry {
 /// (DESIGN.md §9).
 type CrossKey = (u64, usize, usize);
 
+/// Memo key for [`DispatchPlan::cross_bytes_split`]: the cross key plus
+/// the topology key, since the intra/inter split depends on the node
+/// grouping as well as the owner map.
+type SplitKey = (u64, u64, usize, usize);
+
 /// A dispatch plan groups entries per expert (the all-to-all payload).
 ///
 /// Plans are immutable after [`DispatchPlan::build`]; the
@@ -236,6 +263,8 @@ pub struct DispatchPlan {
     pub per_expert: Vec<Vec<DispatchEntry>>,
     /// Last (placement, dims) → crossing-bytes answer.
     cross_memo: Cell<Option<(CrossKey, usize)>>,
+    /// Last (placement, topology, dims) → (intra, inter) bytes answer.
+    split_memo: Cell<Option<(SplitKey, (usize, usize))>>,
 }
 
 impl DispatchPlan {
@@ -264,6 +293,7 @@ impl DispatchPlan {
         DispatchPlan {
             per_expert,
             cross_memo: Cell::new(None),
+            split_memo: Cell::new(None),
         }
     }
 
@@ -299,6 +329,47 @@ impl DispatchPlan {
         let bytes = n * d_model * elem_bytes;
         self.cross_memo.set(Some((key, bytes)));
         bytes
+    }
+
+    /// [`DispatchPlan::cross_bytes`] split by node boundary under
+    /// `topo`: `(intra_node_bytes, inter_node_bytes)`. A crossing entry
+    /// whose source device and owning device share a node is intra-node
+    /// traffic (host-bridge fabric); the rest crosses the NIC. The two
+    /// components always sum to `cross_bytes` for the same placement and
+    /// dims. Memoized like `cross_bytes`, additionally keyed on the
+    /// topology ([`Topology::key`]).
+    pub fn cross_bytes_split(
+        &self,
+        placement: &Placement,
+        topo: Topology,
+        d_model: usize,
+        elem_bytes: usize,
+    ) -> (usize, usize) {
+        let key = (placement.fingerprint(), topo.key(), d_model, elem_bytes);
+        if let Some((k, v)) = self.split_memo.get() {
+            if k == key {
+                return v;
+            }
+        }
+        let devices = placement.devices;
+        let (mut intra, mut inter) = (0usize, 0usize);
+        for (e, entries) in self.per_expert.iter().enumerate() {
+            let owner = placement.owner(e);
+            let owner_node = topo.node_of(owner, devices);
+            for en in entries {
+                if en.src_device == owner {
+                    continue;
+                }
+                if topo.node_of(en.src_device, devices) == owner_node {
+                    intra += 1;
+                } else {
+                    inter += 1;
+                }
+            }
+        }
+        let v = (intra * d_model * elem_bytes, inter * d_model * elem_bytes);
+        self.split_memo.set(Some((key, v)));
+        v
     }
 
     /// Per-expert token loads (imbalance diagnostics; `exp placement`
@@ -497,6 +568,62 @@ mod tests {
         for entries in &plan.per_expert {
             assert!(entries.capacity() == entries.len() || entries.is_empty());
         }
+    }
+
+    #[test]
+    fn cross_bytes_split_sums_and_memoizes() {
+        use crate::netsim::Topology;
+        // 8 tokens over 4 devices (2 nodes of 2), 4 experts contiguous
+        forall(24, 0x70B0, |g: &mut Gen| {
+            let e = 4;
+            let k = g.usize_in(1..3);
+            let mut data = Vec::new();
+            for _ in 0..8 {
+                data.extend(g.prob_row(e));
+            }
+            let probs = Tensor::from_vec(&[8, e], data);
+            let rt = RoutingTable::from_probs(&probs, k);
+            let plan = DispatchPlan::build(&rt, 2);
+            let p = Placement::new(e, 4);
+            let topo = Topology::multinode(2);
+            let (intra, inter) = plan.cross_bytes_split(&p, topo, 16, 2);
+            assert_eq!(intra + inter, plan.cross_bytes(&p, 16, 2), "split must sum");
+            assert_eq!(plan.cross_bytes_split(&p, topo, 16, 2), (intra, inter), "memo hit");
+            // flat topology: every crossing byte is intra-node
+            let (fi, fx) = plan.cross_bytes_split(&p, Topology::flat(), 16, 2);
+            assert_eq!(fx, 0);
+            assert_eq!(fi, plan.cross_bytes(&p, 16, 2));
+            // memo keyed on topology: the multinode answer is not stale
+            assert_eq!(plan.cross_bytes_split(&p, topo, 16, 2), (intra, inter));
+        });
+    }
+
+    #[test]
+    fn cross_bytes_split_classifies_by_node() {
+        use crate::netsim::Topology;
+        // tokens 0..4 on devices 0..4 (1 each); all route to expert 0
+        let probs = probs_of(vec![vec![1.0, 0.0, 0.0, 0.0]; 4]);
+        let rt = RoutingTable::from_probs(&probs, 1);
+        let plan = DispatchPlan::build(&rt, 1);
+        let p = Placement::new(4, 4); // expert 0 on device 0
+        let topo = Topology::multinode(2); // nodes {0,1} and {2,3}
+        // dev1 → dev0 crosses intra-node; dev2, dev3 → dev0 cross the NIC
+        let (intra, inter) = plan.cross_bytes_split(&p, topo, 10, 2);
+        assert_eq!(intra, 10 * 2);
+        assert_eq!(inter, 2 * 10 * 2);
+    }
+
+    #[test]
+    fn moved_split_classifies_by_node() {
+        use crate::netsim::Topology;
+        let topo = Topology::multinode(2); // 4 devices: nodes {0,1},{2,3}
+        let from = Placement::new(4, 4); // e_i → d_i
+        // e0: 0→1 intra; e2: 2→3 intra; e1: 1→2 inter; e3 stays
+        let to = Placement::from_owner(4, vec![1, 2, 3, 3]);
+        assert_eq!(to.moved_split(&from, topo), (2, 1));
+        assert_eq!(to.moved_from(&from), 3);
+        // flat topology: every move is intra-node
+        assert_eq!(to.moved_split(&from, Topology::flat()), (3, 0));
     }
 
     #[test]

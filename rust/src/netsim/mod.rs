@@ -8,8 +8,12 @@
 //! (latency & memory scaling) and the OOM behaviour of DistriFusion.
 //! Absolute seconds are calibrated, ratios are the claim.
 
+pub mod topology;
+
 use crate::compress;
 use crate::config::{CompressionCodec, HardwareProfile, ModelConfig};
+
+pub use topology::{Topology, TopologyKind};
 
 /// Serving precision assumed by the cost model (bytes per element).
 pub const ELEM_BYTES: f64 = 2.0;
@@ -82,12 +86,42 @@ pub struct CostModel {
     pub model: ModelConfig,
     /// Hardware profile the costs are calibrated to.
     pub hw: HardwareProfile,
+    /// Interconnect topology the collectives are priced over (flat by
+    /// default — the degenerate single-node case, bit-identical to the
+    /// pre-hierarchical model).
+    pub topo: Topology,
 }
 
 impl CostModel {
-    /// Bind a model architecture to a hardware profile.
+    /// Bind a model architecture to a hardware profile (flat topology).
     pub fn new(model: ModelConfig, hw: HardwareProfile) -> CostModel {
-        CostModel { model, hw }
+        CostModel {
+            model,
+            hw,
+            topo: Topology::flat(),
+        }
+    }
+
+    /// Price over a hierarchical topology instead of the flat default
+    /// (DESIGN.md §13).
+    pub fn with_topology(mut self, topo: Topology) -> CostModel {
+        self.topo = topo;
+        self
+    }
+
+    /// True when `devices` under this model's topology actually splits
+    /// into nodes with a *distinct* inter-node path: more than one
+    /// effective node AND either a rail fabric, oversubscription, or a
+    /// NIC that differs from the intra-node fabric. Uniform hierarchies
+    /// (NIC == intra bandwidth/latency, no oversubscription, no rails)
+    /// are priced by the flat formula so they collapse to it bit-exactly
+    /// instead of merely approximately (float re-association).
+    fn hierarchical(&self, devices: usize) -> bool {
+        !self.topo.is_flat(devices)
+            && (self.topo.kind == TopologyKind::Rail
+                || self.topo.oversub != 1.0
+                || self.hw.nic_bw != self.hw.a2a_bw
+                || self.hw.nic_latency != self.hw.msg_latency)
     }
 
     /// FLOPs of the attention half of a block for `n` tokens
@@ -166,30 +200,97 @@ impl CostModel {
         0.5 * self.hw.coll_overhead + raw / self.hw.codec_bw
     }
 
-    /// All-to-all latency for `bytes` per device: all traffic funnels
-    /// through the PCIe host bridge, so effective per-device bandwidth is
-    /// `a2a_bw / devices` (this is what makes 8-GPU shares exceed 4-GPU
-    /// shares in Table 5).
+    /// All-to-all latency for `bytes` per device. On the flat topology
+    /// all traffic funnels through the PCIe host bridge, so effective
+    /// per-device bandwidth is `a2a_bw / devices` (this is what makes
+    /// 8-GPU shares exceed 4-GPU shares in Table 5). On a hierarchical
+    /// topology the payload splits into intra- and inter-node components
+    /// at the balanced-routing node-crossing fraction
+    /// ([`Topology::inter_frac`]) and each component is priced on its
+    /// own fabric ([`CostModel::t_a2a_split`]). `devices == 0` is a
+    /// degenerate no-op collective: zero cost, no launch.
     pub fn t_a2a(&self, bytes: f64, devices: usize) -> f64 {
-        self.hw.coll_overhead
-            + self.hw.msg_latency * (devices - 1) as f64
-            + bytes * devices as f64 / self.hw.a2a_bw
+        self.t_a2a_with(bytes, devices, 1.0)
     }
 
-    /// Point-to-point transfer latency.
+    /// [`CostModel::t_a2a`] with the inter-node byte share scaled by
+    /// `inter_scale` — how a topology-aware placement's MEASURED
+    /// node-crossing fraction (relative to the contiguous baseline)
+    /// enters the virtual-time schedules (`DiceOptions::a2a_inter_scale`,
+    /// the node-level analogue of `a2a_cross_scale`). `inter_scale = 1`
+    /// is exactly `t_a2a`.
+    pub fn t_a2a_with(&self, bytes: f64, devices: usize, inter_scale: f64) -> f64 {
+        if devices == 0 {
+            return 0.0;
+        }
+        if !self.hierarchical(devices) {
+            return self.hw.coll_overhead
+                + self.hw.msg_latency * (devices - 1) as f64
+                + bytes * devices as f64 / self.hw.a2a_bw;
+        }
+        let inter = (bytes * self.topo.inter_frac(devices) * inter_scale).min(bytes);
+        self.t_a2a_split(bytes - inter, inter, devices)
+    }
+
+    /// All-to-all latency from an explicit intra-/inter-node payload
+    /// split (bytes per device). The intra component funnels through the
+    /// host bridge exactly as the flat model; the inter component pays
+    /// NIC latency per remote peer and streams through the NIC at
+    /// `nic_bw / oversub` — striped across `node_size` parallel rails on
+    /// the rail-optimized topology.
+    pub fn t_a2a_split(&self, intra_bytes: f64, inter_bytes: f64, devices: usize) -> f64 {
+        if devices == 0 {
+            return 0.0;
+        }
+        let size0 = self.topo.max_node_size(devices);
+        let rails = if self.topo.kind == TopologyKind::Rail {
+            size0 as f64
+        } else {
+            1.0
+        };
+        self.hw.coll_overhead
+            + self.hw.msg_latency * (size0 - 1) as f64
+            + self.hw.nic_latency * (devices - size0) as f64
+            + intra_bytes * devices as f64 / self.hw.a2a_bw
+            + inter_bytes * devices as f64 * self.topo.oversub / (self.hw.nic_bw * rails)
+    }
+
+    /// Point-to-point transfer latency (intra-node fabric).
     pub fn t_p2p(&self, bytes: f64) -> f64 {
         self.hw.msg_latency + bytes / self.hw.link_bw
+    }
+
+    /// Point-to-point transfer latency across the inter-node path: NIC
+    /// message latency, NIC bandwidth, oversubscription applied.
+    pub fn t_p2p_inter(&self, bytes: f64) -> f64 {
+        self.hw.nic_latency + bytes * self.topo.oversub / self.hw.nic_bw
     }
 
     /// Placement-rebalance migration latency (DESIGN.md §9): the moved
     /// experts' weights travel point-to-point between the old and new
     /// owner at f16 serving precision, as one bulk transfer. Zero moves
-    /// cost zero (no α term — nothing is launched).
+    /// cost zero (no α term — nothing is launched). All moves are priced
+    /// intra-node; topology-aware callers that know the node-crossing
+    /// split use [`CostModel::t_migrate_split`] instead.
     pub fn t_migrate(&self, moved_experts: usize) -> f64 {
-        if moved_experts == 0 {
-            return 0.0;
+        self.t_migrate_split(moved_experts, 0)
+    }
+
+    /// Migration latency with the moves split into intra-node and
+    /// cross-node counts ([`crate::moe::Placement::moved_split`]): the
+    /// intra bulk goes over the local fabric, the cross-node bulk over
+    /// the NIC — strictly slower per expert on every shipped profile,
+    /// which is what makes the rebalancer prefer intra-node swaps.
+    pub fn t_migrate_split(&self, intra_moves: usize, inter_moves: usize) -> f64 {
+        let eb = self.model.expert_param_bytes() as f64;
+        let mut t = 0.0;
+        if intra_moves > 0 {
+            t += self.t_p2p(intra_moves as f64 * eb);
         }
-        self.t_p2p(moved_experts as f64 * self.model.expert_param_bytes() as f64)
+        if inter_moves > 0 {
+            t += self.t_p2p_inter(inter_moves as f64 * eb);
+        }
+        t
     }
 
     /// All-to-all latency priced from a MEASURED engine dispatch plan
@@ -207,11 +308,20 @@ impl CostModel {
     /// routing with a `(D-1)/D` crossing fraction; placement policies
     /// feed their measured fraction into the virtual-time schedules via
     /// `DiceOptions::a2a_cross_scale` instead (DESIGN.md §9).
+    /// On a hierarchical topology the crossing bytes come split by node
+    /// boundary ([`crate::moe::DispatchPlan::cross_bytes_split`]) and
+    /// each component is priced on its own fabric; the flat path is
+    /// untouched (bit-identical).
     pub fn t_a2a_measured(
         &self,
         plan: &crate::moe::DispatchPlan,
         placement: &crate::moe::Placement,
     ) -> f64 {
+        if self.hierarchical(placement.devices) {
+            let (intra, inter) =
+                plan.cross_bytes_split(placement, self.topo, self.model.d_model, ELEM_BYTES as usize);
+            return self.t_a2a_split(intra as f64, inter as f64, placement.devices);
+        }
         let bytes = plan.cross_bytes(placement, self.model.d_model, ELEM_BYTES as usize) as f64;
         self.t_a2a(bytes, placement.devices)
     }
@@ -436,6 +546,162 @@ mod tests {
         // 50-step run's all-to-all time, or rebalancing could never pay
         let c = cm.layer_costs(&wl);
         assert!(four < 2.0 * c.t_a2a * cm.model.n_layers as f64 * 50.0);
+    }
+
+    #[test]
+    fn zero_devices_collective_is_free() {
+        // the (devices - 1) α term used to underflow at devices == 0;
+        // a no-op collective costs nothing and launches nothing.
+        let (cm, _) = xl8(8);
+        assert_eq!(cm.t_a2a(1.0e6, 0), 0.0);
+        assert_eq!(cm.t_a2a_with(1.0e6, 0, 1.0), 0.0);
+        assert_eq!(cm.t_a2a_split(1.0e6, 1.0e6, 0), 0.0);
+        let hier = cm.clone().with_topology(Topology::multinode(4));
+        assert_eq!(hier.t_a2a(1.0e6, 0), 0.0);
+    }
+
+    #[test]
+    fn uniform_hierarchy_collapses_to_flat_bit_exact() {
+        // property (a): when the inter-node path is indistinguishable
+        // from the intra-node fabric (same bandwidth, same latency, no
+        // oversubscription), hierarchical pricing IS the flat price —
+        // bit-exact, not approximately (the split path is not taken).
+        let (flat, _) = xl8(8);
+        let mut hw = flat.hw.clone();
+        hw.nic_bw = hw.a2a_bw;
+        hw.nic_latency = hw.msg_latency;
+        let uniform = CostModel::new(flat.model.clone(), hw)
+            .with_topology(Topology::multinode(4));
+        for devices in [1usize, 2, 3, 8, 64] {
+            for bytes in [0.0, 1.0, 1.7e6, 3.3e9] {
+                assert_eq!(
+                    uniform.t_a2a(bytes, devices),
+                    flat.t_a2a(bytes, devices),
+                    "devices {devices} bytes {bytes}"
+                );
+            }
+        }
+        // fattree:1.0 with a uniform NIC is equally degenerate
+        let ft = CostModel::new(uniform.model.clone(), uniform.hw.clone())
+            .with_topology(Topology::fattree(1.0, 4));
+        assert_eq!(ft.t_a2a(2.0e6, 16), flat.t_a2a(2.0e6, 16));
+    }
+
+    #[test]
+    fn one_node_topology_prices_flat_bit_exact() {
+        // the acceptance gate's degenerate case: one node == flat, even
+        // with a real (slower) NIC configured in the profile.
+        let (flat, _) = xl8(8);
+        let one = flat.clone().with_topology(Topology::multinode(1));
+        for devices in [1usize, 2, 8, 128] {
+            for bytes in [0.0, 512.0, 4.2e6] {
+                assert_eq!(one.t_a2a(bytes, devices), flat.t_a2a(bytes, devices));
+            }
+        }
+        // ...and any topology collapses when the devices fit one node
+        let mn = flat.clone().with_topology(Topology::multinode(0));
+        for devices in [1usize, 2, 8] {
+            // auto nodes = ceil(d/8): one node up to 8 devices
+            assert_eq!(mn.t_a2a(1.0e6, devices), flat.t_a2a(1.0e6, devices));
+        }
+    }
+
+    #[test]
+    fn a2a_monotone_in_oversubscription() {
+        // property (b), first half: a fatter oversubscription factor
+        // never makes the collective cheaper.
+        let (flat, _) = xl8(8);
+        let bytes = 2.5e6;
+        let mut prev = 0.0;
+        for (i, o) in [1.0, 1.5, 2.0, 4.0, 8.0].into_iter().enumerate() {
+            let cm = flat.clone().with_topology(Topology::fattree(o, 4));
+            let t = cm.t_a2a(bytes, 16);
+            assert!(t > 0.0);
+            if i > 0 {
+                assert!(t >= prev, "oversub {o}: {t} < {prev}");
+            }
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn a2a_monotone_in_inter_node_byte_share() {
+        // property (b), second half: shifting bytes from the intra-node
+        // fabric to the NIC never speeds the collective up (the NIC is
+        // strictly slower on every shipped profile).
+        let (flat, _) = xl8(8);
+        let cm = flat.clone().with_topology(Topology::multinode(2));
+        let total = 4.0e6;
+        let mut prev = -1.0;
+        for k in 0..=8 {
+            let inter = total * k as f64 / 8.0;
+            let t = cm.t_a2a_split(total - inter, inter, 8);
+            assert!(t > prev, "share {k}/8: {t} vs {prev}");
+            prev = t;
+        }
+        // the same monotonicity through the inter_scale knob
+        let t_half = cm.t_a2a_with(total, 8, 0.5);
+        let t_full = cm.t_a2a_with(total, 8, 1.0);
+        assert!(t_half < t_full);
+        // scale caps at the full payload instead of inventing bytes
+        assert_eq!(
+            cm.t_a2a_with(total, 8, 1e9),
+            cm.t_a2a_split(0.0, total, 8)
+        );
+        // and the hierarchical price is never below flat at equal bytes
+        assert!(cm.t_a2a(total, 8) > flat.t_a2a(total, 8));
+    }
+
+    #[test]
+    fn cross_node_migration_strictly_costlier() {
+        // satellite: a cross-node expert move pays the NIC and must be
+        // strictly more expensive than the same move intra-node.
+        for name in ["rtx4090_pcie", "rtx3080_pcie", "nvlink"] {
+            let cm = CostModel::new(
+                model_preset("xl").unwrap(),
+                hardware_profile(name).unwrap(),
+            )
+            .with_topology(Topology::multinode(2));
+            let intra = cm.t_migrate_split(1, 0);
+            let inter = cm.t_migrate_split(0, 1);
+            assert!(inter > intra, "{name}: inter {inter} vs intra {intra}");
+            // mixed split = sum of the two bulk transfers
+            let both = cm.t_migrate_split(1, 1);
+            assert!((both - (intra + inter)).abs() < 1e-12);
+            assert_eq!(cm.t_migrate_split(0, 0), 0.0);
+        }
+        // flat wrapper: everything intra, unchanged pricing
+        let (cm, _) = xl8(8);
+        for m in [0usize, 1, 4] {
+            assert_eq!(cm.t_migrate(m), cm.t_migrate_split(m, 0));
+        }
+    }
+
+    #[test]
+    fn hierarchical_measured_pricing_uses_the_split() {
+        use crate::moe::{DispatchPlan, Placement, RoutingTable};
+        use crate::tensor::Tensor;
+        let topo = Topology::multinode(2);
+        let cm = CostModel::new(
+            model_preset("xl").unwrap(),
+            hardware_profile("rtx4090_pcie").unwrap(),
+        )
+        .with_topology(topo);
+        // 8 tokens on 4 devices, every token to both of 4 experts
+        let probs = Tensor::from_vec(&[8, 4], vec![0.4, 0.3, 0.2, 0.1].repeat(8));
+        let rt = RoutingTable::from_probs(&probs, 2);
+        let plan = DispatchPlan::build(&rt, 2);
+        let p = Placement::new(4, 4);
+        let (intra, inter) =
+            plan.cross_bytes_split(&p, topo, cm.model.d_model, ELEM_BYTES as usize);
+        assert!(inter > 0, "skew-free routing must cross nodes here");
+        let direct = cm.t_a2a_split(intra as f64, inter as f64, 4);
+        assert_eq!(cm.t_a2a_measured(&plan, &p), direct);
+        // memoized second call agrees
+        assert_eq!(cm.t_a2a_measured(&plan, &p), direct);
+        // and costs strictly more than the flat pricing of the same plan
+        let flat = CostModel::new(cm.model.clone(), cm.hw.clone());
+        assert!(direct > flat.t_a2a_measured(&plan, &p));
     }
 
     #[test]

@@ -1,0 +1,348 @@
+//! Hierarchical interconnect topology (DESIGN.md §13): devices grouped
+//! into nodes, with the intra-node fabric priced at the profile's
+//! `a2a_bw`/`msg_latency` and the inter-node path priced at the NIC
+//! (`nic_bw`/`nic_latency`), optionally oversubscribed.
+//!
+//! The flat topology is the degenerate single-node case: every pricing
+//! path in [`crate::netsim::CostModel`] detects it (and the "uniform"
+//! case where the NIC matches the intra fabric) and delegates to the
+//! original flat formula, so flat prices stay **bit-identical** to the
+//! pre-hierarchical model by construction.
+
+use anyhow::{bail, ensure, Result};
+
+/// The shape of the inter-node fabric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopologyKind {
+    /// Single-switch view: every device on one fabric (today's model).
+    Flat,
+    /// Nodes joined by one NIC path each; inter-node traffic funnels
+    /// through `nic_bw` serially (PCIe-box cluster over Ethernet/IB).
+    MultiNode,
+    /// Rail-optimized: one rail per local GPU index, so inter-node
+    /// traffic is striped across `node_size` parallel NIC rails.
+    Rail,
+    /// Fat-tree with an oversubscription factor: the inter-node
+    /// bandwidth every node sees is `nic_bw / oversub`.
+    FatTree,
+}
+
+/// A hierarchical device topology: `nodes` groups of devices with
+/// distinct intra-node and inter-node links.
+///
+/// Device→node assignment uses the same remainder-distributing block
+/// scheme as [`crate::moe::Placement::new`]: the first `D mod N` nodes
+/// hold one extra device, so any device count maps onto any node count.
+/// `nodes == 0` means "auto": 8-GPU nodes (`devices.div_ceil(8)`).
+///
+/// # Examples
+///
+/// ```
+/// use dice::netsim::Topology;
+/// let t = Topology::parse("multinode:4").unwrap();
+/// assert_eq!(t.name(), "multinode:4");
+/// assert_eq!(t.nodes_for(16), 4);
+/// assert_eq!(t.node_of(0, 16), 0);
+/// assert_eq!(t.node_of(15, 16), 3);
+/// // flat is the degenerate one-node case
+/// assert!(Topology::flat().is_flat(16));
+/// assert!(!t.is_flat(16));
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Topology {
+    /// Inter-node fabric shape.
+    pub kind: TopologyKind,
+    /// Node count (0 = auto: one node per 8 devices).
+    pub nodes: usize,
+    /// Fat-tree oversubscription factor (≥ 1.0; 1.0 elsewhere).
+    pub oversub: f64,
+}
+
+impl Topology {
+    /// The flat (single-node) topology — today's model.
+    pub fn flat() -> Topology {
+        Topology {
+            kind: TopologyKind::Flat,
+            nodes: 1,
+            oversub: 1.0,
+        }
+    }
+
+    /// Multi-node topology with `nodes` nodes (0 = auto).
+    pub fn multinode(nodes: usize) -> Topology {
+        Topology {
+            kind: TopologyKind::MultiNode,
+            nodes,
+            oversub: 1.0,
+        }
+    }
+
+    /// Rail-optimized topology with `nodes` nodes (0 = auto).
+    pub fn rail(nodes: usize) -> Topology {
+        Topology {
+            kind: TopologyKind::Rail,
+            nodes,
+            oversub: 1.0,
+        }
+    }
+
+    /// Fat-tree topology with oversubscription `oversub` (≥ 1.0) and
+    /// `nodes` nodes (0 = auto).
+    pub fn fattree(oversub: f64, nodes: usize) -> Topology {
+        assert!(oversub.is_finite() && oversub >= 1.0, "oversub {oversub} < 1");
+        Topology {
+            kind: TopologyKind::FatTree,
+            nodes,
+            oversub,
+        }
+    }
+
+    /// Parse a CLI spec: `flat | multinode[:<nodes>] | rail[:<nodes>] |
+    /// fattree:<oversub>[:<nodes>]`. Omitted node counts mean auto
+    /// (8-GPU nodes).
+    pub fn parse(s: &str) -> Result<Topology> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let nodes_arg = |p: Option<&&str>| -> Result<usize> {
+            match p {
+                None => Ok(0),
+                Some(v) => match v.parse::<usize>() {
+                    Ok(n) if n >= 1 => Ok(n),
+                    _ => bail!("bad node count {v:?} in topology {s:?}"),
+                },
+            }
+        };
+        match parts[0] {
+            "flat" => {
+                ensure!(parts.len() == 1, "flat takes no arguments: {s:?}");
+                Ok(Topology::flat())
+            }
+            "multinode" => {
+                ensure!(parts.len() <= 2, "multinode takes one argument: {s:?}");
+                Ok(Topology::multinode(nodes_arg(parts.get(1))?))
+            }
+            "rail" => {
+                ensure!(parts.len() <= 2, "rail takes one argument: {s:?}");
+                Ok(Topology::rail(nodes_arg(parts.get(1))?))
+            }
+            "fattree" => {
+                ensure!(
+                    parts.len() == 2 || parts.len() == 3,
+                    "fattree needs an oversubscription factor: {s:?}"
+                );
+                let o: f64 = match parts[1].parse() {
+                    Ok(o) if f64::is_finite(o) && o >= 1.0 => o,
+                    _ => bail!("bad oversubscription {:?} in topology {s:?} (need >= 1)", parts[1]),
+                };
+                Ok(Topology::fattree(o, nodes_arg(parts.get(2))?))
+            }
+            _ => bail!("unknown topology {s:?} (flat|multinode:<n>|rail[:<n>]|fattree:<o>[:<n>])"),
+        }
+    }
+
+    /// Canonical spec string; `parse(name())` round-trips.
+    pub fn name(&self) -> String {
+        match self.kind {
+            TopologyKind::Flat => "flat".into(),
+            TopologyKind::MultiNode if self.nodes == 0 => "multinode".into(),
+            TopologyKind::MultiNode => format!("multinode:{}", self.nodes),
+            TopologyKind::Rail if self.nodes == 0 => "rail".into(),
+            TopologyKind::Rail => format!("rail:{}", self.nodes),
+            TopologyKind::FatTree if self.nodes == 0 => format!("fattree:{}", self.oversub),
+            TopologyKind::FatTree => format!("fattree:{}:{}", self.oversub, self.nodes),
+        }
+    }
+
+    /// Effective node count for `devices`: flat is always 1 node; auto
+    /// (`nodes == 0`) packs 8 devices per node; explicit counts clamp so
+    /// every node holds at least one device.
+    pub fn nodes_for(&self, devices: usize) -> usize {
+        if self.kind == TopologyKind::Flat {
+            return 1;
+        }
+        let n = if self.nodes == 0 { devices.div_ceil(8) } else { self.nodes };
+        n.clamp(1, devices.max(1))
+    }
+
+    /// Node of `device` under the remainder-distributing block scheme
+    /// (first `D mod N` nodes hold one extra device).
+    pub fn node_of(&self, device: usize, devices: usize) -> usize {
+        let n = self.nodes_for(devices);
+        let base = devices / n;
+        let rem = devices % n;
+        let big = (base + 1) * rem;
+        if device < big {
+            device / (base + 1)
+        } else {
+            rem + (device - big) / base
+        }
+    }
+
+    /// The device-index range node `node` holds.
+    pub fn node_devices(&self, node: usize, devices: usize) -> std::ops::Range<usize> {
+        let n = self.nodes_for(devices);
+        assert!(node < n, "node {node} out of range ({n} nodes)");
+        let base = devices / n;
+        let rem = devices % n;
+        if node < rem {
+            let start = node * (base + 1);
+            start..start + base + 1
+        } else {
+            let start = (base + 1) * rem + (node - rem) * base;
+            start..start + base
+        }
+    }
+
+    /// Size of the largest node (the first node under the block scheme).
+    pub fn max_node_size(&self, devices: usize) -> usize {
+        let n = self.nodes_for(devices);
+        devices / n + usize::from(devices % n > 0)
+    }
+
+    /// True when the topology degenerates to a single node over
+    /// `devices` — flat by kind, or any topology that resolves to ≤ 1
+    /// effective node. Flat-degenerate topologies are priced by the
+    /// original flat formula, bit-exactly.
+    pub fn is_flat(&self, devices: usize) -> bool {
+        devices <= 1 || self.nodes_for(devices) <= 1
+    }
+
+    /// Fraction of all-to-all traffic that crosses node boundaries under
+    /// balanced routing: a uniformly-random (src, dst) pair among the
+    /// `D·(D−1)` crossing pairs lands on different nodes with
+    /// probability `(D² − Σ_n size_n²) / (D·(D−1))`.
+    pub fn inter_frac(&self, devices: usize) -> f64 {
+        if self.is_flat(devices) {
+            return 0.0;
+        }
+        let n = self.nodes_for(devices);
+        let base = devices / n;
+        let rem = devices % n;
+        let sq = rem * (base + 1) * (base + 1) + (n - rem) * base * base;
+        let d = devices as f64;
+        (d * d - sq as f64) / (d * (d - 1.0))
+    }
+
+    /// FNV-1a key over (kind, nodes, oversub bits) — lets pricing memos
+    /// (e.g. [`crate::moe::DispatchPlan::cross_bytes_split`]) tell
+    /// topologies apart without storing the struct.
+    pub fn key(&self) -> u64 {
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for v in [self.kind as u64, self.nodes as u64, self.oversub.to_bits()] {
+            h = (h ^ v.wrapping_add(1)).wrapping_mul(PRIME);
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_name_roundtrip() {
+        for spec in [
+            "flat",
+            "multinode",
+            "multinode:4",
+            "rail",
+            "rail:2",
+            "fattree:2",
+            "fattree:1.5:4",
+        ] {
+            let t = Topology::parse(spec).unwrap();
+            assert_eq!(t.name(), spec, "{spec}");
+            assert_eq!(Topology::parse(&t.name()).unwrap(), t);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "",
+            "mesh",
+            "flat:2",
+            "multinode:0",
+            "multinode:x",
+            "multinode:2:3",
+            "rail:0",
+            "fattree",
+            "fattree:0.5",
+            "fattree:nan",
+            "fattree:-2",
+            "fattree:2:0",
+            "fattree:2:4:8",
+        ] {
+            assert!(Topology::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn node_blocks_distribute_remainder() {
+        let t = Topology::multinode(3);
+        // 8 devices over 3 nodes: 3-3-2 (same scheme as Placement::new)
+        assert_eq!(t.nodes_for(8), 3);
+        let nodes: Vec<usize> = (0..8).map(|d| t.node_of(d, 8)).collect();
+        assert_eq!(nodes, vec![0, 0, 0, 1, 1, 1, 2, 2]);
+        assert_eq!(t.node_devices(0, 8), 0..3);
+        assert_eq!(t.node_devices(2, 8), 6..8);
+        assert_eq!(t.max_node_size(8), 3);
+        // node_of and node_devices must agree everywhere
+        for n in 0..3 {
+            for d in t.node_devices(n, 8) {
+                assert_eq!(t.node_of(d, 8), n);
+            }
+        }
+    }
+
+    #[test]
+    fn auto_nodes_pack_eight_devices() {
+        let t = Topology::multinode(0);
+        assert_eq!(t.nodes_for(8), 1);
+        assert_eq!(t.nodes_for(16), 2);
+        assert_eq!(t.nodes_for(65), 9);
+        // explicit counts clamp to one device per node minimum
+        assert_eq!(Topology::multinode(16).nodes_for(4), 4);
+    }
+
+    #[test]
+    fn flat_degenerate_cases() {
+        assert!(Topology::flat().is_flat(64));
+        assert!(Topology::multinode(1).is_flat(64));
+        assert!(Topology::multinode(4).is_flat(1));
+        assert!(Topology::multinode(0).is_flat(8), "auto: 8 devices fit one node");
+        assert!(!Topology::multinode(4).is_flat(8));
+        assert_eq!(Topology::flat().inter_frac(64), 0.0);
+    }
+
+    #[test]
+    fn inter_frac_balanced_routing() {
+        // 2 equal nodes of 2: 4 crossing-pair slots of 12 stay intra...
+        // D²−Σs² = 16−8 = 8 inter pairs of D(D−1) = 12 crossing pairs.
+        let t = Topology::multinode(2);
+        assert!((t.inter_frac(4) - 8.0 / 12.0).abs() < 1e-12);
+        // more nodes at fixed devices ⇒ larger inter share
+        let f2 = Topology::multinode(2).inter_frac(16);
+        let f4 = Topology::multinode(4).inter_frac(16);
+        let f8 = Topology::multinode(8).inter_frac(16);
+        assert!(f2 < f4 && f4 < f8, "{f2} {f4} {f8}");
+        assert!(f8 < 1.0);
+    }
+
+    #[test]
+    fn keys_distinguish_topologies() {
+        let ts = [
+            Topology::flat(),
+            Topology::multinode(2),
+            Topology::multinode(4),
+            Topology::rail(4),
+            Topology::fattree(2.0, 4),
+            Topology::fattree(4.0, 4),
+        ];
+        for (i, a) in ts.iter().enumerate() {
+            for (j, b) in ts.iter().enumerate() {
+                assert_eq!(a.key() == b.key(), i == j, "{a:?} vs {b:?}");
+            }
+        }
+    }
+}

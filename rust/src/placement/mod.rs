@@ -26,7 +26,11 @@
 //!   ([`crate::netsim::CostModel::t_migrate`]).
 //! * [`skewed_probs`] — the seeded skewed-router workload the
 //!   `dice exp placement` experiment, the perf gate and the property
-//!   tests share.
+//!   tests share. Its multi-node sibling
+//!   ([`crate::workload::node_skewed_probs`]) feeds
+//!   [`measured_topo_scales`], which measures a policy's crossing AND
+//!   node-crossing traffic ratios on a hierarchical topology
+//!   (DESIGN.md §13).
 //!
 //! Policies are selected by [`crate::config::PlacementKind`]
 //! (`--placement {contiguous,load,affinity}`) exactly as codecs are
@@ -129,6 +133,63 @@ pub fn measured_cross_scale(
     cross as f64 / contig as f64
 }
 
+/// Measured `(a2a_cross_scale, a2a_inter_scale)` of a policy on a
+/// hierarchical topology: solve the policy's node-aware placement
+/// ([`PlacementPolicy::place_on`]) against the seeded multi-node skewed
+/// workload ([`crate::workload::node_skewed_probs`]) and return the
+/// device-crossing and node-crossing assignment ratios vs. the
+/// contiguous baseline. These are what `dice sim` / `dice serve` feed
+/// into [`crate::config::DiceOptions::with_cross_scale`] /
+/// [`crate::config::DiceOptions::with_inter_scale`] so the virtual-time
+/// schedules price the placement's traffic on each fabric
+/// (DESIGN.md §13). On a flat topology the inter scale is 1.0 (there is
+/// no NIC path to scale) and the cross scale is exactly
+/// [`measured_cross_scale`]; Contiguous and unimprovable grids are
+/// `(1.0, 1.0)` by definition. Neither ratio is clamped.
+pub fn measured_topo_scales(
+    kind: PlacementKind,
+    n_experts: usize,
+    devices: usize,
+    topo: crate::netsim::Topology,
+    top_k: usize,
+    seed: u64,
+) -> (f64, f64) {
+    if topo.is_flat(devices) {
+        return (measured_cross_scale(kind, n_experts, devices, top_k, seed), 1.0);
+    }
+    if kind == PlacementKind::Contiguous || devices < 2 || n_experts < devices {
+        return (1.0, 1.0);
+    }
+    let n_tokens = 256 * devices;
+    let mut st = RoutingStats::new(n_experts, devices);
+    for step in 0..4u64 {
+        let probs = crate::workload::node_skewed_probs(
+            n_tokens,
+            n_experts,
+            devices,
+            topo,
+            seed.wrapping_add(step),
+        );
+        let rt = RoutingTable::from_probs(&probs, top_k);
+        st.observe(&rt, n_tokens / devices);
+    }
+    let contig = Placement::new(n_experts, devices);
+    let (c_intra, c_inter) = st.crossing_split(&contig, topo);
+    let c_cross = c_intra + c_inter;
+    if c_cross == 0 {
+        return (1.0, 1.0);
+    }
+    let placed = build(kind).place_on(n_experts, devices, topo, &st);
+    let (p_intra, p_inter) = st.crossing_split(&placed, topo);
+    let cross_scale = (p_intra + p_inter) as f64 / c_cross as f64;
+    let inter_scale = if c_inter == 0 {
+        1.0
+    } else {
+        p_inter as f64 / c_inter as f64
+    };
+    (cross_scale, inter_scale)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -166,6 +227,30 @@ mod tests {
         // priced honestly, not clamped)
         let lb = measured_cross_scale(PlacementKind::LoadBalanced, 16, 8, 2, 0xD1CE);
         assert!(lb.is_finite() && lb > 0.0);
+    }
+
+    #[test]
+    fn topo_scales_reward_node_aware_affinity() {
+        use crate::netsim::Topology;
+        let topo = Topology::multinode(4);
+        let (e, d, k, seed) = (32usize, 16usize, 2usize, 0xD1CEu64);
+        let (cross, inter) =
+            measured_topo_scales(PlacementKind::AffinityAware, e, d, topo, k, seed);
+        assert!(cross > 0.0 && cross.is_finite());
+        assert!(
+            inter < 1.0,
+            "node-aware affinity must cut inter-node traffic: {inter}"
+        );
+        // contiguous is the identity on any topology
+        assert_eq!(
+            measured_topo_scales(PlacementKind::Contiguous, e, d, topo, k, seed),
+            (1.0, 1.0)
+        );
+        // flat topology: cross matches the flat measurement, inter inert
+        let (fc, fi) =
+            measured_topo_scales(PlacementKind::AffinityAware, 16, 8, Topology::flat(), k, seed);
+        assert_eq!(fi, 1.0);
+        assert_eq!(fc, measured_cross_scale(PlacementKind::AffinityAware, 16, 8, k, seed));
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //! acceptance inequalities into invariants rather than hopes.
 
 use crate::moe::Placement;
+use crate::netsim::Topology;
 
 use super::stats::RoutingStats;
 
@@ -21,22 +22,44 @@ use super::stats::RoutingStats;
 /// bit-exactness contract across `--threads` extends to policy-driven
 /// placements.
 ///
+/// Policies are topology-aware (DESIGN.md §13): [`PlacementPolicy::place_on`]
+/// takes the hierarchical [`Topology`] and solves node-first on real
+/// hierarchies, while [`PlacementPolicy::place`] is the flat shorthand —
+/// on a flat (or flat-degenerate) topology `place_on` runs the original
+/// flat algorithm verbatim, so existing flat callers see identical maps.
+///
 /// ```
 /// use dice::placement::{build, RoutingStats};
 /// use dice::config::PlacementKind;
+/// use dice::netsim::Topology;
 ///
 /// let policy = build(PlacementKind::LoadBalanced);
 /// // empty stats: every policy degrades to the contiguous baseline
 /// let p = policy.place(8, 4, &RoutingStats::new(8, 4));
 /// assert_eq!(p.experts_of(0), vec![0, 1]);
 /// assert_eq!(policy.name(), "load_balanced");
+/// // place() is exactly place_on() with the flat topology
+/// let q = policy.place_on(8, 4, Topology::flat(), &RoutingStats::new(8, 4));
+/// assert_eq!(p, q);
 /// ```
 pub trait PlacementPolicy {
     /// Canonical policy name (matches `PlacementKind::name`).
     fn name(&self) -> &'static str;
-    /// Solve a placement of `n_experts` over `devices` from `stats`.
-    /// With empty stats every policy returns [`Placement::new`].
-    fn place(&self, n_experts: usize, devices: usize, stats: &RoutingStats) -> Placement;
+    /// Solve a placement of `n_experts` over `devices` grouped by
+    /// `topo` from `stats`. With empty stats every policy returns
+    /// [`Placement::new`]. On flat-degenerate topologies this must
+    /// match [`PlacementPolicy::place`] exactly.
+    fn place_on(
+        &self,
+        n_experts: usize,
+        devices: usize,
+        topo: Topology,
+        stats: &RoutingStats,
+    ) -> Placement;
+    /// Solve a placement on the flat topology (the original API).
+    fn place(&self, n_experts: usize, devices: usize, stats: &RoutingStats) -> Placement {
+        self.place_on(n_experts, devices, Topology::flat(), stats)
+    }
 }
 
 /// Per-device expert capacity: the contiguous layout's block sizes,
@@ -58,14 +81,26 @@ impl PlacementPolicy for Contiguous {
     fn name(&self) -> &'static str {
         "contiguous"
     }
-    fn place(&self, n_experts: usize, devices: usize, _stats: &RoutingStats) -> Placement {
+    fn place_on(
+        &self,
+        n_experts: usize,
+        devices: usize,
+        _topo: Topology,
+        _stats: &RoutingStats,
+    ) -> Placement {
+        // the contiguous block layout is already node-aligned: nodes
+        // hold contiguous device ranges, devices hold contiguous
+        // expert ranges, so no topology-specific work exists
         Placement::new(n_experts, devices)
     }
 }
 
 /// Greedy longest-processing-time bin-pack on expert load: experts in
 /// descending load order, each assigned to the least-loaded device with
-/// free capacity. Falls back to contiguous if greedy somehow ends with
+/// free capacity. On a hierarchical topology the pack goes node-first
+/// (least-loaded NODE with free capacity, then the least-loaded device
+/// inside it) so per-node compute load — and thus per-node NIC pressure —
+/// stays bounded. Falls back to contiguous if greedy somehow ends with
 /// a higher max device load (capacity constraints can defeat LPT on
 /// adversarial inputs), so `max_load(LoadBalanced) ≤ max_load(Contiguous)`
 /// holds unconditionally on the observed stats.
@@ -76,11 +111,19 @@ impl PlacementPolicy for LoadBalanced {
     fn name(&self) -> &'static str {
         "load_balanced"
     }
-    fn place(&self, n_experts: usize, devices: usize, stats: &RoutingStats) -> Placement {
+    fn place_on(
+        &self,
+        n_experts: usize,
+        devices: usize,
+        topo: Topology,
+        stats: &RoutingStats,
+    ) -> Placement {
         let contig = Placement::new(n_experts, devices);
         if stats.is_empty() || devices < 2 {
             return contig;
         }
+        let hier = !topo.is_flat(devices);
+        let n_nodes = topo.nodes_for(devices);
         let cap = capacities(n_experts, devices);
         let mut order: Vec<usize> = (0..n_experts).collect();
         // descending load, expert id ascending on ties (determinism)
@@ -92,16 +135,39 @@ impl PlacementPolicy for LoadBalanced {
         let mut owner = vec![0usize; n_experts];
         let mut dev_load = vec![0u64; devices];
         let mut dev_count = vec![0usize; devices];
+        let mut node_load = vec![0u64; n_nodes];
         for &e in &order {
             let mut best = usize::MAX;
-            for d in 0..devices {
-                if dev_count[d] < cap[d] && (best == usize::MAX || dev_load[d] < dev_load[best]) {
-                    best = d;
+            if hier {
+                // node-first: least-loaded node with a free slot, then
+                // least-loaded device within it (lowest index on ties)
+                let mut best_node = usize::MAX;
+                for n in 0..n_nodes {
+                    let free = topo
+                        .node_devices(n, devices)
+                        .any(|d| dev_count[d] < cap[d]);
+                    if free && (best_node == usize::MAX || node_load[n] < node_load[best_node]) {
+                        best_node = n;
+                    }
+                }
+                for d in topo.node_devices(best_node, devices) {
+                    if dev_count[d] < cap[d] && (best == usize::MAX || dev_load[d] < dev_load[best])
+                    {
+                        best = d;
+                    }
+                }
+            } else {
+                for d in 0..devices {
+                    if dev_count[d] < cap[d] && (best == usize::MAX || dev_load[d] < dev_load[best])
+                    {
+                        best = d;
+                    }
                 }
             }
             owner[e] = best;
             dev_load[best] += stats.expert_load[e];
             dev_count[best] += 1;
+            node_load[topo.node_of(best, devices)] += stats.expert_load[e];
         }
         let packed = Placement::from_owner(devices, owner);
         let max_packed = stats.device_loads(&packed).into_iter().max().unwrap_or(0);
@@ -123,34 +189,29 @@ impl PlacementPolicy for LoadBalanced {
 /// if the greedy layout would not reduce crossing assignments, so
 /// `crossing(AffinityAware) ≤ crossing(Contiguous)` holds
 /// unconditionally on the observed stats.
+///
+/// On a hierarchical topology the tie-break order is **node first,
+/// then device** (DESIGN.md §13): a pair goes to the node sourcing the
+/// most of its combined traffic (aggregated over the node's devices —
+/// NOT the single best device, which a node with evenly-spread sources
+/// would lose to), then to the best source device inside that node.
+/// The fallback compares `(inter_node, total)` crossing assignments
+/// lexicographically against contiguous, so on real hierarchies the
+/// NIC-priced component is the one that never regresses.
 #[derive(Debug, Clone, Copy)]
 pub struct AffinityAware;
 
-impl PlacementPolicy for AffinityAware {
-    fn name(&self) -> &'static str {
-        "affinity_aware"
-    }
-    fn place(&self, n_experts: usize, devices: usize, stats: &RoutingStats) -> Placement {
+impl AffinityAware {
+    /// Flat solver — the original algorithm, unchanged (the `place_on`
+    /// flat path must stay bit-identical for existing callers).
+    fn place_flat(&self, n_experts: usize, devices: usize, stats: &RoutingStats) -> Placement {
         let contig = Placement::new(n_experts, devices);
-        if stats.is_empty() || devices < 2 {
-            return contig;
-        }
         let cap = capacities(n_experts, devices);
         let mut owner = vec![usize::MAX; n_experts];
         let mut dev_count = vec![0usize; devices];
 
         // pair phase: co-activated pairs, highest count first
-        let mut pairs: Vec<(u64, usize, usize)> = Vec::new();
-        for a in 0..n_experts {
-            for b in a + 1..n_experts {
-                let c = stats.coactivation(a, b);
-                if c > 0 {
-                    pairs.push((c, a, b));
-                }
-            }
-        }
-        pairs.sort_by(|x, y| y.0.cmp(&x.0).then(x.1.cmp(&y.1)).then(x.2.cmp(&y.2)));
-        for &(_, a, b) in &pairs {
+        for &(_, a, b) in &coact_pairs(n_experts, stats) {
             if owner[a] != usize::MAX || owner[b] != usize::MAX {
                 continue;
             }
@@ -175,13 +236,7 @@ impl PlacementPolicy for AffinityAware {
         }
 
         // singles phase: heaviest unplaced experts to their top source
-        let mut rest: Vec<usize> = (0..n_experts).filter(|&e| owner[e] == usize::MAX).collect();
-        rest.sort_by(|&a, &b| {
-            stats.expert_load[b]
-                .cmp(&stats.expert_load[a])
-                .then(a.cmp(&b))
-        });
-        for e in rest {
+        for e in singles(&owner, stats) {
             let mut best = usize::MAX;
             let mut best_src = 0u64;
             for d in 0..devices {
@@ -203,6 +258,161 @@ impl PlacementPolicy for AffinityAware {
             contig
         } else {
             placed
+        }
+    }
+
+    /// Hierarchical solver: node first, then device within the node.
+    fn place_hier(
+        &self,
+        n_experts: usize,
+        devices: usize,
+        topo: Topology,
+        stats: &RoutingStats,
+    ) -> Placement {
+        let contig = Placement::new(n_experts, devices);
+        let n_nodes = topo.nodes_for(devices);
+        let cap = capacities(n_experts, devices);
+        let mut owner = vec![usize::MAX; n_experts];
+        let mut dev_count = vec![0usize; devices];
+        let node_free = |dev_count: &[usize], n: usize| -> usize {
+            topo.node_devices(n, devices)
+                .map(|d| cap[d] - dev_count[d])
+                .sum()
+        };
+        // best source device for `e` within node `n` with >= `need`
+        // free slots on the device (usize::MAX if the node is full)
+        let best_dev_in = |dev_count: &[usize], e: usize, n: usize, need: usize| -> usize {
+            let mut best = usize::MAX;
+            let mut best_src = 0u64;
+            for d in topo.node_devices(n, devices) {
+                if dev_count[d] + need > cap[d] {
+                    continue;
+                }
+                let s = stats.src_load[e * devices + d];
+                if best == usize::MAX || s > best_src {
+                    best = d;
+                    best_src = s;
+                }
+            }
+            best
+        };
+
+        // pair phase: the node sourcing the most combined traffic with
+        // two free slots anywhere in it (lowest node id on ties)
+        for &(_, a, b) in &coact_pairs(n_experts, stats) {
+            if owner[a] != usize::MAX || owner[b] != usize::MAX {
+                continue;
+            }
+            let mut best_node = usize::MAX;
+            let mut best_src = 0u64;
+            for n in 0..n_nodes {
+                if node_free(&dev_count, n) < 2 {
+                    continue;
+                }
+                let s = stats.node_src_load(a, topo, n) + stats.node_src_load(b, topo, n);
+                if best_node == usize::MAX || s > best_src {
+                    best_node = n;
+                    best_src = s;
+                }
+            }
+            if best_node == usize::MAX {
+                continue;
+            }
+            // same device if one has two slots, else best two devices
+            let both = best_dev_in(&dev_count, a, best_node, 2);
+            if both != usize::MAX {
+                owner[a] = both;
+                owner[b] = both;
+                dev_count[both] += 2;
+            } else {
+                let da = best_dev_in(&dev_count, a, best_node, 1);
+                owner[a] = da;
+                dev_count[da] += 1;
+                let db = best_dev_in(&dev_count, b, best_node, 1);
+                owner[b] = db;
+                dev_count[db] += 1;
+            }
+        }
+
+        // singles phase: heaviest first to the best source NODE, then
+        // the best source device inside it
+        for e in singles(&owner, stats) {
+            let mut best_node = usize::MAX;
+            let mut best_src = 0u64;
+            for n in 0..n_nodes {
+                if node_free(&dev_count, n) == 0 {
+                    continue;
+                }
+                let s = stats.node_src_load(e, topo, n);
+                if best_node == usize::MAX || s > best_src {
+                    best_node = n;
+                    best_src = s;
+                }
+            }
+            let d = best_dev_in(&dev_count, e, best_node, 1);
+            owner[e] = d;
+            dev_count[d] += 1;
+        }
+
+        let placed = Placement::from_owner(devices, owner);
+        // lexicographic never-worse guard: the NIC-priced inter-node
+        // component first, total crossing as the tie-break
+        let (pi, px) = stats.crossing_split(&placed, topo);
+        let (ci, cx) = stats.crossing_split(&contig, topo);
+        if (px, pi + px) > (cx, ci + cx) {
+            contig
+        } else {
+            placed
+        }
+    }
+}
+
+/// Co-activated pairs `(count, a, b)`, highest count first, expert ids
+/// ascending on ties — the shared pair ordering of both affinity
+/// solvers (determinism).
+fn coact_pairs(n_experts: usize, stats: &RoutingStats) -> Vec<(u64, usize, usize)> {
+    let mut pairs: Vec<(u64, usize, usize)> = Vec::new();
+    for a in 0..n_experts {
+        for b in a + 1..n_experts {
+            let c = stats.coactivation(a, b);
+            if c > 0 {
+                pairs.push((c, a, b));
+            }
+        }
+    }
+    pairs.sort_by(|x, y| y.0.cmp(&x.0).then(x.1.cmp(&y.1)).then(x.2.cmp(&y.2)));
+    pairs
+}
+
+/// Unplaced experts, heaviest first (ids ascending on ties).
+fn singles(owner: &[usize], stats: &RoutingStats) -> Vec<usize> {
+    let mut rest: Vec<usize> = (0..owner.len()).filter(|&e| owner[e] == usize::MAX).collect();
+    rest.sort_by(|&a, &b| {
+        stats.expert_load[b]
+            .cmp(&stats.expert_load[a])
+            .then(a.cmp(&b))
+    });
+    rest
+}
+
+impl PlacementPolicy for AffinityAware {
+    fn name(&self) -> &'static str {
+        "affinity_aware"
+    }
+    fn place_on(
+        &self,
+        n_experts: usize,
+        devices: usize,
+        topo: Topology,
+        stats: &RoutingStats,
+    ) -> Placement {
+        if stats.is_empty() || devices < 2 {
+            return Placement::new(n_experts, devices);
+        }
+        if topo.is_flat(devices) {
+            self.place_flat(n_experts, devices, stats)
+        } else {
+            self.place_hier(n_experts, devices, topo, stats)
         }
     }
 }
@@ -328,6 +538,118 @@ mod tests {
             let a = build(kind).place(12, 4, &st);
             let b = build(kind).place(12, 4, &st);
             assert_eq!(a, b, "{kind:?}");
+        }
+    }
+
+    fn node_skewed_stats(
+        n_experts: usize,
+        devices: usize,
+        topo: Topology,
+        top_k: usize,
+        seed: u64,
+    ) -> RoutingStats {
+        let n_tokens = 64 * devices;
+        let mut st = RoutingStats::new(n_experts, devices);
+        for s in 0..3u64 {
+            let probs = crate::workload::node_skewed_probs(
+                n_tokens,
+                n_experts,
+                devices,
+                topo,
+                seed.wrapping_add(s),
+            );
+            let rt = RoutingTable::from_probs(&probs, top_k);
+            st.observe(&rt, n_tokens / devices);
+        }
+        st
+    }
+
+    #[test]
+    fn place_on_respects_invariants_under_hierarchies() {
+        forall(32, 0x70CE, |g: &mut Gen| {
+            let devices = g.usize_in(2..9);
+            let n_experts = devices * g.usize_in(1..4) + g.usize_in(0..devices);
+            let nodes = g.usize_in(1..devices.min(4) + 1);
+            let topo = if g.bool() {
+                Topology::multinode(nodes)
+            } else {
+                Topology::fattree(2.0, nodes)
+            };
+            let st = node_skewed_stats(n_experts, devices, topo, 2, g.rng.next_u64());
+            for kind in [
+                PlacementKind::Contiguous,
+                PlacementKind::LoadBalanced,
+                PlacementKind::AffinityAware,
+            ] {
+                let p = build(kind).place_on(n_experts, devices, topo, &st);
+                assert_well_formed(&p, n_experts, devices);
+                // determinism extends to the node-aware solvers
+                assert_eq!(p, build(kind).place_on(n_experts, devices, topo, &st));
+            }
+        });
+    }
+
+    #[test]
+    fn hier_affinity_never_exceeds_contiguous_inter_crossing() {
+        // the lexicographic guard's invariant: the NIC-priced component
+        // never regresses, and total crossing never regresses at equal
+        // inter crossing.
+        forall(32, 0xAF70, |g: &mut Gen| {
+            let devices = 2 * g.usize_in(1..5);
+            let n_experts = devices * g.usize_in(1..4);
+            let topo = Topology::multinode(g.usize_in(2..devices.min(4) + 1));
+            let st = node_skewed_stats(n_experts, devices, topo, 2, g.rng.next_u64());
+            let aff = AffinityAware.place_on(n_experts, devices, topo, &st);
+            let contig = Placement::new(n_experts, devices);
+            let (pi, px) = st.crossing_split(&aff, topo);
+            let (ci, cx) = st.crossing_split(&contig, topo);
+            assert!(
+                (px, pi + px) <= (cx, ci + cx),
+                "hier affinity regressed: ({pi},{px}) vs contig ({ci},{cx})"
+            );
+        });
+    }
+
+    #[test]
+    fn node_aware_affinity_beats_node_blind_on_the_decoy_workload() {
+        // the node_skewed workload's decoy device is designed to bait
+        // per-device source comparisons: the node-blind (flat) affinity
+        // solver places hot experts by the single best device, the
+        // node-aware solver aggregates per node first — so the latter
+        // must move strictly fewer assignments across nodes.
+        let topo = Topology::multinode(4);
+        let (e, d) = (32usize, 16usize);
+        let st = node_skewed_stats(e, d, topo, 2, 0xD1CE);
+        let contig = Placement::new(e, d);
+        let blind = AffinityAware.place_flat(e, d, &st);
+        let aware = AffinityAware.place_on(e, d, topo, &st);
+        let (_, contig_inter) = st.crossing_split(&contig, topo);
+        let (_, blind_inter) = st.crossing_split(&blind, topo);
+        let (_, aware_inter) = st.crossing_split(&aware, topo);
+        assert!(
+            aware_inter < blind_inter,
+            "node-aware {aware_inter} must beat node-blind {blind_inter}"
+        );
+        assert!(
+            aware_inter < contig_inter,
+            "node-aware {aware_inter} must beat contiguous {contig_inter}"
+        );
+    }
+
+    #[test]
+    fn flat_degenerate_place_on_matches_place_exactly() {
+        // one node (or one device per node-equivalent) takes the
+        // original flat code path: identical maps, not just equal costs
+        let st = skewed_stats(16, 8, 2, 0xF1A7);
+        for kind in [
+            PlacementKind::Contiguous,
+            PlacementKind::LoadBalanced,
+            PlacementKind::AffinityAware,
+        ] {
+            let flat = build(kind).place(16, 8, &st);
+            for topo in [Topology::flat(), Topology::multinode(1)] {
+                assert_eq!(build(kind).place_on(16, 8, topo, &st), flat, "{kind:?}");
+            }
         }
     }
 }

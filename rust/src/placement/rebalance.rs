@@ -5,6 +5,7 @@
 
 use crate::config::PlacementKind;
 use crate::moe::{Placement, RoutingTable};
+use crate::netsim::Topology;
 
 use super::policies::PlacementPolicy;
 use super::stats::RoutingStats;
@@ -17,6 +18,11 @@ pub struct Migration {
     /// Experts whose owner changed — each one's weights must travel
     /// (priced by [`crate::netsim::CostModel::t_migrate`]).
     pub moved_experts: usize,
+    /// Of `moved_experts`, how many crossed a node boundary — these
+    /// travel the NIC path and are priced strictly higher
+    /// ([`crate::netsim::CostModel::t_migrate_split`]). Zero on the
+    /// flat topology.
+    pub moved_inter_node: usize,
 }
 
 /// Drives a [`PlacementPolicy`] on a step cadence.
@@ -31,6 +37,7 @@ pub struct Migration {
 pub struct Rebalancer {
     policy: Box<dyn PlacementPolicy>,
     every: usize,
+    topo: Topology,
     stats: RoutingStats,
     steps_since_solve: usize,
     rebalances: usize,
@@ -39,16 +46,26 @@ pub struct Rebalancer {
 
 impl Rebalancer {
     /// A rebalancer for `kind` over an (experts × devices) grid,
-    /// re-solving every `every` steps (0 = never).
+    /// re-solving every `every` steps (0 = never) on the flat topology.
     pub fn new(kind: PlacementKind, n_experts: usize, devices: usize, every: usize) -> Rebalancer {
         Rebalancer {
             policy: super::build(kind),
             every,
+            topo: Topology::flat(),
             stats: RoutingStats::new(n_experts, devices),
             steps_since_solve: 0,
             rebalances: 0,
             total_moved: 0,
         }
+    }
+
+    /// Re-solve on a hierarchical topology: placements come from the
+    /// policy's node-aware solver ([`PlacementPolicy::place_on`]) and
+    /// migrations report their cross-node component so callers can
+    /// price them at NIC bandwidth.
+    pub fn with_topology(mut self, topo: Topology) -> Rebalancer {
+        self.topo = topo;
+        self
     }
 
     /// Fold a routing table into the accumulated statistics.
@@ -84,18 +101,20 @@ impl Rebalancer {
             return None;
         }
         self.steps_since_solve = 0;
-        let solved = self
-            .policy
-            .place(self.stats.n_experts, self.stats.devices, &self.stats);
+        let solved =
+            self.policy
+                .place_on(self.stats.n_experts, self.stats.devices, self.topo, &self.stats);
         let moved = solved.moved_from(current);
         if moved == 0 {
             return None;
         }
+        let (_, inter) = solved.moved_split(current, self.topo);
         self.rebalances += 1;
         self.total_moved += moved;
         Some(Migration {
             placement: solved,
             moved_experts: moved,
+            moved_inter_node: inter,
         })
     }
 }
@@ -123,6 +142,7 @@ mod tests {
             observe_step(&mut rb, 128, e, d, step as u64);
             if let Some(m) = rb.end_step(&placement) {
                 assert!(m.moved_experts > 0);
+                assert_eq!(m.moved_inter_node, 0, "flat topology: no NIC moves");
                 placement = m.placement;
                 fired_at.push(step);
             }
@@ -176,6 +196,27 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn topology_rebalancer_accounts_cross_node_moves() {
+        let topo = Topology::multinode(2);
+        let (e, d) = (16usize, 4usize);
+        let mut rb = Rebalancer::new(PlacementKind::AffinityAware, e, d, 2).with_topology(topo);
+        let mut placement = Placement::new(e, d);
+        let mut fired = false;
+        for step in 0..6u64 {
+            observe_step(&mut rb, 128, e, d, step);
+            if let Some(m) = rb.end_step(&placement) {
+                fired = true;
+                assert!(m.moved_inter_node <= m.moved_experts);
+                let (intra, inter) = m.placement.moved_split(&placement, topo);
+                assert_eq!(m.moved_inter_node, inter);
+                assert_eq!(m.moved_experts, intra + inter);
+                placement = m.placement;
+            }
+        }
+        assert!(fired, "skewed workload must trigger at least one rebalance");
     }
 
     #[test]

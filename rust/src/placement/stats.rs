@@ -4,6 +4,7 @@
 //! [`RoutingTable`]s (DESIGN.md §9).
 
 use crate::moe::{Placement, RoutingTable};
+use crate::netsim::Topology;
 
 /// Accumulated routing statistics over one or more diffusion steps.
 ///
@@ -101,6 +102,39 @@ impl RoutingStats {
         c
     }
 
+    /// [`RoutingStats::crossing_assignments`] split by node boundary
+    /// under `topo`: `(intra_node, inter_node)` crossing assignments.
+    /// A crossing assignment whose source device shares the owner's
+    /// node stays on the intra-node fabric; the rest pays the NIC.
+    /// The components always sum to `crossing_assignments`.
+    pub fn crossing_split(&self, placement: &Placement, topo: Topology) -> (u64, u64) {
+        let (mut intra, mut inter) = (0u64, 0u64);
+        for e in 0..self.n_experts {
+            let owner = placement.owner(e);
+            let owner_node = topo.node_of(owner, self.devices);
+            for d in 0..self.devices {
+                if d == owner {
+                    continue;
+                }
+                if topo.node_of(d, self.devices) == owner_node {
+                    intra += self.src_load[e * self.devices + d];
+                } else {
+                    inter += self.src_load[e * self.devices + d];
+                }
+            }
+        }
+        (intra, inter)
+    }
+
+    /// Combined traffic experts source from the devices of one node —
+    /// the objective the topology-aware affinity policy maximizes when
+    /// it picks a node for an expert (or pair) before picking a device.
+    pub fn node_src_load(&self, expert: usize, topo: Topology, node: usize) -> u64 {
+        topo.node_devices(node, self.devices)
+            .map(|d| self.src_load[expert * self.devices + d])
+            .sum()
+    }
+
     /// Co-activation count of an (unordered) expert pair.
     pub fn coactivation(&self, a: usize, b: usize) -> u64 {
         let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
@@ -147,6 +181,24 @@ mod tests {
         let swapped = Placement::from_owner(2, vec![1, 0]);
         assert_eq!(st.device_loads(&swapped), vec![0, 4]);
         assert_eq!(st.crossing_assignments(&swapped), 2);
+    }
+
+    #[test]
+    fn crossing_split_sums_and_classifies() {
+        // 4 tokens over 4 devices (1 each), all → expert 0 on device 0
+        let rt = table(vec![vec![0.9, 0.1, 0.0, 0.0]; 4], 1);
+        let mut st = RoutingStats::new(4, 4);
+        st.observe(&rt, 1);
+        let p = Placement::new(4, 4);
+        let topo = Topology::multinode(2); // nodes {0,1} and {2,3}
+        let (intra, inter) = st.crossing_split(&p, topo);
+        assert_eq!(intra + inter, st.crossing_assignments(&p));
+        assert_eq!((intra, inter), (1, 2), "dev1 intra; dev2,3 inter");
+        // flat topology: everything intra
+        assert_eq!(st.crossing_split(&p, Topology::flat()), (3, 0));
+        // node source aggregation matches the split's view
+        assert_eq!(st.node_src_load(0, topo, 0), 2);
+        assert_eq!(st.node_src_load(0, topo, 1), 2);
     }
 
     #[test]

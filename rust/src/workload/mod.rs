@@ -1,13 +1,18 @@
 //! Workload generation for the serving experiments: Poisson, uniform
 //! and burst open-loop arrival processes, plus the named scenario
-//! presets (steady / diurnal ramp / burst-recovery) in [`scenarios`].
+//! presets (steady / diurnal ramp / burst-recovery) in [`scenarios`]
+//! and the seeded multi-node skewed routing preset in [`node_skewed`]
+//! (hot experts concentrated on one node — the `dice exp topology`
+//! harness and the cross-node scaling sweep share it).
 //!
 //! Traces are plain `Vec<Request>` sorted by arrival time, so they can
 //! be generated once and replayed against any strategy or serving
 //! policy (the comparison experiments depend on identical traces).
 
+pub mod node_skewed;
 pub mod scenarios;
 
+pub use node_skewed::node_skewed_probs;
 pub use scenarios::{burst_recovery_trace, diurnal_trace, Scenario};
 
 use crate::rng::Rng;

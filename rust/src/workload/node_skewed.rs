@@ -1,0 +1,147 @@
+//! Seeded multi-node skewed router workload (DESIGN.md §13): hot
+//! experts concentrated on one node, with a per-device decoy that makes
+//! node-blind placement provably worse than node-aware placement.
+//!
+//! Construction, per expert `e` under the contiguous layout:
+//!
+//! * `home(e)` — the node one PAST the expert's contiguous node. Every
+//!   token on a `home(e)` device boosts `e` by [`HOME_BOOST`], so the
+//!   expert's traffic is *concentrated on one node* that is not the one
+//!   the contiguous layout stores it on (the rebalancer has real
+//!   headroom, and the hot low-id experts all home on the same node).
+//! * `decoy(e)` — the FIRST device of the node after `home(e)`. Tokens
+//!   on that single device boost `e` by [`DECOY_BOOST`] > [`HOME_BOOST`].
+//!   A node-blind affinity policy compares per-device source loads, sees
+//!   the decoy device beat every individual home-node device, and places
+//!   `e` outside its home node; a node-aware policy aggregates per node
+//!   first — `HOME_BOOST × node_size` beats the lone decoy — and keeps
+//!   `e` with the bulk of its traffic. That gap is what the
+//!   `dice exp topology` acceptance gate measures.
+//!
+//! On a flat/single-node topology the node structure is meaningless and
+//! the preset degenerates to [`crate::placement::skewed_probs`].
+
+use crate::moe::Placement;
+use crate::netsim::Topology;
+use crate::placement::skewed_probs;
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+/// Router-probability boost for tokens on the expert's home node.
+pub const HOME_BOOST: f32 = 6.0;
+/// Router-probability boost on the expert's single decoy device.
+/// Strictly above [`HOME_BOOST`] per device, strictly below
+/// `HOME_BOOST × node_size` in aggregate for every node of ≥ 2 devices.
+pub const DECOY_BOOST: f32 = 9.0;
+
+/// Synthetic node-skewed router probabilities `[n_tokens, n_experts]`
+/// for a hierarchical `topo` over `devices`. Tokens shard contiguously
+/// (token `i` belongs to device `i / (n_tokens/devices)`), matching
+/// [`crate::moe::DispatchPlan::build`]. Rows are normalized
+/// distributions; a per-token jitter keeps top-k sets varied; the same
+/// seed always reproduces the same tensor.
+pub fn node_skewed_probs(
+    n_tokens: usize,
+    n_experts: usize,
+    devices: usize,
+    topo: Topology,
+    seed: u64,
+) -> Tensor {
+    assert!(devices > 0 && n_tokens % devices == 0, "tokens must shard evenly");
+    if topo.is_flat(devices) {
+        return skewed_probs(n_tokens, n_experts, devices, seed);
+    }
+    let nnodes = topo.nodes_for(devices);
+    let contig = Placement::new(n_experts, devices);
+    // per-expert home node and decoy device (see module docs)
+    let home: Vec<usize> = (0..n_experts)
+        .map(|e| (topo.node_of(contig.owner(e), devices) + 1) % nnodes)
+        .collect();
+    let decoy: Vec<usize> = (0..n_experts)
+        .map(|e| topo.node_devices((home[e] + 1) % nnodes, devices).start)
+        .collect();
+    let tpd = n_tokens / devices;
+    let mut rng = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15);
+    let mut data = Vec::with_capacity(n_tokens * n_experts);
+    for i in 0..n_tokens {
+        let dev = i / tpd;
+        let node = topo.node_of(dev, devices);
+        let mut total = 0.0f32;
+        let row_at = data.len();
+        for e in 0..n_experts {
+            let zipf = 1.0 / (1.0 + e as f32);
+            let boost = if dev == decoy[e] {
+                DECOY_BOOST
+            } else if node == home[e] {
+                HOME_BOOST
+            } else {
+                1.0
+            };
+            let jitter = 0.5 + rng.uniform_f32();
+            let w = zipf * boost * jitter;
+            data.push(w);
+            total += w;
+        }
+        for w in &mut data[row_at..] {
+            *w /= total;
+        }
+    }
+    Tensor::from_vec(&[n_tokens, n_experts], data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::RoutingTable;
+    use crate::placement::RoutingStats;
+
+    #[test]
+    fn rows_are_distributions_and_deterministic() {
+        let topo = Topology::multinode(2);
+        let p = node_skewed_probs(64, 8, 4, topo, 7);
+        let (n, e) = p.rows();
+        assert_eq!((n, e), (64, 8));
+        for i in 0..n {
+            let s: f32 = p.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {i} sums to {s}");
+            assert!(p.row(i).iter().all(|&v| v > 0.0));
+        }
+        assert_eq!(node_skewed_probs(64, 8, 4, topo, 7), p);
+        assert_ne!(node_skewed_probs(64, 8, 4, topo, 8), p);
+    }
+
+    #[test]
+    fn flat_topology_degenerates_to_skewed_probs() {
+        let flat = node_skewed_probs(32, 8, 4, Topology::flat(), 3);
+        assert_eq!(flat, skewed_probs(32, 8, 4, 3));
+        // one node == flat as well
+        let one = node_skewed_probs(32, 8, 4, Topology::multinode(1), 3);
+        assert_eq!(one, flat);
+    }
+
+    #[test]
+    fn traffic_concentrates_on_the_home_node() {
+        // each expert's aggregated source load must peak on its home
+        // node — the structure the node-aware placement exploits.
+        let topo = Topology::multinode(2);
+        let (n_tokens, e_n, d_n) = (256usize, 8usize, 4usize);
+        let probs = node_skewed_probs(n_tokens, e_n, d_n, topo, 0xD1CE);
+        let rt = RoutingTable::from_probs(&probs, 2);
+        let mut st = RoutingStats::new(e_n, d_n);
+        st.observe(&rt, n_tokens / d_n);
+        let contig = Placement::new(e_n, d_n);
+        let nnodes = topo.nodes_for(d_n);
+        for e in 0..e_n {
+            let home = (topo.node_of(contig.owner(e), d_n) + 1) % nnodes;
+            let at_home = st.node_src_load(e, topo, home);
+            for n in 0..nnodes {
+                if n != home {
+                    assert!(
+                        at_home > st.node_src_load(e, topo, n),
+                        "expert {e}: home {home} load {at_home} vs node {n}"
+                    );
+                }
+            }
+        }
+    }
+}

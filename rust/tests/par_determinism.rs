@@ -102,6 +102,54 @@ fn host_engine_step_bit_exact_for_all_placement_policies() {
 }
 
 #[test]
+fn host_engine_step_bit_exact_for_topology_aware_placements() {
+    // The §13 node-aware solvers extend the same contract: placements
+    // solved on a hierarchical topology (place_on) are deterministic,
+    // and the engine step under them is bit-exact across --threads
+    // 1/2/4 — and identical to the contiguous reference, because the
+    // combine scatters to token-owned rows (only the per-fabric byte
+    // accounting moves with the map).
+    use dice::netsim::Topology;
+    use dice::workload::node_skewed_probs;
+    let cfg = HostMoeConfig {
+        n_experts: 16,
+        top_k: 2,
+        d_model: 32,
+        d_ff: 64,
+        devices: 4,
+    };
+    let topo = Topology::multinode(2);
+    let base = HostMoeLayer::synth(cfg, 0xD1CE);
+    let x = normal(&[64, 32], 11);
+    let mut st = RoutingStats::new(cfg.n_experts, cfg.devices);
+    for s in 0..3u64 {
+        let probs = node_skewed_probs(128, cfg.n_experts, cfg.devices, topo, s);
+        st.observe(&RoutingTable::from_probs(&probs, cfg.top_k), 128 / cfg.devices);
+    }
+    let reference = base.step(&ParPool::new(1), &x);
+    for kind in [
+        PlacementKind::Contiguous,
+        PlacementKind::LoadBalanced,
+        PlacementKind::AffinityAware,
+    ] {
+        let placement = build(kind).place_on(cfg.n_experts, cfg.devices, topo, &st);
+        assert_eq!(
+            placement,
+            build(kind).place_on(cfg.n_experts, cfg.devices, topo, &st),
+            "{kind:?}: node-aware solve must be deterministic"
+        );
+        let layer = base.clone().with_placement(placement);
+        let serial = layer.step(&ParPool::new(1), &x);
+        assert_eq!(reference, serial, "{kind:?}: placement must not change numerics");
+        for threads in [1usize, 2, 4] {
+            let out = layer.step(&ParPool::new(threads), &x);
+            assert_eq!(serial, out, "{kind:?} --threads {threads} differs from serial");
+            assert_eq!(checksum(&serial), checksum(&out));
+        }
+    }
+}
+
+#[test]
 fn multi_step_trajectory_bit_exact_across_threads() {
     // 10 feedback steps: any nondeterminism would compound and show
     let layer = HostMoeLayer::synth(

@@ -201,6 +201,45 @@ fn simd_misconfiguration_fails_loud_never_silent() {
 }
 
 #[test]
+fn topology_edges_fail_loud_and_zero_devices_cost_nothing() {
+    // failure injection on the §13 topology axis: a malformed
+    // `--topology` spec is a parse error at the CLI boundary (never a
+    // silent flat fallback), and the degenerate zero-device grid prices
+    // every collective at exactly 0.0 instead of underflowing the
+    // `(devices - 1)` latency term.
+    use dice::netsim::Topology;
+    for bad in [
+        "", "mesh", "flat:2", "multinode:0", "multinode:x", "rail:0", "fattree", "fattree:0.5",
+        "fattree:nan", "fattree:2:0", "multinode:2:3",
+    ] {
+        assert!(Topology::parse(bad).is_err(), "{bad:?} must be rejected");
+    }
+    for topo in [
+        Topology::flat(),
+        Topology::multinode(4),
+        Topology::rail(2),
+        Topology::fattree(4.0, 4),
+    ] {
+        let cm = CostModel::new(
+            model_preset("xl").unwrap(),
+            hardware_profile("rtx4090_pcie").unwrap(),
+        )
+        .with_topology(topo);
+        assert_eq!(cm.t_a2a(1.5e6, 0), 0.0, "{:?}: empty grid is free", topo.kind);
+        assert_eq!(cm.t_a2a(0.0, 0), 0.0);
+        assert_eq!(cm.t_a2a_with(1.5e6, 0, 4.0), 0.0);
+        assert_eq!(cm.t_a2a_split(1e6, 1e6, 0), 0.0);
+        // one device: nothing crosses, but the flat fixed overheads
+        // still apply — and they must match the flat model bit-exactly
+        let flat = CostModel::new(
+            model_preset("xl").unwrap(),
+            hardware_profile("rtx4090_pcie").unwrap(),
+        );
+        assert_eq!(cm.t_a2a(1.5e6, 1), flat.t_a2a(1.5e6, 1), "{:?}", topo.kind);
+    }
+}
+
+#[test]
 fn engine_deterministic_across_runs() {
     let Some((rt, bank)) = setup() else { return };
     let eng = Engine::new(
