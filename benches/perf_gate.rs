@@ -9,7 +9,10 @@
 //! 4-node hierarchy, with a custom trajectory record carrying the
 //! flat-vs-multinode inter-node byte split and modeled a2a times,
 //! DESIGN.md §13), and the `simd_kernels` pair (scalar oracle vs the
-//! detected kernel backend on the expert-FFN GEMM, DESIGN.md §12), and
+//! detected kernel backend on the expert-FFN GEMM, DESIGN.md §12), the
+//! `fleet_serving` cell (the §14 multi-replica burst cell behind the
+//! least-loaded router, with a custom trajectory record carrying
+//! per-router burst p99 and static-vs-autoscaled replica-seconds), and
 //! appends every summary to repo-root `BENCH_engine.json` (JSON lines)
 //! — the perf trajectory across PRs. Artifact-free.
 //!
@@ -25,8 +28,10 @@
 //! that the detected SIMD backend is no slower than the scalar oracle
 //! (thread-independent, so it gates even on one core), that the
 //! node-aware placement ships no more inter-node bytes (and no more
-//! modeled a2a time) than the node-blind solve, and that
-//! `BENCH_engine.json` is valid JSON lines.
+//! modeled a2a time) than the node-blind solve, that the least-loaded
+//! router beats round-robin on burst p99 and the autoscaled fleet
+//! bills fewer replica-seconds than the static one (DESIGN.md §14),
+//! and that `BENCH_engine.json` is valid JSON lines.
 
 use std::path::PathBuf;
 
@@ -37,6 +42,7 @@ use dice::config::{
     SimdKind, Strategy,
 };
 use dice::coordinator::{simulate_sweep_with, HostPipeline, SweepCase};
+use dice::exp::fleet as fleet_exp;
 use dice::linalg::{self, simd};
 use dice::moe::host::{HostMoeConfig, HostMoeLayer, HostMoeStack};
 use dice::moe::{DispatchPlan, RoutingTable};
@@ -44,6 +50,7 @@ use dice::netsim::{CostModel, Topology, Workload};
 use dice::par::ParPool;
 use dice::placement::{build, skewed_probs, RoutingStats};
 use dice::rng::Rng;
+use dice::server::RouterKind;
 use dice::tensor::Tensor;
 use dice::workload::node_skewed_probs;
 
@@ -279,6 +286,34 @@ fn main() -> anyhow::Result<()> {
         None => simd::clear_kind(),
     }
 
+    // --- fleet serving: the burst cell of the §14 acceptance grid ------
+    // (DESIGN.md §14) — a 3-replica fleet with a slow replica serving
+    // the burst trace behind the least-loaded router, in virtual time.
+    // mean_s times the whole discrete-event fleet loop; the custom
+    // record below carries the routing (burst p99 per router) and
+    // autoscaling (static-vs-autoscaled replica-seconds) facts into the
+    // trajectory.
+    let s_fleet = benchkit::bench("fleet_serving", warmup, iters, || {
+        std::hint::black_box(fleet_exp::burst_cell(RouterKind::LeastLoaded).unwrap());
+    });
+    let fleet_rr = fleet_exp::burst_cell(RouterKind::RoundRobin)?;
+    let fleet_ll = fleet_exp::burst_cell(RouterKind::LeastLoaded)?;
+    let fleet_ll2 = fleet_exp::burst_cell(RouterKind::LeastLoaded)?;
+    let fleet_static = fleet_exp::diurnal_cell(false)?;
+    let fleet_auto = fleet_exp::diurnal_cell(true)?;
+    let (fleet_rr_p99, fleet_ll_p99) = (
+        fleet_rr.report.latency().p99,
+        fleet_ll.report.latency().p99,
+    );
+    println!(
+        "fleet serving (3 replicas, slow-replica burst): p99 {} round-robin -> {} \
+         least-loaded; diurnal replica-seconds {:.2} static -> {:.2} autoscaled",
+        fmt_secs(fleet_rr_p99),
+        fmt_secs(fleet_ll_p99),
+        fleet_static.replica_seconds,
+        fleet_auto.replica_seconds
+    );
+
     let summaries: Vec<Summary> = vec![
         s_serial.clone(),
         s_par.clone(),
@@ -294,6 +329,7 @@ fn main() -> anyhow::Result<()> {
         ml_ovl.clone(),
         k_scalar.clone(),
         k_best.clone(),
+        s_fleet.clone(),
     ];
     let mut t = Table::new(
         "Perf gate — engine step + sim sweep, serial vs parallel",
@@ -351,10 +387,24 @@ fn main() -> anyhow::Result<()> {
              \"a2a_s_flat\":{tt_flat:.9},\"a2a_s_topo\":{tt_topo:.9}}}",
             tt_topo
         )?;
+        // the fleet record carries the §14 routing and autoscaling facts
+        // (burst p99 per router, static-vs-autoscaled replica-seconds)
+        // alongside the fleet-loop timing (mean_s)
+        writeln!(
+            f,
+            "{{\"name\":\"fleet_serving\",\"mean_s\":{:.9},\
+             \"burst_p99_rr\":{fleet_rr_p99:.9},\"burst_p99_ll\":{fleet_ll_p99:.9},\
+             \"replica_s_static\":{:.9},\"replica_s_auto\":{:.9},\
+             \"slo_attainment_auto\":{:.9}}}",
+            s_fleet.mean_s,
+            fleet_static.replica_seconds,
+            fleet_auto.replica_seconds,
+            fleet_auto.slo_attainment()
+        )?;
     }
     println!(
         "appended {} records to {}",
-        summaries.len() + 1,
+        summaries.len() + 2,
         bench_path.display()
     );
 
@@ -409,6 +459,18 @@ fn main() -> anyhow::Result<()> {
         k_want == k_got,
         "simd backend {} diverged from the scalar oracle on the perf-gate GEMM",
         simd_best.name()
+    );
+    // fleet (DESIGN.md §14): repeated runs of the same fleet cell must
+    // be bit-exact — assignment trace, percentiles and the
+    // replica-seconds bill — always checked
+    assert!(
+        fleet_ll.report.batches == fleet_ll2.report.batches,
+        "fleet serving trace must be deterministic across runs"
+    );
+    assert!(
+        fleet_ll.report.latency().p99.to_bits() == fleet_ll2.report.latency().p99.to_bits()
+            && fleet_ll.replica_seconds.to_bits() == fleet_ll2.replica_seconds.to_bits(),
+        "fleet percentiles / replica-seconds must be bit-exact across runs"
     );
     // placement: the affinity policy must not add crossing bytes on the
     // skewed workload (DESIGN.md §9), always checked
@@ -473,6 +535,21 @@ fn main() -> anyhow::Result<()> {
             simd_best.name(),
             k_best.p50_s,
             k_scalar.p50_s
+        );
+        // fleet gates (DESIGN.md §14): deterministic virtual-time facts,
+        // but gated here with the other --check assertions. Least-loaded
+        // routing must beat round-robin on tail latency when one replica
+        // is slow, and the autoscaled diurnal fleet must bill fewer
+        // replica-seconds than the static max-size fleet.
+        assert!(
+            fleet_ll_p99 <= fleet_rr_p99,
+            "least-loaded router regressed burst p99: {fleet_ll_p99} vs round-robin {fleet_rr_p99}"
+        );
+        assert!(
+            fleet_auto.replica_seconds < fleet_static.replica_seconds,
+            "autoscaled fleet billed {} replica-seconds vs static {}",
+            fleet_auto.replica_seconds,
+            fleet_static.replica_seconds
         );
         println!("perf gate OK ({lines} trajectory records)");
     }

@@ -89,6 +89,18 @@ cargo run --release --quiet -- exp synctune --layers 6 --steps 8
 echo "==> topology gate (dice exp topology, artifact-free)"
 cargo run --release --quiet -- exp topology
 
+# Fleet gate (artifact-free, DESIGN.md §14): FAILS unless least-loaded
+# beats round-robin on burst p99 with one slow replica, the autoscaled
+# diurnal fleet matches-or-beats the static max-size fleet's SLO
+# attainment at strictly fewer replica-seconds, the staleness-aware and
+# least-loaded routers shed strictly fewer requests than round-robin
+# around a slow replica, and repeated runs are bit-exact. The fleet
+# unit/property/determinism batteries (router tie-breaks, autoscaler
+# hysteresis, 1-replica ≡ single-instance, all-dead accounting) run in
+# the tier-1 test step above.
+echo "==> fleet gate (dice exp fleet, artifact-free)"
+cargo run --release --quiet -- exp fleet
+
 # Docs gates: rustdoc warnings (broken links, bad code-block attrs) are
 # errors, and missing_docs — warn-level in the sources so local builds
 # stay friendly — is escalated to deny here so new public items cannot

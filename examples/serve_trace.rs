@@ -19,8 +19,8 @@ use dice::coordinator::{Engine, EngineConfig};
 use dice::exp::Ctx;
 use dice::netsim::CostModel;
 use dice::server::{
-    comparison_table, serve_scenarios, AdmissionPolicy, BatchPolicy, ServeConfig, ServeReport,
-    SimExecutor,
+    comparison_table, fault_preset, serve_fleet, serve_scenarios, AdmissionPolicy, BatchPolicy,
+    FleetConfig, RouterKind, ServeConfig, ServeReport, SimExecutor,
 };
 use dice::workload::Scenario;
 
@@ -95,6 +95,41 @@ fn main() -> anyhow::Result<()> {
         &rows,
     )
     .print();
+
+    // Fleet pass: the same burst trace through a multi-replica fleet
+    // (server::fleet, DESIGN.md §14), with per-replica traces — which
+    // replica served each batch — and per-replica utilisation lines.
+    let replicas = a.usize_or("replicas", 3);
+    let router = RouterKind::parse(&a.str_or("router", "least-loaded"))?;
+    let fleet_trace = scenarios[2].trace(n_requests, cm.model.n_classes, seed);
+    let horizon = fleet_trace.last().map_or(0.0, |r| r.arrival);
+    let fleet_cfg = FleetConfig::new(replicas, router, cfg)
+        .with_faults(fault_preset(&a.str_or("fault", "slow-replica"), replicas, horizon)?);
+    let ex = SimExecutor::new(cm.clone(), Strategy::SyncEp, DiceOptions::none(), devices);
+    let fleet = serve_fleet(&ex, &fleet_trace, &fleet_cfg)?;
+    println!(
+        "\n== fleet serve: {} on {replicas} replicas ({}) ==",
+        scenarios[2].name(),
+        router.name()
+    );
+    let shown = fleet.report.batches.len().min(12);
+    for b in &fleet.report.batches[..shown] {
+        println!(
+            "  t={:>7.3}s replica {} batch of {:>2} (bucket {:>2}) lat {:>6.3}s",
+            b.start,
+            b.replica,
+            b.request_ids.len(),
+            b.global_batch,
+            b.end - b.start
+        );
+    }
+    if fleet.report.batches.len() > shown {
+        println!("  ... {} more batches", fleet.report.batches.len() - shown);
+    }
+    for s in &fleet.per_replica {
+        println!("  {}", s.line());
+    }
+    println!("  {}", fleet.summary_line());
 
     // Optional real-numerics pass when the AOT artifacts are present.
     match Ctx::open() {

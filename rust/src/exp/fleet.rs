@@ -1,0 +1,398 @@
+//! Fleet-serving experiment (DESIGN.md §14): router face-offs,
+//! autoscaling economics and fault-preset shedding on the virtual-time
+//! multi-replica fleet. Artifact-free: every cell runs the
+//! [`SimExecutor`] queueing dynamics against the analytic cost model
+//! (xl / rtx4090_pcie / 8 devices, SyncEp).
+//!
+//! This is the fleet subsystem's acceptance harness: it FAILS (rather
+//! than silently reporting) unless
+//!
+//! * (a) LeastLoaded routing beats RoundRobin on p99 latency under the
+//!   burst scenario (with the slow-replica preset making blind
+//!   alternation expensive), by more than one 5% histogram bucket, and
+//!   StalenessAware beats RoundRobin too;
+//! * (b) the autoscaled fleet matches-or-beats the static max-size
+//!   fleet's SLO attainment on the diurnal scenario at strictly fewer
+//!   replica-seconds, actually scaling out for the peak;
+//! * (c) under a 4×-slow replica with tight admission queues,
+//!   LeastLoaded and StalenessAware both shed strictly fewer requests
+//!   than RoundRobin (re-route vs shed);
+//!
+//! — and unless repeated runs reproduce the burst cell's trace and
+//! percentiles exactly (the determinism contract the thread-count
+//! battery in `tests/par_determinism.rs` extends). `ci.sh` runs it on
+//! every build (`dice exp fleet`); cell parameters and expected
+//! dynamics are validated against `python/tests/test_fleet_port.py`.
+
+use anyhow::{ensure, Result};
+
+use crate::benchkit::Table;
+use crate::config::{hardware_profile, model_preset, obj, DiceOptions, Json, Strategy};
+use crate::netsim::CostModel;
+use crate::server::fleet::{fault_preset, serve_fleet, AutoscaleConfig, FleetConfig, RouterKind};
+use crate::server::report::FleetReport;
+use crate::server::{AdmissionPolicy, BatchPolicy, ServeConfig, SimExecutor};
+use crate::workload::Scenario;
+
+const N_CLASSES: usize = 1000;
+const SEED: u64 = 7;
+const STEPS: usize = 4;
+const MAX_GLOBAL: usize = 32;
+const MAX_WAIT: f64 = 0.25;
+
+// cell (a): burst + slow-replica router face-off. Loose caps keep
+// shedding rare so the routers separate on tail latency.
+const BURST_N: usize = 400;
+const BURST_RATE: f64 = 40.0;
+const BURST_CAP: usize = 48;
+const BURST_SLO: f64 = 3.0;
+
+// cell (b): diurnal autoscale-vs-static economics (LeastLoaded).
+const DIURNAL_N: usize = 800;
+const DIURNAL_RATE: f64 = 20.0;
+const DIURNAL_SLO: f64 = 8.0;
+const DIURNAL_MAX_REPLICAS: usize = 4;
+
+// cell (c): slow-replica shedding under tight admission queues.
+const SLOW_N: usize = 400;
+const SLOW_RATE: f64 = 40.0;
+const SLOW_CAP: usize = 16;
+const SLOW_SLO: f64 = 4.0;
+
+fn sim_executor() -> Result<SimExecutor> {
+    let cm = CostModel::new(model_preset("xl")?, hardware_profile("rtx4090_pcie")?);
+    Ok(SimExecutor::new(cm, Strategy::SyncEp, DiceOptions::none(), 8))
+}
+
+fn serve_cfg(capacity: Option<usize>, slo: f64) -> ServeConfig {
+    let admission = match capacity {
+        None => AdmissionPolicy::unbounded(),
+        Some(c) => AdmissionPolicy::bounded(c),
+    };
+    ServeConfig::new(
+        BatchPolicy {
+            max_global: MAX_GLOBAL,
+            max_wait: MAX_WAIT,
+        },
+        STEPS,
+        SEED,
+    )
+    .with_admission(admission)
+    .with_slo(slo)
+}
+
+/// Cell (a): the burst scenario with replica 0 running 4× slow, one
+/// fleet per router. Shared with `benches/perf_gate.rs`.
+pub fn burst_cell(router: RouterKind) -> Result<FleetReport> {
+    let ex = sim_executor()?;
+    let trace = Scenario::parse("burst", BURST_RATE)?.trace(BURST_N, N_CLASSES, SEED);
+    let cfg = FleetConfig::new(3, router, serve_cfg(Some(BURST_CAP), BURST_SLO))
+        .with_faults(fault_preset("slow-replica", 3, 0.0)?);
+    serve_fleet(&ex, &trace, &cfg)
+}
+
+/// Cell (b): the diurnal scenario on a LeastLoaded fleet — either
+/// static at the max size or autoscaled 1..max. Shared with
+/// `benches/perf_gate.rs`.
+pub fn diurnal_cell(autoscaled: bool) -> Result<FleetReport> {
+    let ex = sim_executor()?;
+    let trace = Scenario::parse("diurnal", DIURNAL_RATE)?.trace(DIURNAL_N, N_CLASSES, SEED);
+    let serve = serve_cfg(None, DIURNAL_SLO);
+    let cfg = if autoscaled {
+        FleetConfig::new(1, RouterKind::LeastLoaded, serve)
+            .with_autoscale(AutoscaleConfig::new(1, DIURNAL_MAX_REPLICAS))
+    } else {
+        FleetConfig::new(DIURNAL_MAX_REPLICAS, RouterKind::LeastLoaded, serve)
+    };
+    serve_fleet(&ex, &trace, &cfg)
+}
+
+/// Cell (c): steady overload with replica 0 running 4× slow and tight
+/// per-replica admission queues, one fleet per router.
+pub fn slow_cell(router: RouterKind) -> Result<FleetReport> {
+    let ex = sim_executor()?;
+    let trace = Scenario::parse("steady", SLOW_RATE)?.trace(SLOW_N, N_CLASSES, SEED);
+    let cfg = FleetConfig::new(3, router, serve_cfg(Some(SLOW_CAP), SLOW_SLO))
+        .with_faults(fault_preset("slow-replica", 3, 0.0)?);
+    serve_fleet(&ex, &trace, &cfg)
+}
+
+fn json_row(cell: &str, variant: &str, rep: &FleetReport) -> Json {
+    let l = rep.report.latency();
+    obj(vec![
+        ("cell", Json::Str(cell.to_string())),
+        ("variant", Json::Str(variant.to_string())),
+        ("p50_s", Json::Num(l.p50)),
+        ("p95_s", Json::Num(l.p95)),
+        ("p99_s", Json::Num(l.p99)),
+        ("goodput_rps", Json::Num(rep.report.goodput)),
+        ("slo_attainment", Json::Num(rep.slo_attainment())),
+        ("offered", Json::Num(rep.report.offered as f64)),
+        ("served", Json::Num(rep.report.served as f64)),
+        ("rejected", Json::Num(rep.report.rejected as f64)),
+        ("within_slo", Json::Num(rep.report.within_slo as f64)),
+        ("replica_seconds", Json::Num(rep.replica_seconds)),
+        ("cost_per_request_s", Json::Num(rep.cost_per_request())),
+        ("peak_replicas", Json::Num(rep.peak_replicas as f64)),
+        ("scale_outs", Json::Num(rep.scale_outs as f64)),
+        ("scale_ins", Json::Num(rep.scale_ins as f64)),
+        ("unroutable", Json::Num(rep.unroutable as f64)),
+    ])
+}
+
+fn table_row(t: &mut Table, cell: &str, variant: &str, rep: &FleetReport) {
+    let l = rep.report.latency();
+    t.row(vec![
+        cell.to_string(),
+        variant.to_string(),
+        format!("{:.2}", l.p50),
+        format!("{:.2}", l.p95),
+        format!("{:.2}", l.p99),
+        format!("{:.2}", rep.report.goodput),
+        format!("{}", rep.report.rejected),
+        format!("{:.1}", rep.replica_seconds),
+        format!("{:.3}", rep.cost_per_request()),
+        format!("{}", rep.peak_replicas),
+    ]);
+}
+
+/// Run the fleet acceptance harness: all three cells, gates enforced
+/// (see the module docs), table + JSON results returned for
+/// `exp/results/fleet_serving.*`.
+pub fn report() -> Result<(Table, Json)> {
+    let mut t = Table::new(
+        "Fleet serving: routers, autoscaling, fault presets",
+        &[
+            "Cell",
+            "Variant",
+            "p50 (s)",
+            "p95 (s)",
+            "p99 (s)",
+            "goodput/s",
+            "rejected",
+            "replica-s",
+            "cost/req (s)",
+            "peak",
+        ],
+    );
+    let mut rows = Vec::new();
+
+    // -- cell (a): burst router face-off ------------------------------
+    let burst: Vec<(RouterKind, FleetReport)> = RouterKind::all()
+        .into_iter()
+        .map(|r| Ok((r, burst_cell(r)?)))
+        .collect::<Result<_>>()?;
+    for (router, rep) in &burst {
+        table_row(&mut t, "burst+slow", router.name(), rep);
+        rows.push(json_row("burst+slow", router.name(), rep));
+    }
+    let p99 = |k: RouterKind| {
+        burst
+            .iter()
+            .find(|(r, _)| *r == k)
+            .expect("all routers ran")
+            .1
+            .report
+            .latency()
+            .p99
+    };
+    let (rr_p99, ll_p99, sa_p99) = (
+        p99(RouterKind::RoundRobin),
+        p99(RouterKind::LeastLoaded),
+        p99(RouterKind::StalenessAware),
+    );
+    ensure!(
+        ll_p99 < rr_p99,
+        "gate (a): LeastLoaded p99 {ll_p99:.3}s must beat RoundRobin {rr_p99:.3}s on the burst cell"
+    );
+    ensure!(
+        ll_p99 < rr_p99 / 1.05,
+        "gate (a): the LeastLoaded win ({ll_p99:.3}s vs {rr_p99:.3}s) must exceed one 5% \
+         histogram bucket"
+    );
+    ensure!(
+        sa_p99 < rr_p99,
+        "gate (a): StalenessAware p99 {sa_p99:.3}s must beat RoundRobin {rr_p99:.3}s"
+    );
+
+    // determinism: a repeated burst run must reproduce the trace and
+    // the percentile bit-for-bit
+    let again = burst_cell(RouterKind::LeastLoaded)?;
+    let base = &burst
+        .iter()
+        .find(|(r, _)| *r == RouterKind::LeastLoaded)
+        .expect("ran above")
+        .1;
+    ensure!(
+        again.report.batches == base.report.batches
+            && again.report.latency().p99.to_bits() == ll_p99.to_bits(),
+        "fleet runs must be deterministic: repeated burst cell diverged"
+    );
+
+    // -- cell (b): diurnal autoscale economics ------------------------
+    let fixed = diurnal_cell(false)?;
+    let auto = diurnal_cell(true)?;
+    table_row(&mut t, "diurnal", "static-4", &fixed);
+    table_row(&mut t, "diurnal", "autoscaled-1:4", &auto);
+    rows.push(json_row("diurnal", "static-4", &fixed));
+    rows.push(json_row("diurnal", "autoscaled-1:4", &auto));
+    ensure!(
+        auto.slo_attainment() >= fixed.slo_attainment(),
+        "gate (b): autoscaled SLO attainment {:.4} must match or beat static {:.4}",
+        auto.slo_attainment(),
+        fixed.slo_attainment()
+    );
+    ensure!(
+        auto.replica_seconds < fixed.replica_seconds,
+        "gate (b): autoscaled fleet must bill strictly fewer replica-seconds ({:.1} vs {:.1})",
+        auto.replica_seconds,
+        fixed.replica_seconds
+    );
+    ensure!(
+        auto.scale_outs > 0,
+        "gate (b): the diurnal peak must trigger at least one scale-out"
+    );
+
+    // -- cell (c): slow-replica shed-vs-reroute -----------------------
+    let slow: Vec<(RouterKind, FleetReport)> = RouterKind::all()
+        .into_iter()
+        .map(|r| Ok((r, slow_cell(r)?)))
+        .collect::<Result<_>>()?;
+    for (router, rep) in &slow {
+        table_row(&mut t, "steady+slow", router.name(), rep);
+        rows.push(json_row("steady+slow", router.name(), rep));
+    }
+    let shed = |k: RouterKind| {
+        slow.iter()
+            .find(|(r, _)| *r == k)
+            .expect("all routers ran")
+            .1
+            .report
+            .rejected
+    };
+    let (rr_shed, ll_shed, sa_shed) = (
+        shed(RouterKind::RoundRobin),
+        shed(RouterKind::LeastLoaded),
+        shed(RouterKind::StalenessAware),
+    );
+    ensure!(
+        rr_shed > 0,
+        "gate (c): RoundRobin must actually overload the slow replica's queue"
+    );
+    ensure!(
+        ll_shed < rr_shed,
+        "gate (c): LeastLoaded must shed strictly fewer requests than RoundRobin ({ll_shed} vs \
+         {rr_shed})"
+    );
+    ensure!(
+        sa_shed < rr_shed,
+        "gate (c): StalenessAware must shed strictly fewer requests than RoundRobin ({sa_shed} \
+         vs {rr_shed})"
+    );
+
+    let json = obj(vec![
+        ("experiment", Json::Str("fleet_serving".to_string())),
+        ("seed", Json::Num(SEED as f64)),
+        ("steps", Json::Num(STEPS as f64)),
+        ("burst_p99_rr_over_ll", Json::Num(rr_p99 / ll_p99)),
+        (
+            "diurnal_replica_seconds_saved",
+            Json::Num(fixed.replica_seconds - auto.replica_seconds),
+        ),
+        (
+            "slow_shed_rr_minus_ll",
+            Json::Num(rr_shed as f64 - ll_shed as f64),
+        ),
+        ("rows", Json::Arr(rows)),
+    ]);
+    Ok((t, json))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows(j: &Json) -> &Vec<Json> {
+        match j.get("rows") {
+            Some(Json::Arr(rows)) => rows,
+            _ => panic!("rows missing"),
+        }
+    }
+
+    fn row<'a>(j: &'a Json, cell: &str, variant: &str) -> &'a Json {
+        rows(j)
+            .iter()
+            .find(|r| {
+                r.get("cell").and_then(Json::as_str) == Some(cell)
+                    && r.get("variant").and_then(Json::as_str) == Some(variant)
+            })
+            .unwrap_or_else(|| panic!("row {cell}/{variant} missing"))
+    }
+
+    fn num(j: &Json, key: &str) -> f64 {
+        j.get(key).and_then(Json::as_f64).expect(key)
+    }
+
+    #[test]
+    fn fleet_gates_hold_in_json() {
+        let (_, j) = report().unwrap();
+        // gate (a) re-checked from the emitted rows
+        let rr = num(row(&j, "burst+slow", "round-robin"), "p99_s");
+        let ll = num(row(&j, "burst+slow", "least-loaded"), "p99_s");
+        let sa = num(row(&j, "burst+slow", "staleness-aware"), "p99_s");
+        assert!(ll < rr / 1.05, "ll {ll} rr {rr}");
+        assert!(sa < rr, "sa {sa} rr {rr}");
+        // gate (b)
+        let fixed = row(&j, "diurnal", "static-4");
+        let auto = row(&j, "diurnal", "autoscaled-1:4");
+        assert!(num(auto, "slo_attainment") >= num(fixed, "slo_attainment"));
+        assert!(num(auto, "replica_seconds") < num(fixed, "replica_seconds"));
+        assert!(num(auto, "scale_outs") >= 1.0);
+        assert!(num(auto, "peak_replicas") <= 4.0);
+        // gate (c)
+        let rr = num(row(&j, "steady+slow", "round-robin"), "rejected");
+        let ll = num(row(&j, "steady+slow", "least-loaded"), "rejected");
+        let sa = num(row(&j, "steady+slow", "staleness-aware"), "rejected");
+        assert!(rr > 0.0 && ll < rr && sa < rr, "rr {rr} ll {ll} sa {sa}");
+        // every cell conserves requests
+        for r in rows(&j) {
+            assert_eq!(
+                num(r, "served") + num(r, "rejected"),
+                num(r, "offered"),
+                "conservation violated in {:?}/{:?}",
+                r.get("cell"),
+                r.get("variant")
+            );
+        }
+    }
+
+    #[test]
+    fn report_is_deterministic() {
+        let (ta, ja) = report().unwrap();
+        let (tb, jb) = report().unwrap();
+        assert_eq!(ja.to_string(), jb.to_string());
+        assert_eq!(ta.render(), tb.render());
+    }
+
+    /// The cost model the cells run on, pinned at the oracle's exact
+    /// doubles (python/tests/test_fleet_port.py::
+    /// test_syncep_latency_constants) — if this drifts, the pinned
+    /// gate dynamics no longer describe the same system.
+    #[test]
+    fn sim_latency_matches_python_oracle() {
+        let mut ex = sim_executor().unwrap();
+        for (global, want) in [
+            (8usize, 0.4460577753524854f64),
+            (16, 0.7655376263163975),
+            (32, 1.4044973282442237),
+        ] {
+            let out = ex.execute(&vec![0usize; global], STEPS, 0).unwrap();
+            let rel = (out.virtual_latency - want).abs() / want;
+            assert!(
+                rel < 1e-6,
+                "bucket {global}: got {} want {want} (rel {rel:.2e})",
+                out.virtual_latency
+            );
+        }
+    }
+}

@@ -4,6 +4,7 @@
 //! `benches/*.rs` binaries are thin wrappers.
 
 pub mod compress;
+pub mod fleet;
 pub mod pipeline;
 pub mod placement;
 pub mod quality;

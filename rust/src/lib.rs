@@ -66,8 +66,10 @@
 //!   analytic payloads and measured [`moe::DispatchPlan`]s.
 //! * [`server`] — the serving stack (DESIGN.md §6): admission control,
 //!   multi-bucket dynamic batching, the virtual-time serve loop over a
-//!   [`server::BatchExecutor`] (real numerics or cost-model-only), and
-//!   latency/goodput reporting.
+//!   [`server::BatchExecutor`] (real numerics or cost-model-only),
+//!   latency/goodput reporting, and the multi-replica fleet layer
+//!   ([`server::fleet`], DESIGN.md §14) — routing, autoscaling, fault
+//!   injection and replica-seconds cost accounting.
 //! * [`exp`] — experiment drivers, one per paper table/figure plus the
 //!   extension studies ([`exp::compress`], [`exp::placement`]); the
 //!   `benches/*.rs` binaries are thin wrappers.

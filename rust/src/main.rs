@@ -11,7 +11,8 @@
 //!   exp <name> [...]           run an experiment driver (table1, table2,
 //!                              table3, table4, table5, fig2, fig4, fig9,
 //!                              fig10, fig14, motivation, compress,
-//!                              placement, pipeline, synctune, topology)
+//!                              placement, pipeline, synctune, topology,
+//!                              fleet)
 
 use anyhow::{bail, Result};
 
@@ -21,7 +22,10 @@ use dice::config::{hardware_profile, model_preset, DiceOptions, SelectiveSync, S
 use dice::coordinator::{simulate, Engine, EngineConfig, SyncTuner};
 use dice::exp::{self, Ctx};
 use dice::netsim::{CostModel, Topology, Workload};
-use dice::server::{serve_sim, serve_with, AdmissionPolicy, BatchPolicy, EngineExecutor, ServeConfig};
+use dice::server::{
+    fault_preset, serve_fleet, serve_sim, serve_with, AdmissionPolicy, AutoscaleConfig,
+    BatchPolicy, EngineExecutor, FleetConfig, RouterKind, ServeConfig, SimExecutor,
+};
 use dice::workload::{scenarios, Scenario};
 
 fn usage() -> String {
@@ -34,6 +38,10 @@ fn usage() -> String {
          dice serve    --requests 64 --rate 2.0 --strategy interweaved \\\n\
          \x20             --scenario steady [--sim] [--queue-cap N] [--slo SECONDS]\n\
          \x20             [--compress none|identity|int8|topk] [--placement ...]\n\
+         \x20             [--replicas N] [--router round-robin|least-loaded|staleness-aware]\n\
+         \x20             [--autoscale MIN:MAX] [--fault none|flash-crowd|slow-replica|\n\
+         \x20             dead-replica|rolling-restart] [--warmup-batches K]\n\
+         \x20             (fleet knobs need --sim; replicas clone the cost-model executor)\n\
          dice sim      --model xl --hw rtx4090_pcie --batch 16 --devices 8 [--compress int8]\n\
          \x20             [--placement contiguous|load|affinity]\n\
          dice exp      table1 --samples 256\n\
@@ -46,6 +54,9 @@ fn usage() -> String {
          \x20                              deep/shallow heuristics (artifact-free)\n\
          dice exp      topology            hierarchical multi-node placement\n\
          \x20                              acceptance harness (artifact-free)\n\
+         dice exp      fleet               multi-replica fleet serving acceptance\n\
+         \x20                              harness: router face-off, autoscaling\n\
+         \x20                              economics, fault presets (artifact-free)\n\
          \n\
          global: --threads N      worker-pool width for the execution runtime\n\
          \x20       (default: PAR_THREADS env, else all cores; output is\n\
@@ -225,6 +236,51 @@ fn main() -> Result<()> {
             if cap != usize::MAX {
                 cfg = cfg.with_admission(AdmissionPolicy::bounded(cap));
             }
+            // Fleet mode (DESIGN.md §14): any fleet knob routes the run
+            // through the multi-replica loop. Requires --sim — replicas
+            // clone the cost-model executor, while the engine executor
+            // borrows the single artifact runtime.
+            let replicas = a.usize_or("replicas", 1);
+            let fleet_mode = replicas != 1
+                || a.get("router").is_some()
+                || a.get("autoscale").is_some()
+                || a.get("fault").is_some();
+            if fleet_mode {
+                if !a.flag("sim") {
+                    bail!(
+                        "fleet serving (--replicas/--router/--autoscale/--fault) requires --sim"
+                    );
+                }
+                let devices = a.usize_or("devices", 8);
+                let seed = a.u64_or("seed", 42);
+                let sync = resolve_selective(&a, strategy, cm.model.n_layers)?;
+                let opts = with_measured_placement(opts_from(&a, sync)?, &cm.model, devices, seed);
+                let trace = scenario.trace(n_requests, cm.model.n_classes, seed);
+                let router = RouterKind::parse(&a.str_or("router", "round-robin"))?;
+                let mut fcfg = FleetConfig::new(replicas, router, cfg)
+                    .with_warmup_batches(a.usize_or("warmup-batches", 1));
+                if let Some(spec) = a.get("autoscale") {
+                    fcfg = fcfg.with_autoscale(AutoscaleConfig::parse(spec)?);
+                }
+                let horizon = trace.last().map(|r| r.arrival).unwrap_or(0.0);
+                fcfg =
+                    fcfg.with_faults(fault_preset(&a.str_or("fault", "none"), replicas, horizon)?);
+                let ex = SimExecutor::new(cm.clone(), strategy, opts, devices);
+                let rep = serve_fleet(&ex, &trace, &fcfg)?;
+                println!("{}", rep.report.metrics.render());
+                for s in &rep.per_replica {
+                    println!("{}", s.line());
+                }
+                println!(
+                    "[{} x {} x {} replicas ({})] {}",
+                    scenario.name(),
+                    strategy.name(),
+                    replicas,
+                    router.name(),
+                    rep.summary_line()
+                );
+                return Ok(());
+            }
             let rep = if a.flag("sim") {
                 // Cost-model-only serving: no artifacts required.
                 let devices = a.usize_or("devices", 8);
@@ -378,6 +434,11 @@ fn main() -> Result<()> {
                     )?;
                     t.print();
                     exp::write_results("topology_placement", &t.render(), &j)?;
+                }
+                "fleet" => {
+                    let (t, j) = exp::fleet::report()?;
+                    t.print();
+                    exp::write_results("fleet_serving", &t.render(), &j)?;
                 }
                 "synctune" => {
                     let (t, j) = exp::synctune::report(

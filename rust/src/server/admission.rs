@@ -55,7 +55,12 @@ impl Default for AdmissionPolicy {
 }
 
 /// Bounded FIFO queue with admit/reject accounting.
-#[derive(Debug)]
+///
+/// `Clone` is part of the contract: the fleet loop
+/// ([`crate::server::fleet::serve_fleet`]) builds each batch on a
+/// *trial* clone and swaps it in only when the dispatch commits before
+/// the next global event.
+#[derive(Debug, Clone)]
 pub struct AdmissionController {
     policy: AdmissionPolicy,
     queue: VecDeque<Request>,

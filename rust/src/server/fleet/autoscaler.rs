@@ -1,0 +1,207 @@
+//! Queue-depth autoscaler with idle scale-in and cooldown hysteresis
+//! (DESIGN.md §14).
+//!
+//! The policy is a *pure* step function — [`decide`] maps one tick's
+//! observations (alive count, total queued work, per-replica idle
+//! runs, cooldown) to a [`Decision`] — so it is unit-testable against
+//! the Python oracle (`python/tests/test_fleet_port.py`) without
+//! running a fleet. The fleet applies the decision and owns the
+//! cooldown bookkeeping.
+
+use anyhow::{bail, Result};
+
+/// Autoscaler thresholds and hysteresis knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AutoscaleConfig {
+    /// Fleet never shrinks below this many replicas (>= 1).
+    pub min_replicas: usize,
+    /// Fleet never grows beyond this many replicas.
+    pub max_replicas: usize,
+    /// Virtual seconds between autoscaler ticks.
+    pub tick: f64,
+    /// Scale out when total queued work reaches `out_queue` requests
+    /// per alive replica.
+    pub out_queue: f64,
+    /// Scale in a replica once it has been idle for this many
+    /// consecutive ticks.
+    pub idle_ticks: usize,
+    /// Ticks to hold after any scale action before acting again
+    /// (hysteresis: prevents out/in flapping on a bursty queue).
+    pub cooldown_ticks: usize,
+}
+
+impl AutoscaleConfig {
+    /// Bounds with the default cadence: tick 0.5s, scale-out at 8
+    /// queued per replica, scale-in after 8 idle ticks, 4-tick
+    /// cooldown.
+    pub fn new(min_replicas: usize, max_replicas: usize) -> AutoscaleConfig {
+        AutoscaleConfig {
+            min_replicas,
+            max_replicas,
+            tick: 0.5,
+            out_queue: 8.0,
+            idle_ticks: 8,
+            cooldown_ticks: 4,
+        }
+    }
+
+    /// Parse the CLI `--autoscale MIN:MAX` spec. Malformed specs and
+    /// `min > max` (or `min == 0`) bounds are rejected loudly.
+    pub fn parse(spec: &str) -> Result<AutoscaleConfig> {
+        let Some((lo, hi)) = spec.split_once(':') else {
+            bail!("--autoscale expects MIN:MAX (e.g. 1:4), got {spec:?}");
+        };
+        let (Ok(min), Ok(max)) = (lo.trim().parse::<usize>(), hi.trim().parse::<usize>()) else {
+            bail!("--autoscale expects MIN:MAX (e.g. 1:4), got {spec:?}");
+        };
+        let cfg = AutoscaleConfig::new(min, max);
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Check `1 <= min_replicas <= max_replicas`.
+    pub fn validate(&self) -> Result<()> {
+        if self.min_replicas < 1 || self.min_replicas > self.max_replicas {
+            bail!(
+                "min_replicas must be in [1, max_replicas]: got min {} max {}",
+                self.min_replicas,
+                self.max_replicas
+            );
+        }
+        Ok(())
+    }
+}
+
+/// One autoscaler step outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    /// No change this tick.
+    Hold,
+    /// Spawn one replica (queue pressure over threshold, below max).
+    ScaleOut,
+    /// Retire the given replica id (idle past the threshold, above
+    /// min). The highest-id idle replica goes first so low ids — the
+    /// warm core of the fleet — survive longest.
+    ScaleIn(usize),
+}
+
+/// Pure autoscaler step. `idle_runs` holds `(replica_id, consecutive
+/// idle ticks)` for each *alive* replica; `cooldown > 0` forces
+/// [`Decision::Hold`] (the fleet decrements it per tick). Scale-out
+/// wins over scale-in when both would fire.
+pub fn decide(
+    cfg: &AutoscaleConfig,
+    alive: usize,
+    queued: usize,
+    idle_runs: &[(usize, usize)],
+    cooldown: usize,
+) -> Decision {
+    if cooldown > 0 {
+        return Decision::Hold;
+    }
+    if alive < cfg.max_replicas && queued as f64 >= cfg.out_queue * alive as f64 {
+        return Decision::ScaleOut;
+    }
+    if alive > cfg.min_replicas {
+        let idlest = idle_runs
+            .iter()
+            .filter(|&&(_, run)| run >= cfg.idle_ticks)
+            .map(|&(id, _)| id)
+            .max();
+        if let Some(id) = idlest {
+            return Decision::ScaleIn(id);
+        }
+    }
+    Decision::Hold
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn cfg() -> AutoscaleConfig {
+        AutoscaleConfig {
+            min_replicas: 1,
+            max_replicas: 4,
+            tick: 0.5,
+            out_queue: 8.0,
+            idle_ticks: 3,
+            cooldown_ticks: 2,
+        }
+    }
+
+    // Pinned against python/tests/test_fleet_port.py::
+    // test_autoscaler_decision_vectors.
+    #[test]
+    fn pinned_decision_vectors() {
+        let c = cfg();
+        let busy = [(0usize, 0usize), (1, 0)];
+        // at threshold (16 queued / 2 alive = 8 per replica) -> out
+        assert_eq!(decide(&c, 2, 16, &busy, 0), Decision::ScaleOut);
+        // just under threshold -> hold
+        assert_eq!(decide(&c, 2, 15, &busy, 0), Decision::Hold);
+        // at max replicas: queue pressure cannot scale out
+        assert_eq!(decide(&c, 4, 99, &busy, 0), Decision::Hold);
+        // cooldown forces hold even at threshold
+        assert_eq!(decide(&c, 2, 16, &busy, 1), Decision::Hold);
+        // two idle candidates -> retire the highest id
+        assert_eq!(
+            decide(&c, 3, 0, &[(0, 3), (1, 2), (2, 3)], 0),
+            Decision::ScaleIn(2)
+        );
+        // at min replicas: idleness cannot scale in
+        assert_eq!(decide(&c, 1, 0, &[(0, 99)], 0), Decision::Hold);
+        // idle runs below the threshold -> hold
+        assert_eq!(decide(&c, 2, 0, &[(0, 2), (1, 2)], 0), Decision::Hold);
+    }
+
+    #[test]
+    fn decisions_respect_bounds_and_monotonicity() {
+        let c = cfg();
+        let mut rng = Rng::new(0xD1CE);
+        for _ in 0..500 {
+            let alive = 1 + rng.below(6);
+            let queued = rng.below(64);
+            let idle_runs: Vec<(usize, usize)> =
+                (0..alive).map(|id| (id, rng.below(6))).collect();
+            let cooldown = rng.below(3);
+            let d = decide(&c, alive, queued, &idle_runs, cooldown);
+            match d {
+                Decision::ScaleOut => {
+                    assert!(alive < c.max_replicas);
+                    assert!(queued as f64 >= c.out_queue * alive as f64);
+                    assert_eq!(cooldown, 0);
+                }
+                Decision::ScaleIn(id) => {
+                    assert!(alive > c.min_replicas);
+                    assert!(idle_runs.iter().any(|&(i, run)| i == id && run >= c.idle_ticks));
+                    assert_eq!(cooldown, 0);
+                }
+                Decision::Hold => {}
+            }
+            // monotone in load: more queued work never turns a
+            // scale-out into a hold/scale-in
+            if d == Decision::ScaleOut {
+                assert_eq!(
+                    decide(&c, alive, queued + 10, &idle_runs, cooldown),
+                    Decision::ScaleOut
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parse_accepts_min_max_and_rejects_garbage() {
+        let a = AutoscaleConfig::parse("1:4").unwrap();
+        assert_eq!((a.min_replicas, a.max_replicas), (1, 4));
+        assert_eq!(a, AutoscaleConfig::new(1, 4));
+        for bad in ["4", "1:x", ":", "", "2,4"] {
+            assert!(AutoscaleConfig::parse(bad).is_err(), "{bad:?} must fail");
+        }
+        // min > max and min == 0 rejected loudly
+        let err = AutoscaleConfig::parse("3:2").unwrap_err().to_string();
+        assert!(err.contains("min_replicas must be in [1, max_replicas]"), "{err}");
+        assert!(AutoscaleConfig::parse("0:2").is_err());
+    }
+}

@@ -1,0 +1,147 @@
+//! First-class fault-injection presets for fleet scenarios
+//! (DESIGN.md §14).
+//!
+//! Faults are data, not callbacks: each [`Fault`] names a replica and
+//! a virtual time, the fleet merges them into its event loop (after
+//! arrivals at the same instant, before autoscaler ticks), and the
+//! presets give the acceptance harness its vocabulary — flash crowd,
+//! one slow replica, one dead replica, rolling restart.
+
+use anyhow::{bail, Result};
+
+/// Legal preset names, for CLI help and error messages.
+pub const FAULT_PRESETS: &str = "none | flash-crowd | slow-replica | dead-replica | rolling-restart";
+
+/// One injected fault at a virtual-time instant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Fault {
+    /// From `at` on, the replica's batch latencies are multiplied by
+    /// `factor` (a degraded-but-alive straggler).
+    Slow {
+        /// Target replica id.
+        replica: usize,
+        /// Virtual time the slowdown takes effect.
+        at: f64,
+        /// Latency multiplier (> 1 is slower).
+        factor: f64,
+    },
+    /// The replica dies at `at`: its queued and pending requests are
+    /// re-routed (or shed when no replica is alive) and it serves
+    /// nothing afterwards.
+    Dead {
+        /// Target replica id.
+        replica: usize,
+        /// Virtual time of the failure.
+        at: f64,
+    },
+    /// The replica goes down at `at` and comes back `down` virtual
+    /// seconds later, paying the warm-up price on revival.
+    Restart {
+        /// Target replica id.
+        replica: usize,
+        /// Virtual time the restart begins.
+        at: f64,
+        /// Downtime in virtual seconds.
+        down: f64,
+    },
+}
+
+impl Fault {
+    /// Replica the fault targets.
+    pub fn replica(&self) -> usize {
+        match *self {
+            Fault::Slow { replica, .. }
+            | Fault::Dead { replica, .. }
+            | Fault::Restart { replica, .. } => replica,
+        }
+    }
+
+    /// Virtual time the fault fires (restarts: when the replica goes
+    /// down).
+    pub fn at(&self) -> f64 {
+        match *self {
+            Fault::Slow { at, .. } | Fault::Dead { at, .. } | Fault::Restart { at, .. } => at,
+        }
+    }
+}
+
+/// Expand a named preset into concrete faults for a fleet of
+/// `replicas` replicas over a trace spanning `horizon` virtual
+/// seconds. `none` and `flash-crowd` inject nothing (a flash crowd is
+/// a workload shape — use the burst scenario — not a replica fault);
+/// unknown names are rejected loudly.
+pub fn fault_preset(name: &str, replicas: usize, horizon: f64) -> Result<Vec<Fault>> {
+    match name {
+        "none" | "flash-crowd" => Ok(Vec::new()),
+        "slow-replica" => Ok(vec![Fault::Slow {
+            replica: 0,
+            at: 0.0,
+            factor: 4.0,
+        }]),
+        "dead-replica" => Ok(vec![Fault::Dead {
+            replica: 0,
+            at: horizon * 0.25,
+        }]),
+        "rolling-restart" => Ok((0..replicas)
+            .map(|r| Fault::Restart {
+                replica: r,
+                at: horizon * (r + 1) as f64 / (replicas + 1) as f64,
+                down: horizon * 0.05,
+            })
+            .collect()),
+        _ => bail!("unknown fault preset {name:?} (expected {FAULT_PRESETS})"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Shapes pinned against python/tests/test_fleet_port.py::
+    // test_fault_presets.
+    #[test]
+    fn presets_expand_to_expected_shapes() {
+        assert!(fault_preset("none", 3, 8.0).unwrap().is_empty());
+        assert!(fault_preset("flash-crowd", 3, 8.0).unwrap().is_empty());
+        assert_eq!(
+            fault_preset("slow-replica", 3, 8.0).unwrap(),
+            vec![Fault::Slow {
+                replica: 0,
+                at: 0.0,
+                factor: 4.0
+            }]
+        );
+        assert_eq!(
+            fault_preset("dead-replica", 3, 8.0).unwrap(),
+            vec![Fault::Dead {
+                replica: 0,
+                at: 2.0
+            }]
+        );
+        let rolling = fault_preset("rolling-restart", 3, 8.0).unwrap();
+        assert_eq!(rolling.len(), 3);
+        for (r, f) in rolling.iter().enumerate() {
+            assert_eq!(f.replica(), r);
+            assert_eq!(f.at(), 8.0 * (r + 1) as f64 / 4.0);
+            assert_eq!(
+                *f,
+                Fault::Restart {
+                    replica: r,
+                    at: f.at(),
+                    down: 0.4
+                }
+            );
+        }
+        // restarts are staggered: each replica is down alone
+        for w in rolling.windows(2) {
+            assert!(w[0].at() + 0.4 < w[1].at());
+        }
+    }
+
+    #[test]
+    fn unknown_preset_is_rejected() {
+        let err = fault_preset("chaos-monkey", 3, 8.0).unwrap_err().to_string();
+        assert!(err.contains("unknown fault preset"), "{err}");
+        assert!(err.contains("rolling-restart"), "{err}");
+    }
+}

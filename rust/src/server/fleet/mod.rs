@@ -1,0 +1,904 @@
+//! Multi-replica fleet serving: N virtual-time engine replicas behind
+//! a router, with bounded per-replica admission queues, priced
+//! warm-up, a queue-depth autoscaler and first-class fault injection
+//! (DESIGN.md §14).
+//!
+//! The fleet is a discrete-event simulation over the same virtual
+//! clock as [`super::serve_loop::serve_with`]: arrivals, fault events
+//! and autoscaler ticks are merged into one global event stream, and
+//! between consecutive events every replica independently runs the
+//! *identical* batch-formation loop as the single-instance server
+//! (admit → coalesce to `max_wait` → bucket → execute). A replica only
+//! commits a dispatch whose virtual dispatch time precedes the next
+//! global event; otherwise it parks until the event has been applied.
+//! That trial/commit discipline is what makes a 1-replica fleet
+//! reproduce `serve_with` bit-for-bit (pinned in
+//! `tests/system_edges.rs`) and fleet traces deterministic across
+//! thread counts and repeated runs (pinned in
+//! `tests/par_determinism.rs`).
+//!
+//! Every routing/aging/autoscaling rule here is validated against the
+//! executable Python oracle `python/tests/test_fleet_port.py`.
+
+pub mod autoscaler;
+pub mod faults;
+pub mod router;
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use super::admission::AdmissionController;
+use super::batcher::Batcher;
+use super::report::{FleetReport, ReplicaStats, ServeReport, ServedBatch};
+use super::serve_loop::{BatchExecutor, ServeConfig};
+use crate::coordinator::staleness::StalenessLedger;
+use crate::metrics::Registry;
+use crate::tensor::Tensor;
+use crate::workload::Request;
+
+pub use autoscaler::{decide, AutoscaleConfig, Decision};
+pub use faults::{fault_preset, Fault, FAULT_PRESETS};
+pub use router::{select, RouteScore, RouterKind, STALE_WEIGHT};
+
+/// How many recent batches feed a replica's mean displaced age (the
+/// staleness-aware router's signal). A short window keeps the signal
+/// responsive: a recovered replica stops repelling traffic after this
+/// many healthy batches.
+pub const STALE_WINDOW: usize = 8;
+
+/// Displaced-age units per unit of relative slowdown: a batch that ran
+/// `r`× its modelled baseline records age `round((r - 1) * AGE_SCALE)`
+/// in the replica's ledger (a 4× straggler batch ages 12).
+pub const AGE_SCALE: f64 = 4.0;
+
+/// Everything the fleet loop needs to know about one run.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Initial replica count (>= 1).
+    pub replicas: usize,
+    /// Replica-selection policy.
+    pub router: RouterKind,
+    /// Per-replica serve configuration (batching, admission bound,
+    /// steps, seed, SLO) — identical to the single-instance knobs.
+    pub serve: ServeConfig,
+    /// Optional autoscaler; `None` keeps the fleet at `replicas`.
+    pub autoscale: Option<AutoscaleConfig>,
+    /// Warm-up price for a cold replica, in units of one largest-
+    /// bucket batch latency. Charged as unavailability: a spawned or
+    /// revived replica cannot dispatch until the warm-up has elapsed,
+    /// while its replica-seconds meter is already running.
+    pub warmup_batches: usize,
+    /// Injected faults (see [`fault_preset`]).
+    pub faults: Vec<Fault>,
+}
+
+impl FleetConfig {
+    /// Fleet of `replicas` replicas with no autoscaler, no faults and
+    /// a one-batch warm-up price.
+    pub fn new(replicas: usize, router: RouterKind, serve: ServeConfig) -> FleetConfig {
+        FleetConfig {
+            replicas,
+            router,
+            serve,
+            autoscale: None,
+            warmup_batches: 1,
+            faults: Vec::new(),
+        }
+    }
+
+    /// Enable the autoscaler.
+    pub fn with_autoscale(mut self, a: AutoscaleConfig) -> FleetConfig {
+        self.autoscale = Some(a);
+        self
+    }
+
+    /// Inject faults.
+    pub fn with_faults(mut self, faults: Vec<Fault>) -> FleetConfig {
+        self.faults = faults;
+        self
+    }
+
+    /// Override the warm-up price (in largest-bucket batch latencies).
+    pub fn with_warmup_batches(mut self, warmup_batches: usize) -> FleetConfig {
+        self.warmup_batches = warmup_batches;
+        self
+    }
+}
+
+/// One engine replica's simulation state.
+struct Replica<E> {
+    id: usize,
+    ex: E,
+    adm: AdmissionController,
+    /// Routed-but-not-yet-admitted requests in (arrival, id) order.
+    /// The admission queue only sees them once the replica's local
+    /// clock reaches their arrival — exactly when `serve_with` would
+    /// offer them.
+    pending: VecDeque<Request>,
+    now: f64,
+    alive: bool,
+    slow: f64,
+    spawned_at: f64,
+    retired_at: Option<f64>,
+    /// Closed alive intervals, for replica-seconds accounting.
+    segments: Vec<(f64, f64)>,
+    seg_start: f64,
+    served: usize,
+    within: usize,
+    batches: usize,
+    padded: usize,
+    fresh: u64,
+    saved: u64,
+    busy_s: f64,
+    in_flight: usize,
+    in_flight_until: f64,
+    ledger: StalenessLedger,
+    idle_run: usize,
+}
+
+impl<E> Replica<E> {
+    fn new(id: usize, cfg: &FleetConfig, ex: E, spawned_at: f64, now: f64) -> Replica<E> {
+        Replica {
+            id,
+            ex,
+            adm: AdmissionController::new(cfg.serve.admission),
+            pending: VecDeque::new(),
+            now,
+            alive: true,
+            slow: 1.0,
+            spawned_at,
+            retired_at: None,
+            segments: Vec::new(),
+            seg_start: spawned_at,
+            served: 0,
+            within: 0,
+            batches: 0,
+            padded: 0,
+            fresh: 0,
+            saved: 0,
+            busy_s: 0.0,
+            in_flight: 0,
+            in_flight_until: 0.0,
+            ledger: StalenessLedger::default(),
+            idle_run: 0,
+        }
+    }
+
+    fn queued(&self) -> usize {
+        self.adm.len() + self.pending.len()
+    }
+
+    /// Instantaneous load at virtual time `t`. A replica still
+    /// executing counts its in-flight requests; a replica whose clock
+    /// is ahead of `t` with nothing in flight is *warming up* and is
+    /// priced at one full global batch — without this, least-loaded
+    /// routing dumps the whole backlog on every just-revived cold
+    /// replica.
+    fn load(&self, t: f64, max_global: usize) -> f64 {
+        let mut l = self.queued() as f64;
+        if self.in_flight_until > t {
+            l += self.in_flight as f64;
+        } else if self.now > t {
+            l += max_global as f64;
+        }
+        l
+    }
+
+    /// Mean displaced age over the last [`STALE_WINDOW`] batches.
+    fn stale_mean(&self) -> f64 {
+        let recs = &self.ledger.records;
+        let w = &recs[recs.len().saturating_sub(STALE_WINDOW)..];
+        if w.is_empty() {
+            0.0
+        } else {
+            w.iter().map(|&(_, _, age)| age).sum::<usize>() as f64 / w.len() as f64
+        }
+    }
+
+    /// Insert a re-routed request keeping `pending` in (arrival, id)
+    /// order (new arrivals append; only failover traffic lands in the
+    /// middle).
+    fn stage(&mut self, q: Request) {
+        let key = (q.arrival, q.id);
+        let mut lo = self.pending.len();
+        while lo > 0 {
+            let p = &self.pending[lo - 1];
+            if (p.arrival, p.id) <= key {
+                break;
+            }
+            lo -= 1;
+        }
+        self.pending.insert(lo, q);
+    }
+
+    fn stats(&self) -> ReplicaStats {
+        ReplicaStats {
+            id: self.id,
+            alive: self.alive,
+            spawned_at: self.spawned_at,
+            retired_at: self.retired_at,
+            up_seconds: self.segments.iter().map(|&(a, b)| b - a).sum(),
+            served: self.served,
+            rejected: self.adm.rejected(),
+            within_slo: self.within,
+            batches: self.batches,
+            padded_slots: self.padded,
+            fresh_bytes: self.fresh,
+            saved_bytes: self.saved,
+            busy_seconds: self.busy_s,
+            mean_stale_age: {
+                let recs = &self.ledger.records;
+                if recs.is_empty() {
+                    0.0
+                } else {
+                    recs.iter().map(|&(_, _, a)| a).sum::<usize>() as f64 / recs.len() as f64
+                }
+            },
+        }
+    }
+}
+
+/// Fault-stream event after restart expansion (kill + delayed revive).
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    Slow(usize, f64),
+    Kill(usize),
+    Revive(usize),
+}
+
+struct FleetSim<E: BatchExecutor + Clone> {
+    serve: ServeConfig,
+    router: RouterKind,
+    autoscale: Option<AutoscaleConfig>,
+    warmup_cost: f64,
+    proto: E,
+    batcher: Batcher,
+    usable: Vec<usize>,
+    base_lat: Vec<f64>,
+    replicas: Vec<Replica<E>>,
+    rr: usize,
+    cooldown: usize,
+    scale_outs: usize,
+    scale_ins: usize,
+    unroutable: usize,
+    peak: usize,
+    metrics: Registry,
+    batches: Vec<ServedBatch>,
+}
+
+impl<E: BatchExecutor + Clone> FleetSim<E> {
+    fn new(ex: &E, cfg: &FleetConfig) -> Result<FleetSim<E>> {
+        let batcher = Batcher::new(ex.buckets(), ex.devices(), cfg.serve.policy);
+        let usable = batcher.usable_globals();
+        // Probe the per-bucket baseline latency once on a throwaway
+        // clone: displaced ages are measured relative to it, and the
+        // warm-up price is `warmup_batches` largest-bucket latencies.
+        let mut probe = ex.clone();
+        let mut base_lat = Vec::with_capacity(usable.len());
+        for &g in &usable {
+            let out = probe.execute(&vec![0usize; g], cfg.serve.steps, 0)?;
+            base_lat.push(out.virtual_latency);
+        }
+        let warmup_cost = cfg.warmup_batches as f64 * base_lat.last().copied().unwrap_or(0.0);
+        let replicas = (0..cfg.replicas)
+            .map(|i| Replica::new(i, cfg, ex.clone(), 0.0, 0.0))
+            .collect();
+        Ok(FleetSim {
+            serve: cfg.serve,
+            router: cfg.router,
+            autoscale: cfg.autoscale,
+            warmup_cost,
+            proto: ex.clone(),
+            batcher,
+            usable,
+            base_lat,
+            replicas,
+            rr: 0,
+            cooldown: 0,
+            scale_outs: 0,
+            scale_ins: 0,
+            unroutable: 0,
+            peak: cfg.replicas,
+            metrics: Registry::default(),
+            batches: Vec::new(),
+        })
+    }
+
+    /// Route one request at virtual time `t`, or `None` when no
+    /// replica is alive.
+    fn route(&mut self, t: f64) -> Option<usize> {
+        let max_global = self.serve.policy.max_global;
+        let alive: Vec<RouteScore> = self
+            .replicas
+            .iter()
+            .filter(|r| r.alive)
+            .map(|r| RouteScore {
+                id: r.id,
+                load: r.load(t, max_global),
+                stale_age: r.stale_mean(),
+            })
+            .collect();
+        select(self.router, &mut self.rr, &alive)
+    }
+
+    /// Try to advance replica `i` by one serve-loop iteration, exactly
+    /// mirroring `serve_with`: admit everything that has arrived by
+    /// the replica's clock, coalesce until the batch fills or the
+    /// oldest admitted request times out, then dispatch. The iteration
+    /// is built on a *trial* admission controller and only committed
+    /// when its dispatch time stays strictly before `t_limit` (the
+    /// next global event); shed-only iterations (a full queue eating
+    /// arrivals) commit unconditionally since they consume no virtual
+    /// time beyond the arrivals themselves.
+    fn step_replica(&mut self, i: usize, t_limit: f64) -> Result<bool> {
+        let FleetSim {
+            serve,
+            batcher,
+            usable,
+            base_lat,
+            replicas,
+            metrics,
+            batches,
+            ..
+        } = self;
+        let r = &mut replicas[i];
+        if r.adm.is_empty() && r.pending.is_empty() {
+            return Ok(false);
+        }
+        let mut adm = r.adm.clone();
+        let mut now = r.now;
+        let mut consumed = 0usize;
+        if adm.is_empty() {
+            now = now.max(r.pending[0].arrival);
+        }
+        while consumed < r.pending.len() && r.pending[consumed].arrival <= now {
+            adm.offer(r.pending[consumed]);
+            consumed += 1;
+        }
+        if adm.is_empty() {
+            // Zero-capacity queue: the arrivals were shed; commit the
+            // shed and move the clock (at least one pending request
+            // was consumed, so this terminates).
+            for _ in 0..consumed {
+                r.pending.pop_front();
+            }
+            r.adm = adm;
+            r.now = now;
+            return Ok(true);
+        }
+        let oldest = adm.oldest_arrival().unwrap_or(now);
+        let deadline = (oldest + serve.policy.max_wait).max(now);
+        while adm.len() < serve.policy.max_global
+            && consumed < r.pending.len()
+            && r.pending[consumed].arrival <= deadline
+        {
+            now = r.pending[consumed].arrival;
+            adm.offer(r.pending[consumed]);
+            consumed += 1;
+        }
+        if adm.len() < serve.policy.max_global {
+            now = deadline; // partial batch: flush at the deadline
+        }
+        if now >= t_limit {
+            return Ok(false); // dispatch would cross the next event
+        }
+
+        // commit
+        for _ in 0..consumed {
+            r.pending.pop_front();
+        }
+        r.adm = adm;
+        metrics.observe("queue.depth", r.adm.len() as f64);
+        let pending_n = r.adm.len();
+        let global = batcher.global_bucket(pending_n);
+        let reqs = r.adm.take(pending_n.min(global));
+        let take = reqs.len();
+        r.served += take;
+
+        let mut batch_labels: Vec<usize> = reqs.iter().map(|q| q.label).collect();
+        batch_labels.resize(global, 0);
+        let seed = serve.seed ^ ((r.id as u64) << 32) ^ (r.served as u64);
+        let out = r.ex.execute(&batch_labels, serve.steps, seed)?;
+        let lat = out.virtual_latency * r.slow;
+
+        let start = now;
+        let end = now + lat;
+        r.now = end;
+
+        for q in &reqs {
+            let rl = end - q.arrival;
+            metrics.observe("request.latency", rl);
+            metrics.observe("request.queue_delay", start - q.arrival);
+            if rl <= serve.slo {
+                r.within += 1;
+            }
+        }
+        metrics.inc("batches", 1);
+        metrics.inc("requests", take as u64);
+        metrics.inc("padded_slots", (global - take) as u64);
+        metrics.inc("a2a.fresh_bytes", out.fresh_bytes);
+        metrics.inc("a2a.saved_bytes", out.saved_bytes);
+        metrics.observe("batch.virtual_latency", lat);
+
+        // displaced age relative to the probed baseline (round half
+        // up, clamped at 0): a healthy replica records 0, a straggler
+        // accumulates window pressure for the staleness-aware router
+        let base = base_lat[usable.iter().position(|&u| u == global).expect("probed bucket")];
+        let age = ((lat / base - 1.0) * AGE_SCALE + 0.5).floor().max(0.0) as usize;
+        r.ledger.record(r.batches, 0, age);
+        r.batches += 1;
+        r.padded += global - take;
+        r.fresh += out.fresh_bytes;
+        r.saved += out.saved_bytes;
+        r.busy_s += lat;
+        r.in_flight = take;
+        r.in_flight_until = end;
+        batches.push(ServedBatch {
+            request_ids: reqs.iter().map(|q| q.id).collect(),
+            global_batch: global,
+            start,
+            end,
+            replica: r.id,
+        });
+        Ok(true)
+    }
+
+    /// Run every alive replica up to (strictly before) `t_limit`.
+    fn advance_all(&mut self, t_limit: f64) -> Result<()> {
+        for i in 0..self.replicas.len() {
+            if self.replicas[i].alive {
+                while self.step_replica(i, t_limit)? {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Kill a replica at `t`: close its up-time segment (it still
+    /// finishes an in-flight batch) and fail its queued + pending
+    /// requests over to the surviving replicas — or shed them as
+    /// unroutable when none is alive.
+    fn kill(&mut self, idx: usize, t: f64) {
+        let r = &mut self.replicas[idx];
+        r.alive = false;
+        r.retired_at = Some(t);
+        r.segments.push((r.seg_start, t.max(r.in_flight_until)));
+        let n = r.adm.len();
+        let mut items: Vec<Request> = r.adm.take(n);
+        items.extend(r.pending.drain(..));
+        for q in items {
+            match self.route(t) {
+                None => self.unroutable += 1,
+                Some(id) => self.replicas[id].stage(q),
+            }
+        }
+    }
+
+    /// Revive a replica at `t`, paying the warm-up price: it is alive
+    /// (billing replica-seconds) immediately but cannot dispatch until
+    /// `t + warmup_cost`.
+    fn revive(&mut self, idx: usize, t: f64) {
+        let warmup = self.warmup_cost;
+        let r = &mut self.replicas[idx];
+        r.alive = true;
+        r.retired_at = None;
+        r.seg_start = t;
+        r.now = r.now.max(t + warmup);
+        r.idle_run = 0;
+        let alive = self.replicas.iter().filter(|x| x.alive).count();
+        self.peak = self.peak.max(alive);
+    }
+
+    /// One autoscaler tick at virtual time `t`.
+    fn tick(&mut self, t: f64, cfg: &FleetConfig) {
+        let Some(a) = self.autoscale else { return };
+        let mut alive_n = 0usize;
+        let mut queued = 0usize;
+        let mut idle_runs = Vec::new();
+        for r in &mut self.replicas {
+            if !r.alive {
+                continue;
+            }
+            alive_n += 1;
+            let idle = r.adm.is_empty() && r.pending.is_empty() && r.now <= t;
+            r.idle_run = if idle { r.idle_run + 1 } else { 0 };
+            queued += r.queued();
+            idle_runs.push((r.id, r.idle_run));
+        }
+        let dec = decide(&a, alive_n, queued, &idle_runs, self.cooldown);
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+            return;
+        }
+        match dec {
+            Decision::ScaleOut => {
+                let rid = self.replicas.len();
+                let nr = Replica::new(rid, cfg, self.proto.clone(), t, t + self.warmup_cost);
+                self.replicas.push(nr);
+                self.scale_outs += 1;
+                self.cooldown = a.cooldown_ticks;
+                self.peak = self.peak.max(alive_n + 1);
+            }
+            Decision::ScaleIn(id) => {
+                let r = &mut self.replicas[id];
+                r.alive = false;
+                r.retired_at = Some(t);
+                r.segments.push((r.seg_start, t.max(r.in_flight_until)));
+                self.scale_ins += 1;
+                self.cooldown = a.cooldown_ticks;
+            }
+            Decision::Hold => {}
+        }
+    }
+}
+
+/// Serve `trace` on a fleet of replicas cloned from `ex`, returning
+/// the aggregate [`ServeReport`] plus fleet-level accounting
+/// ([`FleetReport`]). The executor must be `Clone` so each replica
+/// (and each autoscaler spawn) gets its own instance; simulation-only
+/// executors like [`super::serve_loop::SimExecutor`] qualify.
+///
+/// Degenerate configurations are rejected loudly: a 0-replica fleet,
+/// autoscaler bounds with `min_replicas > max_replicas` (or 0), an
+/// initial size outside the bounds, and faults targeting replicas the
+/// fleet does not start with.
+pub fn serve_fleet<E: BatchExecutor + Clone>(
+    ex: &E,
+    trace: &[Request],
+    cfg: &FleetConfig,
+) -> Result<FleetReport> {
+    if cfg.replicas < 1 {
+        bail!("fleet needs at least 1 replica");
+    }
+    if let Some(a) = &cfg.autoscale {
+        a.validate()?;
+        if cfg.replicas < a.min_replicas || cfg.replicas > a.max_replicas {
+            bail!(
+                "initial replicas {} outside autoscale bounds [{}, {}]",
+                cfg.replicas,
+                a.min_replicas,
+                a.max_replicas
+            );
+        }
+    }
+    for f in &cfg.faults {
+        if f.replica() >= cfg.replicas {
+            bail!(
+                "fault targets replica {} but the fleet starts with {}",
+                f.replica(),
+                cfg.replicas
+            );
+        }
+    }
+
+    let mut sim = FleetSim::new(ex, cfg)?;
+
+    // Expand the fault list into the event stream: restarts become a
+    // kill plus a delayed revive; both sorts are stable, so ties keep
+    // the (at, replica) fault order.
+    let mut faults = cfg.faults.clone();
+    faults.sort_by(|a, b| {
+        (a.at(), a.replica())
+            .partial_cmp(&(b.at(), b.replica()))
+            .expect("fault times are finite")
+    });
+    let mut events: Vec<(f64, u8, Ev)> = Vec::new();
+    for f in &faults {
+        match *f {
+            Fault::Slow {
+                replica,
+                at,
+                factor,
+            } => events.push((at, 0, Ev::Slow(replica, factor))),
+            Fault::Dead { replica, at } => events.push((at, 0, Ev::Kill(replica))),
+            Fault::Restart { replica, at, down } => {
+                events.push((at, 0, Ev::Kill(replica)));
+                events.push((at + down, 1, Ev::Revive(replica)));
+            }
+        }
+    }
+    events.sort_by(|a, b| {
+        (a.0, a.1)
+            .partial_cmp(&(b.0, b.1))
+            .expect("event times are finite")
+    });
+
+    // Global event loop: next arrival vs next fault vs next autoscaler
+    // tick; ties break arrival < fault < tick. All replicas advance to
+    // the event time before it is applied.
+    let mut next = 0usize;
+    let mut fi = 0usize;
+    let mut tick_k = 1u64;
+    loop {
+        let t_arr = (next < trace.len()).then(|| trace[next].arrival);
+        let t_fault = (fi < events.len()).then(|| events[fi].0);
+        let t_tick = match sim.autoscale {
+            Some(a)
+                if next < trace.len()
+                    || sim
+                        .replicas
+                        .iter()
+                        .any(|r| !r.adm.is_empty() || !r.pending.is_empty()) =>
+            {
+                Some(tick_k as f64 * a.tick)
+            }
+            _ => None,
+        };
+        let mut best: Option<(f64, u8)> = None;
+        for (t, which) in [(t_arr, 0u8), (t_fault, 1), (t_tick, 2)] {
+            if let Some(t) = t {
+                if best.map_or(true, |(bt, _)| t < bt) {
+                    best = Some((t, which));
+                }
+            }
+        }
+        let Some((t, which)) = best else { break };
+        sim.advance_all(t)?;
+        match which {
+            0 => {
+                let q = trace[next];
+                next += 1;
+                match sim.route(q.arrival) {
+                    None => sim.unroutable += 1,
+                    Some(id) => sim.replicas[id].pending.push_back(q),
+                }
+            }
+            1 => {
+                let (_, _, ev) = events[fi];
+                fi += 1;
+                match ev {
+                    Ev::Slow(idx, factor) => sim.replicas[idx].slow = factor,
+                    Ev::Kill(idx) => {
+                        if sim.replicas[idx].alive {
+                            sim.kill(idx, t);
+                        }
+                    }
+                    Ev::Revive(idx) => {
+                        if !sim.replicas[idx].alive {
+                            sim.revive(idx, t);
+                        }
+                    }
+                }
+            }
+            _ => {
+                tick_k += 1;
+                sim.tick(t, cfg);
+            }
+        }
+    }
+    sim.advance_all(f64::INFINITY)?;
+
+    // Aggregate accounting. Replica-seconds bill every alive interval
+    // — including warm-up and in-flight tails — from spawn (or revive)
+    // to retirement (or the fleet's end of service).
+    let last_arrival = trace.last().map(|r| r.arrival).unwrap_or(0.0);
+    let fleet_end = sim
+        .replicas
+        .iter()
+        .map(|r| r.now)
+        .fold(last_arrival, f64::max);
+    for r in &mut sim.replicas {
+        if r.alive {
+            r.segments.push((r.seg_start, fleet_end.max(r.in_flight_until)));
+        }
+    }
+    let first = trace.first().map(|r| r.arrival).unwrap_or(0.0);
+    let span = (fleet_end - first).max(1e-9);
+    let served: usize = sim.replicas.iter().map(|r| r.served).sum();
+    let within_slo: usize = sim.replicas.iter().map(|r| r.within).sum();
+    let rejected: usize =
+        sim.replicas.iter().map(|r| r.adm.rejected()).sum::<usize>() + sim.unroutable;
+    let mut metrics = sim.metrics;
+    metrics.inc("rejected", rejected as u64);
+    let per_replica: Vec<ReplicaStats> = sim.replicas.iter().map(|r| r.stats()).collect();
+    let replica_seconds: f64 = per_replica.iter().map(|s| s.up_seconds).sum();
+    let report = ServeReport {
+        batches: sim.batches,
+        samples: Tensor::zeros(&[0]),
+        labels: Vec::new(),
+        metrics,
+        span,
+        throughput: served as f64 / span,
+        goodput: within_slo as f64 / span,
+        offered: trace.len(),
+        served,
+        rejected,
+        within_slo,
+    };
+    Ok(FleetReport {
+        report,
+        per_replica,
+        peak_replicas: sim.peak,
+        replica_seconds,
+        scale_outs: sim.scale_outs,
+        scale_ins: sim.scale_ins,
+        unroutable: sim.unroutable,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{hardware_profile, model_preset, DiceOptions, Strategy};
+    use crate::netsim::CostModel;
+    use crate::server::admission::AdmissionPolicy;
+    use crate::server::batcher::BatchPolicy;
+    use crate::server::serve_loop::SimExecutor;
+    use crate::workload::{burst_recovery_trace, poisson_trace, Scenario};
+
+    fn sim_ex() -> SimExecutor {
+        let cm = CostModel::new(
+            model_preset("xl").unwrap(),
+            hardware_profile("rtx4090_pcie").unwrap(),
+        );
+        SimExecutor::new(cm, Strategy::SyncEp, DiceOptions::none(), 8)
+    }
+
+    fn serve_cfg(capacity: Option<usize>, slo: f64) -> ServeConfig {
+        let admission = match capacity {
+            None => AdmissionPolicy::unbounded(),
+            Some(c) => AdmissionPolicy::bounded(c),
+        };
+        ServeConfig::new(
+            BatchPolicy {
+                max_global: 32,
+                max_wait: 0.25,
+            },
+            4,
+            7,
+        )
+        .with_admission(admission)
+        .with_slo(slo)
+    }
+
+    /// Satellite 4: per-replica counters must sum to the fleet totals
+    /// for every router x fault preset — no double-counting between
+    /// the per-queue and aggregate views.
+    #[test]
+    fn per_replica_counters_sum_to_fleet_totals() {
+        let ex = sim_ex();
+        let trace = Scenario::parse("burst", 30.0).unwrap().trace(200, 1000, 3);
+        for router in RouterKind::all() {
+            for preset in ["none", "slow-replica", "dead-replica", "rolling-restart"] {
+                let faults = fault_preset(preset, 3, 8.0).unwrap();
+                let cfg =
+                    FleetConfig::new(3, router, serve_cfg(Some(20), 4.0)).with_faults(faults);
+                let rep = serve_fleet(&ex, &trace, &cfg).unwrap();
+                let ctx = format!("{} x {preset}", router.name());
+                assert_eq!(
+                    rep.report.served + rep.report.rejected,
+                    rep.report.offered,
+                    "request conservation violated ({ctx})"
+                );
+                let served: usize = rep.per_replica.iter().map(|s| s.served).sum();
+                let within: usize = rep.per_replica.iter().map(|s| s.within_slo).sum();
+                let shed: usize = rep.per_replica.iter().map(|s| s.rejected).sum();
+                assert_eq!(served, rep.report.served, "served sum mismatch ({ctx})");
+                assert_eq!(within, rep.report.within_slo, "SLO sum mismatch ({ctx})");
+                assert_eq!(
+                    shed + rep.unroutable,
+                    rep.report.rejected,
+                    "rejected sum mismatch ({ctx})"
+                );
+                // every request id is served at most once
+                let mut ids: Vec<usize> = rep
+                    .report
+                    .batches
+                    .iter()
+                    .flat_map(|b| b.request_ids.iter().copied())
+                    .collect();
+                let n = ids.len();
+                ids.sort_unstable();
+                ids.dedup();
+                assert_eq!(ids.len(), n, "duplicate request ids ({ctx})");
+                assert_eq!(n, rep.report.served, "batch ids != served ({ctx})");
+                let batches: usize = rep.per_replica.iter().map(|s| s.batches).sum();
+                assert_eq!(
+                    batches as u64,
+                    rep.report.metrics.counter("batches"),
+                    "batch count sum mismatch ({ctx})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn autoscaler_scales_out_under_burst_and_back_in_when_idle() {
+        let ex = sim_ex();
+        let trace = burst_recovery_trace(160, 64, 2.0, 1000, 7);
+        let auto = AutoscaleConfig {
+            min_replicas: 1,
+            max_replicas: 4,
+            tick: 0.5,
+            out_queue: 8.0,
+            idle_ticks: 4,
+            cooldown_ticks: 2,
+        };
+        let cfg = FleetConfig::new(1, RouterKind::LeastLoaded, serve_cfg(None, f64::INFINITY))
+            .with_autoscale(auto);
+        let rep = serve_fleet(&ex, &trace, &cfg).unwrap();
+        assert!(rep.scale_outs >= 1, "burst must trigger a scale-out");
+        assert!(rep.scale_ins >= 1, "recovery idle must trigger a scale-in");
+        let alive = rep.per_replica.iter().filter(|s| s.alive).count();
+        assert_eq!(alive, 1, "fleet must shrink back to min_replicas");
+        assert!(rep.peak_replicas >= 2 && rep.peak_replicas <= 4);
+        assert_eq!(rep.report.served, rep.report.offered);
+    }
+
+    #[test]
+    fn autoscaler_does_not_flap_on_steady_load() {
+        let ex = sim_ex();
+        let trace = poisson_trace(400, 24.0, 1000, 11);
+        let cfg = FleetConfig::new(1, RouterKind::LeastLoaded, serve_cfg(None, f64::INFINITY))
+            .with_autoscale(AutoscaleConfig::new(1, 4));
+        let rep = serve_fleet(&ex, &trace, &cfg).unwrap();
+        // hysteresis: the fleet never retires more capacity than it
+        // grew (a scale-in immediately chasing every scale-out would
+        // push scale_ins past scale_outs across the run)
+        assert!(
+            rep.scale_ins <= rep.scale_outs,
+            "flapping: {} scale-ins vs {} scale-outs",
+            rep.scale_ins,
+            rep.scale_outs
+        );
+    }
+
+    #[test]
+    fn peak_replica_count_is_monotone_in_offered_load() {
+        let ex = sim_ex();
+        let mut peaks = Vec::new();
+        for rate in [4.0, 16.0, 40.0] {
+            let trace = poisson_trace(300, rate, 1000, 13);
+            let cfg = FleetConfig::new(1, RouterKind::LeastLoaded, serve_cfg(None, f64::INFINITY))
+                .with_autoscale(AutoscaleConfig::new(1, 6));
+            let rep = serve_fleet(&ex, &trace, &cfg).unwrap();
+            assert!(rep.peak_replicas <= 6, "bounds violated");
+            peaks.push(rep.peak_replicas);
+        }
+        assert!(
+            peaks.windows(2).all(|w| w[0] <= w[1]),
+            "peak replicas not monotone in load: {peaks:?}"
+        );
+        assert!(peaks[0] < peaks[2], "load sweep must separate: {peaks:?}");
+    }
+
+    #[test]
+    fn repeated_runs_are_identical() {
+        let ex = sim_ex();
+        let trace = Scenario::parse("burst", 30.0).unwrap().trace(150, 1000, 5);
+        let cfg = FleetConfig::new(3, RouterKind::StalenessAware, serve_cfg(Some(24), 3.0))
+            .with_faults(fault_preset("slow-replica", 3, 5.0).unwrap());
+        let a = serve_fleet(&ex, &trace, &cfg).unwrap();
+        let b = serve_fleet(&ex, &trace, &cfg).unwrap();
+        assert_eq!(a.report.batches, b.report.batches);
+        assert_eq!(a.report.metrics.render(), b.report.metrics.render());
+        assert_eq!(a.replica_seconds.to_bits(), b.replica_seconds.to_bits());
+    }
+
+    #[test]
+    fn degenerate_fleets_are_rejected() {
+        let ex = sim_ex();
+        let trace = poisson_trace(10, 5.0, 1000, 1);
+        let zero = FleetConfig::new(0, RouterKind::RoundRobin, serve_cfg(None, f64::INFINITY));
+        let err = serve_fleet(&ex, &trace, &zero).unwrap_err().to_string();
+        assert!(err.contains("at least 1 replica"), "{err}");
+
+        let mut bad = FleetConfig::new(2, RouterKind::RoundRobin, serve_cfg(None, f64::INFINITY));
+        bad.autoscale = Some(AutoscaleConfig::new(3, 2));
+        let err = serve_fleet(&ex, &trace, &bad).unwrap_err().to_string();
+        assert!(err.contains("min_replicas must be in"), "{err}");
+
+        let outside = FleetConfig::new(8, RouterKind::RoundRobin, serve_cfg(None, f64::INFINITY))
+            .with_autoscale(AutoscaleConfig::new(1, 4));
+        let err = serve_fleet(&ex, &trace, &outside).unwrap_err().to_string();
+        assert!(err.contains("outside autoscale bounds"), "{err}");
+
+        let bad_fault = FleetConfig::new(2, RouterKind::RoundRobin, serve_cfg(None, f64::INFINITY))
+            .with_faults(vec![Fault::Dead {
+                replica: 5,
+                at: 1.0,
+            }]);
+        let err = serve_fleet(&ex, &trace, &bad_fault).unwrap_err().to_string();
+        assert!(err.contains("fault targets replica 5"), "{err}");
+    }
+}

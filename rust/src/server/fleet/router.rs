@@ -1,0 +1,210 @@
+//! Replica-selection policies for the fleet (DESIGN.md §14).
+//!
+//! Routing is a pure function of per-replica observations sampled at
+//! the arrival's virtual time: queue depth, in-flight work, warm-up
+//! state and — for [`RouterKind::StalenessAware`] — the mean displaced
+//! age over the replica's recent
+//! [`crate::coordinator::StalenessLedger`] window. All three policies
+//! break score ties toward the lowest replica id (strict `<` while
+//! scanning in id order), which is what makes fleet traces
+//! reproducible across runs and thread counts.
+
+use anyhow::{bail, Result};
+
+/// Weight applied to the mean displaced age in the
+/// [`RouterKind::StalenessAware`] score. One unit of mean age counts
+/// as this many queued requests, so a replica whose recent batches ran
+/// far above their modelled baseline sheds traffic even when its queue
+/// looks short.
+pub const STALE_WEIGHT: f64 = 4.0;
+
+/// Which replica-selection policy the fleet runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterKind {
+    /// Cycle through the alive replicas in id order.
+    RoundRobin,
+    /// Pick the replica with the smallest instantaneous load (queued +
+    /// in-flight, with cold replicas priced at a full batch).
+    LeastLoaded,
+    /// [`RouterKind::LeastLoaded`] plus a displaced-age penalty read
+    /// off each replica's staleness ledger ([`STALE_WEIGHT`] per unit
+    /// of mean age) — routes away from replicas whose recent batches
+    /// ran slow.
+    StalenessAware,
+}
+
+impl RouterKind {
+    /// Parse a CLI router name. Unknown names are rejected loudly.
+    pub fn parse(name: &str) -> Result<RouterKind> {
+        match name {
+            "round-robin" => Ok(RouterKind::RoundRobin),
+            "least-loaded" => Ok(RouterKind::LeastLoaded),
+            "staleness-aware" => Ok(RouterKind::StalenessAware),
+            _ => bail!(
+                "unknown router {name:?} (expected round-robin | least-loaded | staleness-aware)"
+            ),
+        }
+    }
+
+    /// Canonical CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterKind::RoundRobin => "round-robin",
+            RouterKind::LeastLoaded => "least-loaded",
+            RouterKind::StalenessAware => "staleness-aware",
+        }
+    }
+
+    /// All routers, in comparison-table order.
+    pub fn all() -> [RouterKind; 3] {
+        [
+            RouterKind::RoundRobin,
+            RouterKind::LeastLoaded,
+            RouterKind::StalenessAware,
+        ]
+    }
+}
+
+/// Per-replica observation the router scores. Sampled from the fleet
+/// at the routing instant; one entry per *alive* replica, in id order.
+#[derive(Debug, Clone, Copy)]
+pub struct RouteScore {
+    /// Replica id (stable across the run; ids are never reused).
+    pub id: usize,
+    /// Instantaneous load: queued + in-flight requests, with a warming
+    /// replica priced at one full global batch.
+    pub load: f64,
+    /// Mean displaced age over the replica's recent ledger window.
+    pub stale_age: f64,
+}
+
+/// Select a replica id from the alive set, or `None` when no replica
+/// is alive. `rr` is the round-robin cursor; it advances only on
+/// [`RouterKind::RoundRobin`] routes so the alternation survives
+/// replicas dying and reviving mid-run.
+pub fn select(kind: RouterKind, rr: &mut usize, alive: &[RouteScore]) -> Option<usize> {
+    if alive.is_empty() {
+        return None;
+    }
+    match kind {
+        RouterKind::RoundRobin => {
+            let pick = alive[*rr % alive.len()].id;
+            *rr += 1;
+            Some(pick)
+        }
+        RouterKind::LeastLoaded => Some(argmin(alive, |s| s.load)),
+        RouterKind::StalenessAware => Some(argmin(alive, |s| s.load + STALE_WEIGHT * s.stale_age)),
+    }
+}
+
+/// Lowest-id entry with the strictly smallest score (strict `<` in id
+/// order keeps ties on the lowest id — the determinism contract).
+fn argmin(alive: &[RouteScore], score: impl Fn(&RouteScore) -> f64) -> usize {
+    let mut best = alive[0].id;
+    let mut best_score = score(&alive[0]);
+    for s in &alive[1..] {
+        let v = score(s);
+        if v < best_score {
+            best = s.id;
+            best_score = v;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scores(loads: &[f64]) -> Vec<RouteScore> {
+        loads
+            .iter()
+            .enumerate()
+            .map(|(id, &load)| RouteScore {
+                id,
+                load,
+                stale_age: 0.0,
+            })
+            .collect()
+    }
+
+    // Pinned against python/tests/test_fleet_port.py::test_router_tie_breaks.
+    #[test]
+    fn least_loaded_ties_break_to_lowest_id() {
+        let mut rr = 0;
+        // all empty -> 0
+        assert_eq!(
+            select(RouterKind::LeastLoaded, &mut rr, &scores(&[0.0, 0.0, 0.0])),
+            Some(0)
+        );
+        // replica 0 loaded -> 1
+        assert_eq!(
+            select(RouterKind::LeastLoaded, &mut rr, &scores(&[1.0, 0.0, 0.0])),
+            Some(1)
+        );
+        // three-way tie at nonzero load -> 0
+        assert_eq!(
+            select(RouterKind::LeastLoaded, &mut rr, &scores(&[1.0, 1.0, 1.0])),
+            Some(0)
+        );
+        assert_eq!(rr, 0, "least-loaded must not advance the rr cursor");
+    }
+
+    #[test]
+    fn round_robin_cycles_and_skips_dead() {
+        let mut rr = 0;
+        let all = scores(&[0.0, 0.0, 0.0]);
+        let picks: Vec<_> = (0..5)
+            .map(|_| select(RouterKind::RoundRobin, &mut rr, &all).unwrap())
+            .collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1]);
+        // replica 1 dies; the cursor keeps counting over the alive set
+        let alive: Vec<RouteScore> = all.iter().copied().filter(|s| s.id != 1).collect();
+        let picks: Vec<_> = (0..3)
+            .map(|_| select(RouterKind::RoundRobin, &mut rr, &alive).unwrap())
+            .collect();
+        assert_eq!(picks, vec![2, 0, 2]);
+    }
+
+    #[test]
+    fn staleness_aware_routes_away_from_aged_replica() {
+        let mut rr = 0;
+        // equal load, replica 0 carries mean displaced age 12
+        let alive = vec![
+            RouteScore {
+                id: 0,
+                load: 0.0,
+                stale_age: 12.0,
+            },
+            RouteScore {
+                id: 1,
+                load: 0.0,
+                stale_age: 0.0,
+            },
+        ];
+        assert_eq!(select(RouterKind::StalenessAware, &mut rr, &alive), Some(1));
+        // zero ages degrade to least-loaded tie-breaking
+        assert_eq!(
+            select(RouterKind::StalenessAware, &mut rr, &scores(&[2.0, 2.0])),
+            Some(0)
+        );
+    }
+
+    #[test]
+    fn no_alive_replicas_routes_nowhere() {
+        let mut rr = 7;
+        for kind in RouterKind::all() {
+            assert_eq!(select(kind, &mut rr, &[]), None);
+        }
+    }
+
+    #[test]
+    fn parse_round_trips_and_rejects_unknown() {
+        for kind in RouterKind::all() {
+            assert_eq!(RouterKind::parse(kind.name()).unwrap(), kind);
+        }
+        let err = RouterKind::parse("fastest").unwrap_err().to_string();
+        assert!(err.contains("unknown router"), "{err}");
+        assert!(err.contains("least-loaded"), "{err}");
+    }
+}

@@ -15,7 +15,13 @@
 //!   the engine reports post-codec wire bytes, the sim executor the
 //!   analytic equivalent.
 //! * [`report`] — [`ServeReport`] with p50/p95/p99 latency, throughput
-//!   and SLO goodput, plus the cross-strategy comparison table.
+//!   and SLO goodput, plus the cross-strategy comparison table and the
+//!   fleet-level [`FleetReport`] (per-replica slices, replica-seconds
+//!   cost).
+//! * [`fleet`] — multi-replica serving (DESIGN.md §14): N replicas
+//!   behind a router (round-robin / least-loaded / staleness-aware),
+//!   per-replica admission queues, priced warm-up, a queue-depth
+//!   autoscaler with hysteresis, and first-class fault presets.
 //!
 //! Batches are generated with real numerics where artifacts exist,
 //! while per-batch latency always comes from the strategy's
@@ -30,12 +36,18 @@
 
 pub mod admission;
 pub mod batcher;
+pub mod fleet;
 pub mod report;
 pub mod serve_loop;
 
 pub use admission::{AdmissionController, AdmissionPolicy};
 pub use batcher::{pick_bucket, BatchPolicy, Batcher};
-pub use report::{comparison_table, LatencySummary, ServeReport, ServedBatch};
+pub use fleet::{
+    fault_preset, serve_fleet, AutoscaleConfig, Fault, FleetConfig, RouterKind, FAULT_PRESETS,
+};
+pub use report::{
+    comparison_table, FleetReport, LatencySummary, ReplicaStats, ServeReport, ServedBatch,
+};
 pub use serve_loop::{
     serve, serve_scenarios, serve_sim, serve_with, BatchExecutor, EngineExecutor, ExecOutcome,
     ServeConfig, SimExecutor,

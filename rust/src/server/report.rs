@@ -11,7 +11,7 @@ use crate::metrics::Registry;
 use crate::tensor::Tensor;
 
 /// One dispatched batch (for inspection / tests).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ServedBatch {
     /// Ids of the real requests in the batch (padding excluded).
     pub request_ids: Vec<usize>,
@@ -21,6 +21,8 @@ pub struct ServedBatch {
     pub start: f64,
     /// Virtual time the batch completed.
     pub end: f64,
+    /// Replica that executed the batch (0 for single-instance serving).
+    pub replica: usize,
 }
 
 /// Outcome of one serve-loop run.
@@ -50,6 +52,14 @@ pub struct ServeReport {
     pub served: usize,
     /// Requests shed by admission control.
     pub rejected: usize,
+    /// Served requests that completed within the latency SLO (the
+    /// numerator of `goodput`; equals `served` when no SLO is set).
+    /// Kept as a count so fleet aggregation can sum per-replica
+    /// contributions instead of re-deriving them from rates — the
+    /// single-instance report used to expose only the `goodput` rate,
+    /// which cannot be summed across queues without double-counting
+    /// the shared denominator.
+    pub within_slo: usize,
 }
 
 /// Latency distribution summary (virtual seconds).
@@ -117,6 +127,130 @@ impl ServeReport {
     }
 }
 
+/// Per-replica accounting slice of a fleet run (ids are stable for
+/// the whole run; autoscaler-retired replicas stay in the list with
+/// `alive == false`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplicaStats {
+    /// Replica id (also the `ServedBatch::replica` tag).
+    pub id: usize,
+    /// Whether the replica was still alive at the end of the run.
+    pub alive: bool,
+    /// Virtual time the replica was (first) spawned.
+    pub spawned_at: f64,
+    /// Virtual time the replica was retired or killed, if it was.
+    pub retired_at: Option<f64>,
+    /// Total alive virtual seconds (sum over spawn/revive..retire
+    /// intervals, warm-up and in-flight tails included) — the
+    /// replica's contribution to the fleet's replica-seconds bill.
+    pub up_seconds: f64,
+    /// Requests this replica served.
+    pub served: usize,
+    /// Requests this replica's admission queue shed.
+    pub rejected: usize,
+    /// Served requests that met the latency SLO.
+    pub within_slo: usize,
+    /// Batches this replica dispatched.
+    pub batches: usize,
+    /// Padding slots across this replica's batches.
+    pub padded_slots: usize,
+    /// All-to-all bytes actually shipped by this replica.
+    pub fresh_bytes: u64,
+    /// All-to-all bytes skipped by reuse on this replica.
+    pub saved_bytes: u64,
+    /// Virtual seconds spent executing batches (vs idling).
+    pub busy_seconds: f64,
+    /// Mean displaced age over every batch the replica ran (the
+    /// windowed version of this signal drives staleness-aware
+    /// routing).
+    pub mean_stale_age: f64,
+}
+
+impl ReplicaStats {
+    /// One-line per-replica trace summary.
+    pub fn line(&self) -> String {
+        let state = match (self.alive, self.retired_at) {
+            (true, _) => "alive".to_string(),
+            (false, Some(t)) => format!("down@{t:.1}s"),
+            (false, None) => "down".to_string(),
+        };
+        format!(
+            "replica {:>2} [{:>9}] served {:>4} (shed {:>3}, {:>4} in SLO) in {:>3} batches, \
+             up {:>6.1}s busy {:>6.1}s, mean stale age {:.2}",
+            self.id,
+            state,
+            self.served,
+            self.rejected,
+            self.within_slo,
+            self.batches,
+            self.up_seconds,
+            self.busy_seconds,
+            self.mean_stale_age
+        )
+    }
+}
+
+/// Outcome of one fleet run: the aggregate [`ServeReport`] plus
+/// fleet-level accounting (per-replica slices, autoscaler actions and
+/// the replica-seconds cost meter).
+#[derive(Debug)]
+pub struct FleetReport {
+    /// Aggregate report over every replica. `batches` carries the
+    /// replica tag; counters and histograms pool all replicas.
+    pub report: ServeReport,
+    /// Per-replica accounting, in replica-id order (retired replicas
+    /// included).
+    pub per_replica: Vec<ReplicaStats>,
+    /// Most replicas simultaneously alive at any point of the run.
+    pub peak_replicas: usize,
+    /// Total replica-seconds billed (the fleet's cost meter: every
+    /// alive interval, warm-up included).
+    pub replica_seconds: f64,
+    /// Autoscaler scale-out actions taken.
+    pub scale_outs: usize,
+    /// Autoscaler scale-in actions taken.
+    pub scale_ins: usize,
+    /// Requests shed because no replica was alive to route to (counted
+    /// in `report.rejected` as well).
+    pub unroutable: usize,
+}
+
+impl FleetReport {
+    /// Fraction of offered requests that completed within the SLO, in
+    /// [0, 1]. Unlike `goodput` (a rate), this is comparable across
+    /// runs whose spans differ.
+    pub fn slo_attainment(&self) -> f64 {
+        if self.report.offered == 0 {
+            return 0.0;
+        }
+        self.report.within_slo as f64 / self.report.offered as f64
+    }
+
+    /// Replica-seconds spent per served request (the cost-per-request
+    /// metric the autoscaler is judged on); 0 when nothing was served.
+    pub fn cost_per_request(&self) -> f64 {
+        if self.report.served == 0 {
+            return 0.0;
+        }
+        self.replica_seconds / self.report.served as f64
+    }
+
+    /// One-line human summary (used by the CLI).
+    pub fn summary_line(&self) -> String {
+        format!(
+            "{} — peak {} replicas, {:.1} replica-s ({:.3} per req), {} scale-out / {} scale-in, \
+             {} unroutable",
+            self.report.summary_line(),
+            self.peak_replicas,
+            self.replica_seconds,
+            self.cost_per_request(),
+            self.scale_outs,
+            self.scale_ins,
+            self.unroutable
+        )
+    }
+}
+
 /// Build the (scenario, strategy) comparison table from labelled
 /// reports — the per-strategy latency-percentile / goodput view the
 /// serving experiments print.
@@ -152,6 +286,7 @@ mod tests {
             offered: 0,
             served: 0,
             rejected: 0,
+            within_slo: 0,
         }
     }
 
@@ -175,6 +310,61 @@ mod tests {
         assert!(l.p50 <= l.p95 && l.p95 <= l.p99 && l.p99 <= l.max * 1.05);
         assert!(l.p50 > 4.0 && l.p50 < 6.0, "{}", l.p50);
         assert!(l.p95 > 8.5 && l.p95 < 10.5, "{}", l.p95);
+    }
+
+    #[test]
+    fn fleet_report_cost_and_attainment() {
+        let mut inner = empty_report();
+        inner.offered = 100;
+        inner.served = 80;
+        inner.within_slo = 60;
+        let rep = FleetReport {
+            report: inner,
+            per_replica: Vec::new(),
+            peak_replicas: 3,
+            replica_seconds: 40.0,
+            scale_outs: 2,
+            scale_ins: 1,
+            unroutable: 0,
+        };
+        assert!((rep.slo_attainment() - 0.6).abs() < 1e-12);
+        assert!((rep.cost_per_request() - 0.5).abs() < 1e-12);
+        assert!(rep.summary_line().contains("peak 3 replicas"));
+
+        let empty = FleetReport {
+            report: empty_report(),
+            per_replica: Vec::new(),
+            peak_replicas: 1,
+            replica_seconds: 0.0,
+            scale_outs: 0,
+            scale_ins: 0,
+            unroutable: 0,
+        };
+        assert_eq!(empty.slo_attainment(), 0.0);
+        assert_eq!(empty.cost_per_request(), 0.0);
+    }
+
+    #[test]
+    fn replica_stats_line_renders_state() {
+        let s = ReplicaStats {
+            id: 1,
+            alive: false,
+            spawned_at: 0.0,
+            retired_at: Some(2.5),
+            up_seconds: 2.5,
+            served: 10,
+            rejected: 2,
+            within_slo: 9,
+            batches: 3,
+            padded_slots: 5,
+            fresh_bytes: 0,
+            saved_bytes: 0,
+            busy_seconds: 1.5,
+            mean_stale_age: 0.0,
+        };
+        let line = s.line();
+        assert!(line.contains("replica  1"), "{line}");
+        assert!(line.contains("down@2.5s"), "{line}");
     }
 
     #[test]

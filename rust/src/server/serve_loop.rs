@@ -343,6 +343,7 @@ pub fn serve_with<E: BatchExecutor>(
             global_batch: global,
             start,
             end,
+            replica: 0,
         });
     }
 
@@ -367,6 +368,7 @@ pub fn serve_with<E: BatchExecutor>(
         offered: trace.len(),
         served,
         rejected,
+        within_slo,
     })
 }
 

@@ -565,3 +565,72 @@ fn scenario_fanout_is_deterministic() {
         assert_eq!(s.throughput, p.throughput);
     }
 }
+
+/// Fleet serve traces are bit-exact across thread counts and repeated
+/// runs for all three routers (DESIGN.md §14): request→replica
+/// assignment, completion order, metric histograms, percentiles and
+/// the replica-seconds bill. The fleet loop itself is serial
+/// discrete-event simulation, but it reads the same ambient
+/// runtime state as the rest of the stack — this pins that no pool
+/// width can leak into the trace.
+#[test]
+fn fleet_serving_is_bit_exact_across_threads_and_runs() {
+    use dice::server::{fault_preset, serve_fleet, AdmissionPolicy, FleetConfig, RouterKind};
+    use dice::workload::Scenario;
+
+    let cm = CostModel::new(
+        model_preset("xl").unwrap(),
+        hardware_profile("rtx4090_pcie").unwrap(),
+    );
+    let ex = SimExecutor::new(cm, Strategy::SyncEp, DiceOptions::none(), 8);
+    let trace = Scenario::parse("burst", 30.0).unwrap().trace(200, 1000, 7);
+    let cfg = ServeConfig::new(
+        BatchPolicy {
+            max_global: 32,
+            max_wait: 0.25,
+        },
+        4,
+        7,
+    )
+    .with_admission(AdmissionPolicy::bounded(40))
+    .with_slo(3.0);
+
+    for router in RouterKind::all() {
+        let fleet_cfg = FleetConfig::new(3, router, cfg)
+            .with_faults(fault_preset("slow-replica", 3, 0.0).unwrap());
+        let mut runs = Vec::new();
+        for threads in [1usize, 2, 4, 1] {
+            // the repeated width-1 run pins same-width reproducibility
+            dice::par::set_threads(threads);
+            runs.push(serve_fleet(&ex, &trace, &fleet_cfg).unwrap());
+        }
+        dice::par::set_threads(0);
+        let base = &runs[0];
+        assert!(!base.report.batches.is_empty(), "{}: empty trace", router.name());
+        for (i, run) in runs.iter().enumerate().skip(1) {
+            let ctx = format!("{} run {i}", router.name());
+            // request→replica assignment + completion order, bit-exact
+            assert_eq!(run.report.batches, base.report.batches, "trace diverged ({ctx})");
+            // reported percentiles and aggregate accounting
+            let (a, b) = (base.report.latency(), run.report.latency());
+            assert_eq!(a.p50.to_bits(), b.p50.to_bits(), "p50 diverged ({ctx})");
+            assert_eq!(a.p99.to_bits(), b.p99.to_bits(), "p99 diverged ({ctx})");
+            assert_eq!(
+                run.report.span.to_bits(),
+                base.report.span.to_bits(),
+                "span diverged ({ctx})"
+            );
+            assert_eq!(
+                run.replica_seconds.to_bits(),
+                base.replica_seconds.to_bits(),
+                "replica-seconds diverged ({ctx})"
+            );
+            assert_eq!(
+                run.report.metrics.render(),
+                base.report.metrics.render(),
+                "metrics diverged ({ctx})"
+            );
+            assert_eq!(run.per_replica, base.per_replica, "replica stats diverged ({ctx})");
+        }
+    }
+}

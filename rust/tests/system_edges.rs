@@ -7,9 +7,12 @@ use dice::config::{hardware_profile, model_preset, DiceOptions, Strategy};
 use dice::coordinator::{simulate, Engine, EngineConfig};
 use dice::netsim::{CostModel, Workload};
 use dice::runtime::{Runtime, WeightBank};
-use dice::server::{serve, BatchPolicy};
+use dice::server::{
+    fault_preset, serve, serve_fleet, serve_with, AdmissionPolicy, AutoscaleConfig, BatchPolicy,
+    Fault, FleetConfig, RouterKind, ServeConfig, SimExecutor,
+};
 use dice::testkit::{forall, Gen};
-use dice::workload::{burst_trace, poisson_trace};
+use dice::workload::{burst_recovery_trace, burst_trace, poisson_trace, uniform_trace, Request};
 
 fn setup() -> Option<(Runtime, WeightBank)> {
     let dir = Path::new("artifacts");
@@ -364,4 +367,153 @@ fn property_batched_requests_conserved_across_policies() {
         assert_eq!(served, n);
         assert_eq!(rep.samples.shape()[0], n);
     });
+}
+
+// ---------------------------------------------------------------------------
+// fleet edge cases (artifact-free: every fleet runs on the SimExecutor)
+// ---------------------------------------------------------------------------
+
+fn fleet_sim_executor() -> SimExecutor {
+    let cm = CostModel::new(
+        model_preset("xl").unwrap(),
+        hardware_profile("rtx4090_pcie").unwrap(),
+    );
+    SimExecutor::new(cm, Strategy::SyncEp, DiceOptions::none(), 8)
+}
+
+fn fleet_serve_cfg(capacity: Option<usize>) -> ServeConfig {
+    let admission = match capacity {
+        None => AdmissionPolicy::unbounded(),
+        Some(c) => AdmissionPolicy::bounded(c),
+    };
+    ServeConfig::new(
+        BatchPolicy {
+            max_global: 32,
+            max_wait: 0.25,
+        },
+        4,
+        7,
+    )
+    .with_admission(admission)
+    .with_slo(3.0)
+}
+
+/// A 1-replica fleet IS the single-instance serve loop: same batches,
+/// clocks, sheds, SLO accounting and metric histograms, bit-for-bit.
+/// Mirrors python/tests/test_fleet_port.py::
+/// test_one_replica_fleet_matches_single_instance.
+#[test]
+fn one_replica_fleet_is_bit_exact_vs_single_instance_serve() {
+    let cases: Vec<(Vec<Request>, Option<usize>)> = vec![
+        (poisson_trace(60, 12.0, 1000, 3), None),
+        (burst_recovery_trace(120, 32, 20.0, 1000, 5), Some(24)),
+        (uniform_trace(17, 2.0, 1000, 9), Some(4)),
+        (burst_trace(100, 1000, 1), Some(40)),
+        (Vec::new(), None),
+    ];
+    for (trace, cap) in cases {
+        let cfg = fleet_serve_cfg(cap);
+        let mut solo_ex = fleet_sim_executor();
+        let solo = serve_with(&mut solo_ex, &trace, cfg).unwrap();
+        let fleet_ex = fleet_sim_executor();
+        let fcfg = FleetConfig::new(1, RouterKind::RoundRobin, cfg);
+        let fleet = serve_fleet(&fleet_ex, &trace, &fcfg).unwrap();
+        let ctx = format!("cap {cap:?}, {} requests", trace.len());
+        assert_eq!(fleet.report.batches, solo.batches, "batches diverged ({ctx})");
+        assert_eq!(fleet.report.served, solo.served, "served diverged ({ctx})");
+        assert_eq!(fleet.report.rejected, solo.rejected, "rejected diverged ({ctx})");
+        assert_eq!(
+            fleet.report.within_slo, solo.within_slo,
+            "SLO accounting diverged ({ctx})"
+        );
+        assert_eq!(
+            fleet.report.span.to_bits(),
+            solo.span.to_bits(),
+            "span diverged ({ctx})"
+        );
+        assert_eq!(
+            fleet.report.metrics.render(),
+            solo.metrics.render(),
+            "metrics diverged ({ctx})"
+        );
+    }
+    // one pinned sample so the comparison can't degenerate to
+    // trivially-equal empties: the burst_recovery case really sheds
+    let cfg = fleet_serve_cfg(Some(24));
+    let ex = fleet_sim_executor();
+    let trace = burst_recovery_trace(120, 32, 20.0, 1000, 5);
+    let rep = serve_fleet(&ex, &trace, &FleetConfig::new(1, RouterKind::RoundRobin, cfg)).unwrap();
+    assert_eq!(rep.report.served, 103);
+    assert_eq!(rep.report.rejected, 17);
+    assert_eq!(rep.report.within_slo, 103);
+}
+
+#[test]
+fn zero_replicas_and_bad_bounds_are_rejected_loudly() {
+    let ex = fleet_sim_executor();
+    let trace = poisson_trace(10, 5.0, 1000, 1);
+    let zero = FleetConfig::new(0, RouterKind::RoundRobin, fleet_serve_cfg(None));
+    let err = serve_fleet(&ex, &trace, &zero).unwrap_err().to_string();
+    assert!(err.contains("at least 1 replica"), "{err}");
+
+    // min_replicas > max_replicas rejected on both entry paths
+    assert!(AutoscaleConfig::parse("3:2").is_err());
+    let mut inverted = FleetConfig::new(2, RouterKind::RoundRobin, fleet_serve_cfg(None));
+    inverted.autoscale = Some(AutoscaleConfig::new(3, 2));
+    let err = serve_fleet(&ex, &trace, &inverted).unwrap_err().to_string();
+    assert!(err.contains("min_replicas must be in"), "{err}");
+
+    // unknown router name rejected loudly (the CLI path)
+    let err = RouterKind::parse("fastest-finger").unwrap_err().to_string();
+    assert!(err.contains("unknown router"), "{err}");
+}
+
+#[test]
+fn zero_capacity_fleet_sheds_everything_and_terminates() {
+    let ex = fleet_sim_executor();
+    let trace = poisson_trace(30, 10.0, 1000, 2);
+    // AdmissionPolicy::bounded clamps to >= 1, so build capacity 0 by
+    // hand — the fleet must shed every request and still terminate
+    let cfg = fleet_serve_cfg(None).with_admission(AdmissionPolicy { capacity: 0 });
+    let rep = serve_fleet(&ex, &trace, &FleetConfig::new(2, RouterKind::LeastLoaded, cfg)).unwrap();
+    assert_eq!(rep.report.served, 0);
+    assert_eq!(rep.report.rejected, 30);
+    assert!(rep.report.batches.is_empty());
+    assert_eq!(rep.report.goodput, 0.0);
+}
+
+/// Mirrors python/tests/test_fleet_port.py::
+/// test_all_replicas_dead_sheds_everything.
+#[test]
+fn all_replicas_dead_sheds_everything_with_correct_slo_accounting() {
+    let ex = fleet_sim_executor();
+    let trace = poisson_trace(40, 10.0, 1000, 5);
+    let cfg = FleetConfig::new(2, RouterKind::RoundRobin, fleet_serve_cfg(None).with_slo(2.0))
+        .with_faults(vec![
+            Fault::Dead {
+                replica: 0,
+                at: 0.0,
+            },
+            Fault::Dead {
+                replica: 1,
+                at: 0.0,
+            },
+        ]);
+    let rep = serve_fleet(&ex, &trace, &cfg).unwrap();
+    assert_eq!(rep.report.served, 0);
+    assert_eq!(rep.report.offered, 40);
+    assert_eq!(rep.report.rejected, 40);
+    assert_eq!(rep.unroutable, 40);
+    assert_eq!(rep.report.within_slo, 0);
+    assert_eq!(rep.report.goodput, 0.0);
+    assert!(rep.report.batches.is_empty());
+    assert!(rep.report.span >= trace[39].arrival - trace[0].arrival - 1e-12);
+    // the shed requests still hit the rejected counter exactly once
+    assert_eq!(rep.report.metrics.counter("rejected"), 40);
+}
+
+#[test]
+fn unknown_fault_preset_is_rejected_loudly() {
+    let err = fault_preset("chaos", 3, 8.0).unwrap_err().to_string();
+    assert!(err.contains("unknown fault preset"), "{err}");
 }
