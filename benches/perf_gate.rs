@@ -12,9 +12,13 @@
 //! detected kernel backend on the expert-FFN GEMM, DESIGN.md §12), the
 //! `fleet_serving` cell (the §14 multi-replica burst cell behind the
 //! least-loaded router, with a custom trajectory record carrying
-//! per-router burst p99 and static-vs-autoscaled replica-seconds), and
-//! appends every summary to repo-root `BENCH_engine.json` (JSON lines)
-//! — the perf trajectory across PRs. Artifact-free.
+//! per-router burst p99 and static-vs-autoscaled replica-seconds), the
+//! `expert_replication` cell (the §15 memory-budgeted replication
+//! report, with a custom record carrying replicated-vs-single-owner
+//! max load, crossing bytes, modeled step time and the expert-cache
+//! hit rate), and appends every summary to repo-root
+//! `BENCH_engine.json` (JSON lines) — the perf trajectory across PRs.
+//! Artifact-free.
 //!
 //!     cargo bench --bench perf_gate              # full iterations
 //!     cargo bench --bench perf_gate -- --check   # CI: few iters +
@@ -43,6 +47,7 @@ use dice::config::{
 };
 use dice::coordinator::{simulate_sweep_with, HostPipeline, SweepCase};
 use dice::exp::fleet as fleet_exp;
+use dice::exp::replicate as replicate_exp;
 use dice::linalg::{self, simd};
 use dice::moe::host::{HostMoeConfig, HostMoeLayer, HostMoeStack};
 use dice::moe::{DispatchPlan, RoutingTable};
@@ -314,6 +319,55 @@ fn main() -> anyhow::Result<()> {
         fleet_auto.replica_seconds
     );
 
+    // --- expert replication: the §15 memory-budgeted replication cell --
+    // (DESIGN.md §15) — the full 4-mode replication report (three
+    // single-owner policies + the replicated mode at equal slot budget)
+    // over the seeded skewed workload. The report itself FAILS unless
+    // replication strictly wins on max load and step time, so timing it
+    // doubles as running the acceptance gate; the custom record below
+    // carries the win and the cache hit rate into the trajectory.
+    let s_repl = benchkit::bench("expert_replication_report", warmup, iters, || {
+        std::hint::black_box(replicate_exp::report(512, 8, 0xD1CE).unwrap());
+    });
+    let (_, repl_json) = replicate_exp::report(512, 8, 0xD1CE)?;
+    let repl_cell = |mode: &str, key: &str| -> f64 {
+        repl_json
+            .get("rows")
+            .and_then(|r| r.as_arr())
+            .and_then(|rows| {
+                rows.iter()
+                    .find(|r| r.get("mode").map(|m| m.as_str()) == Some(Some(mode)))
+            })
+            .and_then(|r| r.get(key))
+            .and_then(|v| v.as_f64())
+            .expect("replication report row")
+    };
+    let single_modes = ["contiguous", "load_balanced", "affinity_aware"];
+    let best_single = |key: &str| -> f64 {
+        single_modes
+            .iter()
+            .map(|m| repl_cell(m, key))
+            .fold(f64::INFINITY, f64::min)
+    };
+    let (repl_max, single_max) = (repl_cell("replicated", "max_load"), best_single("max_load"));
+    let (repl_step, single_step) = (repl_cell("replicated", "step_s"), best_single("step_s"));
+    let (repl_cross, single_cross) = (
+        repl_cell("replicated", "cross_bytes_per_step"),
+        best_single("cross_bytes_per_step"),
+    );
+    let repl_hit_rate = repl_json
+        .get("cache_replicated")
+        .and_then(|c| c.get("hit_rate"))
+        .and_then(|v| v.as_f64())
+        .expect("replication cache record");
+    println!(
+        "expert replication (16 experts / 8 devices, equal memory): max load {single_max:.0} \
+         single-owner -> {repl_max:.0} replicated, modeled step {} -> {}, cache hit rate {:.2}",
+        fmt_secs(single_step),
+        fmt_secs(repl_step),
+        repl_hit_rate
+    );
+
     let summaries: Vec<Summary> = vec![
         s_serial.clone(),
         s_par.clone(),
@@ -330,6 +384,7 @@ fn main() -> anyhow::Result<()> {
         k_scalar.clone(),
         k_best.clone(),
         s_fleet.clone(),
+        s_repl.clone(),
     ];
     let mut t = Table::new(
         "Perf gate — engine step + sim sweep, serial vs parallel",
@@ -401,10 +456,22 @@ fn main() -> anyhow::Result<()> {
             fleet_auto.replica_seconds,
             fleet_auto.slo_attainment()
         )?;
+        // the replication record carries the §15 equal-memory win
+        // (max load, crossing bytes, modeled step time) and the
+        // expert-cache hit rate alongside the report timing (mean_s)
+        writeln!(
+            f,
+            "{{\"name\":\"expert_replication\",\"mean_s\":{:.9},\
+             \"max_load_single\":{single_max:.3},\"max_load_replicated\":{repl_max:.3},\
+             \"cross_bytes_single\":{single_cross:.1},\"cross_bytes_replicated\":{repl_cross:.1},\
+             \"step_s_single\":{single_step:.9},\"step_s_replicated\":{repl_step:.9},\
+             \"cache_hit_rate\":{repl_hit_rate:.6}}}",
+            s_repl.mean_s
+        )?;
     }
     println!(
         "appended {} records to {}",
-        summaries.len() + 2,
+        summaries.len() + 3,
         bench_path.display()
     );
 
@@ -550,6 +617,23 @@ fn main() -> anyhow::Result<()> {
             "autoscaled fleet billed {} replica-seconds vs static {}",
             fleet_auto.replica_seconds,
             fleet_static.replica_seconds
+        );
+        // replication gates (DESIGN.md §15): deterministic modeled
+        // facts at equal total parameter memory — the replicated mode
+        // must not lose to the best single-owner policy on any tracked
+        // axis (the report already enforces STRICT wins on max load
+        // and step time; these re-assert the trajectory values).
+        assert!(
+            repl_max <= single_max,
+            "replication regressed max device load: {repl_max} vs single-owner {single_max}"
+        );
+        assert!(
+            repl_step <= single_step,
+            "replication regressed modeled step time: {repl_step} vs single-owner {single_step}"
+        );
+        assert!(
+            repl_cross <= single_cross,
+            "replication regressed crossing bytes: {repl_cross} vs single-owner {single_cross}"
         );
         println!("perf gate OK ({lines} trajectory records)");
     }

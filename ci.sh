@@ -31,6 +31,17 @@ DICE_SIMD=auto cargo test -q --test simd_conformance
 echo "==> full test battery under the scalar oracle (DICE_SIMD=scalar)"
 DICE_SIMD=scalar cargo test -q --lib --bins --tests
 
+# Replication battery (DESIGN.md §15): the replicate-placement solver,
+# expert-cache and replicating-rebalancer units plus the exp harness
+# gate test, under both a forced-scalar and the auto-detected backend —
+# replica routing must not depend on the kernel backend. (The filter
+# "replicat" catches placement::replicate::*, exp::replicate::* and the
+# replicating_rebalancer tests.)
+echo "==> replication battery (DICE_SIMD=scalar)"
+DICE_SIMD=scalar cargo test -q --lib replicat
+echo "==> replication battery (DICE_SIMD=auto)"
+DICE_SIMD=auto cargo test -q --lib replicat
+
 # Perf gate: few-iteration run of the serial-vs-parallel engine-step
 # bench. Asserts bit-exact parallel output (single- and multi-layer
 # pipelines included), valid JSON-lines in BENCH_engine.json,
@@ -100,6 +111,17 @@ cargo run --release --quiet -- exp topology
 # the tier-1 test step above.
 echo "==> fleet gate (dice exp fleet, artifact-free)"
 cargo run --release --quiet -- exp fleet
+
+# Replication gate (artifact-free, DESIGN.md §15): FAILS unless
+# memory-budgeted hot-expert replication strictly reduces BOTH max
+# per-device load and modeled step time vs the best single-owner
+# placement at EQUAL total parameter memory on the seeded skewed
+# workload, every replica add is a priced weight copy, cache misses are
+# priced by the t_fetch_split == t_migrate_split contract, and the
+# replicated run forced to primaries reproduces the single-owner
+# placements bit-exactly at every step.
+echo "==> replication gate (dice exp replicate, artifact-free)"
+cargo run --release --quiet -- exp replicate
 
 # Docs gates: rustdoc warnings (broken links, bad code-block attrs) are
 # errors, and missing_docs — warn-level in the sources so local builds

@@ -1,0 +1,1085 @@
+"""Exact-logic ports of memory-budgeted expert replication (DESIGN.md §15).
+
+The container has no Rust toolchain, so the replication machinery of
+`rust/src/placement/replicate.rs` is validated here against independent
+oracles, matching the PR-5/6/8/9 oracle pattern:
+
+* the substrate `Rng` (xoshiro256++ / SplitMix64), the f32-exact
+  `skewed_probs` synthesis, the top-k extraction, `RoutingStats`, the
+  three placement policies (hier + flat), the `Rebalancer` cadence, the
+  replica-set `Placement` (route_of / moved_split), the `replicate_hot`
+  greedy solver and the `ExpertCache` (load-aware LRU, nearest-holder
+  fetch pricing) are ported bit-for-bit;
+* the seed-dependent Rust unit tests (replication triggering on the
+  skewed 16x4 workload, budget saturation, the replicating rebalancer)
+  are re-derived here with the exact seeds the Rust tests hard-code;
+* the `dice exp replicate` acceptance gates are run with the exact
+  scenario parameters the Rust harness hard-codes (G preset on
+  rtx4090_pcie over multinode:2, 8 devices, rebalance every 2, slot
+  budget = primaries + 1), at BOTH the in-module test point (512 tokens)
+  and the CI default (2048 tokens), so the gate cannot be tuned blind:
+  replication must strictly cut max device load AND modeled step time
+  vs. the best single-owner policy at equal total memory, every replica
+  add must be a priced weight copy, replica routing forced to primaries
+  must reproduce the single-owner run exactly, and seeded replicas must
+  absorb cold-start cache fetches.
+
+Needs numpy (float32-exact skewed_probs); runs under pytest or as a
+script.
+"""
+
+import numpy as np
+
+M64 = (1 << 64) - 1
+
+
+# ---------------------------------------------------------------------------
+# rng.rs port: xoshiro256++ seeded via SplitMix64
+# ---------------------------------------------------------------------------
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & M64
+
+
+class Rng:
+    def __init__(self, seed):
+        s = []
+        sm = seed & M64
+        for _ in range(4):
+            sm = (sm + 0x9E3779B97F4A7C15) & M64
+            z = sm
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+            s.append(z ^ (z >> 31))
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[0] + s[3]) & M64, 23) + s[0]) & M64
+        t = (s[1] << 17) & M64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+
+# ---------------------------------------------------------------------------
+# netsim/topology.rs port (the kinds the replicate paths touch)
+# ---------------------------------------------------------------------------
+
+class Topology:
+    def __init__(self, kind, nodes=1, oversub=1.0):
+        self.kind = kind  # "flat" | "multinode"
+        self.nodes = nodes
+        self.oversub = oversub
+
+    @staticmethod
+    def flat():
+        return Topology("flat", 1)
+
+    @staticmethod
+    def multinode(nodes):
+        return Topology("multinode", nodes)
+
+    def nodes_for(self, devices):
+        if self.kind == "flat":
+            return 1
+        n = (devices + 7) // 8 if self.nodes == 0 else self.nodes
+        return max(1, min(n, max(devices, 1)))
+
+    def node_of(self, device, devices):
+        n = self.nodes_for(devices)
+        base = devices // n
+        rem = devices % n
+        big = (base + 1) * rem
+        if device < big:
+            return device // (base + 1)
+        return rem + (device - big) // base
+
+    def node_devices(self, node, devices):
+        n = self.nodes_for(devices)
+        base = devices // n
+        rem = devices % n
+        if node < rem:
+            start = node * (base + 1)
+            return range(start, start + base + 1)
+        start = (base + 1) * rem + (node - rem) * base
+        return range(start, start + base)
+
+    def max_node_size(self, devices):
+        n = self.nodes_for(devices)
+        return devices // n + (1 if devices % n > 0 else 0)
+
+    def is_flat(self, devices):
+        return devices <= 1 or self.nodes_for(devices) <= 1
+
+    def inter_frac(self, devices):
+        if self.is_flat(devices):
+            return 0.0
+        n = self.nodes_for(devices)
+        base = devices // n
+        rem = devices % n
+        sq = rem * (base + 1) * (base + 1) + (n - rem) * base * base
+        d = float(devices)
+        return (d * d - sq) / (d * (d - 1.0))
+
+
+FLAT = Topology.flat()
+
+
+# ---------------------------------------------------------------------------
+# moe/mod.rs port: replica-set Placement + route_of / moved_split
+# ---------------------------------------------------------------------------
+
+def contiguous_owner(n_experts, devices):
+    base = n_experts // devices
+    rem = n_experts % devices
+    owner = []
+    for d in range(devices):
+        owner.extend([d] * (base + (1 if d < rem else 0)))
+    return owner
+
+
+def route_in(replicas, src, topo, devices):
+    if src in replicas:
+        return src
+    src_node = topo.node_of(src, devices)
+    near = [d for d in replicas if topo.node_of(d, devices) == src_node]
+    if near:
+        return near[src % len(near)]
+    return replicas[src % len(replicas)]
+
+
+class Placement:
+    def __init__(self, devices, owner, extra=None):
+        assert devices > 0 and all(0 <= o < devices for o in owner)
+        self.devices = devices
+        self.n_experts = len(owner)
+        self.owner = list(owner)
+        extra = extra if extra is not None else [[] for _ in owner]
+        assert len(extra) == len(owner)
+        self.extra = []
+        for e, devs in enumerate(extra):
+            assert all(0 <= d < devices for d in devs)
+            self.extra.append(sorted(set(d for d in devs if d != owner[e])))
+        self._replicas = [sorted([self.owner[e]] + self.extra[e])
+                          for e in range(self.n_experts)]
+
+    @staticmethod
+    def new(n_experts, devices):
+        return Placement(devices, contiguous_owner(n_experts, devices))
+
+    def replicas_of(self, e):
+        return self._replicas[e]
+
+    def add_replica(self, e, d):
+        extra = [list(x) for x in self.extra]
+        extra[e].append(d)
+        return Placement(self.devices, self.owner, extra)
+
+    def primaries_only(self):
+        return Placement(self.devices, self.owner)
+
+    def is_replicated(self):
+        return any(self.extra[e] for e in range(self.n_experts))
+
+    def total_copies(self):
+        return self.n_experts + sum(len(x) for x in self.extra)
+
+    def resident_counts(self):
+        counts = [0] * self.devices
+        for o in self.owner:
+            counts[o] += 1
+        for devs in self.extra:
+            for d in devs:
+                counts[d] += 1
+        return counts
+
+    def route_of(self, e, src, topo):
+        return route_in(self._replicas[e], src, topo, self.devices)
+
+    def moved_split(self, other, topo):
+        intra = inter = 0
+        for e in range(self.n_experts):
+            old = other.replicas_of(e)
+            old_set = set(old)
+            old_nodes = set(topo.node_of(o, self.devices) for o in old)
+            for d in self.replicas_of(e):
+                if d in old_set:
+                    continue
+                if topo.node_of(d, self.devices) in old_nodes:
+                    intra += 1
+                else:
+                    inter += 1
+        return intra, inter
+
+    def moved_from(self, other):
+        i, x = self.moved_split(other, FLAT)
+        return i + x
+
+    def __eq__(self, other):
+        return (self.devices == other.devices and self.owner == other.owner
+                and self.extra == other.extra)
+
+
+# ---------------------------------------------------------------------------
+# placement/mod.rs port: skewed_probs, f32-exact (numpy float32, same op
+# order as the Rust f32 arithmetic: w = (zipf * boost) * jitter, then a
+# sequential left-to-right row sum, then w / total)
+# ---------------------------------------------------------------------------
+
+def skewed_probs(n_tokens, n_experts, devices, seed):
+    assert devices > 0 and n_tokens % devices == 0
+    owner = contiguous_owner(n_experts, devices)
+    tpd = n_tokens // devices
+    rng = Rng((seed ^ 0x9E3779B97F4A7C15) & M64)
+    draws = np.array(
+        [rng.next_u64() >> 11 for _ in range(n_tokens * n_experts)], dtype=np.uint64
+    )
+    # uniform_f32 = ((u >> 11) * 2^-53) as f32 — exact f64, then rounded
+    uf32 = (draws.astype(np.float64) * (2.0 ** -53)).astype(np.float32)
+    jitter = (np.float32(0.5) + uf32).reshape(n_tokens, n_experts)
+    zipf = np.float32(1.0) / (np.float32(1.0) + np.arange(n_experts, dtype=np.float32))
+    boost = np.ones((devices, n_experts), dtype=np.float32)
+    for e in range(n_experts):
+        # boosted for tokens of the device whose preferred = owner(e)
+        for dev in range(devices):
+            if owner[e] == (dev + 1) % devices:
+                boost[dev, e] = np.float32(6.0)
+    zb = zipf[None, :] * boost  # f32: zipf * boost
+    dev_of_row = np.arange(n_tokens) // tpd
+    w = zb[dev_of_row] * jitter  # f32: (zipf * boost) * jitter
+    total = w[:, 0].copy()
+    for j in range(1, n_experts):
+        total = total + w[:, j]  # sequential f32 accumulation
+    return w / total[:, None]
+
+
+def topk_experts(probs, k):
+    """RoutingTable::from_probs: descending score, index asc on ties."""
+    return np.argsort(-probs, axis=1, kind="stable")[:, :k]
+
+
+# ---------------------------------------------------------------------------
+# placement/stats.rs port
+# ---------------------------------------------------------------------------
+
+class RoutingStats:
+    def __init__(self, n_experts, devices):
+        self.n_experts = n_experts
+        self.devices = devices
+        self.expert_load = np.zeros(n_experts, dtype=np.int64)
+        self.src_load = np.zeros((n_experts, devices), dtype=np.int64)
+        self.coact = np.zeros((n_experts, n_experts), dtype=np.int64)
+        self.tokens_seen = 0
+
+    def is_empty(self):
+        return self.tokens_seen == 0
+
+    def observe(self, experts, tokens_per_device):
+        n, k = experts.shape
+        dev = np.minimum(np.arange(n) // tokens_per_device, self.devices - 1)
+        for r in range(k):
+            np.add.at(self.expert_load, experts[:, r], 1)
+            np.add.at(self.src_load, (experts[:, r], dev), 1)
+        for a in range(k):
+            for b in range(a + 1, k):
+                lo = np.minimum(experts[:, a], experts[:, b])
+                hi = np.maximum(experts[:, a], experts[:, b])
+                np.add.at(self.coact, (lo, hi), 1)
+        self.tokens_seen += n
+
+    def device_loads_topo(self, p, topo):
+        dl = [0] * self.devices
+        for e in range(self.n_experts):
+            reps = p.replicas_of(e)
+            if len(reps) == 1:
+                dl[reps[0]] += int(self.expert_load[e])
+                continue
+            for d in range(self.devices):
+                dl[p.route_of(e, d, topo)] += int(self.src_load[e, d])
+        return dl
+
+    def device_loads(self, p):
+        return self.device_loads_topo(p, FLAT)
+
+    def crossing_assignments(self, p):
+        c = 0
+        for e in range(self.n_experts):
+            reps = set(p.replicas_of(e))
+            for d in range(self.devices):
+                if d not in reps:
+                    c += int(self.src_load[e, d])
+        return c
+
+    def crossing_split(self, p, topo):
+        intra = inter = 0
+        for e in range(self.n_experts):
+            reps = set(p.replicas_of(e))
+            for d in range(self.devices):
+                if d in reps:
+                    continue
+                dst = p.route_of(e, d, topo)
+                if topo.node_of(d, self.devices) == topo.node_of(dst, self.devices):
+                    intra += int(self.src_load[e, d])
+                else:
+                    inter += int(self.src_load[e, d])
+        return intra, inter
+
+    def node_src_load(self, e, topo, node):
+        return sum(int(self.src_load[e, d])
+                   for d in topo.node_devices(node, self.devices))
+
+    def coactivation(self, a, b):
+        lo, hi = (a, b) if a <= b else (b, a)
+        return int(self.coact[lo, hi])
+
+
+# ---------------------------------------------------------------------------
+# placement/policies.rs port (the paths the replicate harness drives)
+# ---------------------------------------------------------------------------
+
+def capacities(n_experts, devices):
+    cap = [0] * devices
+    for d in contiguous_owner(n_experts, devices):
+        cap[d] += 1
+    return cap
+
+
+def place_load_balanced(n_experts, devices, topo, st):
+    contig = Placement.new(n_experts, devices)
+    if st.is_empty() or devices < 2:
+        return contig
+    hier = not topo.is_flat(devices)
+    n_nodes = topo.nodes_for(devices)
+    cap = capacities(n_experts, devices)
+    order = sorted(range(n_experts), key=lambda e: (-int(st.expert_load[e]), e))
+    owner = [0] * n_experts
+    dev_load = [0] * devices
+    dev_count = [0] * devices
+    node_load = [0] * n_nodes
+    for e in order:
+        best = None
+        if hier:
+            best_node = None
+            for n in range(n_nodes):
+                free = any(dev_count[d] < cap[d] for d in topo.node_devices(n, devices))
+                if free and (best_node is None or node_load[n] < node_load[best_node]):
+                    best_node = n
+            for d in topo.node_devices(best_node, devices):
+                if dev_count[d] < cap[d] and (best is None or dev_load[d] < dev_load[best]):
+                    best = d
+        else:
+            for d in range(devices):
+                if dev_count[d] < cap[d] and (best is None or dev_load[d] < dev_load[best]):
+                    best = d
+        owner[e] = best
+        dev_load[best] += int(st.expert_load[e])
+        dev_count[best] += 1
+        node_load[topo.node_of(best, devices)] += int(st.expert_load[e])
+    packed = Placement(devices, owner)
+    if max(st.device_loads(packed)) > max(st.device_loads(contig)):
+        return contig
+    return packed
+
+
+def _coact_pairs(n_experts, st):
+    pairs = []
+    for a in range(n_experts):
+        for b in range(a + 1, n_experts):
+            c = st.coactivation(a, b)
+            if c > 0:
+                pairs.append((c, a, b))
+    pairs.sort(key=lambda t: (-t[0], t[1], t[2]))
+    return pairs
+
+
+def _singles(owner, st):
+    rest = [e for e in range(len(owner)) if owner[e] is None]
+    rest.sort(key=lambda e: (-int(st.expert_load[e]), e))
+    return rest
+
+
+def place_affinity_hier(n_experts, devices, topo, st):
+    contig = Placement.new(n_experts, devices)
+    n_nodes = topo.nodes_for(devices)
+    cap = capacities(n_experts, devices)
+    owner = [None] * n_experts
+    dev_count = [0] * devices
+
+    def node_free(n):
+        return sum(cap[d] - dev_count[d] for d in topo.node_devices(n, devices))
+
+    def best_dev_in(e, n, need):
+        best, best_src = None, 0
+        for d in topo.node_devices(n, devices):
+            if dev_count[d] + need > cap[d]:
+                continue
+            s = int(st.src_load[e, d])
+            if best is None or s > best_src:
+                best, best_src = d, s
+        return best
+
+    for _, a, b in _coact_pairs(n_experts, st):
+        if owner[a] is not None or owner[b] is not None:
+            continue
+        best_node, best_src = None, 0
+        for n in range(n_nodes):
+            if node_free(n) < 2:
+                continue
+            s = st.node_src_load(a, topo, n) + st.node_src_load(b, topo, n)
+            if best_node is None or s > best_src:
+                best_node, best_src = n, s
+        if best_node is None:
+            continue
+        both = best_dev_in(a, best_node, 2)
+        if both is not None:
+            owner[a] = owner[b] = both
+            dev_count[both] += 2
+        else:
+            da = best_dev_in(a, best_node, 1)
+            owner[a] = da
+            dev_count[da] += 1
+            db = best_dev_in(b, best_node, 1)
+            owner[b] = db
+            dev_count[db] += 1
+
+    for e in _singles(owner, st):
+        best_node, best_src = None, 0
+        for n in range(n_nodes):
+            if node_free(n) == 0:
+                continue
+            s = st.node_src_load(e, topo, n)
+            if best_node is None or s > best_src:
+                best_node, best_src = n, s
+        d = best_dev_in(e, best_node, 1)
+        owner[e] = d
+        dev_count[d] += 1
+
+    placed = Placement(devices, owner)
+    pi, px = st.crossing_split(placed, topo)
+    ci, cx = st.crossing_split(contig, topo)
+    if (px, pi + px) > (cx, ci + cx):
+        return contig
+    return placed
+
+
+def place_on(kind, n_experts, devices, topo, st):
+    if kind == "contiguous":
+        return Placement.new(n_experts, devices)
+    if kind == "load_balanced":
+        return place_load_balanced(n_experts, devices, topo, st)
+    assert kind == "affinity_aware"
+    if st.is_empty() or devices < 2:
+        return Placement.new(n_experts, devices)
+    assert not topo.is_flat(devices), "oracle only ports the hier affinity path"
+    return place_affinity_hier(n_experts, devices, topo, st)
+
+
+# ---------------------------------------------------------------------------
+# placement/replicate.rs port: slots, greedy solver, expert cache
+# ---------------------------------------------------------------------------
+
+def default_slots(n_experts, devices):
+    return -(-n_experts // devices) + 1
+
+
+def objective(st, p, topo):
+    max_load = max(st.device_loads_topo(p, topo))
+    intra, inter = st.crossing_split(p, topo)
+    return (max_load, inter, intra + inter)
+
+
+def replicate_hot(base, slots_per_device, topo, st):
+    devices, n_experts = base.devices, base.n_experts
+    current = base
+    counts = current.resident_counts()
+    free = [max(0, slots_per_device - counts[d]) for d in range(devices)]
+    best_obj = objective(st, current, topo)
+    while True:
+        best = None  # (obj, e, d)
+        for e in range(n_experts):
+            reps = current.replicas_of(e)
+            if len(reps) == devices:
+                continue
+            rep_set = set(reps)
+            for d in range(devices):
+                if free[d] == 0 or d in rep_set:
+                    continue
+                obj = objective(st, current.add_replica(e, d), topo)
+                # strict improvement over the incumbent, first-seen wins
+                if obj < best_obj and (best is None or obj < best[0]):
+                    best = (obj, e, d)
+        if best is None:
+            return current
+        best_obj, e, d = best
+        current = current.add_replica(e, d)
+        free[d] -= 1
+
+
+class ExpertCache:
+    def __init__(self, placement, slots, topo):
+        assert slots > 0
+        self.devices = placement.devices
+        self.slots = slots
+        self.topo = topo
+        # per-device list of [expert, last_used, uses]
+        self.resident = [[] for _ in range(self.devices)]
+        for e in range(placement.n_experts):
+            for d in placement.replicas_of(e):
+                self.resident[d].append([e, 0, 0])
+        for d in range(self.devices):
+            assert len(self.resident[d]) <= slots, f"device {d} over capacity"
+        self.hits = self.misses = self.evictions = 0
+
+    def reseed(self, placement):
+        fresh = ExpertCache(placement, self.slots, self.topo)
+        self.resident = fresh.resident
+
+    def contains(self, device, expert):
+        return any(s[0] == expert for s in self.resident[device])
+
+    def hit_rate(self):
+        total = self.hits + self.misses
+        return 1.0 if total == 0 else self.hits / total
+
+    def _nearest_holder(self, device, expert):
+        node = self.topo.node_of(device, self.devices)
+        best = None  # (is_remote_node, id)
+        for d in range(self.devices):
+            if d == device or not self.contains(d, expert):
+                continue
+            key = (self.topo.node_of(d, self.devices) != node, d)
+            if best is None or key < best:
+                best = key
+        return None if best is None else best[1]
+
+    def step_access(self, device, experts, step):
+        intra = inter = 0
+        for e in experts:
+            slot = next((s for s in self.resident[device] if s[0] == e), None)
+            if slot is not None:
+                slot[1] = step
+                slot[2] += 1
+                self.hits += 1
+                continue
+            self.misses += 1
+            node = self.topo.node_of(device, self.devices)
+            src = self._nearest_holder(device, e)
+            if src is not None and self.topo.node_of(src, self.devices) == node:
+                intra += 1
+            else:
+                inter += 1
+            if len(self.resident[device]) < self.slots:
+                self.resident[device].append([e, step, 1])
+                continue
+            ws = set(experts)
+            victims = [(tuple(s[1:]) + (s[0],), i)
+                       for i, s in enumerate(self.resident[device]) if s[0] not in ws]
+            if victims:
+                _, i = min(victims, key=lambda v: (v[0][0], v[0][1], v[0][2]))
+                self.evictions += 1
+                self.resident[device][i] = [e, step, 1]
+        return intra, inter
+
+
+# ---------------------------------------------------------------------------
+# placement/rebalance.rs port
+# ---------------------------------------------------------------------------
+
+class Rebalancer:
+    def __init__(self, kind, n_experts, devices, every, topo=FLAT, replica_slots=None):
+        self.kind = kind
+        self.every = every
+        self.topo = topo
+        self.replica_slots = replica_slots
+        self.stats = RoutingStats(n_experts, devices)
+        self.since = 0
+        self.rebalances = 0
+
+    def observe(self, experts, tokens_per_device):
+        self.stats.observe(experts, tokens_per_device)
+
+    def end_step(self, current):
+        if self.every == 0:
+            return None
+        self.since += 1
+        if self.since < self.every or self.stats.is_empty():
+            return None
+        self.since = 0
+        solved = place_on(self.kind, self.stats.n_experts, self.stats.devices,
+                          self.topo, self.stats)
+        if self.replica_slots is not None:
+            solved = replicate_hot(solved, self.replica_slots, self.topo, self.stats)
+        moved = solved.moved_from(current)
+        if moved == 0:
+            return None
+        _, inter = solved.moved_split(current, self.topo)
+        self.rebalances += 1
+        return solved, moved, inter
+
+
+# ---------------------------------------------------------------------------
+# netsim/mod.rs port: the G / rtx4090_pcie pricing point
+# ---------------------------------------------------------------------------
+
+G = dict(image_size=32, channels=4, patch=2, d_model=1536, n_layers=40,
+         d_ffn=6144, n_experts=16, top_k=2, n_shared=2)
+RTX4090 = dict(flops=42.0e12, link_bw=22.0e9, a2a_bw=7.3e9, msg_latency=30e-6,
+               nic_bw=2.5e9, nic_latency=120e-6, coll_overhead=60e-6,
+               sat_tokens=256.0)
+ELEM_BYTES = 2.0
+
+
+class CostModel:
+    def __init__(self, model, hw, topo):
+        self.m, self.hw, self.topo = model, hw, topo
+
+    def expert_param_count(self):
+        d, f = self.m["d_model"], self.m["d_ffn"]
+        return d * f + f + f * d + d
+
+    def expert_param_bytes(self):
+        return self.expert_param_count() * 2
+
+    def model_tokens(self):
+        side = self.m["image_size"] // self.m["patch"]
+        return side * side
+
+    def hierarchical(self, devices):
+        return (not self.topo.is_flat(devices)
+                and (self.topo.oversub != 1.0
+                     or self.hw["nic_bw"] != self.hw["a2a_bw"]
+                     or self.hw["nic_latency"] != self.hw["msg_latency"]))
+
+    def flops_pre(self, wl):
+        d = float(self.m["d_model"])
+        n = float(wl["local_batch"] * wl["tokens"])
+        t = float(self.model_tokens())
+        b = float(wl["local_batch"])
+        qkv = 2.0 * n * d * 3.0 * d
+        proj = 2.0 * n * d * d
+        attn = 2.0 * 2.0 * b * t * t * d
+        adaln = 2.0 * b * d * 6.0 * d
+        router = 2.0 * n * d * float(self.m["n_experts"])
+        return qkv + proj + attn + adaln + router
+
+    def flops_expert(self, wl):
+        d, f = float(self.m["d_model"]), float(self.m["d_ffn"])
+        assignments = float(wl["local_batch"] * wl["tokens"]) * float(self.m["top_k"])
+        return 2.0 * assignments * (d * f + f * d)
+
+    def flops_post(self, wl):
+        d, f = float(self.m["d_model"]), float(self.m["d_ffn"])
+        n = float(wl["local_batch"] * wl["tokens"])
+        return 2.0 * n * float(self.m["n_shared"]) * (d * f + f * d) + 4.0 * n * d
+
+    def t_compute_at(self, flops, local_tokens):
+        n = float(local_tokens)
+        util = n / (n + self.hw["sat_tokens"])
+        return flops / (self.hw["flops"] * util)
+
+    def a2a_bytes(self, wl):
+        cross = (wl["devices"] - 1) / wl["devices"]
+        rows = wl["local_batch"] * wl["tokens"] * self.m["top_k"] * cross
+        return rows * self.m["d_model"] * ELEM_BYTES
+
+    def t_a2a_split(self, intra_bytes, inter_bytes, devices):
+        if devices == 0:
+            return 0.0
+        size0 = self.topo.max_node_size(devices)
+        rails = 1.0
+        return (self.hw["coll_overhead"]
+                + self.hw["msg_latency"] * (size0 - 1)
+                + self.hw["nic_latency"] * (devices - size0)
+                + intra_bytes * devices / self.hw["a2a_bw"]
+                + inter_bytes * devices * self.topo.oversub / (self.hw["nic_bw"] * rails))
+
+    def t_a2a(self, bytes_, devices):
+        if devices == 0:
+            return 0.0
+        if not self.hierarchical(devices):
+            return (self.hw["coll_overhead"]
+                    + self.hw["msg_latency"] * (devices - 1)
+                    + bytes_ * devices / self.hw["a2a_bw"])
+        inter = min(bytes_ * self.topo.inter_frac(devices), bytes_)
+        return self.t_a2a_split(bytes_ - inter, inter, devices)
+
+    def t_p2p(self, bytes_):
+        return self.hw["msg_latency"] + bytes_ / self.hw["link_bw"]
+
+    def t_p2p_inter(self, bytes_):
+        return self.hw["nic_latency"] + bytes_ * self.topo.oversub / self.hw["nic_bw"]
+
+    def t_migrate_split(self, intra_moves, inter_moves):
+        eb = float(self.expert_param_bytes())
+        t = 0.0
+        if intra_moves > 0:
+            t += self.t_p2p(intra_moves * eb)
+        if inter_moves > 0:
+            t += self.t_p2p_inter(inter_moves * eb)
+        return t
+
+    def t_fetch_split(self, intra, inter):
+        return self.t_migrate_split(intra, inter)
+
+    def layer_costs(self, wl):
+        n = wl["local_batch"] * wl["tokens"]
+        return dict(
+            t_pre=self.t_compute_at(self.flops_pre(wl), n),
+            t_expert=self.t_compute_at(self.flops_expert(wl), n),
+            t_post=self.t_compute_at(self.flops_post(wl), n),
+            t_a2a=self.t_a2a(self.a2a_bytes(wl), wl["devices"]),
+        )
+
+
+# ---------------------------------------------------------------------------
+# moe DispatchPlan accounting port: per-(expert, src) entry counts
+# ---------------------------------------------------------------------------
+
+def plan_src_counts(experts, tpd, n_experts, devices):
+    counts = np.zeros((n_experts, devices), dtype=np.int64)
+    n, k = experts.shape
+    dev = np.arange(n) // tpd
+    for r in range(k):
+        np.add.at(counts, (experts[:, r], dev), 1)
+    return counts
+
+
+def plan_cross_split(counts, p, topo, d_model, elem_bytes):
+    intra = inter = 0
+    devices = p.devices
+    for e in range(p.n_experts):
+        reps = p.replicas_of(e)
+        rep_set = set(reps)
+        for d in range(devices):
+            c = int(counts[e, d])
+            if c == 0 or d in rep_set:
+                continue
+            dst = route_in(reps, d, topo, devices)
+            if topo.node_of(d, devices) == topo.node_of(dst, devices):
+                intra += c
+            else:
+                inter += c
+    return intra * d_model * elem_bytes, inter * d_model * elem_bytes
+
+
+def plan_device_loads(counts, p, topo):
+    dl = [0] * p.devices
+    for e in range(p.n_experts):
+        reps = p.replicas_of(e)
+        if len(reps) == 1:
+            dl[reps[0]] += int(counts[e].sum())
+            continue
+        for d in range(p.devices):
+            dl[route_in(reps, d, topo, p.devices)] += int(counts[e, d])
+    return dl
+
+
+# ---------------------------------------------------------------------------
+# exp/replicate.rs port: the acceptance harness and its gates
+# ---------------------------------------------------------------------------
+
+def shared_trace(n_tokens, steps, seed, n_experts, devices, top_k):
+    """The per-step routing trace every mode shares."""
+    tpd = n_tokens // devices
+    out = []
+    for step in range(steps):
+        probs = skewed_probs(n_tokens, n_experts, devices, (seed + step) & M64)
+        experts = topk_experts(probs, top_k)
+        out.append((experts, plan_src_counts(experts, tpd, n_experts, devices)))
+    return out
+
+
+def run_mode(kind, replicate, slots, cm, topo, wl, trace, rebalance_every):
+    m = cm.m
+    devices = wl["devices"]
+    n_tokens = wl["tokens"] * devices
+    c = cm.layer_costs(wl)
+    placement = Placement.new(m["n_experts"], devices)
+    rb = Rebalancer(kind, m["n_experts"], devices, rebalance_every, topo,
+                    slots if replicate else None)
+    sum_max = sum_mean = 0.0
+    cross_total = inter_total = 0
+    migration_bytes = 0
+    step_total = 0.0
+    step_placements = []
+    steps = len(trace)
+    for experts, counts in trace:
+        intra_b, inter_b = plan_cross_split(counts, placement, topo,
+                                            m["d_model"], int(ELEM_BYTES))
+        cross_total += intra_b + inter_b
+        inter_total += inter_b
+        dl = plan_device_loads(counts, placement, topo)
+        mx, mean = float(max(dl)), sum(dl) / devices
+        sum_max += mx
+        sum_mean += mean
+        t_a2a = cm.t_a2a_split(float(intra_b), float(inter_b), devices)
+        imb = mx / mean if mean > 0.0 else 1.0
+        t_step = m["n_layers"] * (c["t_pre"] + c["t_expert"] * imb
+                                  + c["t_post"] + 2.0 * t_a2a)
+        rb.observe(experts, n_tokens // devices)
+        mig = rb.end_step(placement)
+        if mig is not None:
+            solved, moved, inter_moves = mig
+            migration_bytes += moved * cm.expert_param_bytes()
+            t_step += cm.t_migrate_split(moved - inter_moves, inter_moves)
+            placement = solved
+        step_total += t_step
+        step_placements.append(placement)
+    return dict(
+        max_load=sum_max / steps,
+        imbalance=sum_max / sum_mean,
+        cross_bytes_per_step=cross_total / steps,
+        inter_bytes_per_step=inter_total / steps,
+        migration_bytes=migration_bytes,
+        rebalances=rb.rebalances,
+        step_s=step_total / steps,
+        total_copies=step_placements[-1].total_copies(),
+        step_placements=step_placements,
+    )
+
+
+def run_cache(seedp, slots, topo, cm, trace, tpd):
+    cache = ExpertCache(seedp, slots, topo)
+    intra_f = inter_f = 0
+    fetch_s = 0.0
+    first_step_misses = 0
+    for step, (experts, _) in enumerate(trace):
+        working = [set() for _ in range(seedp.devices)]
+        n, k = experts.shape
+        for i in range(n):
+            working[i // tpd].update(int(e) for e in experts[i])
+        for d in range(seedp.devices):
+            ws = sorted(working[d])
+            bi, bx = cache.step_access(d, ws, step + 1)
+            intra_f += bi
+            inter_f += bx
+            fetch_s += cm.t_fetch_split(bi, bx)
+            if step == 0:
+                first_step_misses += bi + bx
+    return dict(hits=cache.hits, misses=cache.misses, intra=intra_f,
+                inter=inter_f, fetch_s=fetch_s,
+                first_step_misses=first_step_misses, hit_rate=cache.hit_rate())
+
+
+def exp_replicate_report(n_tokens, steps, seed):
+    """Port of `exp::replicate::report` — returns (runs, caches) after
+    asserting every acceptance gate the Rust harness enforces."""
+    devices = 8
+    topo = Topology.multinode(2)
+    rebalance_every = 2
+    cm = CostModel(G, RTX4090, topo)
+    assert steps >= 2 * rebalance_every
+    n_tokens = -(-n_tokens // devices) * devices
+    assert n_tokens >= 64 * devices
+    wl = dict(local_batch=1, devices=devices, tokens=n_tokens // devices)
+    slots = default_slots(G["n_experts"], devices)
+    trace = shared_trace(n_tokens, steps, seed, G["n_experts"], devices, G["top_k"])
+
+    modes = [("contiguous", "contiguous", False),
+             ("load_balanced", "load_balanced", False),
+             ("affinity_aware", "affinity_aware", False),
+             ("replicated", "affinity_aware", True)]
+    runs = {name: run_mode(kind, repl, slots, cm, topo, wl, trace, rebalance_every)
+            for name, kind, repl in modes}
+
+    repl = runs["replicated"]
+    singles = [runs["contiguous"], runs["load_balanced"], runs["affinity_aware"]]
+    best_single_max = min(r["max_load"] for r in singles)
+    best_single_step = min(r["step_s"] for r in singles)
+    assert repl["total_copies"] > G["n_experts"], "replication must trigger"
+    assert repl["total_copies"] <= slots * devices, "slot budget exceeded"
+    assert repl["max_load"] < best_single_max, (
+        f"max load gate: {repl['max_load']} vs {best_single_max}")
+    assert repl["step_s"] < best_single_step, (
+        f"step time gate: {repl['step_s']} vs {best_single_step}")
+    base = runs["affinity_aware"]  # the policy the replicated mode extends
+    assert repl["rebalances"] > 0
+    assert repl["migration_bytes"] > base["migration_bytes"], "replica copies priced"
+    for step, (single, repld) in enumerate(
+            zip(base["step_placements"], repl["step_placements"])):
+        assert repld.primaries_only() == single, f"step {step}: forced-to-primaries"
+
+    tpd = n_tokens // devices
+    cache_single = run_cache(base["step_placements"][-1], slots, topo, cm, trace, tpd)
+    cache_repl = run_cache(repl["step_placements"][-1], slots, topo, cm, trace, tpd)
+    for c in (cache_single, cache_repl):
+        assert c["misses"] == c["intra"] + c["inter"], "every miss priced once"
+        assert cm.t_fetch_split(c["intra"], c["inter"]) == \
+            cm.t_migrate_split(c["intra"], c["inter"]), "fetch == migrate contract"
+    assert cache_single["misses"] > 0, "miss path exercised"
+    assert cache_repl["first_step_misses"] < cache_single["first_step_misses"], (
+        f"cold-start absorption: {cache_repl['first_step_misses']} vs "
+        f"{cache_single['first_step_misses']}")
+    assert 0.0 < cache_repl["hit_rate"] <= 1.0
+    return runs, (cache_single, cache_repl)
+
+
+# ---------------------------------------------------------------------------
+# tests: unit-test mirrors (exact seeds the Rust tests hard-code)
+# ---------------------------------------------------------------------------
+
+def skewed_stats(n_experts, devices, seed, steps=4, tokens_factor=64, top_k=2):
+    """Mirror of replicate.rs tests::skewed_stats."""
+    n_tokens = tokens_factor * devices
+    st = RoutingStats(n_experts, devices)
+    for s in range(steps):
+        probs = skewed_probs(n_tokens, n_experts, devices, (seed + s) & M64)
+        st.observe(topk_experts(probs, top_k), n_tokens // devices)
+    return st
+
+
+def test_skewed_probs_rows_are_normalized_f32():
+    p = skewed_probs(64, 8, 4, 0xD1CE)
+    assert p.dtype == np.float32
+    assert np.all(np.abs(p.sum(axis=1) - 1.0) < 1e-5)
+    # deterministic: same seed, same bits
+    q = skewed_probs(64, 8, 4, 0xD1CE)
+    assert np.array_equal(p.view(np.uint32), q.view(np.uint32))
+
+
+def test_replicate_hot_cuts_max_load_and_crossing_on_skew_16x4():
+    # mirror: replicate_hot_cuts_max_load_and_crossing_on_skew
+    st = skewed_stats(16, 4, 0xD1CE)
+    base = Placement.new(16, 4)
+    topo = Topology.multinode(2)
+    repl = replicate_hot(base, default_slots(16, 4), topo, st)
+    assert repl.is_replicated(), "skew must trigger replication"
+    base_max = max(st.device_loads_topo(base, topo))
+    repl_max = max(st.device_loads_topo(repl, topo))
+    assert repl_max < base_max, f"{repl_max} vs {base_max}"
+    assert st.crossing_split(repl, topo)[1] <= st.crossing_split(base, topo)[1]
+    assert repl.primaries_only() == base
+
+
+def test_replicate_hot_is_deterministic_and_respects_budget():
+    # mirror: replicate_hot_is_deterministic_and_respects_budget (0xBEEF)
+    st = skewed_stats(16, 4, 0xBEEF)
+    base = Placement.new(16, 4)
+    slots = default_slots(16, 4)
+    a = replicate_hot(base, slots, FLAT, st)
+    b = replicate_hot(base, slots, FLAT, st)
+    assert a == b
+    assert all(c <= slots for c in a.resident_counts())
+
+
+def test_replicate_hot_no_spare_slots_is_identity():
+    st = skewed_stats(16, 4, 0xD1CE)
+    base = Placement.new(16, 4)
+    repl = replicate_hot(base, 16 // 4, FLAT, st)
+    assert repl == base and not repl.is_replicated()
+
+
+def test_replicate_hot_saturates_below_full_replication():
+    # mirror: replicate_hot_saturates_below_full_replication (0xF00D)
+    st = skewed_stats(8, 4, 0xF00D)
+    repl = replicate_hot(Placement.new(8, 4), 8, FLAT, st)
+    assert repl.total_copies() < 8 * 4, "full replication cannot be optimal"
+    assert all(len(repl.replicas_of(e)) <= 4 for e in range(8))
+
+
+def test_replicating_rebalancer_prices_added_copies():
+    # mirror: rebalance.rs::replicating_rebalancer_prices_added_copies
+    e, d = 16, 4
+    slots = default_slots(e, d)
+    rb = Rebalancer("load_balanced", e, d, 2, FLAT, replica_slots=slots)
+    placement = Placement.new(e, d)
+    saw_replicas = False
+    for step in range(6):
+        probs = skewed_probs(128, e, d, step)
+        rb.observe(topk_experts(probs, 2), 128 // d)
+        mig = rb.end_step(placement)
+        if mig is not None:
+            solved, moved, _ = mig
+            assert all(c <= slots for c in solved.resident_counts())
+            assert moved == solved.moved_from(placement)
+            saw_replicas |= solved.is_replicated()
+            placement = solved
+    assert saw_replicas, "skewed workload must trigger replication"
+
+
+def test_cache_eviction_order_and_hit_accounting():
+    # mirror: cache_hits_misses_and_eviction_order
+    p = Placement(2, [0, 0, 1])
+    c = ExpertCache(p, 2, FLAT)
+    assert c.step_access(0, [0, 1], 1) == (0, 0)
+    assert c.hits == 2
+    assert c.step_access(0, [2], 2) == (1, 0)
+    assert c.evictions == 1
+    assert not c.contains(0, 0), "expert 0 is the (last_used, uses, id) minimum"
+    assert c.contains(0, 1) and c.contains(0, 2)
+    assert c.hit_rate() == 2.0 / 3.0
+
+
+def test_cache_prices_cross_node_and_host_fetches():
+    # mirror: cache_prices_cross_node_and_host_fetches
+    topo = Topology.multinode(2)
+    c = ExpertCache(Placement(4, [2, 2, 2, 2]), 4, topo)
+    assert c.step_access(0, [0], 1) == (0, 1)
+    assert c.step_access(1, [0], 2) == (1, 0)
+    lonely = Placement(4, [3, 0])
+    c2 = ExpertCache(lonely, 1, topo)
+    assert c2.step_access(3, [1], 1) == (0, 1)
+    assert c2.evictions == 1 and not c2.contains(3, 0)
+    assert c2.step_access(0, [0], 2) == (0, 1), "parameter-host fetch at NIC price"
+
+
+def test_cache_transient_fetch_when_working_set_fills_capacity():
+    # mirror: cache_transient_fetch_when_working_set_fills_capacity
+    c = ExpertCache(Placement(2, [0, 1]), 1, FLAT)
+    assert c.step_access(0, [0, 1], 1) == (1, 0)
+    assert c.contains(0, 0) and not c.contains(0, 1)
+    assert c.step_access(0, [0, 1], 2) == (1, 0), "re-priced every step"
+    assert c.evictions == 0
+
+
+def test_cache_reseed_adopts_placement_and_keeps_counters():
+    # mirror: cache_reseed_adopts_placement_and_keeps_counters
+    p = Placement.new(4, 2)
+    c = ExpertCache(p, 3, FLAT)
+    assert c.step_access(0, [2], 1) == (1, 0)
+    assert c.contains(0, 2)
+    c.reseed(p.add_replica(3, 0))
+    assert not c.contains(0, 2) and c.contains(0, 3)
+    assert (c.hits, c.misses) == (0, 1)
+
+
+# ---------------------------------------------------------------------------
+# tests: the `dice exp replicate` acceptance gates at exact parameters
+# ---------------------------------------------------------------------------
+
+def test_exp_replicate_gate_at_test_point():
+    # the in-module Rust test: report(512, 8, 0xD1CE)
+    runs, (cs, cr) = exp_replicate_report(512, 8, 0xD1CE)
+    # strict win against EVERY single-owner mode, as the Rust test asserts
+    for mode in ("contiguous", "load_balanced", "affinity_aware"):
+        assert runs["replicated"]["max_load"] < runs[mode]["max_load"], mode
+        assert runs["replicated"]["step_s"] < runs[mode]["step_s"], mode
+    assert runs["replicated"]["total_copies"] > 16
+
+
+def test_exp_replicate_gate_at_ci_default():
+    # the `dice exp replicate` CI invocation: report(2048, 8, 0xD1CE)
+    runs, (cs, cr) = exp_replicate_report(2048, 8, 0xD1CE)
+    for mode in ("contiguous", "load_balanced", "affinity_aware"):
+        assert runs["replicated"]["max_load"] < runs[mode]["max_load"], mode
+        assert runs["replicated"]["step_s"] < runs[mode]["step_s"], mode
+    assert cr["first_step_misses"] < cs["first_step_misses"]
+
+
+if __name__ == "__main__":
+    import sys
+    fails = 0
+    for name, fn in sorted(list(globals().items())):
+        if name.startswith("test_") and callable(fn):
+            try:
+                fn()
+                print(f"PASS {name}")
+            except AssertionError as exc:
+                fails += 1
+                print(f"FAIL {name}: {exc}")
+    sys.exit(1 if fails else 0)

@@ -63,6 +63,15 @@ impl ModelConfig {
     pub fn expert_param_bytes(&self) -> usize {
         self.expert_param_count() * 2
     }
+    /// Expert copies a per-device parameter-memory budget of
+    /// `budget_bytes` can hold (at f16 serving precision): the slot
+    /// capacity of the replication policy and the per-device
+    /// `placement::replicate::ExpertCache` (DESIGN.md §15). A budget of
+    /// 0 means "unbudgeted" slots elsewhere, but this helper reports it
+    /// literally as zero slots.
+    pub fn expert_slots(&self, budget_bytes: usize) -> usize {
+        budget_bytes / self.expert_param_bytes()
+    }
     /// Total parameter count (used by the memory model).
     pub fn param_count(&self) -> usize {
         let d = self.d_model;
@@ -515,6 +524,19 @@ pub struct DiceOptions {
     /// `CostModel::t_a2a_with` multiplies the modeled inter-node byte
     /// split by this before pricing the NIC path.
     pub a2a_inter_scale: f64,
+    /// Per-device parameter-memory budget in BYTES for routed-expert
+    /// weights (DESIGN.md §15). 0 = unbudgeted: every device holds
+    /// exactly its owned experts and replication is capacity-free to
+    /// refuse. When positive, `ModelConfig::expert_slots` converts it
+    /// to whole-expert slots; the replication policy fills spare slots
+    /// with hot-expert copies and the per-device `ExpertCache` evicts
+    /// cold residents when a device is over budget.
+    pub memory_budget: usize,
+    /// Replicate hot experts into spare budget slots at placement
+    /// solves and step-boundary rebalances (DESIGN.md §15). Off by
+    /// default; routing splits a replicated expert's load across its
+    /// holders via `moe::Placement::route_of`.
+    pub replicate: bool,
 }
 
 impl DiceOptions {
@@ -532,6 +554,8 @@ impl DiceOptions {
             a2a_cross_scale: 1.0,
             topology: Topology::flat(),
             a2a_inter_scale: 1.0,
+            memory_budget: 0,
+            replicate: false,
         }
     }
     /// The full DICE configuration used in the paper's main results.
@@ -551,6 +575,8 @@ impl DiceOptions {
             a2a_cross_scale: 1.0,
             topology: Topology::flat(),
             a2a_inter_scale: 1.0,
+            memory_budget: 0,
+            replicate: false,
         }
     }
     /// Select a residual compression codec for the all-to-all payloads.
@@ -585,6 +611,15 @@ impl DiceOptions {
     pub fn with_inter_scale(mut self, scale: f64) -> Self {
         assert!(scale.is_finite() && scale > 0.0, "scale must be finite and positive");
         self.a2a_inter_scale = scale;
+        self
+    }
+    /// Enable hot-expert replication under a per-device parameter
+    /// memory budget in bytes (DESIGN.md §15). `budget_bytes` of 0
+    /// keeps the model-derived default slot budget
+    /// (`placement::replicate::default_slots`).
+    pub fn with_replication(mut self, budget_bytes: usize) -> Self {
+        self.replicate = true;
+        self.memory_budget = budget_bytes;
         self
     }
     /// Set the synchronous warmup step count.
@@ -707,6 +742,24 @@ mod tests {
         assert_eq!(on.placement, PlacementKind::AffinityAware);
         assert_eq!(on.rebalance_every, 4);
         assert_eq!(on.a2a_cross_scale, 0.5);
+        // replication defaults off in both canned option sets
+        assert!(!none.replicate);
+        assert_eq!(none.memory_budget, 0);
+        assert!(!DiceOptions::dice().replicate);
+        assert_eq!(DiceOptions::dice().memory_budget, 0);
+        let rep = DiceOptions::dice().with_replication(1 << 30);
+        assert!(rep.replicate);
+        assert_eq!(rep.memory_budget, 1 << 30);
+    }
+
+    #[test]
+    fn expert_slots_floor_bytes_to_whole_experts() {
+        let xl = presets::model_preset("xl").unwrap();
+        let one = xl.expert_param_bytes();
+        assert_eq!(xl.expert_slots(0), 0);
+        assert_eq!(xl.expert_slots(one - 1), 0, "partial experts don't fit");
+        assert_eq!(xl.expert_slots(one), 1);
+        assert_eq!(xl.expert_slots(3 * one + one / 2), 3);
     }
 
     #[test]

@@ -110,6 +110,25 @@ pub struct RunStats {
     /// the run's topology (NIC-priced via
     /// `netsim::CostModel::t_migrate_split`; zero on the flat default).
     pub migrated_inter_node: usize,
+    /// of `migration_bytes`, the bytes that stayed on the intra-node
+    /// fabric — so rebalance and replication copies are attributable
+    /// per fabric in reports, not just as one total.
+    pub migration_intra_bytes: usize,
+    /// of `migration_bytes`, the bytes that crossed the NIC
+    /// (`migration_intra_bytes + migration_inter_bytes ==
+    /// migration_bytes` always).
+    pub migration_inter_bytes: usize,
+    /// expert-cache hits under `--replicate` (weights already resident
+    /// on the executing device; free).
+    pub cache_hits: u64,
+    /// expert-cache misses under `--replicate` — each one a weight
+    /// fetch priced by `netsim::CostModel::t_fetch_split`.
+    pub cache_misses: u64,
+    /// of `cache_misses`, fetches served by a same-node resident copy.
+    pub cache_fetch_intra: u64,
+    /// of `cache_misses`, fetches that crossed the NIC (or came from
+    /// the parameter host when no device held a copy).
+    pub cache_fetch_inter: u64,
 }
 
 impl RunStats {
@@ -269,6 +288,33 @@ impl<'a> Engine<'a> {
             self.cfg.opts.rebalance_every,
         )
         .with_topology(self.cfg.opts.topology);
+        // hot-expert replication (DESIGN.md §15): the rebalancer's
+        // re-solves spend the per-device slot budget on replicas, and a
+        // per-device ExpertCache tracks weight residency so every
+        // fetch-on-miss is priced (never silently free).
+        let mut expert_cache = if self.cfg.opts.replicate {
+            if self.cfg.opts.rebalance_every == 0 {
+                bail!(
+                    "--replicate needs --rebalance-every N > 0: replicas are \
+                     re-solved from observed routing at step boundaries"
+                );
+            }
+            let slots = crate::placement::replicate::slots_for(
+                m,
+                m.n_experts,
+                dvs,
+                self.cfg.opts.memory_budget,
+            );
+            rebalancer = rebalancer.with_replication(slots);
+            Some(crate::placement::replicate::ExpertCache::from_placement(
+                &placement,
+                slots,
+                self.cfg.opts.topology,
+            ))
+        } else {
+            None
+        };
+        let mut lru_clock = 0u64;
 
         let mut stats = RunStats {
             expert_loads: vec![0; m.n_experts],
@@ -349,6 +395,40 @@ impl<'a> Engine<'a> {
                 // untouched when rebalancing is off (the default)
                 if self.cfg.opts.rebalance_every > 0 {
                     rebalancer.observe(&routing, n_global_tokens / dvs);
+                }
+                // expert-cache residency (DESIGN.md §15): each executing
+                // device's routed working set this layer either hits its
+                // resident weights or pays a priced fetch.
+                if let Some(cache) = expert_cache.as_mut() {
+                    let tpd = n_global_tokens / dvs;
+                    let mut touched = vec![false; dvs * m.n_experts];
+                    for i in 0..routing.n_tokens {
+                        let src = (i / tpd).min(dvs - 1);
+                        let ks = &routing.experts[i * routing.top_k..(i + 1) * routing.top_k];
+                        for &e in ks {
+                            touched[src * m.n_experts + e] = true;
+                        }
+                    }
+                    let mut exec_sets: Vec<Vec<usize>> = vec![Vec::new(); dvs];
+                    for e in 0..m.n_experts {
+                        for src in 0..dvs {
+                            if touched[src * m.n_experts + e] {
+                                let ex = placement.route_of(e, src, self.cfg.opts.topology);
+                                if exec_sets[ex].last() != Some(&e) {
+                                    exec_sets[ex].push(e);
+                                }
+                            }
+                        }
+                    }
+                    lru_clock += 1;
+                    for (dv, set) in exec_sets.iter().enumerate() {
+                        if set.is_empty() {
+                            continue;
+                        }
+                        let bill = cache.step_access(dv, set, lru_clock);
+                        stats.cache_fetch_intra += bill.intra as u64;
+                        stats.cache_fetch_inter += bill.inter as u64;
+                    }
                 }
 
                 let sync_layer = self.cfg.strategy == Strategy::SyncEp
@@ -554,8 +634,17 @@ impl<'a> Engine<'a> {
                 stats.rebalances += 1;
                 stats.migrated_experts += mig.moved_experts;
                 stats.migrated_inter_node += mig.moved_inter_node;
-                stats.migration_bytes += mig.moved_experts * m.expert_param_count() * 4;
+                let per_copy = m.expert_param_count() * 4;
+                stats.migration_intra_bytes +=
+                    (mig.moved_experts - mig.moved_inter_node) * per_copy;
+                stats.migration_inter_bytes += mig.moved_inter_node * per_copy;
+                stats.migration_bytes += mig.moved_experts * per_copy;
                 placement = mig.placement;
+                // the migration already priced the copies; the cache
+                // adopts the new resident sets
+                if let Some(cache) = expert_cache.as_mut() {
+                    cache.reseed(&placement);
+                }
             }
 
             // final + Euler update per part
@@ -575,6 +664,10 @@ impl<'a> Engine<'a> {
 
         stats.cache_bytes = caches.iter().map(|c| c.live_bytes).sum();
         stats.ref_cache_bytes = disp_refs.iter().map(ResidualRefCache::live_bytes).sum();
+        if let Some(cache) = expert_cache.as_ref() {
+            stats.cache_hits = cache.hits();
+            stats.cache_misses = cache.misses();
+        }
         Ok((x, stats))
     }
 
@@ -645,7 +738,12 @@ impl<'a> Engine<'a> {
         let mut remote_keys: Vec<(usize, usize)> = Vec::new();
         for (e, entries) in plan.per_expert.iter().enumerate() {
             stats.expert_loads[e] += entries.len();
-            let owner = placement.owner(e);
+            // byte accounting is replica-aware (a copy resident on the
+            // source device keeps the row off the wire); the numerics
+            // below never branch on residency — replicas hold identical
+            // weights, so expert outputs are placement-invariant.
+            let replicas = placement.replicas_of(e);
+            let local = |src: usize| replicas.binary_search(&src).is_ok();
             // split fresh vs reused
             let mut fresh: Vec<DispatchEntry> = Vec::with_capacity(entries.len());
             for en in entries {
@@ -655,7 +753,7 @@ impl<'a> Engine<'a> {
                     stats.comm.fresh_entries += 1;
                 } else if let Some(cached) = cache.get(en.token, en.expert) {
                     stats.comm.reused_entries += 1;
-                    if en.src_device != owner {
+                    if !local(en.src_device) {
                         stats.saved_bytes += 2 * d * elem;
                     }
                     let row = out.row_mut(en.token);
@@ -681,7 +779,7 @@ impl<'a> Engine<'a> {
                 fresh
                     .iter()
                     .enumerate()
-                    .filter(|(_, en)| en.src_device != owner)
+                    .filter(|(_, en)| !local(en.src_device))
                     .map(|(r, _)| r),
             );
             remote_keys.clear();
@@ -741,7 +839,7 @@ impl<'a> Engine<'a> {
                     );
                     stats.merge_codec(&cs);
                     for (r, en) in fresh.iter().enumerate() {
-                        if en.src_device == owner {
+                        if local(en.src_device) {
                             // local rows never hit the wire: cache exact
                             cache.put(en.token, en.expert, outputs.row(r));
                         }

@@ -8,6 +8,7 @@ pub mod fleet;
 pub mod pipeline;
 pub mod placement;
 pub mod quality;
+pub mod replicate;
 pub mod scaling;
 pub mod schedules;
 pub mod similarity;

@@ -46,7 +46,12 @@
 //!   [`placement::PlacementPolicy`] solvers (contiguous / load-balanced
 //!   / affinity-aware), and the per-interval [`placement::Rebalancer`]
 //!   whose weight migrations `netsim` prices. Selected by
-//!   [`config::PlacementKind`] (`--placement`).
+//!   [`config::PlacementKind`] (`--placement`). Memory-budgeted
+//!   hot-expert replication (DESIGN.md §15) lives here too:
+//!   [`placement::replicate_hot`] fills spare budget slots
+//!   (`--memory-budget` / `--replicate`) with copies of the hottest
+//!   experts and the per-device [`placement::ExpertCache`] prices every
+//!   weight fetch-on-miss over the migration fabric.
 //! * [`compress`] — residual all-to-all compression (DESIGN.md §7):
 //!   [`compress::ResidualCodec`] implementations (identity / int8 /
 //!   top-k) over inter-step activation deltas with error feedback,

@@ -57,6 +57,9 @@ fn usage() -> String {
          dice exp      fleet               multi-replica fleet serving acceptance\n\
          \x20                              harness: router face-off, autoscaling\n\
          \x20                              economics, fault presets (artifact-free)\n\
+         dice exp      replicate           memory-budgeted hot-expert replication\n\
+         \x20                              acceptance harness: equal-memory\n\
+         \x20                              max-load/step-time gate (artifact-free)\n\
          \n\
          global: --threads N      worker-pool width for the execution runtime\n\
          \x20       (default: PAR_THREADS env, else all cores; output is\n\
@@ -71,6 +74,13 @@ fn usage() -> String {
          \x20       device interconnect hierarchy (DESIGN.md \u{a7}13): nodes of\n\
          \x20       NVLink/PCIe-class devices joined by NIC-class links; prices\n\
          \x20       inter-node bytes separately and makes placement node-aware\n\
+         \x20       --replicate [--memory-budget BYTES]\n\
+         \x20       memory-budgeted hot-expert replication (DESIGN.md \u{a7}15):\n\
+         \x20       re-solves spend spare per-device expert slots on replicas of\n\
+         \x20       hot experts; the budget floors to whole experts (default:\n\
+         \x20       primaries + one spare slot per device); a budget alone\n\
+         \x20       implies --replicate; weight residency is tracked by a\n\
+         \x20       per-device cache whose misses are priced weight fetches\n\
          \n\
          serve scenarios:\n{}",
         scenarios::catalog()
@@ -105,12 +115,19 @@ fn resolve_selective(a: &Args, strategy: Strategy, n_layers: usize) -> Result<Se
 
 fn opts_from(a: &Args, selective_sync: SelectiveSync) -> Result<DiceOptions> {
     let placement = PlacementKind::parse(&a.str_or("placement", "contiguous"))?;
+    // `--memory-budget BYTES` only means anything to the replication
+    // policy, so giving one implies `--replicate` (DESIGN.md §15).
+    let memory_budget = a.usize_or("memory-budget", 0);
+    let replicate = a.flag("replicate") || memory_budget > 0;
     // a non-contiguous policy defaults to rebalancing every 4 steps so
     // `--placement load|affinity` alone actually engages it in the
     // engine (placements solve from OBSERVED routing, so a policy that
     // never re-solves would silently stay contiguous); an explicit
-    // `--rebalance-every 0` pins the static contiguous start.
-    let rebalance_default = if placement == PlacementKind::Contiguous { 0 } else { 4 };
+    // `--rebalance-every 0` pins the static contiguous start. Replicas
+    // are likewise solved from observed routing, so `--replicate` pulls
+    // in the same default cadence.
+    let rebalance_default =
+        if placement == PlacementKind::Contiguous && !replicate { 0 } else { 4 };
     Ok(DiceOptions {
         selective_sync,
         cond_comm: CondCommSelector::parse(&a.str_or("condcomm", "off"))?,
@@ -123,6 +140,8 @@ fn opts_from(a: &Args, selective_sync: SelectiveSync) -> Result<DiceOptions> {
         a2a_cross_scale: 1.0,
         topology: Topology::parse(&a.str_or("topology", "flat"))?,
         a2a_inter_scale: 1.0,
+        memory_budget,
+        replicate,
     })
 }
 
@@ -439,6 +458,15 @@ fn main() -> Result<()> {
                     let (t, j) = exp::fleet::report()?;
                     t.print();
                     exp::write_results("fleet_serving", &t.render(), &j)?;
+                }
+                "replicate" => {
+                    let (t, j) = exp::replicate::report(
+                        a.usize_or("tokens", 2048),
+                        a.usize_or("steps", 8),
+                        a.u64_or("seed", 0xD1CE),
+                    )?;
+                    t.print();
+                    exp::write_results("expert_replication", &t.render(), &j)?;
                 }
                 "synctune" => {
                     let (t, j) = exp::synctune::report(

@@ -11,16 +11,22 @@ use crate::netsim::Topology;
 use crate::tensor::{ops, Tensor};
 
 /// Expert→device placement: an arbitrary owner map over the routed
-/// experts (DESIGN.md §9).
+/// experts, optionally extended with extra replica devices per expert
+/// (DESIGN.md §9, §15).
 ///
 /// [`Placement::new`] builds the contiguous-block baseline (device d
 /// owns experts `[d·E/D, (d+1)·E/D)`, with the remainder distributed to
 /// the first `E mod D` devices); [`Placement::from_owner`] accepts any
-/// map, which is how the `crate::placement` policies express
-/// load-balanced and affinity-aware layouts. A FNV-1a fingerprint of
-/// the map is computed once at construction so pricing memos
-/// ([`DispatchPlan::cross_bytes`]) can key on the *map*, not just the
-/// `(n_experts, devices)` shape.
+/// single-owner map, which is how the `crate::placement` policies
+/// express load-balanced and affinity-aware layouts;
+/// [`Placement::with_replicas`] additionally installs extra replica
+/// devices per expert (the `crate::placement::replicate` policy's
+/// output), so a hot expert's dispatch fan-in splits across its replica
+/// holders. A FNV-1a fingerprint of the map is computed once at
+/// construction so pricing memos ([`DispatchPlan::cross_bytes`]) can
+/// key on the *map*, not just the `(n_experts, devices)` shape; the
+/// fingerprint of a replica-free placement is identical to the
+/// pre-replication formula, so single-owner memo keys are stable.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Placement {
     /// Total routed experts.
@@ -28,19 +34,50 @@ pub struct Placement {
     /// Devices the experts are sharded over.
     pub devices: usize,
     owner: Vec<usize>,
+    /// Extra replica devices per expert, each sorted ascending and
+    /// excluding the primary owner. Empty inner vecs ⇒ single-owner.
+    extra: Vec<Vec<usize>>,
     fingerprint: u64,
 }
 
 /// FNV-1a over the owner map (plus the device count so two maps over
-/// different device grids never collide trivially).
-fn owner_fingerprint(devices: usize, owner: &[usize]) -> u64 {
+/// different device grids never collide trivially). Replica extras fold
+/// in only when present, keeping single-owner fingerprints identical to
+/// the historical formula.
+fn owner_fingerprint(devices: usize, owner: &[usize], extra: &[Vec<usize>]) -> u64 {
     const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
     const PRIME: u64 = 0x0000_0100_0000_01b3;
     let mut h = OFFSET ^ (devices as u64).wrapping_mul(PRIME);
     for &o in owner {
         h = (h ^ (o as u64 + 1)).wrapping_mul(PRIME);
     }
+    for (e, devs) in extra.iter().enumerate() {
+        for &d in devs {
+            let tag = ((e as u64 + 1) << 32) | (d as u64 + 1);
+            h = (h ^ tag).wrapping_mul(PRIME);
+        }
+    }
     h
+}
+
+/// [`Placement::route_of`] over a pre-sorted candidate replica set —
+/// shared by the per-expert pricing loops so they resolve each expert's
+/// replica list once instead of once per dispatch entry.
+fn route_in(all: &[usize], src: usize, topo: Topology, devices: usize) -> usize {
+    if all.binary_search(&src).is_ok() {
+        return src;
+    }
+    let src_node = topo.node_of(src, devices);
+    let near: Vec<usize> = all
+        .iter()
+        .copied()
+        .filter(|&d| topo.node_of(d, devices) == src_node)
+        .collect();
+    if near.is_empty() {
+        all[src % all.len()]
+    } else {
+        near[src % near.len()]
+    }
 }
 
 impl Placement {
@@ -70,18 +107,58 @@ impl Placement {
     /// Placement from an explicit expert→device map. Panics if any
     /// entry names a device outside `0..devices`.
     pub fn from_owner(devices: usize, owner: Vec<usize>) -> Placement {
+        let extra = vec![Vec::new(); owner.len()];
+        Placement::with_replicas(devices, owner, extra)
+    }
+
+    /// Placement from an owner map plus extra replica devices per
+    /// expert. Each `extra[e]` entry is a device that holds a full copy
+    /// of expert `e` in addition to the primary `owner[e]`; routing
+    /// ([`Placement::route_of`]) then spreads expert `e`'s fan-in across
+    /// the whole replica set. Extras are sorted and deduplicated;
+    /// entries equal to the primary are dropped. Panics if any device
+    /// (owner or extra) falls outside `0..devices`, or if
+    /// `extra.len() != owner.len()`.
+    pub fn with_replicas(devices: usize, owner: Vec<usize>, extra: Vec<Vec<usize>>) -> Placement {
         assert!(devices > 0, "need at least one device");
         assert!(
             owner.iter().all(|&d| d < devices),
             "owner map names a device >= {devices}"
         );
-        let fingerprint = owner_fingerprint(devices, &owner);
+        assert_eq!(extra.len(), owner.len(), "one replica list per expert");
+        let mut extra = extra;
+        for (e, devs) in extra.iter_mut().enumerate() {
+            assert!(
+                devs.iter().all(|&d| d < devices),
+                "replica list of expert {e} names a device >= {devices}"
+            );
+            devs.sort_unstable();
+            devs.dedup();
+            devs.retain(|&d| d != owner[e]);
+        }
+        let fingerprint = owner_fingerprint(devices, &owner, &extra);
         Placement {
             n_experts: owner.len(),
             devices,
             owner,
+            extra,
             fingerprint,
         }
+    }
+
+    /// `self` with `device` added to expert `expert`'s replica set
+    /// (no-op if already resident there).
+    pub fn add_replica(&self, expert: usize, device: usize) -> Placement {
+        let mut extra = self.extra.clone();
+        extra[expert].push(device);
+        Placement::with_replicas(self.devices, self.owner.clone(), extra)
+    }
+
+    /// `self` with every replica extra dropped — the single-owner
+    /// placement replica routing is "forced to primaries" against (the
+    /// bit-exactness baseline of the `dice exp replicate` gate).
+    pub fn primaries_only(&self) -> Placement {
+        Placement::from_owner(self.devices, self.owner.clone())
     }
 
     /// Device that owns `expert`.
@@ -111,9 +188,71 @@ impl Placement {
             .collect()
     }
 
-    /// The full expert→device map.
+    /// The full expert→device map (primary owners only; replica extras
+    /// are reported by [`Placement::replicas_of`]).
     pub fn owners(&self) -> &[usize] {
         &self.owner
+    }
+
+    /// Every device holding a copy of `expert` — the primary owner plus
+    /// any replica extras — sorted ascending.
+    ///
+    /// ```
+    /// use dice::moe::Placement;
+    /// let p = Placement::new(4, 4).add_replica(0, 2);
+    /// assert_eq!(p.replicas_of(0), vec![0, 2]);
+    /// assert_eq!(p.replicas_of(1), vec![1]); // unreplicated expert
+    /// assert_eq!(p.owner(0), 0); // the primary is unchanged
+    /// ```
+    pub fn replicas_of(&self, expert: usize) -> Vec<usize> {
+        let mut all = Vec::with_capacity(1 + self.extra[expert].len());
+        all.push(self.owner[expert]);
+        all.extend_from_slice(&self.extra[expert]);
+        all.sort_unstable();
+        all
+    }
+
+    /// True when any expert carries a replica beyond its primary owner.
+    pub fn is_replicated(&self) -> bool {
+        self.extra.iter().any(|v| !v.is_empty())
+    }
+
+    /// Total expert copies resident across all devices
+    /// (`n_experts` when single-owner).
+    pub fn total_copies(&self) -> usize {
+        self.n_experts + self.extra.iter().map(Vec::len).sum::<usize>()
+    }
+
+    /// Expert copies resident per device (primaries + replica extras) —
+    /// the count the per-device memory budget constrains.
+    pub fn resident_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.devices];
+        for &o in &self.owner {
+            counts[o] += 1;
+        }
+        for devs in &self.extra {
+            for &d in devs {
+                counts[d] += 1;
+            }
+        }
+        counts
+    }
+
+    /// The replica of `expert` that a dispatch from `src_device` routes
+    /// to, deterministically and topology-aware:
+    ///
+    /// 1. a copy resident on `src_device` itself wins (zero crossing);
+    /// 2. otherwise same-node copies under `topo`, picked as
+    ///    `near[src_device % near.len()]` so a hot expert's fan-in
+    ///    spreads over its same-node holders;
+    /// 3. otherwise `all[src_device % all.len()]` over the full sorted
+    ///    replica set.
+    ///
+    /// For a single-owner placement this is always `owner(expert)`, so
+    /// replica routing forced to primaries reproduces the historical
+    /// dispatch exactly.
+    pub fn route_of(&self, expert: usize, src_device: usize, topo: Topology) -> usize {
+        route_in(&self.replicas_of(expert), src_device, topo, self.devices)
     }
 
     /// FNV-1a fingerprint of the owner map — the memo key
@@ -122,34 +261,40 @@ impl Placement {
         self.fingerprint
     }
 
-    /// Experts whose owner differs between `self` and `other` — the
-    /// weight-migration count a rebalance must pay for
-    /// (`netsim::CostModel::t_migrate` prices it).
+    /// Expert copies `self` holds that `other` does not — the
+    /// weight-copy count a rebalance (or a replica add) must pay for
+    /// (`netsim::CostModel::t_migrate` prices it). For single-owner
+    /// placements this is exactly the historical "experts whose owner
+    /// changed" count; with replicas, each device newly joining an
+    /// expert's replica set is one priced copy (dropping a replica is
+    /// free — nothing moves).
     pub fn moved_from(&self, other: &Placement) -> usize {
-        assert_eq!(self.n_experts, other.n_experts, "placement shape mismatch");
-        self.owner
-            .iter()
-            .zip(&other.owner)
-            .filter(|(a, b)| a != b)
-            .count()
+        let (intra, inter) = self.moved_split(other, Topology::flat());
+        intra + inter
     }
 
     /// [`Placement::moved_from`] split by node boundary under `topo`:
-    /// `(intra_node_moves, inter_node_moves)`. Cross-node moves travel
-    /// the NIC path (`netsim::CostModel::t_migrate_split` prices them
+    /// `(intra_node_moves, inter_node_moves)`. Each added copy sources
+    /// its weights from the nearest pre-existing replica in `other` —
+    /// same-node if one exists (host-bridge fabric), otherwise the NIC
+    /// path (`netsim::CostModel::t_migrate_split` prices the latter
     /// strictly above intra-node moves on every shipped profile).
     pub fn moved_split(&self, other: &Placement, topo: Topology) -> (usize, usize) {
         assert_eq!(self.n_experts, other.n_experts, "placement shape mismatch");
         assert_eq!(self.devices, other.devices, "placement device mismatch");
         let (mut intra, mut inter) = (0usize, 0usize);
-        for (&a, &b) in self.owner.iter().zip(&other.owner) {
-            if a == b {
-                continue;
-            }
-            if topo.node_of(a, self.devices) == topo.node_of(b, self.devices) {
-                intra += 1;
-            } else {
-                inter += 1;
+        for e in 0..self.n_experts {
+            let old = other.replicas_of(e);
+            for d in self.replicas_of(e) {
+                if old.binary_search(&d).is_ok() {
+                    continue;
+                }
+                let node = topo.node_of(d, self.devices);
+                if old.iter().any(|&o| topo.node_of(o, self.devices) == node) {
+                    intra += 1;
+                } else {
+                    inter += 1;
+                }
             }
         }
         (intra, inter)
@@ -303,9 +448,13 @@ impl DispatchPlan {
     }
 
     /// Bytes this plan moves across devices in ONE direction (dispatch
-    /// or combine), counting only entries whose source device differs
-    /// from the expert's owner. `elem_bytes` is the activation element
-    /// size, `d_model` the token width.
+    /// or combine), counting only entries whose source device holds no
+    /// copy of the destination expert — a replica resident on the
+    /// source device absorbs the dispatch locally
+    /// ([`Placement::route_of`] rule 1), so replicating a hot expert
+    /// shrinks this number. For single-owner placements this is exactly
+    /// the historical "source differs from owner" count. `elem_bytes`
+    /// is the activation element size, `d_model` the token width.
     ///
     /// Memoized per (placement fingerprint, dims): repeat pricing of the
     /// same plan (`CostModel::t_a2a_measured` callers such as `perfprobe
@@ -323,8 +472,11 @@ impl DispatchPlan {
         }
         let mut n = 0usize;
         for (e, entries) in self.per_expert.iter().enumerate() {
-            let owner = placement.owner(e);
-            n += entries.iter().filter(|en| en.src_device != owner).count();
+            let replicas = placement.replicas_of(e);
+            n += entries
+                .iter()
+                .filter(|en| replicas.binary_search(&en.src_device).is_err())
+                .count();
         }
         let bytes = n * d_model * elem_bytes;
         self.cross_memo.set(Some((key, bytes)));
@@ -332,12 +484,15 @@ impl DispatchPlan {
     }
 
     /// [`DispatchPlan::cross_bytes`] split by node boundary under
-    /// `topo`: `(intra_node_bytes, inter_node_bytes)`. A crossing entry
-    /// whose source device and owning device share a node is intra-node
-    /// traffic (host-bridge fabric); the rest crosses the NIC. The two
-    /// components always sum to `cross_bytes` for the same placement and
-    /// dims. Memoized like `cross_bytes`, additionally keyed on the
-    /// topology ([`Topology::key`]).
+    /// `topo`: `(intra_node_bytes, inter_node_bytes)`. Each crossing
+    /// entry travels to the replica [`Placement::route_of`] picks for
+    /// its source device — same-node replicas win, so replicating a hot
+    /// expert into a remote node converts NIC bytes into host-bridge
+    /// bytes; an entry whose source holds a local copy does not cross
+    /// at all. The two components always sum to `cross_bytes` for the
+    /// same placement and dims (the local-copy rule is
+    /// topology-independent). Memoized like `cross_bytes`, additionally
+    /// keyed on the topology ([`Topology::key`]).
     pub fn cross_bytes_split(
         &self,
         placement: &Placement,
@@ -354,13 +509,13 @@ impl DispatchPlan {
         let devices = placement.devices;
         let (mut intra, mut inter) = (0usize, 0usize);
         for (e, entries) in self.per_expert.iter().enumerate() {
-            let owner = placement.owner(e);
-            let owner_node = topo.node_of(owner, devices);
+            let replicas = placement.replicas_of(e);
             for en in entries {
-                if en.src_device == owner {
+                if replicas.binary_search(&en.src_device).is_ok() {
                     continue;
                 }
-                if topo.node_of(en.src_device, devices) == owner_node {
+                let dst = route_in(&replicas, en.src_device, topo, devices);
+                if topo.node_of(en.src_device, devices) == topo.node_of(dst, devices) {
                     intra += 1;
                 } else {
                     inter += 1;
@@ -389,10 +544,29 @@ impl DispatchPlan {
 
     /// Fold the per-expert loads through a placement into per-DEVICE
     /// expert-compute loads (token-assignments each device executes).
+    /// Replicated experts split their load across replica holders under
+    /// the flat-topology [`Placement::route_of`] rule; single-owner
+    /// placements reduce to "all load on the owner".
     pub fn device_loads(&self, placement: &Placement) -> Vec<usize> {
+        self.device_loads_topo(placement, Topology::flat())
+    }
+
+    /// [`DispatchPlan::device_loads`] under an explicit topology: the
+    /// same fold, but each entry lands on the replica
+    /// [`Placement::route_of`] picks for its source device under
+    /// `topo` (same-node replicas preferred). Identical to
+    /// `device_loads` for single-owner placements on any topology.
+    pub fn device_loads_topo(&self, placement: &Placement, topo: Topology) -> Vec<usize> {
         let mut dl = vec![0usize; placement.devices];
         for (e, entries) in self.per_expert.iter().enumerate() {
-            dl[placement.owner(e)] += entries.len();
+            let replicas = placement.replicas_of(e);
+            if replicas.len() == 1 {
+                dl[replicas[0]] += entries.len();
+                continue;
+            }
+            for en in entries {
+                dl[route_in(&replicas, en.src_device, topo, placement.devices)] += 1;
+            }
         }
         dl
     }
@@ -440,7 +614,9 @@ mod tests {
         assert_eq!(swapped.experts_of(0), vec![1, 3]);
         assert_ne!(contig.fingerprint(), swapped.fingerprint());
         assert_eq!(contig.fingerprint(), Placement::new(4, 2).fingerprint());
-        assert_eq!(swapped.moved_from(&contig), 4);
+        // owners differ at experts 0 (1 vs 0) and 3 (0 vs 1) — two priced
+        // copies (the old assertion said 4, miscounting the diff).
+        assert_eq!(swapped.moved_from(&contig), 2);
         assert_eq!(swapped.moved_from(&swapped), 0);
     }
 
@@ -635,5 +811,114 @@ mod tests {
         let p = Placement::new(2, 2);
         // token0 (dev0) -> e0 (dev0): local. token1 (dev1) -> e0 (dev0): remote.
         assert_eq!(plan.cross_bytes(&p, 10, 2), 10 * 2);
+    }
+
+    #[test]
+    fn replicas_normalize_and_fingerprint() {
+        // unsorted + duplicated + primary-containing extras normalize
+        let p = Placement::with_replicas(4, vec![0, 1, 2, 3], vec![
+            vec![2, 2, 0, 2],
+            Vec::new(),
+            Vec::new(),
+            Vec::new(),
+        ]);
+        assert_eq!(p.replicas_of(0), vec![0, 2]);
+        assert_eq!(p.replicas_of(1), vec![1]);
+        assert!(p.is_replicated());
+        assert_eq!(p.total_copies(), 5);
+        assert_eq!(p.resident_counts(), vec![1, 1, 2, 1]);
+        // replica-free with_replicas is bit-identical to from_owner
+        let bare = Placement::with_replicas(4, vec![0, 1, 2, 3], vec![Vec::new(); 4]);
+        assert_eq!(bare, Placement::new(4, 4));
+        assert_eq!(bare.fingerprint(), Placement::new(4, 4).fingerprint());
+        assert!(!bare.is_replicated());
+        // adding a replica changes the fingerprint (memo safety) and
+        // primaries_only strips it back to the original
+        assert_ne!(p.fingerprint(), bare.fingerprint());
+        assert_eq!(p.primaries_only(), bare);
+        assert_eq!(p.add_replica(0, 2), p, "re-adding a resident copy is a no-op");
+    }
+
+    #[test]
+    #[should_panic]
+    fn replicas_reject_out_of_range_device() {
+        Placement::with_replicas(2, vec![0, 1], vec![vec![2], Vec::new()]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn replicas_reject_shape_mismatch() {
+        Placement::with_replicas(2, vec![0, 1], vec![Vec::new()]);
+    }
+
+    #[test]
+    fn route_of_prefers_local_then_same_node() {
+        use crate::netsim::Topology;
+        let topo = Topology::multinode(2); // nodes {0,1}, {2,3}
+        let single = Placement::new(4, 4);
+        for src in 0..4 {
+            assert_eq!(single.route_of(0, src, topo), 0, "single-owner routes to primary");
+            assert_eq!(single.route_of(0, src, Topology::flat()), 0);
+        }
+        let p = single.add_replica(0, 2); // copies on {0, 2}
+        assert_eq!(p.route_of(0, 0, topo), 0, "resident copy wins");
+        assert_eq!(p.route_of(0, 2, topo), 2, "resident copy wins");
+        assert_eq!(p.route_of(0, 1, topo), 0, "same-node copy preferred");
+        assert_eq!(p.route_of(0, 3, topo), 2, "same-node copy preferred");
+        // flat topology: everyone is same-node, spread by src index
+        assert_eq!(p.route_of(0, 1, Topology::flat()), 2); // all[1 % 2]
+        assert_eq!(p.route_of(0, 3, Topology::flat()), 2); // all[3 % 2]
+    }
+
+    #[test]
+    fn replicas_absorb_crossing_and_split_load() {
+        use crate::netsim::Topology;
+        // tokens 0..4 on devices 0..4 (1 each); all route to expert 0
+        let probs = probs_of(vec![vec![1.0, 0.0, 0.0, 0.0]; 4]);
+        let rt = RoutingTable::from_probs(&probs, 1);
+        let plan = DispatchPlan::build(&rt, 1);
+        let single = Placement::new(4, 4);
+        let repl = single.add_replica(0, 2);
+        // sources 1 and 3 still cross; source 2 now has a local copy
+        assert_eq!(plan.cross_bytes(&single, 10, 2), 3 * 10 * 2);
+        assert_eq!(plan.cross_bytes(&repl, 10, 2), 2 * 10 * 2);
+        // node split: single-owner ships srcs 2,3 over the NIC; the
+        // node-1 replica converts both to host-bridge (or local) traffic
+        let topo = Topology::multinode(2);
+        assert_eq!(plan.cross_bytes_split(&single, topo, 10, 2), (10 * 2, 2 * 10 * 2));
+        let (intra, inter) = plan.cross_bytes_split(&repl, topo, 10, 2);
+        assert_eq!((intra, inter), (2 * 10 * 2, 0));
+        assert_eq!(intra + inter, plan.cross_bytes(&repl, 10, 2), "split sums");
+        // load splits across the replica holders (flat routing)
+        assert_eq!(plan.device_loads(&single), vec![4, 0, 0, 0]);
+        assert_eq!(plan.device_loads(&repl), vec![1, 0, 3, 0]);
+        assert_eq!(
+            plan.device_loads_topo(&repl, topo),
+            vec![2, 0, 2, 0],
+            "same-node preference rebalances the fold"
+        );
+        assert_eq!(
+            plan.device_loads_topo(&single, topo),
+            plan.device_loads(&single),
+            "single-owner loads are topology-invariant"
+        );
+    }
+
+    #[test]
+    fn moved_split_prices_replica_adds_not_drops() {
+        use crate::netsim::Topology;
+        let topo = Topology::multinode(2); // nodes {0,1}, {2,3}
+        let base = Placement::new(4, 4);
+        // same-node replica add: one intra-node copy
+        assert_eq!(base.add_replica(0, 1).moved_split(&base, topo), (1, 0));
+        // cross-node replica add: one NIC copy
+        assert_eq!(base.add_replica(0, 3).moved_split(&base, topo), (0, 1));
+        // once a node-1 copy exists, a second node-1 device copies intra
+        let far = base.add_replica(0, 3);
+        assert_eq!(far.add_replica(0, 2).moved_split(&far, topo), (1, 0));
+        // dropping a replica moves nothing
+        assert_eq!(base.moved_split(&far, topo), (0, 0));
+        assert_eq!(base.moved_from(&far), 0);
+        assert_eq!(far.moved_from(&base), 1);
     }
 }

@@ -293,6 +293,24 @@ impl CostModel {
         t
     }
 
+    /// Expert copies a per-device parameter-memory budget of
+    /// `budget_bytes` holds under this model — the slot capacity the
+    /// replication policy and the per-device
+    /// `placement::replicate::ExpertCache` enforce (DESIGN.md §15).
+    /// Delegates to [`crate::config::ModelConfig::expert_slots`].
+    pub fn expert_slots(&self, budget_bytes: usize) -> usize {
+        self.model.expert_slots(budget_bytes)
+    }
+
+    /// Expert-cache fetch-on-miss latency (DESIGN.md §15): a miss
+    /// re-fetches one expert's full weights from the nearest resident
+    /// copy, which is EXACTLY a migration copy over the same fabric —
+    /// this is [`CostModel::t_migrate_split`] by definition, named so
+    /// call sites read as the cache pricing contract they implement.
+    pub fn t_fetch_split(&self, intra_fetches: usize, inter_fetches: usize) -> f64 {
+        self.t_migrate_split(intra_fetches, inter_fetches)
+    }
+
     /// All-to-all latency priced from a MEASURED engine dispatch plan
     /// rather than the analytic balanced-routing payload: the crossing
     /// bytes come from [`crate::moe::DispatchPlan::cross_bytes`], whose

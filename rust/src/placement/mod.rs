@@ -24,6 +24,11 @@
 //!   diffusion steps from the observed stats; the engine charges the
 //!   migrated expert weights through `netsim`
 //!   ([`crate::netsim::CostModel::t_migrate`]).
+//! * [`replicate`] — memory-budgeted hot-expert replication on top of
+//!   any solved single-owner map ([`replicate::replicate_hot`]) plus
+//!   the per-device [`replicate::ExpertCache`] whose fetch-on-miss is
+//!   priced like a migration copy (DESIGN.md §15). Enabled by
+//!   `--replicate` / `--memory-budget`.
 //! * [`skewed_probs`] — the seeded skewed-router workload the
 //!   `dice exp placement` experiment, the perf gate and the property
 //!   tests share. Its multi-node sibling
@@ -39,10 +44,12 @@
 
 pub mod policies;
 pub mod rebalance;
+pub mod replicate;
 pub mod stats;
 
 pub use policies::{AffinityAware, Contiguous, LoadBalanced, PlacementPolicy};
 pub use rebalance::{Migration, Rebalancer};
+pub use replicate::{default_slots, replicate_hot, ExpertCache, FetchBill};
 pub use stats::RoutingStats;
 
 use crate::config::PlacementKind;

@@ -15,8 +15,10 @@ use super::stats::RoutingStats;
 pub struct Migration {
     /// The new placement to install.
     pub placement: Placement,
-    /// Experts whose owner changed — each one's weights must travel
-    /// (priced by [`crate::netsim::CostModel::t_migrate`]).
+    /// Expert weight copies the new map holds that the old one did not
+    /// (owner changes, plus replica adds under
+    /// [`Rebalancer::with_replication`]) — each one's weights must
+    /// travel (priced by [`crate::netsim::CostModel::t_migrate`]).
     pub moved_experts: usize,
     /// Of `moved_experts`, how many crossed a node boundary — these
     /// travel the NIC path and are priced strictly higher
@@ -38,6 +40,7 @@ pub struct Rebalancer {
     policy: Box<dyn PlacementPolicy>,
     every: usize,
     topo: Topology,
+    replica_slots: Option<usize>,
     stats: RoutingStats,
     steps_since_solve: usize,
     rebalances: usize,
@@ -52,6 +55,7 @@ impl Rebalancer {
             policy: super::build(kind),
             every,
             topo: Topology::flat(),
+            replica_slots: None,
             stats: RoutingStats::new(n_experts, devices),
             steps_since_solve: 0,
             rebalances: 0,
@@ -65,6 +69,17 @@ impl Rebalancer {
     /// price them at NIC bandwidth.
     pub fn with_topology(mut self, topo: Topology) -> Rebalancer {
         self.topo = topo;
+        self
+    }
+
+    /// Spend up to `slots` expert slots per device on hot-expert
+    /// replicas after each re-solve (DESIGN.md §15): the policy's
+    /// single-owner map is extended by
+    /// [`crate::placement::replicate::replicate_hot`], and every added
+    /// replica is a priced weight copy in the returned
+    /// [`Migration`] (dropped replicas are free — nothing travels).
+    pub fn with_replication(mut self, slots: usize) -> Rebalancer {
+        self.replica_slots = Some(slots);
         self
     }
 
@@ -101,9 +116,12 @@ impl Rebalancer {
             return None;
         }
         self.steps_since_solve = 0;
-        let solved =
+        let mut solved =
             self.policy
                 .place_on(self.stats.n_experts, self.stats.devices, self.topo, &self.stats);
+        if let Some(slots) = self.replica_slots {
+            solved = super::replicate::replicate_hot(&solved, slots, self.topo, &self.stats);
+        }
         let moved = solved.moved_from(current);
         if moved == 0 {
             return None;
@@ -217,6 +235,29 @@ mod tests {
             }
         }
         assert!(fired, "skewed workload must trigger at least one rebalance");
+    }
+
+    #[test]
+    fn replicating_rebalancer_prices_added_copies() {
+        use crate::placement::replicate::default_slots;
+        let (e, d) = (16usize, 4usize);
+        let slots = default_slots(e, d);
+        let mut rb = Rebalancer::new(PlacementKind::LoadBalanced, e, d, 2)
+            .with_replication(slots);
+        let mut placement = Placement::new(e, d);
+        let mut saw_replicas = false;
+        for step in 0..6u64 {
+            observe_step(&mut rb, 128, e, d, step);
+            if let Some(m) = rb.end_step(&placement) {
+                // every installed map fits the budget and prices every
+                // added copy (owner changes + replica adds)
+                assert!(m.placement.resident_counts().iter().all(|&c| c <= slots));
+                assert_eq!(m.moved_experts, m.placement.moved_from(&placement));
+                saw_replicas |= m.placement.is_replicated();
+                placement = m.placement;
+            }
+        }
+        assert!(saw_replicas, "skewed workload must trigger replication");
     }
 
     #[test]

@@ -77,24 +77,44 @@ impl RoutingStats {
     }
 
     /// Per-device expert-compute load under a placement (assignments
-    /// each device would execute).
+    /// each device would execute). Replicated experts split their load
+    /// across replica holders under the flat-topology
+    /// [`Placement::route_of`] rule (single-owner placements put all of
+    /// an expert's load on its owner, as before).
     pub fn device_loads(&self, placement: &Placement) -> Vec<u64> {
+        self.device_loads_topo(placement, Topology::flat())
+    }
+
+    /// [`RoutingStats::device_loads`] under an explicit topology: each
+    /// (expert, source-device) cell of the traffic matrix lands on the
+    /// replica [`Placement::route_of`] picks for that source. Identical
+    /// to `device_loads` for single-owner placements on any topology.
+    pub fn device_loads_topo(&self, placement: &Placement, topo: Topology) -> Vec<u64> {
         let mut dl = vec![0u64; self.devices];
         for e in 0..self.n_experts {
-            dl[placement.owner(e)] += self.expert_load[e];
+            let replicas = placement.replicas_of(e);
+            if replicas.len() == 1 {
+                dl[replicas[0]] += self.expert_load[e];
+                continue;
+            }
+            for d in 0..self.devices {
+                dl[placement.route_of(e, d, topo)] += self.src_load[e * self.devices + d];
+            }
         }
         dl
     }
 
-    /// Assignments whose source device differs from the expert's owner
+    /// Assignments whose source device holds no copy of the expert
     /// under a placement — the crossing (token, expert) pairs whose
-    /// activations must travel in each all-to-all direction.
+    /// activations must travel in each all-to-all direction. A replica
+    /// resident on the source device absorbs its traffic locally, so
+    /// replicating a hot expert shrinks this count.
     pub fn crossing_assignments(&self, placement: &Placement) -> u64 {
         let mut c = 0u64;
         for e in 0..self.n_experts {
-            let owner = placement.owner(e);
+            let replicas = placement.replicas_of(e);
             for d in 0..self.devices {
-                if d != owner {
+                if replicas.binary_search(&d).is_err() {
                     c += self.src_load[e * self.devices + d];
                 }
             }
@@ -104,19 +124,20 @@ impl RoutingStats {
 
     /// [`RoutingStats::crossing_assignments`] split by node boundary
     /// under `topo`: `(intra_node, inter_node)` crossing assignments.
-    /// A crossing assignment whose source device shares the owner's
-    /// node stays on the intra-node fabric; the rest pays the NIC.
-    /// The components always sum to `crossing_assignments`.
+    /// A crossing assignment travels to the replica
+    /// [`Placement::route_of`] picks for its source device; same-node
+    /// destinations stay on the intra-node fabric, the rest pay the
+    /// NIC. The components always sum to `crossing_assignments`.
     pub fn crossing_split(&self, placement: &Placement, topo: Topology) -> (u64, u64) {
         let (mut intra, mut inter) = (0u64, 0u64);
         for e in 0..self.n_experts {
-            let owner = placement.owner(e);
-            let owner_node = topo.node_of(owner, self.devices);
+            let replicas = placement.replicas_of(e);
             for d in 0..self.devices {
-                if d == owner {
+                if replicas.binary_search(&d).is_ok() {
                     continue;
                 }
-                if topo.node_of(d, self.devices) == owner_node {
+                let dst = placement.route_of(e, d, topo);
+                if topo.node_of(d, self.devices) == topo.node_of(dst, self.devices) {
                     intra += self.src_load[e * self.devices + d];
                 } else {
                     inter += self.src_load[e * self.devices + d];
@@ -199,6 +220,29 @@ mod tests {
         // node source aggregation matches the split's view
         assert_eq!(st.node_src_load(0, topo, 0), 2);
         assert_eq!(st.node_src_load(0, topo, 1), 2);
+    }
+
+    #[test]
+    fn replicated_placement_splits_load_and_absorbs_crossing() {
+        // 4 tokens over 4 devices (1 each), all → expert 0
+        let rt = table(vec![vec![0.9, 0.1, 0.0, 0.0]; 4], 1);
+        let mut st = RoutingStats::new(4, 4);
+        st.observe(&rt, 1);
+        let single = Placement::new(4, 4);
+        let repl = single.add_replica(0, 2);
+        // flat routing: srcs 1,2,3 fold onto the device-2 copy
+        assert_eq!(st.device_loads(&repl), vec![1, 0, 3, 0]);
+        let topo = Topology::multinode(2);
+        assert_eq!(st.device_loads_topo(&repl, topo), vec![2, 0, 2, 0]);
+        assert_eq!(
+            st.device_loads_topo(&single, topo),
+            st.device_loads(&single),
+            "single-owner loads are topology-invariant"
+        );
+        // sources 0 and 2 hold copies; only 1 and 3 cross, both intra
+        assert_eq!(st.crossing_assignments(&repl), 2);
+        assert_eq!(st.crossing_split(&repl, topo), (2, 0));
+        assert_eq!(st.crossing_split(&single, topo), (1, 2));
     }
 
     #[test]

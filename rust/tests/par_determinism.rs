@@ -4,7 +4,8 @@
 //! host engine step (barriered AND overlapped executors), the blocked
 //! matmul kernels (fused epilogue included), dynamic scheduling, the
 //! multi-step `HostPipeline` under all three strategies (with MEASURED
-//! staleness ages), the simulation sweep fan-out, and the scenario
+//! staleness ages), policy-solved and §15 replica-set placements, the
+//! simulation sweep fan-out, and the scenario
 //! serving fan-out, at widths 1 / 2 / 4 — and across the orthogonal
 //! `DICE_SIMD` kernel-backend axis (DESIGN.md §12), so overlap ×
 //! vectorization compose without numeric drift. Artifact-free:
@@ -145,6 +146,65 @@ fn host_engine_step_bit_exact_for_topology_aware_placements() {
             let out = layer.step(&ParPool::new(threads), &x);
             assert_eq!(serial, out, "{kind:?} --threads {threads} differs from serial");
             assert_eq!(checksum(&serial), checksum(&out));
+        }
+    }
+}
+
+#[test]
+fn host_engine_step_bit_exact_for_replicated_placements() {
+    // The §15 replica-set placements extend the determinism contract:
+    // a policy-solved map grown by `replicate_hot` under the slot
+    // budget must leave the engine step bit-exact across --threads
+    // 1/2/4 on BOTH executors, identical to the single-owner reference
+    // (the combine scatters to token-owned rows — replicas move only
+    // the crossing-bytes accounting), and the same map forced back to
+    // primaries must reproduce the single-owner placement exactly.
+    use dice::netsim::Topology;
+    use dice::placement::{default_slots, replicate_hot};
+    let cfg = HostMoeConfig {
+        n_experts: 16,
+        top_k: 2,
+        d_model: 32,
+        d_ff: 64,
+        devices: 4,
+    };
+    let topo = Topology::multinode(2);
+    let base = HostMoeLayer::synth(cfg, 0xD1CE);
+    let x = normal(&[64, 32], 11);
+    let mut st = RoutingStats::new(cfg.n_experts, cfg.devices);
+    for s in 0..3u64 {
+        let probs = skewed_probs(128, cfg.n_experts, cfg.devices, s);
+        st.observe(&RoutingTable::from_probs(&probs, cfg.top_k), 128 / cfg.devices);
+    }
+    let reference = base.step(&ParPool::new(1), &x);
+    let slots = default_slots(cfg.n_experts, cfg.devices);
+    for kind in [
+        PlacementKind::Contiguous,
+        PlacementKind::LoadBalanced,
+        PlacementKind::AffinityAware,
+    ] {
+        let single = build(kind).place_on(cfg.n_experts, cfg.devices, topo, &st);
+        let replicated = replicate_hot(&single, slots, topo, &st);
+        assert_eq!(
+            replicated,
+            replicate_hot(&single, slots, topo, &st),
+            "{kind:?}: replication solve must be deterministic"
+        );
+        assert_eq!(
+            replicated.primaries_only(),
+            single,
+            "{kind:?}: forcing replicas back to primaries must recover the single-owner map"
+        );
+        let layer = base.clone().with_placement(replicated);
+        let serial = layer.step(&ParPool::new(1), &x);
+        assert_eq!(reference, serial, "{kind:?}: replicas must not change numerics");
+        for threads in [1usize, 2, 4] {
+            let pool = ParPool::new(threads);
+            let out = layer.step(&pool, &x);
+            assert_eq!(serial, out, "{kind:?} --threads {threads} differs from serial");
+            assert_eq!(checksum(&serial), checksum(&out));
+            let ovl = layer.step_overlapped(&pool, &x);
+            assert_eq!(serial, ovl, "{kind:?} --threads {threads} overlapped differs");
         }
     }
 }

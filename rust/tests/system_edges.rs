@@ -517,3 +517,151 @@ fn unknown_fault_preset_is_rejected_loudly() {
     let err = fault_preset("chaos", 3, 8.0).unwrap_err().to_string();
     assert!(err.contains("unknown fault preset"), "{err}");
 }
+
+// ---------------------------------------------------------------------------
+// replication edge cases (DESIGN.md §15 — the placement/cache layer is
+// artifact-free; the engine check gates on artifacts like the rest)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn replication_budget_edges_fall_back_or_fail_loud() {
+    // --memory-budget 0 means "unbudgeted": the default slot budget
+    // (primaries + one spare) applies, never a zero-slot cache
+    use dice::placement::{default_slots, replicate, ExpertCache};
+    let model = model_preset("g").unwrap();
+    assert_eq!(
+        replicate::slots_for(&model, 16, 8, 0),
+        default_slots(16, 8),
+        "budget 0 falls back to the default slots"
+    );
+    // a budget too small for even one device's primaries is a loud
+    // panic — silent truncation would drop experts a device owns
+    let starved = std::panic::catch_unwind(|| {
+        replicate::slots_for(&model, 16, 8, model.expert_param_bytes());
+    });
+    assert!(starved.is_err(), "budget below the primaries must panic");
+    // and a cache can never be built over capacity: seeding a placement
+    // whose resident set exceeds the slot count is a loud panic too
+    use dice::moe::Placement;
+    let p = Placement::new(16, 8); // 2 primaries per device
+    let over = std::panic::catch_unwind(|| {
+        let _ = ExpertCache::from_placement(&p, 1, dice::netsim::Topology::flat());
+    });
+    assert!(over.is_err(), "seeding over capacity must panic");
+}
+
+#[test]
+fn replication_factor_beyond_devices_saturates() {
+    // a slot budget large enough to replicate everything everywhere
+    // must still cap each expert at one copy per device — and the
+    // greedy solver stops at its objective fixpoint well short of full
+    // replication (copies beyond the hot set cannot reduce max load)
+    use dice::moe::{Placement, RoutingTable};
+    use dice::netsim::Topology;
+    use dice::placement::{replicate_hot, skewed_probs, RoutingStats};
+    let (e, d) = (8usize, 4usize);
+    let mut st = RoutingStats::new(e, d);
+    for s in 0..4u64 {
+        let probs = skewed_probs(64 * d, e, d, 0xF00D_u64.wrapping_add(s));
+        st.observe(&RoutingTable::from_probs(&probs, 2), 64);
+    }
+    let repl = replicate_hot(&Placement::new(e, d), 1000, Topology::multinode(2), &st);
+    for expert in 0..e {
+        let replicas = repl.replicas_of(expert);
+        assert!(replicas.len() <= d, "expert {expert}: at most one copy per device");
+        let mut dedup = replicas.clone();
+        dedup.dedup();
+        assert_eq!(dedup, replicas, "expert {expert}: replica set is sorted + unique");
+    }
+    assert!(repl.total_copies() < e * d, "solver saturates before full replication");
+}
+
+#[test]
+fn evicting_a_currently_routed_expert_is_priced_never_silent() {
+    // when a device's working set fills its whole slot budget, the
+    // cache must NOT evict an expert the current step routes to — the
+    // overflow fetch stays transient and is re-priced every step, so
+    // the cost shows up in the bill instead of numerics going wrong
+    use dice::moe::Placement;
+    use dice::netsim::Topology;
+    use dice::placement::ExpertCache;
+    let p = Placement::new(4, 2); // experts {0,1} on device 0, {2,3} on 1
+    let mut cache = ExpertCache::from_placement(&p, 2, Topology::flat());
+    for step in 1..=3u64 {
+        // device 0 routes to {0, 1, 2}: residents {0, 1} are in the
+        // working set and must survive; expert 2's fetch is transient
+        let bill = cache.step_access(0, &[0, 1, 2], step);
+        assert_eq!(bill.intra + bill.inter, 1, "step {step}: overflow fetch priced");
+        assert!(cache.contains(0, 0) && cache.contains(0, 1), "routed residents survive");
+        assert!(!cache.contains(0, 2), "transient fetch is not cached");
+    }
+    assert_eq!(cache.evictions(), 0, "no in-working-set eviction ever");
+    assert_eq!(cache.hits(), 6, "two resident hits per step");
+    assert_eq!(cache.misses(), 3, "one priced miss per step");
+}
+
+#[test]
+fn engine_replication_gates_loud_and_keeps_numerics() {
+    // --replicate without a rebalance cadence is a loud config error
+    // (replicas are installed at step boundaries), and with a cadence
+    // the replicated run prices every cache miss while reproducing the
+    // unreplicated samples bit-exactly — replicas move accounting, not
+    // numerics.
+    let Some((rt, bank)) = setup() else { return };
+    use dice::config::PlacementKind;
+    let labels = vec![0usize, 1, 2, 3];
+    let bad = Engine::new(
+        &rt,
+        &bank,
+        EngineConfig {
+            strategy: Strategy::SyncEp,
+            opts: DiceOptions::none().with_replication(0),
+            devices: 4,
+        },
+    )
+    .unwrap();
+    let err = bad.generate(&labels, 3, 5, None).unwrap_err().to_string();
+    assert!(err.contains("--replicate needs --rebalance"), "{err}");
+
+    let single = Engine::new(
+        &rt,
+        &bank,
+        EngineConfig {
+            strategy: Strategy::SyncEp,
+            opts: DiceOptions::none().with_placement(PlacementKind::LoadBalanced, 2),
+            devices: 4,
+        },
+    )
+    .unwrap();
+    let repl = Engine::new(
+        &rt,
+        &bank,
+        EngineConfig {
+            strategy: Strategy::SyncEp,
+            opts: DiceOptions::none()
+                .with_placement(PlacementKind::LoadBalanced, 2)
+                .with_replication(0),
+            devices: 4,
+        },
+    )
+    .unwrap();
+    let (xs, ss) = single.generate(&labels, 4, 5, None).unwrap();
+    let (xr, sr) = repl.generate(&labels, 4, 5, None).unwrap();
+    assert_eq!(xs, xr, "replication must not change samples");
+    assert_eq!(ss.cache_hits + ss.cache_misses, 0, "no cache without --replicate");
+    assert!(sr.cache_hits > 0, "replicated run exercises the cache");
+    assert_eq!(
+        sr.cache_misses,
+        sr.cache_fetch_intra + sr.cache_fetch_inter,
+        "every miss priced on exactly one fabric"
+    );
+    assert_eq!(
+        sr.migration_bytes,
+        sr.migration_intra_bytes + sr.migration_inter_bytes,
+        "migration byte split sums to the total"
+    );
+    assert!(
+        sr.migration_bytes >= ss.migration_bytes,
+        "replica copies are priced on top of owner moves"
+    );
+}
